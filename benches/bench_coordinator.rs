@@ -1,0 +1,54 @@
+//! Coordinator benches: batcher/router throughput and the serving stack's
+//! overhead over raw engine calls. `cargo bench --bench bench_coordinator`.
+
+use std::sync::Arc;
+
+use sdm::coordinator::{Client, EngineHub, ModelBackend, Server, ServerConfig};
+use sdm::model::datasets::artifact_dir;
+use sdm::util::{bench_throughput, Json};
+
+fn main() {
+    let dir = artifact_dir(None);
+    if !dir.join("manifest.json").exists() {
+        println!("bench_coordinator: no artifacts, skipping");
+        return;
+    }
+    let hub = Arc::new(EngineHub::load(&dir, ModelBackend::Native).expect("hub"));
+    let server = Server::start(hub, ServerConfig::default()).expect("server");
+    let addr = server.local_addr.to_string();
+
+    // single-client round-trip latency (euler 18 steps, n=16)
+    let mut client = Client::connect(&addr).unwrap();
+    client.sample("cifar10g", 16, "vp", "euler", "edm", 18, 0).unwrap(); // warm
+    bench_throughput("serve/single-client/n16-euler18", 2, 20, 16.0, "samples", || {
+        let r = client.sample("cifar10g", 16, "vp", "euler", "edm", 18, 1).unwrap();
+        assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
+    });
+
+    // concurrent clients: measures batcher merging
+    for conc in [2usize, 8] {
+        bench_throughput(
+            &format!("serve/{conc}-clients/n16-euler18"),
+            1,
+            8,
+            (conc * 16) as f64,
+            "samples",
+            || {
+                let mut hs = Vec::new();
+                for t in 0..conc {
+                    let addr = addr.clone();
+                    hs.push(std::thread::spawn(move || {
+                        let mut c = Client::connect(&addr).unwrap();
+                        let r = c.sample("cifar10g", 16, "vp", "euler", "edm", 18, t as u64).unwrap();
+                        assert_eq!(r.get("ok").unwrap(), &Json::Bool(true));
+                    }));
+                }
+                for h in hs {
+                    h.join().unwrap();
+                }
+            },
+        );
+    }
+    client.shutdown_server().ok();
+    server.shutdown();
+}

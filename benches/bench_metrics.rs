@@ -1,0 +1,30 @@
+//! Metric benches: Fréchet distance (Jacobi sqrtm path) and sliced-W₂ at
+//! table-scale sample counts.
+
+use sdm::linalg::Mat;
+use sdm::metrics::{frechet_to_reference, sample_mean_cov, sliced_w2};
+use sdm::util::{bench, Rng};
+
+fn main() {
+    let mut rng = Rng::new(9);
+    for dim in [16usize, 32, 64] {
+        let n = 8192;
+        let mut xs = vec![0.0f32; n * dim];
+        rng.fill_normal_f32(&mut xs, 1.0);
+        let mut ys = vec![0.0f32; n * dim];
+        rng.fill_normal_f32(&mut ys, 1.1);
+        let reference = Mat::eye(dim);
+        let zero = vec![0.0f64; dim];
+
+        bench(&format!("metrics/mean-cov/d{dim}/n{n}"), 2, 20, || {
+            std::hint::black_box(sample_mean_cov(&xs, dim));
+        });
+        let stats = sample_mean_cov(&xs, dim);
+        bench(&format!("metrics/frechet/d{dim}"), 2, 50, || {
+            std::hint::black_box(frechet_to_reference(&stats, &zero, &reference).unwrap());
+        });
+        bench(&format!("metrics/sliced-w2/d{dim}/n4096x48"), 1, 10, || {
+            std::hint::black_box(sliced_w2(&xs[..4096 * dim], &ys[..4096 * dim], dim, 48, 7));
+        });
+    }
+}

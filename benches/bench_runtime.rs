@@ -1,0 +1,60 @@
+//! PJRT executor micro-bench: artifact execute latency per batch size and
+//! dataset — the request path's floor. `cargo bench --bench bench_runtime`.
+
+use sdm::model::datasets::artifact_dir;
+use sdm::model::uncond_mask;
+use sdm::runtime::Runtime;
+use sdm::util::{bench_throughput, Rng};
+
+fn main() {
+    let dir = artifact_dir(None);
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts, skipping");
+        return;
+    }
+    let rt = Runtime::start(&dir).expect("runtime");
+    let mut rng = Rng::new(1);
+    for spec in rt.manifest.variants.clone() {
+        let rows = spec.batch;
+        let mut x = vec![0.0f32; rows * spec.dim];
+        rng.fill_normal_f32(&mut x, 2.0);
+        let sigma = vec![1.0f32; rows];
+        let a = vec![0.0f32; rows];
+        let b = vec![1.0f32; rows];
+        let mask = uncond_mask(rows, spec.k);
+        bench_throughput(
+            &format!("pjrt-exec/{}_b{}", spec.dataset, spec.batch),
+            2,
+            20,
+            rows as f64,
+            "rows",
+            || {
+                let out = rt
+                    .handle
+                    .eval(&spec.dataset, rows, x.clone(), sigma.clone(), a.clone(),
+                          b.clone(), mask.clone())
+                    .unwrap();
+                std::hint::black_box(out.vnorm2[0]);
+            },
+        );
+    }
+    // padding overhead: 1 logical row through the 64-row variant
+    let spec = &rt.manifest.variants[0];
+    let mut x1 = vec![0.0f32; spec.dim];
+    rng.fill_normal_f32(&mut x1, 2.0);
+    let m1 = uncond_mask(1, spec.k);
+    bench_throughput(
+        &format!("pjrt-exec/{}_padded_1row", spec.dataset),
+        2,
+        20,
+        1.0,
+        "rows",
+        || {
+            let out = rt
+                .handle
+                .eval(&spec.dataset, 1, x1.clone(), vec![1.0], vec![0.0], vec![1.0], m1.clone())
+                .unwrap();
+            std::hint::black_box(out.d[0]);
+        },
+    );
+}

@@ -1,0 +1,48 @@
+//! Schedule construction benches: Algorithm 1 (Wasserstein), COS pilot,
+//! N-step resampling, and the closed-form baselines.
+
+use std::sync::Arc;
+
+use sdm::coordinator::{EngineHub, ModelBackend};
+use sdm::diffusion::Param;
+use sdm::model::datasets::artifact_dir;
+use sdm::schedule::{
+    cos_schedule, edm_schedule, resample_n_steps, wasserstein_schedule, WassersteinConfig,
+};
+use sdm::util::{bench, Rng};
+
+fn main() {
+    let dir = artifact_dir(None);
+    if !dir.join("manifest.json").exists() {
+        println!("bench_schedule: no artifacts, skipping");
+        return;
+    }
+    let hub = Arc::new(EngineHub::load(&dir, ModelBackend::Native).expect("hub"));
+    let info = hub.info("cifar10g").unwrap().clone();
+    let model = hub.model("cifar10g").unwrap();
+
+    bench("schedule/edm-rho7/n18", 10, 200, || {
+        std::hint::black_box(edm_schedule(18, 0.002, 80.0, 7.0).unwrap());
+    });
+
+    let mut rng = Rng::new(3);
+    bench("schedule/algorithm1/pilot128", 1, 5, || {
+        let out = wasserstein_schedule(&info, Param::Edm, model.as_ref(), &mut rng,
+            &WassersteinConfig::default(), 128).unwrap();
+        std::hint::black_box(out.pilot_nfe);
+    });
+
+    bench("schedule/cos/pilot128-mult4", 1, 5, || {
+        let g = cos_schedule(18, &info, Param::Edm, model.as_ref(), &mut rng, 4, 128).unwrap();
+        std::hint::black_box(g.intervals());
+    });
+
+    // resampling alone (the post-processing of Algorithm 1's output)
+    let src = wasserstein_schedule(&info, Param::Edm, model.as_ref(), &mut rng,
+        &WassersteinConfig::default(), 64).unwrap();
+    bench("schedule/resample-n18", 10, 500, || {
+        std::hint::black_box(
+            resample_n_steps(&src.sigmas, &src.eta, 18, 0.25, 80.0).unwrap(),
+        );
+    });
+}

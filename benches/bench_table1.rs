@@ -1,0 +1,60 @@
+//! End-to-end bench for Table 1's hot configurations: time one full
+//! sampling run per (solver, schedule) family on cifar10g — the cost of
+//! regenerating one table cell. `cargo bench --bench bench_table1`.
+
+use std::sync::Arc;
+
+use sdm::coordinator::{EngineHub, ModelBackend};
+use sdm::diffusion::Param;
+use sdm::model::datasets::artifact_dir;
+use sdm::sampler::{run_sampler, RunConfig};
+use sdm::schedule::ScheduleSpec;
+use sdm::solvers::SolverSpec;
+use sdm::util::bench_throughput;
+
+fn main() {
+    let dir = artifact_dir(None);
+    if !dir.join("manifest.json").exists() {
+        println!("bench_table1: no artifacts (run `make artifacts`), skipping");
+        return;
+    }
+    for backend in [ModelBackend::Pjrt, ModelBackend::Native] {
+        let hub = Arc::new(EngineHub::load(&dir, backend).expect("hub"));
+        let info = hub.info("cifar10g").unwrap().clone();
+        let rows = 256usize;
+        let cfgs: Vec<(&str, SolverSpec, ScheduleSpec)> = vec![
+            ("euler+edm", SolverSpec::Euler, ScheduleSpec::Edm { rho: 7.0 }),
+            ("heun+edm", SolverSpec::Heun, ScheduleSpec::Edm { rho: 7.0 }),
+            (
+                "sdm+edm",
+                SolverSpec::sdm_default("cifar10g", false, true),
+                ScheduleSpec::Edm { rho: 7.0 },
+            ),
+            (
+                "sdm+sdm",
+                SolverSpec::sdm_default("cifar10g", true, true),
+                ScheduleSpec::sdm_defaults("cifar10g", Param::vp()),
+            ),
+        ];
+        for (name, solver, sched) in cfgs {
+            let grid = hub.schedule("cifar10g", Param::vp(), &sched, 18).unwrap();
+            let model = hub.model("cifar10g").unwrap();
+            let mut seed = 0u64;
+            bench_throughput(
+                &format!("table1/{name}/{:?}/rows{rows}", backend),
+                1,
+                10,
+                rows as f64,
+                "samples",
+                || {
+                    seed += 1;
+                    let cfg = RunConfig { rows, seed, class: None, trace: false };
+                    let out =
+                        run_sampler(model.as_ref(), Param::vp(), &grid, &solver, &info, &cfg)
+                            .unwrap();
+                    std::hint::black_box(out.nfe);
+                },
+            );
+        }
+    }
+}

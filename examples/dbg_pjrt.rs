@@ -1,0 +1,11 @@
+fn main() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file("/tmp/dbg_const.hlo.txt").unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let x = xla::Literal::vec1(&[1f32, 0., 0., 1.]).reshape(&[2, 2]).unwrap();
+    let r = exe.execute::<xla::Literal>(&[x]).unwrap()[0][0].to_literal_sync().unwrap();
+    let (a, b) = r.to_tuple2().unwrap();
+    println!("x @ const2d (expect [0,1,3,4]): {:?}", a.to_vec::<f32>().unwrap());
+    println!("x + const1d (expect [2,3,1,2]): {:?}", b.to_vec::<f32>().unwrap());
+}

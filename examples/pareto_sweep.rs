@@ -1,0 +1,39 @@
+//! Pareto sweep: quality-vs-NFE frontier across solver/schedule families
+//! (the paper's central efficiency claim) on any workload.
+//!
+//! ```bash
+//! cargo run --release --example pareto_sweep -- cifar10g vp
+//! ```
+
+use std::sync::Arc;
+
+use sdm::coordinator::{EngineHub, ModelBackend};
+use sdm::diffusion::Param;
+use sdm::experiments::{pareto, ExpContext};
+use sdm::model::datasets::artifact_dir;
+
+fn main() -> sdm::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().cloned().unwrap_or_else(|| "cifar10g".into());
+    let param = Param::from_name(args.get(1).map(|s| s.as_str()).unwrap_or("vp"))?;
+    let hub = Arc::new(EngineHub::load(&artifact_dir(None), ModelBackend::Native)?);
+    let mut ctx = ExpContext::new(hub);
+    ctx.samples = 4096;
+    let pts = pareto::run(&ctx, &dataset, param, &[6, 9, 12, 18, 24, 32, 48])?;
+    // report the frontier: lowest FD at or below each NFE level
+    let mut best: Vec<&sdm::experiments::pareto::ParetoPoint> = Vec::new();
+    let mut sorted: Vec<_> = pts.iter().collect();
+    sorted.sort_by(|a, b| a.nfe.partial_cmp(&b.nfe).unwrap());
+    let mut best_fd = f64::INFINITY;
+    for p in sorted {
+        if p.fd < best_fd {
+            best_fd = p.fd;
+            best.push(p);
+        }
+    }
+    println!("\nPareto-efficient points:");
+    for p in best {
+        println!("  {:<12} steps={:<3} NFE={:<6.1} FD={:.4}", p.family, p.steps, p.nfe, p.fd);
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Schedule explorer: build every schedule family for one workload and
+//! print the sigma grids side by side, plus the Algorithm-1 trace (eta_i,
+//! S_hat_i) that drives the SDM schedule — the fastest way to *see* the
+//! paper's Section 3.2 at work.
+//!
+//! ```bash
+//! cargo run --release --example schedule_explorer -- [dataset] [steps]
+//! ```
+
+use std::sync::Arc;
+
+use sdm::coordinator::{EngineHub, ModelBackend};
+use sdm::diffusion::Param;
+use sdm::model::datasets::artifact_dir;
+use sdm::schedule::{wasserstein_schedule, ScheduleSpec, WassersteinConfig};
+use sdm::util::Rng;
+
+fn main() -> sdm::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().cloned().unwrap_or_else(|| "cifar10g".into());
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(18);
+
+    let hub = Arc::new(EngineHub::load(&artifact_dir(None), ModelBackend::Native)?);
+    let info = hub.info(&dataset)?.clone();
+    let param = Param::Edm;
+
+    let families: Vec<(&str, ScheduleSpec)> = vec![
+        ("edm(rho=7)", ScheduleSpec::Edm { rho: 7.0 }),
+        ("linear", ScheduleSpec::LinearSigma),
+        ("cosine", ScheduleSpec::Cosine),
+        ("logsnr", ScheduleSpec::LogSnr),
+        ("cos", ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 }),
+        ("sdm", ScheduleSpec::sdm_defaults(&dataset, param)),
+    ];
+    let mut grids = Vec::new();
+    for (name, spec) in &families {
+        grids.push((name, hub.schedule(&dataset, param, spec, steps)?));
+    }
+    println!("sigma grids for {dataset} ({steps} steps):");
+    print!("{:>4}", "i");
+    for (name, _) in &grids {
+        print!(" {:>12}", name);
+    }
+    println!();
+    for i in 0..=steps {
+        print!("{i:>4}");
+        for (_, g) in &grids {
+            print!(" {:>12.5}", g.sigmas[i]);
+        }
+        println!();
+    }
+
+    // Algorithm 1 raw trace before resampling
+    let model = hub.model(&dataset)?;
+    let mut rng = Rng::new(7);
+    let out = wasserstein_schedule(&info, param, model.as_ref(), &mut rng,
+        &WassersteinConfig::default(), 64)?;
+    println!("\nAlgorithm 1 raw schedule: {} knots, pilot NFE {}", out.sigmas.len(), out.pilot_nfe);
+    println!("{:>4} {:>12} {:>14} {:>14}", "i", "sigma", "eta_i", "S_hat_i");
+    for i in 0..out.eta.len().min(50) {
+        println!("{:>4} {:>12.5} {:>14.6e} {:>14.6e}", i, out.sigmas[i], out.eta[i], out.s_hat[i]);
+    }
+    Ok(())
+}

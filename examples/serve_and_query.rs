@@ -1,0 +1,73 @@
+//! End-to-end serving driver (DESIGN.md "End-to-end validation"): starts
+//! the TCP coordinator on the PJRT backend, drives concurrent batched
+//! sample requests through the full router -> batcher -> PJRT-executor
+//! stack, and reports latency/throughput plus server-side metrics.
+//!
+//! ```bash
+//! cargo run --release --example serve_and_query
+//! ```
+
+use std::sync::Arc;
+
+use sdm::coordinator::{Client, EngineHub, ModelBackend, Server, ServerConfig};
+use sdm::model::datasets::artifact_dir;
+use sdm::util::{Histogram, Json, Timer};
+
+fn main() -> sdm::Result<()> {
+    let backend = if std::env::args().any(|a| a == "--native") {
+        ModelBackend::Native
+    } else {
+        ModelBackend::Pjrt
+    };
+    let hub = Arc::new(EngineHub::load(&artifact_dir(None), backend)?);
+    let server = Server::start(hub, ServerConfig::default())?;
+    let addr = server.local_addr.to_string();
+    println!("serving on {addr} (backend {backend:?})");
+
+    // warm the schedule caches (first SDM request pays Algorithm 1)
+    let mut warm = Client::connect(&addr)?;
+    warm.sample("cifar10g", 16, "vp", "sdm", "sdm", 18, 0)?;
+
+    let concurrency = 8;
+    let per_client = 24;
+    let timer = Timer::start();
+    let mut handles = Vec::new();
+    for tid in 0..concurrency {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> sdm::Result<Histogram> {
+            let mut client = Client::connect(&addr)?;
+            let mut hist = Histogram::new();
+            for i in 0..per_client {
+                let t = Timer::start();
+                // mix of solvers and datasets, like real traffic
+                let (ds, solver) = match (tid + i) % 3 {
+                    0 => ("cifar10g", "sdm"),
+                    1 => ("cifar10g", "heun"),
+                    _ => ("afhqg", "sdm"),
+                };
+                let steps = if ds == "cifar10g" { 18 } else { 40 };
+                let resp = client.sample(ds, 32, "vp", solver, "edm", steps, (tid * 100 + i) as u64)?;
+                anyhow::ensure!(resp.get("ok")? == &Json::Bool(true), "{resp:?}");
+                hist.record(t.elapsed_us());
+            }
+            Ok(hist)
+        }));
+    }
+    let mut all = Histogram::new();
+    for h in handles {
+        all.merge(&h.join().unwrap()?);
+    }
+    let wall = timer.elapsed_us() / 1e6;
+    println!("client view : {}", all.summary("us"));
+    println!(
+        "throughput  : {:.1} req/s ({:.0} samples/s)",
+        all.count() as f64 / wall,
+        all.count() as f64 * 32.0 / wall
+    );
+
+    let stats = warm.send(r#"{"op":"stats"}"#)?;
+    println!("server stats: {}", stats.get("stats")?.to_string());
+    warm.shutdown_server()?;
+    server.shutdown();
+    Ok(())
+}

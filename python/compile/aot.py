@@ -1,0 +1,99 @@
+"""AOT entry point: lower every model variant to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  denoise_v_<name>_b<B>.hlo.txt   one per (dataset, batch) variant
+  <name>.gmm.json                 mixture sidecar for the rust oracle
+  manifest.json                   variant index consumed by rust/src/runtime
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile import datasets, model
+
+# Exported batch sizes; the L3 dynamic batcher pads to the smallest
+# fitting one. Must be multiples of kernels.gmm_denoise.TILE_B.
+BATCH_SIZES = (64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is LOAD-BEARING: the default printer
+    # elides big constant arrays as `constant({...})`, which the rust
+    # side's HLO text parser silently reads back as zeros -- the baked
+    # mixture parameters would vanish from the artifact.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def sidecar(spec: datasets.GmmSpec, params) -> dict:
+    mean, cov = datasets.exact_moments(params)
+    return {
+        "name": spec.name,
+        "paper_name": spec.paper_name,
+        "dim": spec.dim,
+        "k": spec.k,
+        "n_classes": spec.n_classes,
+        "seed": spec.seed,
+        "sigma_min": spec.sigma_min,
+        "sigma_max": spec.sigma_max,
+        "rho": spec.rho,
+        "default_steps": spec.default_steps,
+        "mus": [[float(v) for v in row] for row in params["mus"]],
+        "logw": [float(v) for v in params["logw"]],
+        "tau2": [float(v) for v in params["tau2"]],
+        "classes": [int(v) for v in params["classes"]],
+        "exact_mean": [float(v) for v in mean],
+        "exact_cov": [[float(v) for v in row] for row in cov],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--datasets", default=",".join(s.name for s in datasets.SPECS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = set(args.datasets.split(","))
+    manifest = {"format": "hlo-text", "tile_b": 64, "variants": []}
+    for spec in datasets.SPECS:
+        if spec.name not in wanted:
+            continue
+        params = datasets.build_params(spec)
+        side_path = os.path.join(args.out_dir, f"{spec.name}.gmm.json")
+        with open(side_path, "w") as f:
+            json.dump(sidecar(spec, params), f)
+        for bsz in BATCH_SIZES:
+            lowered = model.lower_variant(spec, bsz)
+            text = to_hlo_text(lowered)
+            fname = f"denoise_v_{spec.name}_b{bsz}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["variants"].append({
+                "dataset": spec.name, "batch": bsz, "dim": spec.dim,
+                "k": spec.k, "file": fname,
+                "inputs": ["x", "sigma", "a", "b", "mask"],
+                "outputs": ["d", "v", "vnorm2"],
+            })
+            print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Synthetic workload definitions (build-time single source of truth).
+
+Each paper dataset is substituted by a Gaussian-mixture data distribution
+whose *optimal* denoiser E[x0 | x, sigma] is available in closed form (see
+DESIGN.md section 2). The parameters generated here are baked into the AOT
+artifact as constants AND exported to `artifacts/<name>.gmm.json` sidecars so
+the rust coordinator can build the native oracle, exact moments, and the
+ground-truth reference distribution without re-deriving anything.
+
+Determinism: numpy PCG64 with fixed per-dataset seeds; the bit-stream of
+PCG64 is stable across numpy versions.
+"""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GmmSpec:
+    """A named Gaussian-mixture workload standing in for a paper dataset."""
+
+    name: str          # rust-visible workload id
+    paper_name: str    # the paper dataset this stands in for
+    dim: int           # data dimensionality (the "image")
+    k: int             # number of mixture components
+    n_classes: int     # conditional classes (1 = unconditional only)
+    scale: float       # typical component-mean magnitude
+    tau: float         # typical per-component std
+    seed: int
+    # EDM sampling defaults carried with the workload (paper section 4.1)
+    sigma_min: float = 0.002
+    sigma_max: float = 80.0
+    rho: float = 7.0
+    default_steps: int = 18
+
+
+# Matched step budgets per the paper; imagenetg scaled 256 -> 64 for CPU
+# wall-clock sanity (documented in DESIGN.md section 2).
+SPECS = [
+    GmmSpec("cifar10g", "CIFAR-10 32x32", dim=16, k=10, n_classes=10,
+            scale=3.0, tau=0.25, seed=101, default_steps=18),
+    GmmSpec("ffhqg", "FFHQ 64x64", dim=32, k=16, n_classes=1,
+            scale=3.0, tau=0.30, seed=202, default_steps=40),
+    GmmSpec("afhqg", "AFHQv2 64x64", dim=32, k=12, n_classes=1,
+            scale=4.0, tau=0.35, seed=303, default_steps=40),
+    GmmSpec("imagenetg", "ImageNet 64x64", dim=64, k=32, n_classes=8,
+            scale=3.5, tau=0.30, seed=404, default_steps=64),
+]
+
+SPEC_BY_NAME = {s.name: s for s in SPECS}
+
+
+def build_params(spec: GmmSpec):
+    """Materialize mixture parameters for a spec.
+
+    Returns dict with float32 arrays:
+      mus     [K, D]   component means
+      logw    [K]      log mixture weights (normalized)
+      tau2    [K]      per-component isotropic variances
+      classes [K]      int class id per component (k % n_classes)
+    """
+    rng = np.random.Generator(np.random.PCG64(spec.seed))
+    mus = spec.scale * rng.standard_normal((spec.k, spec.dim))
+    mus = mus.astype(np.float32)
+    w = rng.uniform(0.5, 1.5, spec.k)
+    w = (w / w.sum()).astype(np.float64)
+    logw = np.log(w).astype(np.float32)
+    tau = rng.uniform(0.8 * spec.tau, 1.2 * spec.tau, spec.k)
+    tau2 = (tau ** 2).astype(np.float32)
+    classes = (np.arange(spec.k) % spec.n_classes).astype(np.int32)
+    return {"mus": mus, "logw": logw, "tau2": tau2, "classes": classes}
+
+
+def exact_moments(params):
+    """Exact mean and covariance of the mixture (ground truth for Frechet).
+
+    mean = sum_k w_k mu_k
+    cov  = sum_k w_k (tau2_k I + mu_k mu_k^T) - mean mean^T
+    """
+    mus = params["mus"].astype(np.float64)
+    w = np.exp(params["logw"].astype(np.float64))
+    tau2 = params["tau2"].astype(np.float64)
+    mean = (w[:, None] * mus).sum(axis=0)
+    d = mus.shape[1]
+    cov = np.zeros((d, d))
+    for k in range(mus.shape[0]):
+        cov += w[k] * (tau2[k] * np.eye(d) + np.outer(mus[k], mus[k]))
+    cov -= np.outer(mean, mean)
+    return mean, cov

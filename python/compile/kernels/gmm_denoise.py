@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: fused GMM-posterior denoiser + velocity + row stats.
+
+The per-step hot spot of the serving system. One kernel invocation fuses,
+per batch tile (TPU-style — see DESIGN.md section "Hardware-Adaptation"):
+
+  1. squared-distance matrix d2[TB,K] via an MXU-shaped contraction
+     x @ mus^T (plus row/col norms),
+  2. numerically stable masked log-sum-exp posterior over components,
+  3. per-component posterior means combined into D(x; sigma),
+  4. velocity v = a*x + b*(x - D) with rust-provided coefficients,
+  5. rowwise reduction vnorm2 = ||v||^2 (feeds L3's cache-based curvature
+     proxy kappa_hat_rel, eq. (8) of the paper, without an extra pass).
+
+Mixture parameters (mus, logw, tau2) are baked as compile-time constants so
+the whole parameter set lives in VMEM for every grid step; only the batch
+dimension is tiled by BlockSpec. interpret=True is mandatory: the CPU PJRT
+client cannot execute Mosaic custom-calls, and under interpret the kernel
+body lowers to plain HLO that runs *compiled* at rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: 64 rows keeps VMEM footprint (TB*D + TB*K + K*D floats) far
+# below the ~16 MiB budget for every workload in datasets.SPECS while giving
+# the MXU a (64 x D) x (D x K) contraction per grid step.
+TILE_B = 64
+
+
+def _kernel(x_ref, sigma_ref, a_ref, b_ref, mask_ref,
+            mus_ref, logw_ref, tau2_ref,
+            d_ref, v_ref, vn_ref, *, dim):
+    """Kernel body over one batch tile. See module docstring for the math."""
+    x = x_ref[...]                                   # [TB, D]
+    sigma = sigma_ref[...]                           # [TB]
+    a = a_ref[...]                                   # [TB]
+    b = b_ref[...]                                   # [TB]
+    mask = mask_ref[...]                             # [TB, K]
+    # mixture parameters: un-tiled (same block every grid step -> VMEM
+    # resident); pallas forbids captured constants, so they are inputs.
+    mus = mus_ref[...]                               # [K, D]
+    logw = logw_ref[...]                             # [K]
+    tau2 = tau2_ref[...]                             # [K]
+
+    s2 = (sigma * sigma)[:, None]                    # [TB,1]
+    var = tau2[None, :] + s2                         # [TB,K]
+
+    # (1) distance matrix via MXU contraction
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)       # [TB,1]
+    xm = jax.lax.dot_general(
+        x, mus.T, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [TB,K]
+    m2 = jnp.sum(mus * mus, axis=1)[None, :]         # [1,K]
+    d2 = x2 - 2.0 * xm + m2
+
+    # (2) stable masked softmax posterior
+    logits = logw[None, :] - 0.5 * d2 / var - 0.5 * dim * jnp.log(var) + mask
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    r = jnp.exp(logits)
+    r = r / jnp.sum(r, axis=1, keepdims=True)        # [TB,K]
+
+    # (3) posterior mean:  D = (sum_k r_k tau2_k/var_k) x
+    #                        + sigma^2 (r/var) @ mus
+    alpha = tau2[None, :] / var
+    c1 = jnp.sum(r * alpha, axis=1, keepdims=True)   # [TB,1]
+    c2 = jax.lax.dot_general(
+        r / var, mus, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * s2     # [TB,D]
+    d = c1 * x + c2
+
+    # (4)+(5) fused velocity + row stats
+    v = a[:, None] * x + b[:, None] * (x - d)
+    d_ref[...] = d
+    v_ref[...] = v
+    vn_ref[...] = jnp.sum(v * v, axis=1)
+
+
+def gmm_denoise_v(x, sigma, a, b, mask, *, mus, logw, tau2,
+                  tile_b: int = TILE_B, interpret: bool = True):
+    """Fused denoiser/velocity over a padded batch.
+
+    Shapes: x [B,D], sigma/a/b [B], mask [B,K]; B must be a multiple of
+    tile_b (the L3 batcher pads). Returns (d [B,D], v [B,D], vnorm2 [B]).
+    """
+    bsz, dim = x.shape
+    k = mus.shape[0]
+    if bsz % tile_b != 0:
+        raise ValueError(f"batch {bsz} not a multiple of tile {tile_b}")
+    mus = jnp.asarray(mus, jnp.float32)
+    logw = jnp.asarray(logw, jnp.float32)
+    tau2 = jnp.asarray(tau2, jnp.float32)
+    grid = (bsz // tile_b,)
+    body = functools.partial(_kernel, dim=float(dim))
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, dim), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+            jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, sigma, a, b, mask, mus, logw, tau2)
+
+
+def vmem_estimate_bytes(dim: int, k: int, tile_b: int = TILE_B) -> int:
+    """Static VMEM footprint estimate per grid step (f32), for DESIGN.md
+    section 7: inputs + outputs + the [TB,K] intermediates + constants."""
+    tiles = (
+        tile_b * dim        # x
+        + 3 * tile_b        # sigma, a, b
+        + tile_b * k        # mask
+        + 2 * tile_b * dim  # d, v outputs
+        + tile_b            # vnorm2
+        + 3 * tile_b * k    # var, d2/logits, r
+        + k * dim + 2 * k   # constants
+    )
+    return 4 * tiles

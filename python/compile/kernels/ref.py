@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the fused GMM denoiser/velocity kernel.
+
+This is the correctness reference the pallas kernel (gmm_denoise.py) is
+tested against in python/tests/test_kernel.py, and the semantic contract the
+rust-native oracle (rust/src/model/gmm.rs) mirrors.
+
+Math (DESIGN.md section 1, L1): data x0 ~ sum_k w_k N(mu_k, tau2_k I);
+observed x = x0 + sigma * eps. Then
+
+  r_k(x, sigma)  ~ w_k N(x; mu_k, (tau2_k + sigma^2) I)
+  E[x0 | x, k]   = (tau2_k x + sigma^2 mu_k) / (tau2_k + sigma^2)
+  D(x; sigma)    = sum_k r_k E[x0 | x, k]
+
+and the parameterization-independent velocity contract
+  v = a * x + b * (x - D),  vnorm2 = ||v||^2 rowwise,
+where the rust coordinator folds the s(t)/sigma(t) coefficients of
+EDM/VP/VE into (a, b) per request row.
+"""
+
+import jax.numpy as jnp
+
+
+def gmm_denoise_v_ref(x, sigma, a, b, mask, mus, logw, tau2):
+    """Reference fused denoiser + velocity.
+
+    Args:
+      x:     [B, D] noised samples (in "hat" space, i.e. x/s(t)).
+      sigma: [B]    per-row noise level.
+      a, b:  [B]    velocity coefficients (rust folds s, s_dot, sigma_dot).
+      mask:  [B, K] additive logit mask (0 = allowed, -1e30 = excluded).
+      mus:   [K, D], logw: [K], tau2: [K] mixture constants.
+
+    Returns:
+      (d, v, vnorm2): [B, D], [B, D], [B].
+    """
+    x = x.astype(jnp.float32)
+    s2 = (sigma.astype(jnp.float32) ** 2)[:, None]           # [B,1]
+    var = tau2[None, :] + s2                                 # [B,K]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)               # [B,1]
+    xm = x @ mus.T                                           # [B,K]
+    m2 = jnp.sum(mus * mus, axis=1)[None, :]                 # [1,K]
+    d2 = x2 - 2.0 * xm + m2                                  # [B,K]
+    dim = x.shape[1]
+    logits = logw[None, :] - 0.5 * d2 / var \
+        - 0.5 * dim * jnp.log(var) + mask                    # [B,K]
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    r = jnp.exp(logits)
+    r = r / jnp.sum(r, axis=1, keepdims=True)                # [B,K]
+    alpha = tau2[None, :] / var                              # [B,K]
+    c1 = jnp.sum(r * alpha, axis=1, keepdims=True)           # [B,1]
+    c2 = (r / var) @ mus * s2                                # [B,D]
+    d = c1 * x + c2
+    v = a[:, None] * x + b[:, None] * (x - d)
+    vnorm2 = jnp.sum(v * v, axis=1)
+    return d, v, vnorm2
+
+
+def gmm_score_ref(x, sigma, mask, mus, logw, tau2):
+    """Score of the sigma-smoothed mixture: (D(x;sigma) - x) / sigma^2."""
+    zeros = jnp.zeros_like(sigma)
+    d, _, _ = gmm_denoise_v_ref(x, sigma, zeros, zeros, mask, mus, logw, tau2)
+    return (d - x) / (sigma[:, None] ** 2)

@@ -1,0 +1,51 @@
+"""L2: the jax compute graph lowered to each AOT artifact.
+
+A "model variant" is (dataset, batch size): PJRT executables have static
+shapes, so the rust batcher pads requests up to one of the exported batch
+sizes. The function itself is the fused L1 kernel wrapped with input
+casting; conditioning is expressed through the additive logit `mask` input
+(all-zeros mask == unconditional), so a single artifact serves both modes.
+
+Python runs only at `make artifacts` time; rust loads the HLO text at
+startup and this module is never imported on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import datasets
+from compile.kernels import gmm_denoise
+
+
+def make_denoise_v(params, interpret: bool = True):
+    """Build the jit-able model fn for one dataset's mixture parameters.
+
+    Signature: f(x [B,D] f32, sigma [B] f32, a [B] f32, b [B] f32,
+                 mask [B,K] f32) -> (d [B,D], v [B,D], vnorm2 [B]).
+    """
+    mus = jnp.asarray(params["mus"], jnp.float32)
+    logw = jnp.asarray(params["logw"], jnp.float32)
+    tau2 = jnp.asarray(params["tau2"], jnp.float32)
+
+    def denoise_v(x, sigma, a, b, mask):
+        x = x.astype(jnp.float32)
+        sigma = sigma.astype(jnp.float32)
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+        mask = mask.astype(jnp.float32)
+        d, v, vn = gmm_denoise.gmm_denoise_v(
+            x, sigma, a, b, mask, mus=mus, logw=logw, tau2=tau2,
+            interpret=interpret)
+        return d, v, vn
+
+    return denoise_v
+
+
+def lower_variant(spec: datasets.GmmSpec, batch: int):
+    """Lower one (dataset, batch) variant; returns the jax Lowered object."""
+    params = datasets.build_params(spec)
+    fn = make_denoise_v(params)
+    x = jax.ShapeDtypeStruct((batch, spec.dim), jnp.float32)
+    s = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    m = jax.ShapeDtypeStruct((batch, spec.k), jnp.float32)
+    return jax.jit(fn).lower(x, s, s, s, m)

@@ -1,0 +1,270 @@
+//! Dynamic batcher: one thread per dataset route.
+//!
+//! Compatible requests (same parameterization, solver, schedule, steps,
+//! class) are merged into a single integration batch up to `max_batch`
+//! rows, or flushed after `max_wait` — the standard latency/throughput
+//! dial of serving systems. Padding to the AOT artifact's static batch
+//! shapes happens one level down (the PJRT executor); the batcher's job is
+//! to fill those shapes as much as possible.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::hub::EngineHub;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::protocol::{Response, SampleRequest};
+use crate::metrics::sample_mean_cov;
+use crate::sampler::{run_sampler, RunConfig};
+use crate::util::Timer;
+use crate::Result;
+
+/// A request waiting in a batch group.
+pub struct Pending {
+    pub req: SampleRequest,
+    pub reply: mpsc::Sender<Response>,
+    pub enqueued: Instant,
+    pub timer: Timer,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// max rows integrated together (match the largest artifact batch).
+    pub max_batch: usize,
+    /// flush age for a non-full group.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Group key: everything that must match for two requests to share one
+/// integration batch.
+fn group_key(r: &SampleRequest) -> String {
+    format!(
+        "{}|{}|{}|{}|{:?}",
+        r.param.name(),
+        r.solver.tag(),
+        r.schedule.tag(),
+        r.steps,
+        r.class
+    )
+}
+
+/// Run the batcher loop for one dataset until the inbox closes.
+pub fn batcher_loop(
+    dataset: String,
+    hub: Arc<EngineHub>,
+    metrics: Arc<ServerMetrics>,
+    rx: mpsc::Receiver<Pending>,
+    policy: BatchPolicy,
+) {
+    let mut groups: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
+    loop {
+        // wait for work, with a timeout so aged groups still flush
+        match rx.recv_timeout(policy.max_wait) {
+            Ok(p) => {
+                groups.entry(group_key(&p.req)).or_default().push(p);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // drain and flush everything, then exit
+                for (_, g) in std::mem::take(&mut groups) {
+                    flush(&dataset, &hub, &metrics, g);
+                }
+                return;
+            }
+        }
+        // flush full or aged groups
+        let now = Instant::now();
+        let keys: Vec<String> = groups.keys().cloned().collect();
+        for key in keys {
+            let rows: usize = groups[&key].iter().map(|p| p.req.n).sum();
+            let age = groups[&key]
+                .iter()
+                .map(|p| now.duration_since(p.enqueued))
+                .max()
+                .unwrap_or_default();
+            if rows >= policy.max_batch || age >= policy.max_wait {
+                let g = groups.remove(&key).unwrap();
+                flush(&dataset, &hub, &metrics, g);
+            }
+        }
+    }
+}
+
+/// Integrate one group and split results back to its requests.
+fn flush(dataset: &str, hub: &EngineHub, metrics: &ServerMetrics, group: Vec<Pending>) {
+    if group.is_empty() {
+        return;
+    }
+    let batched_with = group.len();
+    match run_group(dataset, hub, &group) {
+        Ok((samples, nfe, dim)) => {
+            let mut offset = 0usize;
+            for p in &group {
+                let rows = p.req.n;
+                let slice = &samples[offset * dim..(offset + rows) * dim];
+                offset += rows;
+                let stats = sample_mean_cov(slice, dim);
+                let resp = Response::SampleOk {
+                    n: rows,
+                    nfe,
+                    mean: stats.mean.clone(),
+                    trace_cov: stats.cov.trace(),
+                    latency_us: p.timer.elapsed_us(),
+                    batched_with,
+                    samples: p.req.return_samples.then(|| slice.to_vec()),
+                    dim,
+                };
+                metrics.record_request(dataset, p.timer.elapsed_us(), rows, nfe);
+                let _ = p.reply.send(resp);
+            }
+            metrics.record_batch(dataset, batched_with, offset);
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in &group {
+                metrics.record_error(dataset);
+                let _ = p.reply.send(Response::Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Integrate the union of a group's rows in one run.
+fn run_group(dataset: &str, hub: &EngineHub, group: &[Pending]) -> Result<(Vec<f32>, f64, usize)> {
+    let head = &group[0].req;
+    let total: usize = group.iter().map(|p| p.req.n).sum();
+    let info = hub.info(dataset)?;
+    let model = hub.model(dataset)?;
+    let grid = hub.schedule(dataset, head.param, &head.schedule, head.steps)?;
+    let cfg = RunConfig {
+        rows: total,
+        seed: head.seed ^ 0x5D3_1E55,
+        class: head.class,
+        trace: false,
+    };
+    let out = run_sampler(model.as_ref(), head.param, &grid, &head.solver, info, &cfg)?;
+    Ok((out.samples, out.nfe as f64, info.dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Request;
+    use crate::model::gmm::testmodel::toy;
+
+    fn mk_request(n: usize, solver: &str) -> SampleRequest {
+        let line = format!(
+            r#"{{"op":"sample","dataset":"toy","n":{n},"solver":"{solver}","steps":8}}"#
+        );
+        match Request::parse(&line).unwrap() {
+            Request::Sample(s) => s,
+            _ => unreachable!(),
+        }
+    }
+
+    fn spawn_batcher() -> (mpsc::Sender<Pending>, Arc<ServerMetrics>) {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let (tx, rx) = mpsc::channel();
+        let m2 = metrics.clone();
+        std::thread::spawn(move || {
+            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default())
+        });
+        (tx, metrics)
+    }
+
+    fn submit(tx: &mpsc::Sender<Pending>, req: SampleRequest) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Pending { req, reply: rtx, enqueued: Instant::now(), timer: Timer::start() })
+            .unwrap();
+        rrx
+    }
+
+    #[test]
+    fn compatible_requests_are_batched() {
+        let (tx, metrics) = spawn_batcher();
+        let rx1 = submit(&tx, mk_request(8, "euler"));
+        let rx2 = submit(&tx, mk_request(8, "euler"));
+        let r1 = rx1.recv_timeout(Duration::from_secs(10)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+        for r in [r1, r2] {
+            match r {
+                Response::SampleOk { n, batched_with, nfe, .. } => {
+                    assert_eq!(n, 8);
+                    assert_eq!(batched_with, 2);
+                    assert_eq!(nfe, 8.0); // euler on 8 steps
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        let snap = metrics.snapshot();
+        assert!(snap.to_string().contains("toy"));
+    }
+
+    #[test]
+    fn incompatible_requests_not_merged() {
+        let (tx, _m) = spawn_batcher();
+        let rx1 = submit(&tx, mk_request(4, "euler"));
+        let rx2 = submit(&tx, mk_request(4, "heun"));
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 1),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_request_gets_exactly_its_rows_back() {
+        let (tx, _m) = spawn_batcher();
+        let sizes = [3usize, 17, 5, 1, 9];
+        let rxs: Vec<_> = sizes
+            .iter()
+            .map(|&n| {
+                let mut r = mk_request(n, "euler");
+                r.return_samples = true;
+                submit(&tx, r)
+            })
+            .collect();
+        for (rx, &n) in rxs.iter().zip(&sizes) {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Response::SampleOk { samples, dim, .. } => {
+                    assert_eq!(samples.unwrap().len(), n * dim);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_in_group_yields_error() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let (tx, rx) = mpsc::channel();
+        let m2 = metrics.clone();
+        std::thread::spawn(move || {
+            batcher_loop("ghost".into(), hub, m2, rx, BatchPolicy::default())
+        });
+        let mut req = mk_request(2, "euler");
+        req.dataset = "ghost".into();
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Pending {
+            req,
+            reply: rtx,
+            enqueued: Instant::now(),
+            timer: Timer::start(),
+        })
+        .unwrap();
+        match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Response::Err(e) => assert!(e.contains("unknown dataset")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

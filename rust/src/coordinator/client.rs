@@ -1,0 +1,60 @@
+//! Blocking JSON-lines client for the coordinator (examples, benches,
+//! load generators).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::Context;
+
+use crate::util::Json;
+use crate::Result;
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one raw request line, read one response line.
+    pub fn send(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.writer, "{line}")?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        anyhow::ensure!(n > 0, "server closed connection");
+        Json::parse(resp.trim())
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let v = self.send(r#"{"op":"ping"}"#)?;
+        Ok(v.get("ok")? == &Json::Bool(true))
+    }
+
+    /// Convenience builder for a sample request.
+    pub fn sample(
+        &mut self,
+        dataset: &str,
+        n: usize,
+        param: &str,
+        solver: &str,
+        schedule: &str,
+        steps: usize,
+        seed: u64,
+    ) -> Result<Json> {
+        let line = format!(
+            r#"{{"op":"sample","dataset":"{dataset}","n":{n},"param":"{param}","solver":"{solver}","schedule":"{schedule}","steps":{steps},"seed":{seed}}}"#
+        );
+        self.send(&line)
+    }
+
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let _ = self.send(r#"{"op":"shutdown"}"#)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,228 @@
+//! Engine hub: workload registry + model backends + schedule cache.
+//!
+//! The hub is the coordinator's shared state: for each dataset it holds
+//! the sidecar-derived [`DatasetInfo`], a thread-safe [`Denoiser`] (PJRT
+//! handle or native oracle), and a cache of built σ grids keyed by
+//! [`crate::sampler::SamplerConfig::schedule_key`]-style strings. Pilot-
+//! based schedules (COS, SDM) are expensive to construct — Algorithm 1
+//! runs a pilot batch — so the cache is the coordinator's "state
+//! management" contribution: first request pays construction, the rest
+//! reuse it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::diffusion::{Param, SigmaGrid};
+use crate::model::pjrt::PjrtDenoiser;
+use crate::model::{DatasetInfo, DatasetRegistry, Denoiser, GmmModel};
+use crate::runtime::Runtime;
+use crate::schedule::ScheduleSpec;
+use crate::util::Rng;
+use crate::Result;
+
+/// Which denoiser implementation serves requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelBackend {
+    /// AOT artifact via the PJRT executor thread (production path).
+    Pjrt,
+    /// Closed-form oracle (tests / fast wide sweeps).
+    Native,
+}
+
+impl ModelBackend {
+    pub fn from_name(name: &str) -> Result<ModelBackend> {
+        match name {
+            "pjrt" => Ok(ModelBackend::Pjrt),
+            "native" => Ok(ModelBackend::Native),
+            other => anyhow::bail!("unknown backend {other:?} (pjrt|native)"),
+        }
+    }
+}
+
+struct DatasetEntry {
+    info: DatasetInfo,
+    model: Arc<dyn Denoiser>,
+    /// native oracle always available (ground truth, pilot fallback)
+    oracle: Arc<GmmModel>,
+}
+
+/// Shared coordinator state (cheaply cloneable via Arc by the server).
+pub struct EngineHub {
+    datasets: BTreeMap<String, DatasetEntry>,
+    schedule_cache: Mutex<BTreeMap<String, SigmaGrid>>,
+    /// kept alive so the executor thread persists as long as the hub
+    _runtime: Option<Runtime>,
+    pub backend: ModelBackend,
+}
+
+impl EngineHub {
+    /// Load every dataset under `artifact_dir` with the chosen backend.
+    pub fn load(artifact_dir: &Path, backend: ModelBackend) -> Result<EngineHub> {
+        let registry = DatasetRegistry::load(artifact_dir)?;
+        let runtime = match backend {
+            ModelBackend::Pjrt => Some(Runtime::start(artifact_dir)?),
+            ModelBackend::Native => None,
+        };
+        let mut datasets = BTreeMap::new();
+        for (name, info) in &registry.by_name {
+            let oracle = Arc::new(GmmModel::new(info.clone()));
+            let model: Arc<dyn Denoiser> = match (&runtime, backend) {
+                (Some(rt), ModelBackend::Pjrt) => Arc::new(PjrtDenoiser::new(
+                    rt.handle.clone(),
+                    name,
+                    info.dim,
+                    info.k,
+                )),
+                _ => oracle.clone(),
+            };
+            datasets.insert(name.clone(), DatasetEntry { info: info.clone(), model, oracle });
+        }
+        Ok(EngineHub {
+            datasets,
+            schedule_cache: Mutex::new(BTreeMap::new()),
+            _runtime: runtime,
+            backend,
+        })
+    }
+
+    /// Build a hub over native oracles only, without artifacts on disk —
+    /// used by unit tests with synthetic `DatasetInfo`s.
+    pub fn from_infos(infos: Vec<DatasetInfo>) -> EngineHub {
+        let mut datasets = BTreeMap::new();
+        for info in infos {
+            let oracle = Arc::new(GmmModel::new(info.clone()));
+            datasets.insert(
+                info.name.clone(),
+                DatasetEntry { info, model: oracle.clone(), oracle },
+            );
+        }
+        EngineHub {
+            datasets,
+            schedule_cache: Mutex::new(BTreeMap::new()),
+            _runtime: None,
+            backend: ModelBackend::Native,
+        }
+    }
+
+    pub fn dataset_names(&self) -> Vec<String> {
+        self.datasets.keys().cloned().collect()
+    }
+
+    pub fn info(&self, dataset: &str) -> Result<&DatasetInfo> {
+        Ok(&self.entry(dataset)?.info)
+    }
+
+    pub fn model(&self, dataset: &str) -> Result<Arc<dyn Denoiser>> {
+        Ok(self.entry(dataset)?.model.clone())
+    }
+
+    pub fn oracle(&self, dataset: &str) -> Result<Arc<GmmModel>> {
+        Ok(self.entry(dataset)?.oracle.clone())
+    }
+
+    fn entry(&self, dataset: &str) -> Result<&DatasetEntry> {
+        self.datasets.get(dataset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown dataset {dataset:?}; loaded: {:?}",
+                self.datasets.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Resolve `steps == 0` to the dataset default.
+    pub fn resolve_steps(&self, dataset: &str, steps: usize) -> Result<usize> {
+        if steps > 0 {
+            Ok(steps)
+        } else {
+            Ok(self.info(dataset)?.default_steps)
+        }
+    }
+
+    /// Get or build the σ grid for a (dataset, param, schedule, steps)
+    /// combination. Pilot-based schedules run their pilot on the serving
+    /// model (so the PJRT path exercises the artifact end to end).
+    pub fn schedule(
+        &self,
+        dataset: &str,
+        param: Param,
+        spec: &ScheduleSpec,
+        steps: usize,
+    ) -> Result<SigmaGrid> {
+        let steps = self.resolve_steps(dataset, steps)?;
+        let key = format!("{dataset}|{}|{}|{steps}", param.name(), spec.tag());
+        if let Some(g) = self.schedule_cache.lock().unwrap().get(&key) {
+            return Ok(g.clone());
+        }
+        let entry = self.entry(dataset)?;
+        // deterministic pilot seed per key so cached schedules reproduce
+        let seed = key.bytes().fold(0xC0FFEEu64, |h, b| {
+            h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+        });
+        let mut rng = Rng::new(seed);
+        let grid = spec.build(steps, &entry.info, param, entry.model.as_ref(), &mut rng)?;
+        self.schedule_cache
+            .lock()
+            .unwrap()
+            .insert(key, grid.clone());
+        Ok(grid)
+    }
+
+    pub fn cached_schedules(&self) -> usize {
+        self.schedule_cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::testmodel::toy;
+
+    fn hub() -> EngineHub {
+        EngineHub::from_infos(vec![toy().info])
+    }
+
+    #[test]
+    fn schedule_cache_hits() {
+        let h = hub();
+        let spec = ScheduleSpec::Edm { rho: 7.0 };
+        let g1 = h.schedule("toy", Param::Edm, &spec, 12).unwrap();
+        assert_eq!(h.cached_schedules(), 1);
+        let g2 = h.schedule("toy", Param::Edm, &spec, 12).unwrap();
+        assert_eq!(h.cached_schedules(), 1);
+        assert_eq!(g1, g2);
+        // different param = different cache entry
+        let _ = h.schedule("toy", Param::Ve, &spec, 12).unwrap();
+        assert_eq!(h.cached_schedules(), 2);
+    }
+
+    #[test]
+    fn pilot_schedules_are_cached_and_deterministic() {
+        let h = hub();
+        let spec = ScheduleSpec::Sdm {
+            eta_min: 0.02,
+            eta_max: 0.2,
+            p: 1.0,
+            q: 0.25,
+            pilot_rows: 16,
+        };
+        let g1 = h.schedule("toy", Param::Edm, &spec, 10).unwrap();
+        let g2 = h.schedule("toy", Param::Edm, &spec, 10).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(g1.sigmas.len(), 11);
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let h = hub();
+        assert!(h.info("nope").is_err());
+        assert!(h.model("nope").is_err());
+    }
+
+    #[test]
+    fn resolve_steps_default() {
+        let h = hub();
+        assert_eq!(h.resolve_steps("toy", 0).unwrap(), 12);
+        assert_eq!(h.resolve_steps("toy", 33).unwrap(), 33);
+    }
+}

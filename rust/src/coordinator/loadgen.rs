@@ -1,0 +1,188 @@
+//! Workload generator: open-loop Poisson and closed-loop arrival processes
+//! for driving the coordinator — the serving-paper standard for measuring
+//! latency under offered load rather than best-case round-trips.
+//!
+//! Deterministic given a seed; used by `sdm bench-client --open-loop` and
+//! the coordinator benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::client::Client;
+use crate::util::{Histogram, Rng, Timer};
+use crate::Result;
+
+/// One request template drawn by the generator.
+#[derive(Clone, Debug)]
+pub struct RequestTemplate {
+    pub dataset: String,
+    pub n: usize,
+    pub param: String,
+    pub solver: String,
+    pub schedule: String,
+    pub steps: usize,
+}
+
+/// Mixture of request templates with weights (a "trace profile").
+#[derive(Clone, Debug)]
+pub struct TraceProfile {
+    pub templates: Vec<(f64, RequestTemplate)>,
+}
+
+impl TraceProfile {
+    /// The default mixed profile used in EXPERIMENTS.md: mostly CIFAR SDM
+    /// traffic with a heavier AFHQ tail — mirrors a multi-model serving
+    /// deployment.
+    pub fn standard() -> TraceProfile {
+        let t = |dataset: &str, n: usize, solver: &str, steps: usize| RequestTemplate {
+            dataset: dataset.into(),
+            n,
+            param: "vp".into(),
+            solver: solver.into(),
+            schedule: "edm".into(),
+            steps,
+        };
+        TraceProfile {
+            templates: vec![
+                (0.5, t("cifar10g", 16, "sdm", 18)),
+                (0.25, t("cifar10g", 64, "heun", 18)),
+                (0.25, t("afhqg", 16, "sdm", 40)),
+            ],
+        }
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> &RequestTemplate {
+        let weights: Vec<f64> = self.templates.iter().map(|(w, _)| *w).collect();
+        &self.templates[rng.weighted_choice(&weights)].1
+    }
+}
+
+/// Result of a load run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub latency: Histogram,
+    pub sent: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.sent as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Open-loop Poisson load: `workers` connections fire requests at combined
+/// rate `rps` for `total` requests, regardless of completion times (the
+/// honest way to observe queueing).
+pub fn open_loop(
+    addr: &str,
+    profile: &TraceProfile,
+    rps: f64,
+    total: u64,
+    workers: usize,
+    seed: u64,
+) -> Result<LoadReport> {
+    anyhow::ensure!(rps > 0.0 && workers > 0, "bad load parameters");
+    let errors = Arc::new(AtomicU64::new(0));
+    let timer = Timer::start();
+    let per_worker = total / workers as u64;
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let addr = addr.to_string();
+        let profile = profile.clone();
+        let errors = Arc::clone(&errors);
+        let worker_rate = rps / workers as f64;
+        handles.push(std::thread::spawn(move || -> Result<Histogram> {
+            let mut rng = Rng::new(seed ^ (w as u64 * 0x9E37));
+            let mut client = Client::connect(&addr)?;
+            let mut hist = Histogram::new();
+            let start = Timer::start();
+            let mut next_fire_us = 0.0f64;
+            for i in 0..per_worker {
+                // exponential inter-arrival (Poisson process)
+                next_fire_us += -(1.0 - rng.uniform()).ln() / worker_rate * 1e6;
+                let now = start.elapsed_us();
+                if next_fire_us > now {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        (next_fire_us - now) as u64,
+                    ));
+                }
+                let tpl = profile.draw(&mut rng).clone();
+                let t = Timer::start();
+                let line = format!(
+                    r#"{{"op":"sample","dataset":"{}","n":{},"param":"{}","solver":"{}","schedule":"{}","steps":{},"seed":{}}}"#,
+                    tpl.dataset, tpl.n, tpl.param, tpl.solver, tpl.schedule, tpl.steps,
+                    seed ^ i
+                );
+                match client.send(&line) {
+                    Ok(v) if v.get("ok").map(|b| b == &crate::util::Json::Bool(true)).unwrap_or(false) => {
+                        hist.record(t.elapsed_us());
+                    }
+                    _ => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Ok(hist)
+        }));
+    }
+    let mut latency = Histogram::new();
+    for h in handles {
+        latency.merge(&h.join().unwrap()?);
+    }
+    Ok(LoadReport {
+        latency,
+        sent: per_worker * workers as u64,
+        errors: errors.load(Ordering::SeqCst),
+        wall_s: timer.elapsed_us() / 1e6,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineHub, Server, ServerConfig};
+    use crate::model::gmm::testmodel::toy;
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn profile_draw_respects_weights() {
+        let profile = TraceProfile {
+            templates: vec![
+                (1.0, TraceProfile::standard().templates[0].1.clone()),
+                (0.0, TraceProfile::standard().templates[2].1.clone()),
+            ],
+        };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(profile.draw(&mut rng).dataset, "cifar10g");
+        }
+    }
+
+    #[test]
+    fn open_loop_against_toy_server() {
+        let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        let profile = TraceProfile {
+            templates: vec![(
+                1.0,
+                RequestTemplate {
+                    dataset: "toy".into(),
+                    n: 4,
+                    param: "edm".into(),
+                    solver: "euler".into(),
+                    schedule: "edm".into(),
+                    steps: 6,
+                },
+            )],
+        };
+        let report = open_loop(&addr, &profile, 200.0, 40, 2, 7).unwrap();
+        assert_eq!(report.sent, 40);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.latency.count(), 40);
+        assert!(report.throughput_rps() > 10.0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,106 @@
+//! Serving metrics: per-dataset latency histograms and counters, exposed
+//! as a JSON snapshot on the `stats` op.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::{Histogram, Json};
+
+#[derive(Default)]
+struct RouteMetrics {
+    latency_us: Histogram,
+    requests: u64,
+    samples: u64,
+    errors: u64,
+    batches: u64,
+    batched_rows: u64,
+    nfe_total: f64,
+}
+
+/// Thread-safe metrics sink shared across batchers and connections.
+pub struct ServerMetrics {
+    routes: Mutex<BTreeMap<String, RouteMetrics>>,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        ServerMetrics { routes: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn record_request(&self, dataset: &str, latency_us: f64, rows: usize, nfe: f64) {
+        let mut routes = self.routes.lock().unwrap();
+        let r = routes.entry(dataset.to_string()).or_default();
+        r.latency_us.record(latency_us);
+        r.requests += 1;
+        r.samples += rows as u64;
+        r.nfe_total += nfe * rows as f64;
+    }
+
+    pub fn record_batch(&self, dataset: &str, group_size: usize, rows: usize) {
+        let mut routes = self.routes.lock().unwrap();
+        let r = routes.entry(dataset.to_string()).or_default();
+        r.batches += 1;
+        r.batched_rows += rows as u64;
+        let _ = group_size;
+    }
+
+    pub fn record_error(&self, dataset: &str) {
+        let mut routes = self.routes.lock().unwrap();
+        routes.entry(dataset.to_string()).or_default().errors += 1;
+    }
+
+    /// JSON snapshot for the `stats` op / operator dashboards.
+    pub fn snapshot(&self) -> Json {
+        let routes = self.routes.lock().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, r) in routes.iter() {
+            let mut m = BTreeMap::new();
+            m.insert("requests".into(), Json::Num(r.requests as f64));
+            m.insert("samples".into(), Json::Num(r.samples as f64));
+            m.insert("errors".into(), Json::Num(r.errors as f64));
+            m.insert("batches".into(), Json::Num(r.batches as f64));
+            let avg_batch = if r.batches > 0 {
+                r.batched_rows as f64 / r.batches as f64
+            } else {
+                0.0
+            };
+            m.insert("avg_batch_rows".into(), Json::Num(avg_batch));
+            let avg_nfe = if r.samples > 0 { r.nfe_total / r.samples as f64 } else { 0.0 };
+            m.insert("avg_nfe".into(), Json::Num(avg_nfe));
+            m.insert("latency_p50_us".into(), Json::Num(r.latency_us.quantile(0.5)));
+            m.insert("latency_p95_us".into(), Json::Num(r.latency_us.quantile(0.95)));
+            m.insert("latency_p99_us".into(), Json::Num(r.latency_us.quantile(0.99)));
+            m.insert("latency_mean_us".into(), Json::Num(r.latency_us.mean()));
+            out.insert(name.clone(), Json::Obj(m));
+        }
+        Json::Obj(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = ServerMetrics::new();
+        m.record_request("a", 100.0, 8, 35.0);
+        m.record_request("a", 300.0, 8, 35.0);
+        m.record_batch("a", 2, 16);
+        m.record_error("b");
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        assert_eq!(a.get("requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(a.get("samples").unwrap().as_f64().unwrap(), 16.0);
+        assert_eq!(a.get("avg_nfe").unwrap().as_f64().unwrap(), 35.0);
+        assert_eq!(a.get("avg_batch_rows").unwrap().as_f64().unwrap(), 16.0);
+        let b = snap.get("b").unwrap();
+        assert_eq!(b.get("errors").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

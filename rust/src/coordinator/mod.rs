@@ -1,0 +1,31 @@
+//! L3 serving coordinator — the request-path control plane.
+//!
+//! Shape (vLLM-router-like, see DESIGN.md §1):
+//!
+//! ```text
+//! TCP conn ─► protocol parse ─► Router ─► per-dataset Batcher ─► Engine hub
+//!                                            │  (group, pad, flush)   │
+//!                                            └───── schedule cache ◄──┘
+//! ```
+//!
+//! - [`protocol`]: JSON-lines request/response wire format.
+//! - [`hub`]: engine hub — datasets, model backends, schedule cache.
+//! - [`batcher`]: dynamic batching of compatible sample requests.
+//! - [`router`]: routes parsed requests to per-dataset batcher queues.
+//! - [`server`]: TCP accept loop + connection threads.
+//! - [`client`]: blocking client used by examples and benches.
+//! - [`metrics`]: per-route latency histograms and counters.
+
+pub mod batcher;
+pub mod client;
+pub mod hub;
+pub mod loadgen;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+pub use client::Client;
+pub use hub::{EngineHub, ModelBackend};
+pub use protocol::{Request, Response};
+pub use server::{Server, ServerConfig};

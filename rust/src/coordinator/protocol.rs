@@ -1,0 +1,308 @@
+//! Wire protocol: one JSON object per line, both directions.
+//!
+//! Requests:
+//! ```json
+//! {"op":"sample","dataset":"cifar10g","n":64,"param":"edm",
+//!  "solver":"sdm","schedule":"sdm","steps":18,"seed":7,
+//!  "class":3,"return_samples":false,"tau_k":2e-4,
+//!  "eta_min":0.01,"eta_max":0.4,"p":1.0,"q":0.25,"lambda":"step"}
+//! {"op":"ping"}   {"op":"stats"}   {"op":"shutdown"}
+//! ```
+//! Sample responses carry the Gaussian summary of the generated rows, the
+//! NFE spent, and optionally the raw samples.
+
+use std::collections::BTreeMap;
+
+use anyhow::bail;
+
+use crate::diffusion::{CurvatureClock, Param};
+use crate::schedule::ScheduleSpec;
+use crate::solvers::{ChurnParams, LambdaKind, SolverSpec};
+use crate::util::Json;
+use crate::Result;
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Ping,
+    Stats,
+    Shutdown,
+    Sample(SampleRequest),
+}
+
+/// Parameters of a `sample` request.
+#[derive(Clone, Debug)]
+pub struct SampleRequest {
+    pub dataset: String,
+    pub n: usize,
+    pub param: Param,
+    pub solver: SolverSpec,
+    pub schedule: ScheduleSpec,
+    pub steps: usize,
+    pub seed: u64,
+    pub class: Option<usize>,
+    pub return_samples: bool,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = Json::parse(line)?;
+        let op = v.get("op")?.as_str()?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "sample" => Ok(Request::Sample(parse_sample(&v)?)),
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+}
+
+fn opt_f64(v: &Json, key: &str, default: f64) -> Result<f64> {
+    match v.get(key) {
+        Ok(x) => x.as_f64(),
+        Err(_) => Ok(default),
+    }
+}
+
+fn parse_sample(v: &Json) -> Result<SampleRequest> {
+    let dataset = v.get("dataset")?.as_str()?.to_string();
+    let n = v.get("n")?.as_usize()?;
+    anyhow::ensure!(n >= 1 && n <= 65_536, "n out of range");
+    let param = Param::from_name(match v.get("param") {
+        Ok(p) => p.as_str()?,
+        Err(_) => "edm",
+    })?;
+    let steps = match v.get("steps") {
+        Ok(s) => s.as_usize()?,
+        Err(_) => 0, // 0 = dataset default, resolved by the hub
+    };
+    let seed = match v.get("seed") {
+        Ok(s) => s.as_f64()? as u64,
+        Err(_) => 0,
+    };
+    let class = match v.get("class") {
+        Ok(Json::Null) | Err(_) => None,
+        Ok(c) => Some(c.as_usize()?),
+    };
+    let return_samples = matches!(v.get("return_samples"), Ok(Json::Bool(true)));
+
+    // solver
+    let solver_name = match v.get("solver") {
+        Ok(s) => s.as_str()?.to_string(),
+        Err(_) => "heun".to_string(),
+    };
+    let solver = match solver_name.as_str() {
+        "euler" => SolverSpec::Euler,
+        "heun" => SolverSpec::Heun,
+        "dpm2m" => SolverSpec::Dpm2m,
+        "heun-churn" => SolverSpec::StochasticHeun(ChurnParams {
+            s_churn: opt_f64(v, "s_churn", 40.0)?,
+            s_min: opt_f64(v, "s_min", 0.05)?,
+            s_max: opt_f64(v, "s_max", 50.0)?,
+            s_noise: opt_f64(v, "s_noise", 1.003)?,
+        }),
+        "sdm" => {
+            let lambda = LambdaKind::from_name(match v.get("lambda") {
+                Ok(l) => l.as_str()?,
+                Err(_) => "step",
+            })?;
+            SolverSpec::Adaptive {
+                lambda,
+                tau_k: opt_f64(v, "tau_k", 2e-4)?,
+                clock: CurvatureClock::Sigma,
+            }
+        }
+        other => bail!("unknown solver {other:?}"),
+    };
+
+    // schedule
+    let sched_name = match v.get("schedule") {
+        Ok(s) => s.as_str()?.to_string(),
+        Err(_) => "edm".to_string(),
+    };
+    let schedule = match sched_name.as_str() {
+        "edm" => ScheduleSpec::Edm { rho: opt_f64(v, "rho", 7.0)? },
+        "linear" => ScheduleSpec::LinearSigma,
+        "cosine" => ScheduleSpec::Cosine,
+        "logsnr" => ScheduleSpec::LogSnr,
+        "cos" => ScheduleSpec::Cos {
+            pilot_mult: opt_f64(v, "pilot_mult", 4.0)? as usize,
+            pilot_rows: opt_f64(v, "pilot_rows", 128.0)? as usize,
+        },
+        "sdm" => ScheduleSpec::Sdm {
+            eta_min: opt_f64(v, "eta_min", 0.02)?,
+            eta_max: opt_f64(v, "eta_max", 0.20)?,
+            p: opt_f64(v, "p", 1.0)?,
+            q: opt_f64(v, "q", 0.25)?,
+            pilot_rows: opt_f64(v, "pilot_rows", 128.0)? as usize,
+        },
+        other => bail!("unknown schedule {other:?}"),
+    };
+
+    Ok(SampleRequest {
+        dataset,
+        n,
+        param,
+        solver,
+        schedule,
+        steps,
+        seed,
+        class,
+        return_samples,
+    })
+}
+
+/// A server response, serialized as one JSON line.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Pong,
+    Err(String),
+    Stats(Json),
+    SampleOk {
+        n: usize,
+        nfe: f64,
+        mean: Vec<f64>,
+        trace_cov: f64,
+        latency_us: f64,
+        batched_with: usize,
+        samples: Option<Vec<f32>>,
+        dim: usize,
+    },
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            Response::Pong => {
+                m.insert("ok".into(), Json::Bool(true));
+                m.insert("op".into(), Json::Str("pong".into()));
+            }
+            Response::Err(e) => {
+                m.insert("ok".into(), Json::Bool(false));
+                m.insert("error".into(), Json::Str(e.clone()));
+            }
+            Response::Stats(s) => {
+                m.insert("ok".into(), Json::Bool(true));
+                m.insert("stats".into(), s.clone());
+            }
+            Response::SampleOk {
+                n,
+                nfe,
+                mean,
+                trace_cov,
+                latency_us,
+                batched_with,
+                samples,
+                dim,
+            } => {
+                m.insert("ok".into(), Json::Bool(true));
+                m.insert("n".into(), Json::Num(*n as f64));
+                m.insert("nfe".into(), Json::Num(*nfe));
+                m.insert("dim".into(), Json::Num(*dim as f64));
+                m.insert(
+                    "mean".into(),
+                    Json::Arr(mean.iter().map(|&x| Json::Num(x)).collect()),
+                );
+                m.insert("trace_cov".into(), Json::Num(*trace_cov));
+                m.insert("latency_us".into(), Json::Num(*latency_us));
+                m.insert("batched_with".into(), Json::Num(*batched_with as f64));
+                if let Some(s) = samples {
+                    m.insert(
+                        "samples".into(),
+                        Json::Arr(s.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    );
+                }
+            }
+        }
+        Json::Obj(m).to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<Json> {
+        Json::parse(line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_sample() {
+        let r = Request::parse(r#"{"op":"sample","dataset":"cifar10g","n":16}"#).unwrap();
+        match r {
+            Request::Sample(s) => {
+                assert_eq!(s.dataset, "cifar10g");
+                assert_eq!(s.n, 16);
+                assert_eq!(s.param, Param::Edm);
+                assert_eq!(s.solver, SolverSpec::Heun);
+                assert!(matches!(s.schedule, ScheduleSpec::Edm { .. }));
+                assert!(!s.return_samples);
+            }
+            _ => panic!("wrong op"),
+        }
+    }
+
+    #[test]
+    fn parses_full_sdm_request() {
+        let line = r#"{"op":"sample","dataset":"afhqg","n":64,"param":"ve",
+            "solver":"sdm","lambda":"step","tau_k":0.001,
+            "schedule":"sdm","eta_min":0.02,"eta_max":0.2,"p":1.0,"q":0.25,
+            "steps":40,"seed":9,"class":null,"return_samples":true}"#
+            .replace('\n', " ");
+        let r = Request::parse(&line).unwrap();
+        match r {
+            Request::Sample(s) => {
+                assert_eq!(s.param, Param::Ve);
+                assert!(matches!(
+                    s.solver,
+                    SolverSpec::Adaptive { lambda: LambdaKind::Step, .. }
+                ));
+                assert!(matches!(s.schedule, ScheduleSpec::Sdm { .. }));
+                assert!(s.return_samples);
+                assert_eq!(s.steps, 40);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"op":"launch_missiles"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"sample","dataset":"x","n":0}"#).is_err());
+        assert!(
+            Request::parse(r#"{"op":"sample","dataset":"x","n":4,"solver":"rk45"}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::SampleOk {
+            n: 4,
+            nfe: 35.0,
+            mean: vec![0.5, -0.25],
+            trace_cov: 2.0,
+            latency_us: 1234.5,
+            batched_with: 2,
+            samples: None,
+            dim: 2,
+        };
+        let line = r.to_line();
+        let v = Response::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(v.get("nfe").unwrap().as_f64().unwrap(), 35.0);
+        assert_eq!(v.get("mean").unwrap().as_vec_f64().unwrap(), vec![0.5, -0.25]);
+    }
+
+    #[test]
+    fn ops_parse() {
+        assert!(matches!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(Request::parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(
+            Request::parse(r#"{"op":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+    }
+}

@@ -1,0 +1,129 @@
+//! Request router: one batcher queue per dataset route.
+//!
+//! Routes are created eagerly for every dataset the hub loaded, each with
+//! its own batcher thread — requests for different workloads never block
+//! each other, while requests for the same workload flow into one batcher
+//! where they can be merged.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
+use crate::coordinator::hub::EngineHub;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::protocol::{Response, SampleRequest};
+use crate::util::Timer;
+use crate::Result;
+
+pub struct Router {
+    routes: BTreeMap<String, Mutex<mpsc::Sender<Pending>>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn start(hub: Arc<EngineHub>, metrics: Arc<ServerMetrics>, policy: BatchPolicy) -> Router {
+        let mut routes = BTreeMap::new();
+        let mut joins = Vec::new();
+        for name in hub.dataset_names() {
+            let (tx, rx) = mpsc::channel::<Pending>();
+            let hub2 = hub.clone();
+            let metrics2 = metrics.clone();
+            let name2 = name.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("sdm-batcher-{name}"))
+                .spawn(move || batcher_loop(name2, hub2, metrics2, rx, policy))
+                .expect("spawning batcher");
+            routes.insert(name, Mutex::new(tx));
+            joins.push(join);
+        }
+        Router { routes, joins }
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, req: SampleRequest) -> Result<mpsc::Receiver<Response>> {
+        let route = self.routes.get(&req.dataset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no route for dataset {:?}; available: {:?}",
+                req.dataset,
+                self.routes.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let (rtx, rrx) = mpsc::channel();
+        route
+            .lock()
+            .unwrap()
+            .send(Pending {
+                req,
+                reply: rtx,
+                enqueued: Instant::now(),
+                timer: Timer::start(),
+            })
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn call(&self, req: SampleRequest) -> Result<Response> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))
+    }
+
+    /// Close all routes and join batcher threads.
+    pub fn shutdown(mut self) {
+        self.routes.clear(); // drop senders -> batcher loops exit
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Request;
+    use crate::model::gmm::testmodel::toy;
+
+    fn mk(n: usize, dataset: &str) -> SampleRequest {
+        let line = format!(
+            r#"{{"op":"sample","dataset":"{dataset}","n":{n},"solver":"euler","steps":6}}"#
+        );
+        match Request::parse(&line).unwrap() {
+            Request::Sample(s) => s,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn routes_and_replies() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let router = Router::start(hub, metrics, BatchPolicy::default());
+        match router.call(mk(4, "toy")).unwrap() {
+            Response::SampleOk { n, .. } => assert_eq!(n, 4),
+            other => panic!("{other:?}"),
+        }
+        assert!(router.submit(mk(4, "ghost")).is_err());
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_served() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let router = Arc::new(Router::start(hub, metrics, BatchPolicy::default()));
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let r = router.clone();
+            handles.push(std::thread::spawn(move || {
+                match r.call(mk(1 + i % 5, "toy")).unwrap() {
+                    Response::SampleOk { n, .. } => assert_eq!(n, 1 + i % 5),
+                    other => panic!("{other:?}"),
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! TCP server: accept loop + per-connection protocol threads.
+//!
+//! JSON-lines over TCP (one request per line, one response line back).
+//! `shutdown` stops the accept loop and joins everything. Connection
+//! handlers run on plain threads (the vendored crate set has no tokio;
+//! for the connection counts this system targets, thread-per-connection
+//! is the honest design).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::hub::EngineHub;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::router::Router;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// bind address, e.g. "127.0.0.1:7433" (port 0 = ephemeral).
+    pub addr: String,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:0".into(), policy: BatchPolicy::default() }
+    }
+}
+
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads.
+    pub fn start(hub: Arc<EngineHub>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let metrics = Arc::new(ServerMetrics::new());
+        let router = Arc::new(Router::start(hub, metrics.clone(), cfg.policy));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let stop2 = stop.clone();
+        let accept_join = std::thread::Builder::new()
+            .name("sdm-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            // one-line, 8x-latency fix: without nodelay the
+                            // JSON-line responses sit in Nagle's buffer for
+                            // the classic ~40 ms delayed-ACK window
+                            // (EXPERIMENTS.md §Perf iteration 5)
+                            stream.set_nodelay(true).ok();
+                            let router = router.clone();
+                            let metrics = metrics.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("sdm-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, &router, &metrics, &stop3);
+                                });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+
+        Ok(Server { local_addr, stop, accept_join: Some(accept_join) })
+    }
+
+    /// Request shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+
+    pub fn is_stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    metrics: &ServerMetrics,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Err(e) => Response::Err(format!("bad request: {e:#}")),
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Stats) => Response::Stats(metrics.snapshot()),
+            Ok(Request::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                let _ = writeln!(writer, "{}", Response::Pong.to_line());
+                break;
+            }
+            Ok(Request::Sample(req)) => match router.call(req) {
+                Ok(r) => r,
+                Err(e) => Response::Err(format!("{e:#}")),
+            },
+        };
+        if writeln!(writer, "{}", response.to_line()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::client::Client;
+    use crate::model::gmm::testmodel::toy;
+
+    fn start_server() -> (Server, std::net::SocketAddr) {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr;
+        (server, addr)
+    }
+
+    #[test]
+    fn ping_and_sample_roundtrip() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let pong = client.ping().unwrap();
+        assert!(pong);
+        let resp = client
+            .send(r#"{"op":"sample","dataset":"toy","n":8,"solver":"heun","steps":6}"#)
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap(), &crate::util::Json::Bool(true));
+        assert_eq!(resp.get("n").unwrap().as_f64().unwrap(), 8.0);
+        assert_eq!(resp.get("nfe").unwrap().as_f64().unwrap(), 11.0); // 2*6-1
+        let stats = client.send(r#"{"op":"stats"}"#).unwrap();
+        assert!(stats.get("stats").unwrap().get("toy").is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_error_lines() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let resp = client.send("this is not json").unwrap();
+        assert_eq!(resp.get("ok").unwrap(), &crate::util::Json::Bool(false));
+        let resp = client
+            .send(r#"{"op":"sample","dataset":"nope","n":4}"#)
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap(), &crate::util::Json::Bool(false));
+        // connection still usable afterwards
+        assert!(client.ping().unwrap());
+        server.shutdown();
+    }
+
+    #[test]
+    fn parallel_clients() {
+        let (server, addr) = start_server();
+        let addr_s = addr.to_string();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let a = addr_s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&a).unwrap();
+                for _ in 0..3 {
+                    let r = c
+                        .send(r#"{"op":"sample","dataset":"toy","n":4,"solver":"euler","steps":5}"#)
+                        .unwrap();
+                    assert_eq!(r.get("ok").unwrap(), &crate::util::Json::Bool(true));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,156 @@
+//! Trajectory curvature measures (paper §3.1).
+//!
+//! The local truncation error of any solver is governed by ‖ẍ‖. Three
+//! discrete proxies (eqs. 6–8) avoid Hessian-vector products:
+//!
+//! - `kappa_abs(i)  = ‖v_{i+1} − v_i‖ / Δt_i`              (needs lookahead)
+//! - `kappa_rel(i)  = kappa_abs(i) / ‖v_i‖`                 (scale-free)
+//! - `kappa_hat_rel(i) = ‖v_i − v_{i−1}‖ / (Δt̂_i ‖v_{i−1}‖)` (cache-based,
+//!    NFE = 1/step — the solver gate used by SDM's step scheduler)
+//!
+//! The *clock* choice makes κ̂ comparable across parameterizations: under
+//! the native t of VP (t∈[0,~1]) and VE (t=σ², t up to 6400) the same
+//! geometric situation yields κ̂ values orders of magnitude apart. The
+//! `Sigma` clock (Δ = σ_{i−1} − σ_i) equals the paper's definition under
+//! EDM (where t = σ) and keeps the Table-2 τ_k grid meaningful for VP/VE;
+//! it is the default throughout. Documented in DESIGN.md §3.
+
+/// Which time axis Δt̂ in eq. (8) is measured against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CurvatureClock {
+    /// Native integration time of the parameterization.
+    NativeT,
+    /// Noise level σ (equals NativeT under EDM). Default.
+    Sigma,
+    /// ln σ — fully scale-free progress measure.
+    LogSigma,
+}
+
+impl CurvatureClock {
+    pub fn delta(&self, t_prev: f64, t_cur: f64, sig_prev: f64, sig_cur: f64) -> f64 {
+        match self {
+            CurvatureClock::NativeT => (t_prev - t_cur).abs(),
+            CurvatureClock::Sigma => (sig_prev - sig_cur).abs(),
+            CurvatureClock::LogSigma => {
+                (sig_prev.max(1e-12).ln() - sig_cur.max(1e-12).ln()).abs()
+            }
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "t" | "native" => Ok(CurvatureClock::NativeT),
+            "sigma" => Ok(CurvatureClock::Sigma),
+            "logsigma" => Ok(CurvatureClock::LogSigma),
+            other => anyhow::bail!("unknown curvature clock {other:?}"),
+        }
+    }
+}
+
+/// Batch-aggregate cache-based relative curvature κ̂_rel (eq. 8):
+/// mean over rows of ‖v_i − v_{i−1}‖ / (Δ · ‖v_{i−1}‖).
+///
+/// `v_prev`/`v_cur` are row-major [rows, dim]; `delta` comes from
+/// [`CurvatureClock::delta`]. Rows whose previous velocity is ~0 are
+/// skipped (no scale to be relative to).
+pub fn kappa_hat_rel(v_prev: &[f32], v_cur: &[f32], rows: usize, dim: usize, delta: f64) -> f64 {
+    debug_assert_eq!(v_prev.len(), rows * dim);
+    debug_assert_eq!(v_cur.len(), rows * dim);
+    if delta <= 0.0 || rows == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    let mut counted = 0usize;
+    for r in 0..rows {
+        let mut dv2 = 0.0f64;
+        let mut pv2 = 0.0f64;
+        for c in 0..dim {
+            let p = v_prev[r * dim + c] as f64;
+            let q = v_cur[r * dim + c] as f64;
+            dv2 += (q - p) * (q - p);
+            pv2 += p * p;
+        }
+        if pv2 > 1e-24 {
+            total += dv2.sqrt() / (delta * pv2.sqrt());
+            counted += 1;
+        }
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+/// One-step-ahead relative curvature κ_rel (eq. 7). Identical arithmetic
+/// to κ̂ with the roles of (prev, cur) shifted one step; exposed separately
+/// so tests can verify the paper's Appendix-B identity
+/// κ_rel(i−1) = κ̂_rel(i) exactly.
+pub fn kappa_rel(v_i: &[f32], v_next: &[f32], rows: usize, dim: usize, delta: f64) -> f64 {
+    kappa_hat_rel(v_i, v_next, rows, dim, delta)
+}
+
+/// A recorded curvature observation (feeds Figure 2 and the solver gate).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvaturePoint {
+    pub sigma: f64,
+    pub kappa_hat: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straight_line_has_zero_curvature() {
+        let v = vec![1.0f32; 4 * 3];
+        assert_eq!(kappa_hat_rel(&v, &v, 4, 3, 0.5), 0.0);
+    }
+
+    #[test]
+    fn known_single_row() {
+        // v_prev = (1,0), v_cur = (1,1): ‖Δv‖=1, ‖v_prev‖=1, Δ=0.5 → κ̂=2
+        let vp = vec![1.0f32, 0.0];
+        let vc = vec![1.0f32, 1.0];
+        let k = kappa_hat_rel(&vp, &vc, 1, 2, 0.5);
+        assert!((k - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn appendix_b_identity() {
+        // κ_rel(i-1) computed forward == κ̂_rel(i) computed from cache
+        let v0 = vec![0.5f32, -1.0, 2.0];
+        let v1 = vec![0.7f32, -0.9, 1.5];
+        let delta = 0.3;
+        assert_eq!(
+            kappa_rel(&v0, &v1, 1, 3, delta),
+            kappa_hat_rel(&v0, &v1, 1, 3, delta)
+        );
+    }
+
+    #[test]
+    fn zero_prev_velocity_rows_skipped() {
+        let vp = vec![0.0f32, 0.0, 1.0, 0.0];
+        let vc = vec![5.0f32, 5.0, 1.0, 1.0];
+        // row 0 has ‖v_prev‖=0 → skipped; row 1 gives κ̂ = 1/(0.5·1) = 2
+        let k = kappa_hat_rel(&vp, &vc, 2, 2, 0.5);
+        assert!((k - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_delta_or_rows() {
+        let v = vec![1.0f32, 2.0];
+        assert_eq!(kappa_hat_rel(&v, &v, 1, 2, 0.0), 0.0);
+        assert_eq!(kappa_hat_rel(&[], &[], 0, 2, 1.0), 0.0);
+    }
+
+    #[test]
+    fn clocks_differ_consistently() {
+        let (tp, tc) = (25.0, 16.0); // VE times for sigma 5 -> 4
+        let (sp, sc) = (5.0, 4.0);
+        assert_eq!(CurvatureClock::NativeT.delta(tp, tc, sp, sc), 9.0);
+        assert_eq!(CurvatureClock::Sigma.delta(tp, tc, sp, sc), 1.0);
+        let ls = CurvatureClock::LogSigma.delta(tp, tc, sp, sc);
+        assert!((ls - (5.0f64 / 4.0).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,70 @@
+//! Diffusion-trajectory mathematics: parameterizations (EDM/VP/VE) and the
+//! curvature analysis underpinning the paper's adaptive solver (§3.1).
+
+pub mod curvature;
+pub mod parameterization;
+
+pub use curvature::{kappa_hat_rel, kappa_rel, CurvatureClock, CurvaturePoint};
+pub use parameterization::Param;
+
+/// A discretized noise-level schedule: strictly decreasing σ values with a
+/// final exact 0 (the data manifold), i.e. `sigmas[0] = σ_max …
+/// sigmas[n-2] = σ_min, sigmas[n-1] = 0`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SigmaGrid {
+    pub sigmas: Vec<f64>,
+}
+
+impl SigmaGrid {
+    /// Validated constructor.
+    pub fn new(sigmas: Vec<f64>) -> anyhow::Result<SigmaGrid> {
+        if sigmas.len() < 2 {
+            anyhow::bail!("schedule needs at least 2 knots, got {}", sigmas.len());
+        }
+        for w in sigmas.windows(2) {
+            if !(w[1] < w[0]) {
+                anyhow::bail!("schedule not strictly decreasing: {} -> {}", w[0], w[1]);
+            }
+        }
+        if *sigmas.last().unwrap() != 0.0 {
+            anyhow::bail!("schedule must end at sigma = 0");
+        }
+        Ok(SigmaGrid { sigmas })
+    }
+
+    /// Number of integration intervals (= Euler NFE).
+    pub fn intervals(&self) -> usize {
+        self.sigmas.len() - 1
+    }
+
+    /// Map to native integration times for a parameterization.
+    pub fn times(&self, p: Param) -> Vec<f64> {
+        self.sigmas.iter().map(|&s| p.t_of_sigma(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_grids() {
+        assert!(SigmaGrid::new(vec![1.0]).is_err());
+        assert!(SigmaGrid::new(vec![1.0, 1.0, 0.0]).is_err());
+        assert!(SigmaGrid::new(vec![1.0, 2.0, 0.0]).is_err());
+        assert!(SigmaGrid::new(vec![2.0, 1.0, 0.5]).is_err());
+        assert!(SigmaGrid::new(vec![2.0, 1.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn times_are_monotone_for_all_params() {
+        let g = SigmaGrid::new(vec![80.0, 10.0, 1.0, 0.01, 0.0]).unwrap();
+        for p in [Param::Edm, Param::vp(), Param::Ve] {
+            let ts = g.times(p);
+            for w in ts.windows(2) {
+                assert!(w[1] < w[0], "{:?}: {ts:?}", p.name());
+            }
+            assert_eq!(g.intervals(), 4);
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Diffusion trajectory parameterizations (paper §2.1–§2.2, Appendix A).
+//!
+//! The PF-ODE `dx = [ (ṡ/s)x − s²σ̇σ ∇log p(x/s; σ) ] dt` specializes to
+//! three standard parameterizations. With the x-prediction denoiser D the
+//! velocity is `ẋ = (ṡ/s)x + (σ̇/σ)(x − s·D(x/s; σ))` (eq. 26). The AOT
+//! artifact computes `v = a·x̂ + b·(x̂ − D(x̂;σ))` in "hat" space `x̂ = x/s`,
+//! so the true velocity needs `a = ṡ(t)·1, b = σ̇(t)·s(t)/σ(t)` with the
+//! extra factor s folded in by [`Param::vel_coeffs`]:
+//! `v = ṡ·x̂ + (σ̇ s/σ)(x̂ − D)`.
+
+use anyhow::{bail, Result};
+
+/// EDM defaults for the VP parameterization (Karras et al. 2022, Table 1).
+pub const VP_BETA_D: f64 = 19.9;
+pub const VP_BETA_MIN: f64 = 0.1;
+
+/// A trajectory parameterization: σ(t), s(t) and their derivatives
+/// (Appendix A of the paper; closed forms for all three).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Param {
+    /// σ(t) = t, s(t) = 1.
+    Edm,
+    /// σ(t) = sqrt(e^{u(t)} − 1), s(t) = e^{−u(t)/2},
+    /// u(t) = ½β_d t² + β_min t.
+    Vp { beta_d: f64, beta_min: f64 },
+    /// σ(t) = sqrt(t), s(t) = 1.
+    Ve,
+}
+
+impl Param {
+    pub fn vp() -> Param {
+        Param::Vp { beta_d: VP_BETA_D, beta_min: VP_BETA_MIN }
+    }
+
+    /// Parse a CLI/protocol name.
+    pub fn from_name(name: &str) -> Result<Param> {
+        match name.to_ascii_lowercase().as_str() {
+            "edm" => Ok(Param::Edm),
+            "vp" => Ok(Param::vp()),
+            "ve" => Ok(Param::Ve),
+            other => bail!("unknown parameterization {other:?} (edm|vp|ve)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Param::Edm => "edm",
+            Param::Vp { .. } => "vp",
+            Param::Ve => "ve",
+        }
+    }
+
+    /// B(t) = u̇(t) = β_min + β_d t (VP only; eq. 43).
+    fn b_of_t(beta_d: f64, beta_min: f64, t: f64) -> f64 {
+        beta_min + beta_d * t
+    }
+
+    pub fn sigma(&self, t: f64) -> f64 {
+        match *self {
+            Param::Edm => t,
+            Param::Vp { beta_d, beta_min } => {
+                let u = 0.5 * beta_d * t * t + beta_min * t;
+                (u.exp() - 1.0).max(0.0).sqrt()
+            }
+            Param::Ve => t.max(0.0).sqrt(),
+        }
+    }
+
+    /// σ̇(t) (eq. 45 for VP, eq. 56 for VE).
+    pub fn sigma_dot(&self, t: f64) -> f64 {
+        match *self {
+            Param::Edm => 1.0,
+            Param::Vp { beta_d, beta_min } => {
+                let sg = self.sigma(t);
+                let b = Self::b_of_t(beta_d, beta_min, t);
+                0.5 * b * (sg + 1.0 / sg)
+            }
+            Param::Ve => 0.5 / self.sigma(t),
+        }
+    }
+
+    /// σ̈(t) (eq. 47 for VP, eq. 56 for VE).
+    pub fn sigma_ddot(&self, t: f64) -> f64 {
+        match *self {
+            Param::Edm => 0.0,
+            Param::Vp { beta_d, beta_min } => {
+                let sg = self.sigma(t);
+                let b = Self::b_of_t(beta_d, beta_min, t);
+                0.5 * beta_d * (sg + 1.0 / sg) + 0.25 * b * b * (sg - sg.powi(-3))
+            }
+            Param::Ve => {
+                let sg = self.sigma(t);
+                -0.25 / (sg * sg * sg)
+            }
+        }
+    }
+
+    pub fn s(&self, t: f64) -> f64 {
+        match *self {
+            Param::Edm | Param::Ve => 1.0,
+            Param::Vp { beta_d, beta_min } => {
+                let u = 0.5 * beta_d * t * t + beta_min * t;
+                (-0.5 * u).exp()
+            }
+        }
+    }
+
+    /// ṡ(t) = −½B(t)s(t) for VP (eq. 49); 0 otherwise.
+    pub fn s_dot(&self, t: f64) -> f64 {
+        match *self {
+            Param::Edm | Param::Ve => 0.0,
+            Param::Vp { beta_d, beta_min } => {
+                -0.5 * Self::b_of_t(beta_d, beta_min, t) * self.s(t)
+            }
+        }
+    }
+
+    /// s̈(t)/s(t) = ¼B² − ½β_d for VP (eq. 51); 0 otherwise.
+    pub fn s_ddot(&self, t: f64) -> f64 {
+        match *self {
+            Param::Edm | Param::Ve => 0.0,
+            Param::Vp { beta_d, beta_min } => {
+                let b = Self::b_of_t(beta_d, beta_min, t);
+                (0.25 * b * b - 0.5 * beta_d) * self.s(t)
+            }
+        }
+    }
+
+    /// Inverse of σ(t): the integration time at which the noise level is σ.
+    pub fn t_of_sigma(&self, sigma: f64) -> f64 {
+        match *self {
+            Param::Edm => sigma,
+            Param::Vp { beta_d, beta_min } => {
+                // solve ½β_d t² + β_min t = ln(1+σ²) for t ≥ 0
+                let u = (1.0 + sigma * sigma).ln();
+                ((beta_min * beta_min + 2.0 * beta_d * u).sqrt() - beta_min) / beta_d
+            }
+            Param::Ve => sigma * sigma,
+        }
+    }
+
+    /// Velocity coefficients (a, b) for the artifact contract
+    /// `v = a·x̂ + b·(x̂ − D)` with `x̂ = x/s`: a = ṡ, b = σ̇·s/σ.
+    pub fn vel_coeffs(&self, t: f64) -> (f64, f64) {
+        let a = self.s_dot(t);
+        let b = self.sigma_dot(t) * self.s(t) / self.sigma(t);
+        (a, b)
+    }
+
+    /// Standard deviation of the marginal at time t (prior init):
+    /// x_t ≈ s(t)·σ(t)·ε for σ(t) ≫ data scale.
+    pub fn prior_std(&self, t: f64) -> f64 {
+        self.s(t) * self.sigma(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const H: f64 = 1e-6;
+
+    fn num_deriv(f: impl Fn(f64) -> f64, t: f64) -> f64 {
+        (f(t + H) - f(t - H)) / (2.0 * H)
+    }
+
+    fn all_params() -> Vec<Param> {
+        vec![Param::Edm, Param::vp(), Param::Ve]
+    }
+
+    #[test]
+    fn sigma_dot_matches_numeric() {
+        for p in all_params() {
+            for &sigma in &[0.01, 0.1, 1.0, 10.0, 50.0] {
+                let t = p.t_of_sigma(sigma);
+                let num = num_deriv(|t| p.sigma(t), t);
+                let ana = p.sigma_dot(t);
+                assert!(
+                    (num - ana).abs() / (1.0 + ana.abs()) < 1e-4,
+                    "{:?} sigma={sigma}: ana={ana} num={num}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_ddot_matches_numeric() {
+        for p in all_params() {
+            for &sigma in &[0.05, 0.5, 2.0, 20.0] {
+                let t = p.t_of_sigma(sigma);
+                let num = num_deriv(|t| p.sigma_dot(t), t);
+                let ana = p.sigma_ddot(t);
+                assert!(
+                    (num - ana).abs() / (1.0 + ana.abs()) < 1e-3,
+                    "{:?} sigma={sigma}: ana={ana} num={num}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn s_dot_matches_numeric() {
+        let p = Param::vp();
+        for &sigma in &[0.05, 0.5, 2.0, 20.0, 79.0] {
+            let t = p.t_of_sigma(sigma);
+            let num = num_deriv(|t| p.s(t), t);
+            let ana = p.s_dot(t);
+            assert!((num - ana).abs() / (1.0 + ana.abs()) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn t_of_sigma_inverts_sigma() {
+        for p in all_params() {
+            for &sigma in &[0.002, 0.01, 0.7, 5.0, 80.0] {
+                let t = p.t_of_sigma(sigma);
+                let back = p.sigma(t);
+                assert!(
+                    (back - sigma).abs() / sigma < 1e-9,
+                    "{:?}: {sigma} -> t={t} -> {back}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vp_prior_std_is_near_one() {
+        // VP marginal at high noise: s·σ = sqrt(1 − e^{-u}) → 1
+        let p = Param::vp();
+        let t = p.t_of_sigma(80.0);
+        assert!((p.prior_std(t) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn edm_identity_forms() {
+        let p = Param::Edm;
+        assert_eq!(p.sigma(3.5), 3.5);
+        assert_eq!(p.s(3.5), 1.0);
+        assert_eq!(p.vel_coeffs(2.0), (0.0, 0.5));
+    }
+
+    #[test]
+    fn ve_time_is_sigma_squared() {
+        let p = Param::Ve;
+        assert!((p.t_of_sigma(5.0) - 25.0).abs() < 1e-12);
+        assert!((p.sigma(25.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vel_coeffs_reconstruct_ode_velocity() {
+        // For the PF-ODE, v = (ṡ/s)x + (σ̇/σ)(x − sD). In hat space with
+        // D=0 this is v = ṡ x̂ + (σ̇ s/σ) x̂; check against direct formula.
+        for p in all_params() {
+            let t = p.t_of_sigma(1.7);
+            let (a, b) = p.vel_coeffs(t);
+            let xhat = 2.0;
+            let x = p.s(t) * xhat;
+            let direct = (p.s_dot(t) / p.s(t)) * x + (p.sigma_dot(t) / p.sigma(t)) * x;
+            let via_coeffs = a * xhat + b * xhat;
+            assert!(
+                (direct - via_coeffs).abs() < 1e-10,
+                "{:?}: {direct} vs {via_coeffs}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for p in all_params() {
+            assert_eq!(Param::from_name(p.name()).unwrap().name(), p.name());
+        }
+        assert!(Param::from_name("ddim").is_err());
+    }
+}

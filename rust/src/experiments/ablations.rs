@@ -1,0 +1,94 @@
+//! Design-choice ablations beyond the paper's tables (DESIGN.md §6):
+//!
+//! - **Curvature clock** (DESIGN.md §3): the κ̂ gate can be measured
+//!   against native t, σ, or ln σ. The paper implicitly uses native t
+//!   (= σ under EDM); we default to the σ clock so one τ_k grid serves all
+//!   parameterizations — this ablation quantifies that choice.
+//! - **Warm-start grid density** for Algorithm 1's NEXTTIMESTEP (pilot
+//!   cost vs schedule quality).
+
+use crate::diffusion::{CurvatureClock, Param};
+use crate::experiments::{evaluate, ExpContext, RowResult};
+use crate::sampler::SamplerConfig;
+use crate::schedule::wasserstein::{wasserstein_schedule, WassersteinConfig};
+use crate::schedule::ScheduleSpec;
+use crate::solvers::{LambdaKind, SolverSpec};
+use crate::util::Rng;
+use crate::Result;
+
+/// Clock ablation: same τ_k ladder under each clock, per parameterization.
+pub fn run_clock_ablation(ctx: &ExpContext, dataset: &str) -> Result<Vec<(String, RowResult)>> {
+    let steps = ctx.hub.info(dataset)?.default_steps;
+    let mut out = Vec::new();
+    println!("Ablation — curvature clock for the adaptive solver ({dataset})");
+    println!("{:<10} {:<8} {:>10} {:>10} {:>8}", "clock", "param", "tau_k", "FD", "NFE");
+    for param in [Param::vp(), Param::Ve] {
+        for (clock, taus) in [
+            (CurvatureClock::Sigma, vec![2e-2, 5e-2, 1e-1]),
+            // native-t magnitudes differ wildly across params (VE: t=σ²),
+            // so give each clock its own plausible ladder
+            (CurvatureClock::NativeT, vec![2e-2, 5e-2, 1e-1]),
+            (CurvatureClock::LogSigma, vec![1e-1, 3e-1, 1.0]),
+        ] {
+            for tau in taus {
+                let cfg = SamplerConfig {
+                    dataset: dataset.to_string(),
+                    param,
+                    solver: SolverSpec::Adaptive {
+                        lambda: LambdaKind::Step,
+                        tau_k: tau,
+                        clock,
+                    },
+                    schedule: ScheduleSpec::Edm { rho: 7.0 },
+                    steps,
+                    class: None,
+                };
+                let r = evaluate(ctx, &cfg)?;
+                println!(
+                    "{:<10} {:<8} {:>10.0e} {:>10.4} {:>8.1}",
+                    format!("{clock:?}"),
+                    param.name(),
+                    tau,
+                    r.fd,
+                    r.nfe
+                );
+                out.push((format!("{clock:?}/{}/{tau:.0e}", param.name()), r));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Warm-start grid density ablation for Algorithm 1.
+pub fn run_refgrid_ablation(ctx: &ExpContext, dataset: &str) -> Result<()> {
+    let info = ctx.hub.info(dataset)?.clone();
+    let model = ctx.hub.model(dataset)?;
+    println!("Ablation — Algorithm 1 warm-start grid density ({dataset})");
+    println!("{:>10} {:>10} {:>12}", "ref_grid_n", "pilot NFE", "knots");
+    for n in [32usize, 64, 128, 256, 512] {
+        let cfg = WassersteinConfig { ref_grid_n: n, ..Default::default() };
+        let mut rng = Rng::new(11);
+        let out = wasserstein_schedule(&info, Param::Edm, model.as_ref(), &mut rng, &cfg, 64)?;
+        println!("{:>10} {:>10} {:>12}", n, out.pilot_nfe, out.sigmas.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineHub;
+    use crate::model::gmm::testmodel::toy;
+    use std::sync::Arc;
+
+    #[test]
+    fn clock_ablation_runs_on_toy() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let ctx = ExpContext { samples: 512, rows: 256, seed: 3, threads: 2, hub };
+        let rows = run_clock_ablation(&ctx, "toy").unwrap();
+        assert_eq!(rows.len(), 2 * 9);
+        // under EDM-native vs sigma clock the gate coincides for EDM param;
+        // here we only assert all runs produced sane output
+        assert!(rows.iter().all(|(_, r)| r.fd.is_finite() && r.nfe >= 12.0));
+    }
+}

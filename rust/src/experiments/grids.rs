@@ -1,0 +1,126 @@
+//! Hyperparameter grids — Table 2 (τ_k search) and Table 3 (Wasserstein
+//! tolerance + resampling parameters on cifar10g), plus the Figure 4
+//! FD-vs-τ_k curves (same sweep, dumped as series).
+
+use crate::diffusion::{CurvatureClock, Param};
+use crate::experiments::{evaluate_all, ExpContext, RowResult};
+use crate::sampler::SamplerConfig;
+use crate::schedule::ScheduleSpec;
+use crate::solvers::{LambdaKind, SolverSpec};
+use crate::Result;
+
+/// τ_k search grid: the paper's {2,5,10,20,50,100}×10⁻⁵ ladder scaled to
+/// this substrate's σ-clock curvature magnitudes (×250; same ratios).
+pub fn tau_grid() -> Vec<f64> {
+    [2.0, 5.0, 10.0, 20.0, 50.0, 100.0].iter().map(|v| v * 2.5e-3).collect()
+}
+
+/// Table 2 / Figure 4: sweep τ_k for the step-scheduler adaptive solver.
+/// `datasets`: (name, steps, conditional class) tuples to sweep.
+pub fn run_tau_sweep(
+    ctx: &ExpContext,
+    datasets: &[(&str, usize, Option<usize>)],
+    schedule_tag: &str,
+) -> Result<Vec<(String, f64, RowResult)>> {
+    let mut cfgs = Vec::new();
+    let mut meta = Vec::new();
+    for &(ds, steps, class) in datasets {
+        for param in [Param::vp(), Param::Ve] {
+            for &tau in &tau_grid() {
+                let schedule = match schedule_tag {
+                    "edm" => ScheduleSpec::Edm { rho: 7.0 },
+                    "sdm" => ScheduleSpec::sdm_defaults(ds, param),
+                    _ => anyhow::bail!("bad schedule tag"),
+                };
+                cfgs.push(SamplerConfig {
+                    dataset: ds.to_string(),
+                    param,
+                    solver: SolverSpec::Adaptive {
+                        lambda: LambdaKind::Step,
+                        tau_k: tau,
+                        clock: CurvatureClock::Sigma,
+                    },
+                    schedule,
+                    steps,
+                    class,
+                });
+                meta.push((format!("{ds}/{}{}", param.name(),
+                    if class.is_some() { "/cond" } else { "" }), tau));
+            }
+        }
+    }
+    let results = evaluate_all(ctx, cfgs);
+    let mut out = Vec::new();
+    println!("Table 2 / Figure 4 — τ_k sweep ({schedule_tag} schedule)");
+    println!("{:<24} {:>10} {:>10} {:>8}", "series", "tau_k", "FD", "NFE");
+    for ((series, tau), r) in meta.into_iter().zip(results) {
+        let r = r?;
+        println!("{:<24} {:>10.0e} {:>10.4} {:>8.1}", series, tau, r.fd, r.nfe);
+        out.push((series, tau, r));
+    }
+    Ok(out)
+}
+
+/// Table 3 — grid search over (η_min, η_max, p, q) on cifar10g.
+/// The full cross product is large; the paper reports the grid axes, so we
+/// sweep each axis around the selected operating point.
+pub fn run_eta_grid(ctx: &ExpContext) -> Result<Vec<(String, RowResult)>> {
+    let ds = "cifar10g";
+    let steps = 18;
+    let base = (0.01f64, 0.40f64, 1.0f64, 0.1f64); // selected uncond-VP point
+    let mut axes: Vec<(String, (f64, f64, f64, f64))> = Vec::new();
+    for &em in &[0.01, 0.02, 0.03, 0.04, 0.05] {
+        axes.push((format!("eta_min={em}"), (em, base.1, base.2, base.3)));
+    }
+    for &ex in &[0.10, 0.20, 0.30, 0.40, 0.50] {
+        axes.push((format!("eta_max={ex}"), (base.0, ex, base.2, base.3)));
+    }
+    for &p in &[0.8, 1.0, 1.2] {
+        axes.push((format!("p={p}"), (base.0, base.1, p, base.3)));
+    }
+    for &q in &[0.1, 0.25] {
+        axes.push((format!("q={q}"), (base.0, base.1, base.2, q)));
+    }
+
+    let mut cfgs = Vec::new();
+    for (_, (em, ex, p, q)) in &axes {
+        cfgs.push(SamplerConfig {
+            dataset: ds.to_string(),
+            param: Param::vp(),
+            solver: SolverSpec::Euler,
+            schedule: ScheduleSpec::Sdm {
+                eta_min: *em,
+                eta_max: *ex,
+                p: *p,
+                q: *q,
+                pilot_rows: 128,
+            },
+            steps,
+            class: None,
+        });
+    }
+    let results = evaluate_all(ctx, cfgs);
+    println!("Table 3 — Wasserstein tolerance / resampling grid (cifar10g, Euler, VP)");
+    println!("{:<16} {:>10} {:>8}", "axis point", "FD", "NFE");
+    let mut out = Vec::new();
+    for ((name, _), r) in axes.into_iter().zip(results) {
+        let r = r?;
+        println!("{:<16} {:>10.4} {:>8.1}", name, r.fd, r.nfe);
+        out.push((name, r));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_grid_keeps_paper_ratios() {
+        let g = tau_grid();
+        assert_eq!(g.len(), 6);
+        // same {2,5,10,20,50,100} ladder, scaled x250 to this substrate
+        assert!((g[5] / g[0] - 50.0).abs() < 1e-9);
+        assert!((g[0] - 5e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md §4 maps experiment ids to modules; EXPERIMENTS.md records
+//! the measured outputs).
+//!
+//! The headline metric is the Fréchet distance FD (the FID formula on
+//! exact reference moments — DESIGN.md §2); sliced-W₂ is reported as a
+//! secondary column. Paper-vs-measured comparisons are about *shape*:
+//! orderings, relative gaps, crossovers.
+
+pub mod ablations;
+pub mod figures;
+pub mod grids;
+pub mod pareto;
+pub mod qualitative;
+pub mod table1;
+pub mod table4;
+pub mod table5;
+
+use std::sync::Arc;
+
+use crate::coordinator::EngineHub;
+use crate::diffusion::Param;
+use crate::metrics::{frechet_to_reference, sample_mean_cov, sliced_w2};
+use crate::sampler::{engine, RunConfig, SamplerConfig};
+use crate::Result;
+
+/// Shared evaluation settings.
+#[derive(Clone)]
+pub struct ExpContext {
+    pub hub: Arc<EngineHub>,
+    /// samples generated per (config, class) evaluation.
+    pub samples: usize,
+    /// integration batch rows.
+    pub rows: usize,
+    pub seed: u64,
+    /// worker threads for config-parallel sweeps.
+    pub threads: usize,
+}
+
+impl ExpContext {
+    pub fn new(hub: Arc<EngineHub>) -> ExpContext {
+        ExpContext { hub, samples: 8192, rows: 256, seed: 2026, threads: 8 }
+    }
+}
+
+/// One evaluated table cell.
+#[derive(Clone, Debug)]
+pub struct RowResult {
+    pub label: String,
+    pub fd: f64,
+    pub sliced: f64,
+    pub nfe: f64,
+}
+
+/// Evaluate a sampler configuration: generate samples, compare against the
+/// exact reference moments (class-restricted when conditional).
+pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
+    let info = ctx.hub.info(&cfg.dataset)?.clone();
+    let model = ctx.hub.model(&cfg.dataset)?;
+    let oracle = ctx.hub.oracle(&cfg.dataset)?;
+    let grid = ctx.hub.schedule(&cfg.dataset, cfg.param, &cfg.schedule, cfg.steps)?;
+
+    let run_cfg = RunConfig {
+        rows: ctx.rows,
+        seed: ctx.seed ^ fxhash(&cfg.label()),
+        class: cfg.class,
+        trace: false,
+    };
+    let (samples, nfe, _) = engine::generate(
+        model.as_ref(),
+        cfg.param,
+        &grid,
+        &cfg.solver,
+        &info,
+        &run_cfg,
+        ctx.samples,
+    )?;
+
+    let stats = sample_mean_cov(&samples, info.dim);
+    let (ref_mean, ref_cov) = match cfg.class {
+        Some(c) => oracle.class_moments(c),
+        None => (info.exact_mean.clone(), info.exact_cov.clone()),
+    };
+    let fd = frechet_to_reference(&stats, &ref_mean, &ref_cov)?;
+
+    // sliced-W2 against a fresh ground-truth draw
+    let mut rng = crate::util::Rng::new(run_cfg.seed ^ 0xABCD);
+    let truth64 = oracle.sample_data(&mut rng, ctx.samples.min(4096), cfg.class);
+    let truth: Vec<f32> = truth64.iter().map(|&v| v as f32).collect();
+    let gen_sub = &samples[..ctx.samples.min(4096) * info.dim];
+    let sl = sliced_w2(gen_sub, &truth, info.dim, 48, run_cfg.seed ^ 0x51ED);
+
+    Ok(RowResult { label: cfg.label(), fd, sliced: sl, nfe })
+}
+
+/// Evaluate a list of configs, parallel over a thread pool.
+pub fn evaluate_all(ctx: &ExpContext, cfgs: Vec<SamplerConfig>) -> Vec<Result<RowResult>> {
+    if cfgs.is_empty() {
+        return Vec::new();
+    }
+    // PJRT executes on a single executor thread anyway; parallelism only
+    // helps the native backend, but is harmless either way.
+    let pool = crate::util::ThreadPool::new(ctx.threads.max(1));
+    let ctx2 = ctx.clone();
+    let cfgs = Arc::new(cfgs);
+    let cfgs2 = cfgs.clone();
+    pool.map_indices(cfgs.len(), move |i| evaluate(&ctx2, &cfgs2[i]))
+}
+
+/// Deterministic label hash (seed derivation).
+pub fn fxhash(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Paper parameterization pairs used by the unconditional tables.
+pub fn table_params() -> Vec<Param> {
+    vec![Param::vp(), Param::Ve]
+}
+
+/// Fixed-width table cell for FD / NFE printing.
+pub fn fmt_cell(fd: f64, nfe: f64) -> String {
+    format!("{fd:>8.4} @{nfe:>5.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::testmodel::toy;
+    use crate::schedule::ScheduleSpec;
+    use crate::solvers::SolverSpec;
+
+    fn ctx() -> ExpContext {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        ExpContext { hub, samples: 2048, rows: 256, seed: 7, threads: 4 }
+    }
+
+    #[test]
+    fn evaluate_produces_sane_metrics() {
+        let ctx = ctx();
+        let cfg = SamplerConfig::edm_baseline("toy", Param::Edm, 16);
+        let row = evaluate(&ctx, &cfg).unwrap();
+        assert!(row.fd.is_finite() && row.fd >= 0.0 && row.fd < 1.0, "{row:?}");
+        assert!(row.sliced.is_finite() && row.sliced < 1.0, "{row:?}");
+        assert_eq!(row.nfe, 31.0); // 2*16-1
+    }
+
+    #[test]
+    fn conditional_evaluation_uses_class_moments() {
+        let ctx = ctx();
+        let mut cfg = SamplerConfig::edm_baseline("toy", Param::Edm, 16);
+        cfg.class = Some(1);
+        let row = evaluate(&ctx, &cfg).unwrap();
+        assert!(row.fd < 1.0, "{row:?}");
+    }
+
+    #[test]
+    fn evaluate_all_parallel_matches_serial() {
+        let ctx = ctx();
+        let cfgs = vec![
+            SamplerConfig::edm_baseline("toy", Param::Edm, 8),
+            SamplerConfig {
+                solver: SolverSpec::Euler,
+                ..SamplerConfig::edm_baseline("toy", Param::Edm, 8)
+            },
+            SamplerConfig {
+                schedule: ScheduleSpec::LogSnr,
+                ..SamplerConfig::edm_baseline("toy", Param::Ve, 8)
+            },
+        ];
+        let rows = evaluate_all(&ctx, cfgs.clone());
+        assert_eq!(rows.len(), 3);
+        for (r, c) in rows.iter().zip(&cfgs) {
+            let serial = evaluate(&ctx, c).unwrap();
+            let par = r.as_ref().unwrap();
+            assert_eq!(par.fd, serial.fd, "parallel/serial mismatch for {}", c.label());
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Quality-vs-NFE Pareto frontier (the paper's §1 claim: SDM improves the
+//! Pareto frontier of quality versus efficiency for pre-trained models).
+//!
+//! Sweeps the step budget for each (solver, schedule) family and reports
+//! (NFE, FD) series; "who dominates where" is the reproduction target.
+
+use crate::diffusion::{CurvatureClock, Param};
+use crate::experiments::{evaluate_all, ExpContext};
+use crate::sampler::SamplerConfig;
+use crate::schedule::ScheduleSpec;
+use crate::solvers::{LambdaKind, SolverSpec};
+use crate::Result;
+
+/// One frontier point.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub family: String,
+    pub steps: usize,
+    pub nfe: f64,
+    pub fd: f64,
+}
+
+pub fn run(
+    ctx: &ExpContext,
+    dataset: &str,
+    param: Param,
+    budgets: &[usize],
+) -> Result<Vec<ParetoPoint>> {
+    let tau_k = match SolverSpec::sdm_default(dataset, false, matches!(param, Param::Vp { .. })) {
+        SolverSpec::Adaptive { tau_k, .. } => tau_k,
+        _ => unreachable!(),
+    };
+    let families: Vec<(&str, SolverSpec, ScheduleSpec)> = vec![
+        ("euler+edm", SolverSpec::Euler, ScheduleSpec::Edm { rho: 7.0 }),
+        ("heun+edm", SolverSpec::Heun, ScheduleSpec::Edm { rho: 7.0 }),
+        ("heun+cos", SolverSpec::Heun, ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 }),
+        (
+            "sdm+edm",
+            SolverSpec::Adaptive { lambda: LambdaKind::Step, tau_k, clock: CurvatureClock::Sigma },
+            ScheduleSpec::Edm { rho: 7.0 },
+        ),
+        (
+            "sdm+sdm",
+            SolverSpec::Adaptive { lambda: LambdaKind::Step, tau_k, clock: CurvatureClock::Sigma },
+            ScheduleSpec::sdm_defaults(dataset, param),
+        ),
+    ];
+
+    let mut cfgs = Vec::new();
+    let mut meta = Vec::new();
+    for (name, solver, schedule) in &families {
+        for &steps in budgets {
+            cfgs.push(SamplerConfig {
+                dataset: dataset.to_string(),
+                param,
+                solver: *solver,
+                schedule: schedule.clone(),
+                steps,
+                class: None,
+            });
+            meta.push((name.to_string(), steps));
+        }
+    }
+    let results = evaluate_all(ctx, cfgs);
+    println!("Pareto frontier — {dataset} ({})", param.name());
+    println!("{:<12} {:>6} {:>8} {:>10}", "family", "steps", "NFE", "FD");
+    let mut out = Vec::new();
+    for ((family, steps), r) in meta.into_iter().zip(results) {
+        let r = r?;
+        println!("{:<12} {:>6} {:>8.1} {:>10.4}", family, steps, r.nfe, r.fd);
+        out.push(ParetoPoint { family, steps, nfe: r.nfe, fd: r.fd });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineHub;
+    use crate::model::gmm::testmodel::toy;
+    use std::sync::Arc;
+
+    #[test]
+    fn frontier_shapes() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let ctx = ExpContext { samples: 2048, rows: 256, seed: 5, threads: 4, hub };
+        let pts = run(&ctx, "toy", Param::Edm, &[8, 16]).unwrap();
+        assert_eq!(pts.len(), 10);
+        // more steps should not hurt quality within a family (weak check:
+        // euler family strictly improves from 8 to 16 steps)
+        let e8 = pts.iter().find(|p| p.family == "euler+edm" && p.steps == 8).unwrap();
+        let e16 = pts.iter().find(|p| p.family == "euler+edm" && p.steps == 16).unwrap();
+        assert!(e16.fd < e8.fd, "euler 16-step {e16:?} vs 8-step {e8:?}");
+        // heun at equal steps costs more NFE than euler
+        let h8 = pts.iter().find(|p| p.family == "heun+edm" && p.steps == 8).unwrap();
+        assert!(h8.nfe > e8.nfe);
+    }
+}

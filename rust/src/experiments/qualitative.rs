@@ -1,0 +1,135 @@
+//! Qualitative comparison dumps (Figures 5–9 substitute).
+//!
+//! The paper shows image grids; our workloads are point clouds, so the
+//! qualitative artifact is a TSV of generated samples (first two
+//! coordinates) per configuration, next to a ground-truth draw — plottable
+//! as the scatter-grid analogue of the paper's panels. FD/NFE captions are
+//! printed exactly like the figure captions.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::diffusion::Param;
+use crate::experiments::{evaluate, ExpContext};
+use crate::sampler::SamplerConfig;
+use crate::schedule::ScheduleSpec;
+use crate::solvers::SolverSpec;
+use crate::Result;
+
+/// The four panels of each qualitative figure: EDM(Heun), SDM(solver),
+/// SDM(scheduling), SDM(solver+scheduling).
+pub fn panels(dataset: &str, param: Param, steps: usize) -> Vec<(String, SamplerConfig)> {
+    let is_vp = matches!(param, Param::Vp { .. });
+    let base = SamplerConfig {
+        dataset: dataset.to_string(),
+        param,
+        solver: SolverSpec::Heun,
+        schedule: ScheduleSpec::Edm { rho: 7.0 },
+        steps,
+        class: None,
+    };
+    vec![
+        ("edm_heun".into(), base.clone()),
+        (
+            "sdm_solver".into(),
+            SamplerConfig {
+                solver: SolverSpec::sdm_default(dataset, false, is_vp),
+                ..base.clone()
+            },
+        ),
+        (
+            "sdm_sched".into(),
+            SamplerConfig { schedule: ScheduleSpec::sdm_defaults(dataset, param), ..base.clone() },
+        ),
+        (
+            "sdm_both".into(),
+            SamplerConfig {
+                solver: SolverSpec::sdm_default(dataset, true, is_vp),
+                schedule: ScheduleSpec::sdm_defaults(dataset, param),
+                ..base
+            },
+        ),
+    ]
+}
+
+/// Generate the panel dumps for one dataset/param into `out_dir`.
+pub fn run(ctx: &ExpContext, dataset: &str, param: Param, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let info = ctx.hub.info(dataset)?.clone();
+    let steps = info.default_steps;
+    let oracle = ctx.hub.oracle(dataset)?;
+
+    // ground-truth panel
+    let mut rng = crate::util::Rng::new(ctx.seed ^ 0x9A11);
+    let truth = oracle.sample_data(&mut rng, 512, None);
+    dump(
+        &out_dir.join(format!("{dataset}_{}_truth.tsv", param.name())),
+        &truth.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
+        info.dim,
+    )?;
+
+    println!("Qualitative panels — {dataset} ({}) [paper Figs. 5-9]", param.name());
+    for (name, cfg) in panels(dataset, param, steps) {
+        let small_ctx = ExpContext { samples: 512, ..ctx.clone() };
+        let row = evaluate(&small_ctx, &cfg)?;
+        // regenerate the exact samples for the dump (same seed path)
+        let model = ctx.hub.model(dataset)?;
+        let grid = ctx.hub.schedule(dataset, cfg.param, &cfg.schedule, cfg.steps)?;
+        let run_cfg = crate::sampler::RunConfig {
+            rows: 256,
+            seed: ctx.seed ^ crate::experiments::fxhash(&cfg.label()),
+            class: None,
+            trace: false,
+        };
+        let (samples, _, _) = crate::sampler::engine::generate(
+            model.as_ref(),
+            cfg.param,
+            &grid,
+            &cfg.solver,
+            &info,
+            &run_cfg,
+            512,
+        )?;
+        let path = out_dir.join(format!("{dataset}_{}_{name}.tsv", param.name()));
+        dump(&path, &samples, info.dim)?;
+        println!("  {name:<12} FD={:.4} NFE={:.1} -> {}", row.fd, row.nfe, path.display());
+    }
+    Ok(())
+}
+
+fn dump(path: &Path, samples: &[f32], dim: usize) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "x0\tx1")?;
+    for row in samples.chunks(dim) {
+        writeln!(f, "{}\t{}", row[0], row.get(1).copied().unwrap_or(0.0))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineHub;
+    use crate::model::gmm::testmodel::toy;
+    use std::sync::Arc;
+
+    #[test]
+    fn four_panels_match_paper_layout() {
+        let p = panels("toy", Param::Edm, 12);
+        assert_eq!(p.len(), 4);
+        assert!(matches!(p[0].1.solver, SolverSpec::Heun));
+        assert!(matches!(p[3].1.solver, SolverSpec::Adaptive { .. }));
+        assert!(matches!(p[3].1.schedule, ScheduleSpec::Sdm { .. }));
+    }
+
+    #[test]
+    fn run_writes_tsvs() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let ctx = ExpContext { samples: 512, rows: 256, seed: 3, threads: 2, hub };
+        let dir = std::env::temp_dir().join("sdm_qualitative_test");
+        run(&ctx, "toy", Param::Edm, &dir).unwrap();
+        assert!(dir.join("toy_edm_truth.tsv").exists());
+        assert!(dir.join("toy_edm_sdm_both.tsv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,142 @@
+//! Table 1 — unconditional generation: FD/NFE on cifar10g (CIFAR-10),
+//! ffhqg (FFHQ), afhqg (AFHQv2) × {VP, VE} × solver/schedule blocks.
+//!
+//! Paper rows per solver block:
+//!   Euler  : EDM(ρ=7) | COS | SDM (adaptive scheduling)
+//!   Heun   : EDM(ρ=7) | COS | SDM (adaptive scheduling)
+//!   SDM    : EDM(ρ=7) | SDM (adaptive scheduling)    (adaptive solver)
+
+use crate::diffusion::Param;
+use crate::experiments::{evaluate_all, fmt_cell, table_params, ExpContext, RowResult};
+use crate::sampler::SamplerConfig;
+use crate::schedule::ScheduleSpec;
+use crate::solvers::SolverSpec;
+use crate::Result;
+
+/// The datasets of Table 1 with their paper step budgets.
+pub fn datasets() -> Vec<(&'static str, usize)> {
+    vec![("cifar10g", 18), ("ffhqg", 40), ("afhqg", 40)]
+}
+
+/// Solver blocks of the table: (block label, solver constructor).
+/// `sdm_sched` tells the adaptive solver which Table-2 τ_k applies.
+fn solver_for(block: &str, dataset: &str, sdm_sched: bool, param: Param) -> SolverSpec {
+    match block {
+        "euler" => SolverSpec::Euler,
+        "heun" => SolverSpec::Heun,
+        "sdm" => SolverSpec::sdm_default(dataset, sdm_sched, matches!(param, Param::Vp { .. })),
+        _ => unreachable!(),
+    }
+}
+
+fn schedule_for(tag: &str, dataset: &str, param: Param) -> ScheduleSpec {
+    match tag {
+        "edm" => ScheduleSpec::Edm { rho: 7.0 },
+        "cos" => ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 },
+        "sdm" => ScheduleSpec::sdm_defaults(dataset, param),
+        _ => unreachable!(),
+    }
+}
+
+/// All Table-1 cells as configs (row-major over the paper layout).
+pub fn configs() -> Vec<SamplerConfig> {
+    let mut out = Vec::new();
+    for (block, sched_tags) in [
+        ("euler", vec!["edm", "cos", "sdm"]),
+        ("heun", vec!["edm", "cos", "sdm"]),
+        ("sdm", vec!["edm", "sdm"]),
+    ] {
+        for sched in sched_tags {
+            for (ds, steps) in datasets() {
+                for param in table_params() {
+                    out.push(SamplerConfig {
+                        dataset: ds.to_string(),
+                        param,
+                        solver: solver_for(block, ds, sched == "sdm", param),
+                        schedule: schedule_for(sched, ds, param),
+                        steps,
+                        class: None,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run and print the table in the paper's layout. Returns all rows for
+/// the bench harness / tests.
+pub fn run(ctx: &ExpContext) -> Result<Vec<RowResult>> {
+    let cfgs = configs();
+    let results = evaluate_all(ctx, cfgs.clone());
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(r?);
+    }
+
+    println!("Table 1 — unconditional generation (FD @ NFE; paper: FID)");
+    println!(
+        "{:<28} {:>16} {:>16} {:>16} {:>16} {:>16} {:>16}",
+        "solver/schedule",
+        "cifar10g VP",
+        "cifar10g VE",
+        "ffhqg VP",
+        "ffhqg VE",
+        "afhqg VP",
+        "afhqg VE"
+    );
+    let mut idx = 0;
+    for (block, sched_tags) in [
+        ("Euler", vec!["EDM(rho=7)", "COS", "SDM(sched)"]),
+        ("Heun", vec!["EDM(rho=7)", "COS", "SDM(sched)"]),
+        ("SDM(solver)", vec!["EDM(rho=7)", "SDM(sched)"]),
+    ] {
+        for sched in sched_tags {
+            let mut line = format!("{:<28}", format!("{block} / {sched}"));
+            for _ in 0..6 {
+                let r = &rows[idx];
+                line.push_str(&format!(" {:>16}", fmt_cell(r.fd, r.nfe)));
+                idx += 1;
+            }
+            println!("{line}");
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_paper_shape() {
+        let cfgs = configs();
+        // 8 schedule-rows × 3 datasets × 2 params = 48 cells
+        assert_eq!(cfgs.len(), 48);
+        // every dataset appears with its paper step budget
+        assert!(cfgs
+            .iter()
+            .all(|c| (c.dataset == "cifar10g") == (c.steps == 18)));
+        assert!(cfgs.iter().all(|c| c.class.is_none()));
+    }
+
+    #[test]
+    fn sdm_solver_block_uses_table2_thresholds() {
+        let cfgs = configs();
+        let sdm_afhq: Vec<_> = cfgs
+            .iter()
+            .filter(|c| {
+                c.dataset == "afhqg" && matches!(c.solver, SolverSpec::Adaptive { .. })
+            })
+            .collect();
+        assert!(!sdm_afhq.is_empty());
+        for c in sdm_afhq {
+            if let SolverSpec::Adaptive { tau_k, .. } = c.solver {
+                // calibrated Table-2 structure: VP gets the tighter gate
+                // (SDM-schedule exception), VE the loose AFHQ gate
+                let _ = matches!(c.schedule, ScheduleSpec::Sdm { .. });
+                assert_eq!(tau_k, 2e-2, "{}", c.label());
+            }
+        }
+    }
+}

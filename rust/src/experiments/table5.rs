@@ -1,0 +1,116 @@
+//! Table 5 — ablation on the scheduler function Λ(t): step vs linear vs
+//! cosine for the adaptive solver, across datasets and parameterizations.
+//! Step must win on FD *and* on NFE (< 2 evals/step vs exactly 2).
+
+use crate::diffusion::{CurvatureClock, Param};
+use crate::experiments::{evaluate_all, fmt_cell, ExpContext, RowResult};
+use crate::sampler::SamplerConfig;
+use crate::schedule::ScheduleSpec;
+use crate::solvers::{LambdaKind, SolverSpec};
+use crate::Result;
+
+/// Columns of Table 5 (dataset, param, steps, conditional).
+pub fn columns() -> Vec<(&'static str, Param, usize, Option<usize>)> {
+    vec![
+        ("cifar10g", Param::vp(), 18, None),
+        ("cifar10g", Param::Ve, 18, None),
+        ("cifar10g", Param::vp(), 18, Some(0)),
+        ("cifar10g", Param::Ve, 18, Some(0)),
+        ("ffhqg", Param::vp(), 40, None),
+        ("ffhqg", Param::Ve, 40, None),
+        ("afhqg", Param::vp(), 40, None),
+        ("afhqg", Param::Ve, 40, None),
+        ("imagenetg", Param::Edm, 0, Some(0)),
+    ]
+}
+
+pub fn configs(ctx: &ExpContext) -> Result<Vec<(LambdaKind, SamplerConfig)>> {
+    let mut out = Vec::new();
+    for lambda in [LambdaKind::Step, LambdaKind::Linear, LambdaKind::Cosine] {
+        for (ds, param, steps, class) in columns() {
+            let steps = ctx.hub.resolve_steps(ds, steps)?;
+            let tau_k = match SolverSpec::sdm_default(ds, false, matches!(param, Param::Vp { .. }))
+            {
+                SolverSpec::Adaptive { tau_k, .. } => tau_k,
+                _ => unreachable!(),
+            };
+            out.push((
+                lambda,
+                SamplerConfig {
+                    dataset: ds.to_string(),
+                    param,
+                    solver: SolverSpec::Adaptive {
+                        lambda,
+                        tau_k,
+                        clock: CurvatureClock::Sigma,
+                    },
+                    schedule: ScheduleSpec::Edm { rho: 7.0 },
+                    steps,
+                    class,
+                },
+            ));
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<RowResult>> {
+    let cfgs = configs(ctx)?;
+    let flat: Vec<SamplerConfig> = cfgs.iter().map(|(_, c)| c.clone()).collect();
+    let results = evaluate_all(ctx, flat);
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(r?);
+    }
+
+    println!("Table 5 — Λ(t) ablation for the adaptive solver (FD @ NFE)");
+    let mut header = format!("{:<10}", "Λ(t)");
+    for (ds, p, _, class) in columns() {
+        let tag = format!(
+            "{}{} {}",
+            &ds[..ds.len().min(6)],
+            if class.is_some() { "*" } else { "" },
+            p.name()
+        );
+        header.push_str(&format!(" {:>16}", tag));
+    }
+    println!("{header}   (* = conditional)");
+    let n_cols = columns().len();
+    for (li, lname) in ["Step", "Linear", "Cosine"].iter().enumerate() {
+        let mut line = format!("{:<10}", lname);
+        for ci in 0..n_cols {
+            let r = &rows[li * n_cols + ci];
+            line.push_str(&format!(" {:>16}", fmt_cell(r.fd, r.nfe)));
+        }
+        println!("{line}");
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_lambdas_by_nine_columns() {
+        let hub = std::sync::Arc::new(crate::coordinator::EngineHub::from_infos(vec![
+            crate::model::gmm::testmodel::toy().info,
+        ]));
+        // columns reference real datasets; config building only needs
+        // resolve_steps for imagenetg -> use a ctx with a fake entry
+        let mut info = crate::model::gmm::testmodel::toy().info;
+        info.name = "imagenetg".into();
+        let hub2 = std::sync::Arc::new(crate::coordinator::EngineHub::from_infos(vec![
+            crate::model::gmm::testmodel::toy().info,
+            info,
+        ]));
+        let _ = hub;
+        let ctx = ExpContext::new(hub2);
+        let cfgs = configs(&ctx).unwrap();
+        assert_eq!(cfgs.len(), 3 * columns().len());
+        // all adaptive
+        assert!(cfgs
+            .iter()
+            .all(|(_, c)| matches!(c.solver, SolverSpec::Adaptive { .. })));
+    }
+}

@@ -1,0 +1,36 @@
+//! # SDM — Sampling via Adaptive Solvers and Wasserstein-Bounded Timesteps
+//!
+//! Production-shaped reproduction of *"Formalizing the Sampling Design Space
+//! of Diffusion-Based Generative Models via Adaptive Solvers and
+//! Wasserstein-Bounded Timesteps"* (Jo & Choi, 2026) as a three-layer
+//! Rust + JAX + Pallas serving system.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L1/L2 (build time)** — `python/compile/` authors the fused
+//!   GMM-denoiser Pallas kernel and the JAX model, AOT-lowered to HLO text
+//!   under `artifacts/`.
+//! - **L3 (this crate)** — loads the artifacts via PJRT ([`runtime`]),
+//!   implements the paper's sampling design space ([`solvers`],
+//!   [`schedule`], [`diffusion`]), the serving coordinator
+//!   ([`coordinator`]), quality metrics ([`metrics`]), and the experiment
+//!   harness that regenerates every paper table/figure ([`experiments`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the `sdm`
+//! binary is self-contained.
+
+pub mod util;
+pub mod linalg;
+pub mod testutil;
+pub mod diffusion;
+pub mod model;
+pub mod runtime;
+pub mod solvers;
+pub mod schedule;
+pub mod metrics;
+pub mod sampler;
+pub mod coordinator;
+pub mod experiments;
+
+/// Crate-wide result type (anyhow-based; this is an application-grade
+/// library whose errors are surfaced to operators, not matched on).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,148 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! O(n^3) per sweep with quadratic convergence once nearly diagonal; our
+//! matrices are covariance-sized (n ≤ 64), where Jacobi is competitive and
+//! — unlike QR with shifts — easy to make unconditionally robust.
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns (values, vectors)
+/// with vectors in columns, i.e. `A = V diag(vals) V^T`.
+pub fn jacobi_eigen(m: &Mat) -> Result<(Vec<f64>, Mat)> {
+    let n = m.n;
+    if n == 0 {
+        return Ok((vec![], Mat::zeros(0)));
+    }
+    // symmetric check (callers should symmetrize first)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = (m.at(i, j) - m.at(j, i)).abs();
+            let s = 1.0 + m.at(i, j).abs() + m.at(j, i).abs();
+            if d / s > 1e-8 {
+                bail!("jacobi_eigen requires a symmetric matrix (delta {d} at ({i},{j}))");
+            }
+        }
+    }
+    let mut a = m.clone();
+    let mut v = Mat::eye(n);
+    let scale: f64 = (0..n).map(|i| a.at(i, i).abs()).fold(1e-300, f64::max);
+    let tol = 1e-14 * scale;
+
+    for _sweep in 0..100 {
+        if a.max_offdiag() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.at(p, q);
+                if apq.abs() <= tol * 1e-2 {
+                    continue;
+                }
+                let app = a.at(p, p);
+                let aqq = a.at(q, q);
+                // Rotation angle via the stable tau formulation
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // A <- J^T A J applied in place on rows/cols p,q
+                for k in 0..n {
+                    let akp = a.at(k, p);
+                    let akq = a.at(k, q);
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a.at(p, k);
+                    let aqk = a.at(q, k);
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let vals: Vec<f64> = (0..n).map(|i| a.at(i, i)).collect();
+    Ok((vals, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        for n in [1, 2, 5, 16, 32] {
+            let m = rand_sym(n, n as u64);
+            let (vals, vecs) = jacobi_eigen(&m).unwrap();
+            // V diag V^T == M
+            let mut rec = Mat::zeros(n);
+            for k in 0..n {
+                for i in 0..n {
+                    for j in 0..n {
+                        rec[(i, j)] += vecs.at(i, k) * vals[k] * vecs.at(j, k);
+                    }
+                }
+            }
+            assert!(rec.dist(&m) < 1e-9 * (n as f64), "n={n} err={}", rec.dist(&m));
+        }
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let m = rand_sym(12, 99);
+        let (_, v) = jacobi_eigen(&m).unwrap();
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.dist(&Mat::eye(12)) < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let m = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]).unwrap();
+        let (mut vals, _) = jacobi_eigen(&m).unwrap();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]).unwrap();
+        assert!(jacobi_eigen(&m).is_err());
+    }
+
+    #[test]
+    fn zero_and_empty() {
+        let (vals, _) = jacobi_eigen(&Mat::zeros(3)).unwrap();
+        assert!(vals.iter().all(|v| v.abs() < 1e-300));
+        let (vals, _) = jacobi_eigen(&Mat::zeros(0)).unwrap();
+        assert!(vals.is_empty());
+    }
+}

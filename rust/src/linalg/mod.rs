@@ -1,0 +1,255 @@
+//! Dense linear-algebra substrate for the metric suite.
+//!
+//! The Fréchet distance (the paper's FID, see DESIGN.md §2) needs a matrix
+//! square root of `C1^{1/2} C2 C1^{1/2}`; with workload dimensions ≤ 64 a
+//! cyclic Jacobi eigensolver is simple, robust, and fast enough that the
+//! metric never shows up in profiles. No external BLAS in the vendored
+//! crate set, so everything is written out.
+
+pub mod eigen;
+
+use anyhow::{bail, Result};
+
+/// Row-major square matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Mat {
+        Mat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<Mat> {
+        let n = rows.len();
+        for r in rows {
+            if r.len() != n {
+                bail!("matrix not square: {} vs {}", r.len(), n);
+            }
+        }
+        Ok(Mat { n, a: rows.iter().flatten().copied().collect() })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.at(i, i)).sum()
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.at(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += aik * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out[(i, j)] = self.at(j, i);
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        Mat {
+            n: self.n,
+            a: self.a.iter().zip(&other.a).map(|(x, y)| x + y).collect(),
+        }
+    }
+
+    pub fn scale(&self, c: f64) -> Mat {
+        Mat { n: self.n, a: self.a.iter().map(|x| x * c).collect() }
+    }
+
+    /// Symmetrize: (A + A^T)/2 — used to scrub numeric asymmetry before
+    /// feeding the Jacobi solver.
+    pub fn symmetrized(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out[(i, j)] = 0.5 * (self.at(i, j) + self.at(j, i));
+            }
+        }
+        out
+    }
+
+    /// Max absolute off-diagonal entry (convergence measure).
+    pub fn max_offdiag(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    m = m.max(self.at(i, j).abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn dist(&self, other: &Mat) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.a[i * self.n + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        let n = self.n;
+        &mut self.a[i * n + j]
+    }
+}
+
+/// Symmetric PSD matrix square root via Jacobi eigendecomposition.
+/// Negative eigenvalues (numeric noise around 0) are clamped.
+pub fn sqrtm_psd(m: &Mat) -> Result<Mat> {
+    let (vals, vecs) = eigen::jacobi_eigen(&m.symmetrized())?;
+    let n = m.n;
+    // V diag(sqrt(max(l,0))) V^T
+    let mut out = Mat::zeros(n);
+    for k in 0..n {
+        let s = vals[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = vecs.at(i, k) * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.a[i * n + j] += vik * vecs.at(j, k);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// trace of sqrtm(C1 C2) computed via the symmetric PSD reformulation
+/// tr sqrtm(C1^{1/2} C2 C1^{1/2}) — the quantity FID needs.
+pub fn trace_sqrt_product(c1: &Mat, c2: &Mat) -> Result<f64> {
+    let s1 = sqrtm_psd(c1)?;
+    let inner = s1.matmul(c2).matmul(&s1);
+    let (vals, _) = eigen::jacobi_eigen(&inner.symmetrized())?;
+    Ok(vals.iter().map(|l| l.max(0.0).sqrt()).sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_psd(n: usize, seed: u64) -> Mat {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut b = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        // B B^T + eps I is PSD
+        let mut m = b.matmul(&b.transpose());
+        for i in 0..n {
+            m[(i, i)] += 1e-6;
+        }
+        m
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = rand_psd(5, 1);
+        let i = Mat::eye(5);
+        assert!(m.matmul(&i).dist(&m) < 1e-12);
+        assert!(i.matmul(&m).dist(&m) < 1e-12);
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        for n in [1, 2, 3, 8, 16] {
+            let m = rand_psd(n, 42 + n as u64);
+            let s = sqrtm_psd(&m).unwrap();
+            let back = s.matmul(&s);
+            assert!(
+                back.dist(&m) < 1e-8 * (1.0 + m.trace().abs()),
+                "n={n} err={}",
+                back.dist(&m)
+            );
+        }
+    }
+
+    #[test]
+    fn sqrtm_of_diagonal() {
+        let mut m = Mat::zeros(3);
+        m[(0, 0)] = 4.0;
+        m[(1, 1)] = 9.0;
+        m[(2, 2)] = 16.0;
+        let s = sqrtm_psd(&m).unwrap();
+        assert!((s.at(0, 0) - 2.0).abs() < 1e-10);
+        assert!((s.at(1, 1) - 3.0).abs() < 1e-10);
+        assert!((s.at(2, 2) - 4.0).abs() < 1e-10);
+        assert!(s.max_offdiag() < 1e-10);
+    }
+
+    #[test]
+    fn trace_sqrt_product_commuting_case() {
+        // For C1 = C2 = C: tr sqrtm(C^2) = tr C
+        let c = rand_psd(6, 5);
+        let t = trace_sqrt_product(&c, &c).unwrap();
+        assert!((t - c.trace()).abs() < 1e-7 * c.trace());
+    }
+
+    #[test]
+    fn trace_sqrt_product_identity_scaling() {
+        // C1 = a I, C2 = b I -> tr sqrtm(ab I) = n sqrt(ab)
+        let n = 4;
+        let c1 = Mat::eye(n).scale(4.0);
+        let c2 = Mat::eye(n).scale(9.0);
+        let t = trace_sqrt_product(&c1, &c2).unwrap();
+        assert!((t - (n as f64) * 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_rows_rejects_ragged() {
+        assert!(Mat::from_rows(&[vec![1.0, 2.0], vec![3.0]]).is_err());
+    }
+}

@@ -1,0 +1,355 @@
+//! `sdm` — leader binary: serving, sampling, and every paper experiment.
+//!
+//! ```text
+//! sdm serve      --addr 127.0.0.1:7433 [--backend pjrt|native]
+//! sdm sample     --dataset cifar10g --n 64 --solver sdm --schedule sdm ...
+//! sdm schedule   --dataset cifar10g --schedule sdm --steps 18
+//! sdm table1|table4|table5|grid-tau|grid-eta|fig2|fig3|fig4|pareto|qualitative
+//! sdm bench-client --addr ... --requests 256 --concurrency 8
+//! ```
+//!
+//! Experiments default to the PJRT backend (`--backend pjrt`) so the AOT
+//! artifact path is exercised end to end; `--backend native` switches to
+//! the closed-form oracle for fast wide sweeps (identical numerics, see
+//! rust/tests/pjrt_integration.rs).
+
+use std::sync::Arc;
+
+use sdm::coordinator::{Client, EngineHub, ModelBackend, Server, ServerConfig};
+use sdm::diffusion::Param;
+use sdm::experiments::{self, ExpContext};
+use sdm::model::datasets::artifact_dir;
+use sdm::util::{Args, Histogram, Timer};
+use sdm::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_hub(args: &Args) -> Result<Arc<EngineHub>> {
+    let dir = artifact_dir(args.opt("artifacts"));
+    let backend = ModelBackend::from_name(&args.get("backend", "pjrt"))?;
+    Ok(Arc::new(EngineHub::load(&dir, backend)?))
+}
+
+fn exp_context(args: &Args) -> Result<ExpContext> {
+    let hub = load_hub(args)?;
+    let mut ctx = ExpContext::new(hub);
+    ctx.samples = args.get_usize("samples", 8192)?;
+    ctx.rows = args.get_usize("rows", 256)?;
+    ctx.seed = args.get_u64("seed", 2026)?;
+    ctx.threads = args.get_usize("threads", 8)?;
+    Ok(ctx)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "serve" => serve(&args),
+        "sample" => sample(&args),
+        "schedule" => schedule(&args),
+        "table1" => {
+            let ctx = exp_context(&args)?;
+            args.finish()?;
+            experiments::table1::run(&ctx)?;
+            Ok(())
+        }
+        "table4" => {
+            let ctx = exp_context(&args)?;
+            args.finish()?;
+            experiments::table4::run(&ctx)?;
+            Ok(())
+        }
+        "table5" => {
+            let ctx = exp_context(&args)?;
+            args.finish()?;
+            experiments::table5::run(&ctx)?;
+            Ok(())
+        }
+        "grid-tau" | "fig4" => {
+            let ctx = exp_context(&args)?;
+            let sched = args.get("schedule", "edm");
+            args.finish()?;
+            // Figure 4's curves: cifar10g + afhqg, uncond + cond (cifar)
+            let sets: Vec<(&str, usize, Option<usize>)> = vec![
+                ("cifar10g", 18, None),
+                ("cifar10g", 18, Some(0)),
+                ("afhqg", 40, None),
+            ];
+            experiments::grids::run_tau_sweep(&ctx, &sets, &sched)?;
+            Ok(())
+        }
+        "grid-eta" => {
+            let ctx = exp_context(&args)?;
+            args.finish()?;
+            experiments::grids::run_eta_grid(&ctx)?;
+            Ok(())
+        }
+        "fig2" => {
+            let ctx = exp_context(&args)?;
+            let steps = args.get_usize("steps", 40)?;
+            args.finish()?;
+            experiments::figures::fig2(&ctx, steps)?;
+            Ok(())
+        }
+        "fig3" => {
+            let ctx = exp_context(&args)?;
+            let ds = args.get("dataset", "imagenetg");
+            args.finish()?;
+            experiments::figures::fig3(&ctx, &ds)?;
+            Ok(())
+        }
+        "pareto" => {
+            let ctx = exp_context(&args)?;
+            let ds = args.get("dataset", "cifar10g");
+            let param = Param::from_name(&args.get("param", "vp"))?;
+            args.finish()?;
+            let budgets = [6, 9, 12, 18, 24, 32, 48];
+            experiments::pareto::run(&ctx, &ds, param, &budgets)?;
+            Ok(())
+        }
+        "qualitative" => {
+            let ctx = exp_context(&args)?;
+            let out = std::path::PathBuf::from(args.get("out", "qualitative_out"));
+            args.finish()?;
+            for ds in ["cifar10g", "ffhqg", "afhqg"] {
+                for p in [Param::vp(), Param::Ve] {
+                    experiments::qualitative::run(&ctx, ds, p, &out)?;
+                }
+            }
+            experiments::qualitative::run(&ctx, "imagenetg", Param::Edm, &out)?;
+            Ok(())
+        }
+        "ablate-clock" => {
+            let ctx = exp_context(&args)?;
+            let ds = args.get("dataset", "cifar10g");
+            args.finish()?;
+            experiments::ablations::run_clock_ablation(&ctx, &ds)?;
+            Ok(())
+        }
+        "ablate-refgrid" => {
+            let ctx = exp_context(&args)?;
+            let ds = args.get("dataset", "cifar10g");
+            args.finish()?;
+            experiments::ablations::run_refgrid_ablation(&ctx, &ds)?;
+            Ok(())
+        }
+        "bench-client" => bench_client(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let hub = load_hub(args)?;
+    let addr = args.get("addr", "127.0.0.1:7433");
+    args.finish()?;
+    let server = Server::start(hub, ServerConfig { addr: addr.clone(), ..Default::default() })?;
+    println!(
+        "sdm serving on {} (send {{\"op\":\"shutdown\"}} to stop)",
+        server.local_addr
+    );
+    while !server.is_stopping() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    server.shutdown();
+    println!("sdm server stopped");
+    Ok(())
+}
+
+fn sample(args: &Args) -> Result<()> {
+    let ctx = exp_context(args)?;
+    let dataset = args.get("dataset", "cifar10g");
+    let param = Param::from_name(&args.get("param", "edm"))?;
+    let steps = args.get_usize("steps", 0)?;
+    let solver_name = args.get("solver", "heun");
+    let sched_name = args.get("schedule", "edm");
+    let tau_k = args.get_f64("tau-k", 2e-4)?;
+    let class = args.opt("class").map(|c| c.parse::<usize>()).transpose()?;
+    let eta_min = args.opt("eta-min").map(|v| v.parse::<f64>()).transpose()?;
+    let eta_max = args.opt("eta-max").map(|v| v.parse::<f64>()).transpose()?;
+    let eta_p = args.get_f64("p", 1.0)?;
+    let eta_q = args.get_f64("q", 0.25)?;
+    args.finish()?;
+
+    let solver = match solver_name.as_str() {
+        "euler" => sdm::solvers::SolverSpec::Euler,
+        "heun" => sdm::solvers::SolverSpec::Heun,
+        "dpm2m" => sdm::solvers::SolverSpec::Dpm2m,
+        "sdm" => sdm::solvers::SolverSpec::Adaptive {
+            lambda: sdm::solvers::LambdaKind::Step,
+            tau_k,
+            clock: sdm::diffusion::CurvatureClock::Sigma,
+        },
+        other => anyhow::bail!("unknown solver {other}"),
+    };
+    let schedule = match sched_name.as_str() {
+        "edm" => sdm::schedule::ScheduleSpec::Edm { rho: 7.0 },
+        "cos" => sdm::schedule::ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 },
+        "sdm" => {
+            let mut spec = sdm::schedule::ScheduleSpec::sdm_defaults(&dataset, param);
+            if let sdm::schedule::ScheduleSpec::Sdm { eta_min: em, eta_max: ex, p, q, .. } =
+                &mut spec
+            {
+                if let Some(v) = eta_min {
+                    *em = v;
+                }
+                if let Some(v) = eta_max {
+                    *ex = v;
+                }
+                *p = eta_p;
+                *q = eta_q;
+            }
+            spec
+        }
+        "linear" => sdm::schedule::ScheduleSpec::LinearSigma,
+        "cosine" => sdm::schedule::ScheduleSpec::Cosine,
+        "logsnr" => sdm::schedule::ScheduleSpec::LogSnr,
+        other => anyhow::bail!("unknown schedule {other}"),
+    };
+    let cfg = sdm::sampler::SamplerConfig {
+        dataset: dataset.clone(),
+        param,
+        solver,
+        schedule,
+        steps: ctx.hub.resolve_steps(&dataset, steps)?,
+        class,
+    };
+    let timer = Timer::start();
+    let row = experiments::evaluate(&ctx, &cfg)?;
+    println!("config   : {}", row.label);
+    println!("backend  : {:?}", ctx.hub.backend);
+    println!("samples  : {}", ctx.samples);
+    println!("FD       : {:.4}   (paper metric: FID)", row.fd);
+    println!("slicedW2 : {:.4}", row.sliced);
+    println!("NFE      : {:.1}", row.nfe);
+    println!("wallclock: {:.1} ms", timer.elapsed_ms());
+    Ok(())
+}
+
+fn schedule(args: &Args) -> Result<()> {
+    let hub = load_hub(args)?;
+    let dataset = args.get("dataset", "cifar10g");
+    let param = Param::from_name(&args.get("param", "edm"))?;
+    let steps = args.get_usize("steps", 0)?;
+    let sched_name = args.get("schedule", "sdm");
+    args.finish()?;
+    let spec = match sched_name.as_str() {
+        "edm" => sdm::schedule::ScheduleSpec::Edm { rho: 7.0 },
+        "cos" => sdm::schedule::ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 },
+        "sdm" => sdm::schedule::ScheduleSpec::sdm_defaults(&dataset, param),
+        other => anyhow::bail!("unknown schedule {other}"),
+    };
+    let grid = hub.schedule(&dataset, param, &spec, steps)?;
+    println!(
+        "# {} / {} / {} ({} knots)",
+        dataset,
+        param.name(),
+        spec.tag(),
+        grid.sigmas.len()
+    );
+    for (i, s) in grid.sigmas.iter().enumerate() {
+        println!("{i:>4} {s:.6}");
+    }
+    Ok(())
+}
+
+fn bench_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7433");
+    let requests = args.get_usize("requests", 256)?;
+    let concurrency = args.get_usize("concurrency", 8)?;
+    let n = args.get_usize("n", 16)?;
+    let dataset = args.get("dataset", "cifar10g");
+    let solver = args.get("solver", "sdm");
+    let steps = args.get_usize("steps", 18)?;
+    let open_rps = args.opt("open-loop-rps").map(|v| v.parse::<f64>()).transpose()?;
+    args.finish()?;
+
+    // open-loop Poisson mode: honest queueing measurement under offered load
+    if let Some(rps) = open_rps {
+        let profile = sdm::coordinator::loadgen::TraceProfile::standard();
+        let report = sdm::coordinator::loadgen::open_loop(
+            &addr, &profile, rps, requests as u64, concurrency, 42)?;
+        println!(
+            "open-loop: offered {rps} req/s, sent {} ({} errors) in {:.1}s -> {:.1} req/s achieved",
+            report.sent, report.errors, report.wall_s, report.throughput_rps()
+        );
+        println!("  latency: {}", report.latency.summary("us"));
+        return Ok(());
+    }
+
+    let timer = Timer::start();
+    let per_thread = requests / concurrency;
+    let mut handles = Vec::new();
+    for tid in 0..concurrency {
+        let addr = addr.clone();
+        let dataset = dataset.clone();
+        let solver = solver.clone();
+        handles.push(std::thread::spawn(move || -> Result<Histogram> {
+            let mut client = Client::connect(&addr)?;
+            let mut hist = Histogram::new();
+            for i in 0..per_thread {
+                let t = Timer::start();
+                let resp = client.sample(
+                    &dataset,
+                    n,
+                    "edm",
+                    &solver,
+                    "edm",
+                    steps,
+                    (tid * 1000 + i) as u64,
+                )?;
+                anyhow::ensure!(
+                    resp.get("ok")? == &sdm::util::Json::Bool(true),
+                    "request failed: {resp:?}"
+                );
+                hist.record(t.elapsed_us());
+            }
+            Ok(hist)
+        }));
+    }
+    let mut total = Histogram::new();
+    for h in handles {
+        total.merge(&h.join().unwrap()?);
+    }
+    let wall_s = timer.elapsed_us() / 1e6;
+    let done = total.count();
+    println!("bench-client: {done} requests x {n} samples, concurrency {concurrency}");
+    println!("  latency: {}", total.summary("us"));
+    println!(
+        "  throughput: {:.1} req/s, {:.1} samples/s",
+        done as f64 / wall_s,
+        (done as usize * n) as f64 / wall_s
+    );
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "sdm — Sampling Design space of diffusion Models (adaptive solvers +\n\
+         Wasserstein-bounded timesteps), three-layer rust+JAX+Pallas serving repro.\n\n\
+         subcommands:\n\
+         \x20 serve         start the TCP coordinator (--addr, --backend)\n\
+         \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...)\n\
+         \x20 schedule      print a built sigma grid (--dataset --schedule --steps)\n\
+         \x20 table1        Table 1  (unconditional FD/NFE grid)\n\
+         \x20 table4        Table 4  (conditional)\n\
+         \x20 table5        Table 5  (lambda ablation)\n\
+         \x20 grid-tau|fig4 Table 2 / Figure 4 (tau_k sweep)\n\
+         \x20 grid-eta      Table 3  (eta/p/q grid)\n\
+         \x20 fig2          curvature vs sigma\n\
+         \x20 fig3          eta_t budget over steps\n\
+         \x20 pareto        quality-vs-NFE frontier\n\
+         \x20 qualitative   sample dumps (Figs. 5-9 analogue)\n\
+         \x20 bench-client  drive a running server (--addr --requests --concurrency\n\
+         \x20               [--open-loop-rps R  Poisson offered-load mode])\n\
+         \x20 ablate-clock  curvature-clock ablation; ablate-refgrid: Alg.1 warm-start\n\n\
+         common flags: --artifacts DIR --backend pjrt|native --samples N --seed S"
+    );
+}

@@ -1,0 +1,97 @@
+//! Fréchet distance — the FID formula on exact reference moments.
+//!
+//! FD(μ₁,C₁; μ₂,C₂) = ‖μ₁−μ₂‖² + Tr(C₁ + C₂ − 2·(C₁C₂)^{1/2}),
+//! with tr (C₁C₂)^{1/2} computed through the symmetric PSD reformulation
+//! tr (C₁^{1/2} C₂ C₁^{1/2})^{1/2} (see [`crate::linalg`]).
+
+use crate::linalg::{trace_sqrt_product, Mat};
+use crate::metrics::stats::SampleStats;
+use crate::Result;
+
+/// Fréchet distance between two Gaussian summaries.
+pub fn frechet_distance(m1: &[f64], c1: &Mat, m2: &[f64], c2: &Mat) -> Result<f64> {
+    anyhow::ensure!(m1.len() == m2.len() && c1.n == c2.n && c1.n == m1.len(), "dim mismatch");
+    let mean_term: f64 = m1.iter().zip(m2).map(|(a, b)| (a - b) * (a - b)).sum();
+    let tr_term = c1.trace() + c2.trace() - 2.0 * trace_sqrt_product(c1, c2)?;
+    // numeric noise can push the trace term slightly negative when the
+    // distributions coincide; clamp like standard FID implementations
+    Ok((mean_term + tr_term).max(0.0))
+}
+
+/// Fréchet distance of a sample batch against exact reference moments.
+pub fn frechet_to_reference(stats: &SampleStats, ref_mean: &[f64], ref_cov: &Mat) -> Result<f64> {
+    frechet_distance(&stats.mean, &stats.cov, ref_mean, ref_cov)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::stats::sample_mean_cov;
+    use crate::util::Rng;
+
+    #[test]
+    fn identical_gaussians_zero() {
+        let m = vec![1.0, -2.0, 0.5];
+        let mut c = Mat::eye(3);
+        c[(0, 1)] = 0.3;
+        c[(1, 0)] = 0.3;
+        let d = frechet_distance(&m, &c, &m, &c).unwrap();
+        assert!(d.abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn mean_shift_only() {
+        let c = Mat::eye(2);
+        let d = frechet_distance(&[0.0, 0.0], &c, &[3.0, 4.0], &c).unwrap();
+        assert!((d - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn isotropic_scale_only() {
+        // N(0, a² I) vs N(0, b² I): FD = d (a−b)²
+        let d = 3;
+        let c1 = Mat::eye(d).scale(4.0); // a = 2
+        let c2 = Mat::eye(d).scale(9.0); // b = 3
+        let z = vec![0.0; d];
+        let fd = frechet_distance(&z, &c1, &z, &c2).unwrap();
+        assert!((fd - 3.0).abs() < 1e-9, "{fd}");
+    }
+
+    #[test]
+    fn one_dimensional_closed_form() {
+        // W2² of N(m1,s1²) vs N(m2,s2²) = (m1−m2)² + (s1−s2)²
+        let c1 = Mat::from_rows(&[vec![0.49]]).unwrap();
+        let c2 = Mat::from_rows(&[vec![1.21]]).unwrap();
+        let fd = frechet_distance(&[1.0], &c1, &[3.0], &c2).unwrap();
+        let expect = 4.0 + (0.7f64 - 1.1).powi(2);
+        assert!((fd - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimates_from_samples_converge() {
+        let mut rng = Rng::new(33);
+        let (n, dim) = (80_000, 3);
+        let mut xs = vec![0.0f32; n * dim];
+        for v in xs.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let stats = sample_mean_cov(&xs, dim);
+        let fd = frechet_to_reference(&stats, &[0.0; 3], &Mat::eye(3)).unwrap();
+        assert!(fd < 0.01, "fd of exact sampler should be tiny, got {fd}");
+    }
+
+    #[test]
+    fn sensitive_to_mode_collapse() {
+        // all-at-one-point "samples" vs unit Gaussian reference
+        let xs = vec![0.0f32; 1000 * 2];
+        let stats = sample_mean_cov(&xs, 2);
+        let fd = frechet_to_reference(&stats, &[0.0, 0.0], &Mat::eye(2)).unwrap();
+        assert!((fd - 2.0).abs() < 1e-6, "{fd}"); // Tr(I) = 2
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let c = Mat::eye(2);
+        assert!(frechet_distance(&[0.0], &c, &[0.0, 0.0], &c).is_err());
+    }
+}

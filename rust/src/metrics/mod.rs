@@ -1,0 +1,16 @@
+//! Sample-quality metrics.
+//!
+//! The paper reports FID; FID *is* the Fréchet (2-Wasserstein-between-
+//! Gaussians) distance in a feature space. On our synthetic workloads the
+//! raw coordinates are the features and the reference moments are exact
+//! (DESIGN.md §2), so [`frechet`] is the headline metric of every table.
+//! [`sliced`] (sliced 2-Wasserstein) is the secondary, distribution-free
+//! check that the Gaussian summary isn't hiding mode collapse.
+
+pub mod frechet;
+pub mod sliced;
+pub mod stats;
+
+pub use frechet::{frechet_distance, frechet_to_reference};
+pub use sliced::sliced_w2;
+pub use stats::{sample_mean_cov, SampleStats};

@@ -1,0 +1,92 @@
+//! Failure-injection denoiser wrapper (test/chaos substrate).
+//!
+//! Wraps any [`Denoiser`] and fails deterministically every `period`-th
+//! call — used to verify that the coordinator propagates model errors to
+//! exactly the affected requests without deadlocking, dropping, or
+//! poisoning its queues.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::model::{Denoiser, EvalOut};
+use crate::Result;
+
+pub struct FlakyDenoiser<D: Denoiser> {
+    inner: D,
+    period: u64,
+    calls: AtomicU64,
+}
+
+impl<D: Denoiser> FlakyDenoiser<D> {
+    /// Fail every `period`-th call (period = 0 never fails).
+    pub fn new(inner: D, period: u64) -> FlakyDenoiser<D> {
+        FlakyDenoiser { inner, period, calls: AtomicU64::new(0) }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl<D: Denoiser> Denoiser for FlakyDenoiser<D> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn backend(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn denoise_v(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.period > 0 && n % self.period == 0 {
+            anyhow::bail!("injected model failure (call {n})");
+        }
+        self.inner.denoise_v(xhat, sigma, a, b, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::Param;
+    use crate::model::gmm::testmodel::toy;
+    use crate::sampler::{run_sampler, RunConfig};
+    use crate::schedule::baselines::edm_schedule;
+    use crate::solvers::SolverSpec;
+
+    #[test]
+    fn sampler_surfaces_injected_failures() {
+        let m = toy();
+        let info = m.info.clone();
+        let flaky = FlakyDenoiser::new(m, 5);
+        let grid = edm_schedule(12, info.sigma_min, info.sigma_max, info.rho).unwrap();
+        let cfg = RunConfig { rows: 8, seed: 1, class: None, trace: false };
+        let err = run_sampler(&flaky, Param::Edm, &grid, &SolverSpec::Euler, &info, &cfg)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("injected model failure"));
+        assert_eq!(flaky.calls(), 5);
+    }
+
+    #[test]
+    fn period_zero_never_fails() {
+        let m = toy();
+        let info = m.info.clone();
+        let flaky = FlakyDenoiser::new(m, 0);
+        let grid = edm_schedule(8, info.sigma_min, info.sigma_max, info.rho).unwrap();
+        let cfg = RunConfig { rows: 4, seed: 2, class: None, trace: false };
+        let out =
+            run_sampler(&flaky, Param::Edm, &grid, &SolverSpec::Heun, &info, &cfg).unwrap();
+        assert_eq!(out.nfe, 15);
+    }
+}

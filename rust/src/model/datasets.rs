@@ -1,0 +1,200 @@
+//! Workload registry: loads the `artifacts/*.gmm.json` sidecars emitted by
+//! `python/compile/aot.py` — the single source of truth for mixture
+//! parameters, EDM sampling defaults, and exact reference moments.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::linalg::Mat;
+use crate::util::json::{read_json_file, Json};
+use crate::Result;
+
+/// Everything rust needs to know about one workload ("dataset").
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub paper_name: String,
+    pub dim: usize,
+    pub k: usize,
+    pub n_classes: usize,
+    pub sigma_min: f64,
+    pub sigma_max: f64,
+    pub rho: f64,
+    pub default_steps: usize,
+    /// Mixture means, row-major [k, dim].
+    pub mus: Vec<f64>,
+    /// Log mixture weights [k].
+    pub logw: Vec<f64>,
+    /// Per-component isotropic variances [k].
+    pub tau2: Vec<f64>,
+    /// Class id per component [k].
+    pub classes: Vec<usize>,
+    /// Exact mixture mean (ground truth for the Fréchet metric).
+    pub exact_mean: Vec<f64>,
+    /// Exact mixture covariance.
+    pub exact_cov: Mat,
+}
+
+impl DatasetInfo {
+    pub fn from_json(v: &Json) -> Result<DatasetInfo> {
+        let mus_rows = v.get("mus")?.as_mat_f64()?;
+        let dim = v.get("dim")?.as_usize()?;
+        let k = v.get("k")?.as_usize()?;
+        if mus_rows.len() != k || mus_rows.iter().any(|r| r.len() != dim) {
+            bail!("sidecar mus shape mismatch");
+        }
+        let cov_rows = v.get("exact_cov")?.as_mat_f64()?;
+        let info = DatasetInfo {
+            name: v.get("name")?.as_str()?.to_string(),
+            paper_name: v.get("paper_name")?.as_str()?.to_string(),
+            dim,
+            k,
+            n_classes: v.get("n_classes")?.as_usize()?,
+            sigma_min: v.get("sigma_min")?.as_f64()?,
+            sigma_max: v.get("sigma_max")?.as_f64()?,
+            rho: v.get("rho")?.as_f64()?,
+            default_steps: v.get("default_steps")?.as_usize()?,
+            mus: mus_rows.into_iter().flatten().collect(),
+            logw: v.get("logw")?.as_vec_f64()?,
+            tau2: v.get("tau2")?.as_vec_f64()?,
+            classes: v
+                .get("classes")?
+                .as_vec_f64()?
+                .into_iter()
+                .map(|c| c as usize)
+                .collect(),
+            exact_mean: v.get("exact_mean")?.as_vec_f64()?,
+            exact_cov: Mat::from_rows(&cov_rows)?,
+        };
+        if info.logw.len() != k || info.tau2.len() != k || info.classes.len() != k {
+            bail!("sidecar component-array length mismatch");
+        }
+        if info.exact_mean.len() != dim || info.exact_cov.n != dim {
+            bail!("sidecar moment shape mismatch");
+        }
+        Ok(info)
+    }
+
+    /// Mixture weights (normalized, from logw).
+    pub fn weights(&self) -> Vec<f64> {
+        let mut w: Vec<f64> = self.logw.iter().map(|l| l.exp()).collect();
+        let total: f64 = w.iter().sum();
+        for v in &mut w {
+            *v /= total;
+        }
+        w
+    }
+
+    /// Component mean row k.
+    pub fn mu(&self, k: usize) -> &[f64] {
+        &self.mus[k * self.dim..(k + 1) * self.dim]
+    }
+}
+
+/// All workloads found under the artifact directory.
+#[derive(Debug, Default)]
+pub struct DatasetRegistry {
+    pub by_name: BTreeMap<String, DatasetInfo>,
+    pub dir: PathBuf,
+}
+
+impl DatasetRegistry {
+    /// Load every `*.gmm.json` under `dir`.
+    pub fn load(dir: &Path) -> Result<DatasetRegistry> {
+        let mut reg = DatasetRegistry { by_name: BTreeMap::new(), dir: dir.to_path_buf() };
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|f| f.to_str()).unwrap_or("");
+            if fname.ends_with(".gmm.json") {
+                let info = DatasetInfo::from_json(&read_json_file(&path)?)
+                    .with_context(|| format!("sidecar {}", path.display()))?;
+                reg.by_name.insert(info.name.clone(), info);
+            }
+        }
+        if reg.by_name.is_empty() {
+            bail!("no *.gmm.json sidecars under {} (run `make artifacts`)", dir.display());
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&DatasetInfo> {
+        self.by_name.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown dataset {name:?}; available: {:?}",
+                self.by_name.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.by_name.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Resolve the artifact directory: `--artifacts` flag value, `SDM_ARTIFACTS`
+/// env var, or `./artifacts`.
+pub fn artifact_dir(explicit: Option<String>) -> PathBuf {
+    explicit
+        .map(PathBuf::from)
+        .or_else(|| std::env::var("SDM_ARTIFACTS").ok().map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_sidecar() -> Json {
+        Json::parse(
+            r#"{
+            "name": "toy", "paper_name": "Toy", "dim": 2, "k": 2,
+            "n_classes": 2, "seed": 1, "sigma_min": 0.002, "sigma_max": 80.0,
+            "rho": 7.0, "default_steps": 8,
+            "mus": [[1.0, 0.0], [-1.0, 0.0]],
+            "logw": [-0.6931471805599453, -0.6931471805599453],
+            "tau2": [0.04, 0.09],
+            "classes": [0, 1],
+            "exact_mean": [0.0, 0.0],
+            "exact_cov": [[1.065, 0.0], [0.0, 0.065]]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_toy_sidecar() {
+        let info = DatasetInfo::from_json(&toy_sidecar()).unwrap();
+        assert_eq!(info.dim, 2);
+        assert_eq!(info.k, 2);
+        assert_eq!(info.mu(1), &[-1.0, 0.0]);
+        let w = info.weights();
+        assert!((w[0] - 0.5).abs() < 1e-12 && (w[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let mut v = toy_sidecar();
+        if let Json::Obj(m) = &mut v {
+            m.insert("k".into(), Json::Num(3.0));
+        }
+        assert!(DatasetInfo::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn registry_loads_real_artifacts_if_present() {
+        // integration-style: only runs when `make artifacts` has been run
+        let dir = artifact_dir(None);
+        if dir.join("manifest.json").exists() {
+            let reg = DatasetRegistry::load(&dir).unwrap();
+            assert!(reg.get("cifar10g").is_ok());
+            let info = reg.get("cifar10g").unwrap();
+            assert_eq!(info.dim, 16);
+            assert_eq!(info.k, 10);
+            assert_eq!(info.n_classes, 10);
+        }
+    }
+}

@@ -1,0 +1,556 @@
+//! Native Gaussian-mixture oracle: the closed-form optimal denoiser.
+//!
+//! This mirrors the math baked into the AOT artifact (see
+//! `python/compile/kernels/ref.py`) and adds what only the oracle can
+//! provide: exact sampling from the data distribution, the analytic
+//! Jacobian `J_D = ∇_x D`, the σ-derivative `D_σ`, and through them the
+//! *exact* trajectory acceleration ẍ of Theorem 3.1 — used to validate the
+//! discrete curvature proxies and to generate Figure 2.
+//!
+//! Role split: the PJRT artifact is the production request path; this
+//! oracle is the test reference, the fast backend for wide experiment
+//! grids, and the source of ground-truth samples/moments for metrics.
+
+use crate::diffusion::Param;
+use crate::linalg::Mat;
+use crate::model::{DatasetInfo, Denoiser, EvalOut};
+use crate::util::Rng;
+use crate::Result;
+
+/// Closed-form mixture model over one workload.
+#[derive(Clone, Debug)]
+pub struct GmmModel {
+    pub info: DatasetInfo,
+}
+
+/// Posterior responsibilities and shared intermediates for one row.
+struct Posterior {
+    /// r_k, normalized.
+    r: Vec<f64>,
+    /// v_k = tau2_k + sigma^2.
+    var: Vec<f64>,
+}
+
+impl GmmModel {
+    pub fn new(info: DatasetInfo) -> GmmModel {
+        GmmModel { info }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.info.dim
+    }
+
+    pub fn k(&self) -> usize {
+        self.info.k
+    }
+
+    fn posterior(&self, x: &[f64], sigma: f64, mask: &[f32]) -> Posterior {
+        let info = &self.info;
+        let (dim, k) = (info.dim, info.k);
+        let s2 = sigma * sigma;
+        let mut logits = vec![0.0f64; k];
+        let mut var = vec![0.0f64; k];
+        for c in 0..k {
+            let v = info.tau2[c] + s2;
+            var[c] = v;
+            let mu = info.mu(c);
+            let mut d2 = 0.0;
+            for j in 0..dim {
+                let d = x[j] - mu[j];
+                d2 += d * d;
+            }
+            logits[c] =
+                info.logw[c] - 0.5 * d2 / v - 0.5 * (dim as f64) * v.ln() + mask[c] as f64;
+        }
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut r: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+        let z: f64 = r.iter().sum();
+        for v in &mut r {
+            *v /= z;
+        }
+        Posterior { r, var }
+    }
+
+    /// Optimal denoiser D(x; σ) = E[x₀ | x, σ] for one row (f64).
+    pub fn denoise_row(&self, x: &[f64], sigma: f64, mask: &[f32]) -> Vec<f64> {
+        let info = &self.info;
+        let (dim, k) = (info.dim, info.k);
+        let s2 = sigma * sigma;
+        let post = self.posterior(x, sigma, mask);
+        let mut out = vec![0.0f64; dim];
+        let mut c1 = 0.0f64;
+        for c in 0..k {
+            let alpha = info.tau2[c] / post.var[c];
+            c1 += post.r[c] * alpha;
+            let coef = post.r[c] * s2 / post.var[c];
+            let mu = info.mu(c);
+            for j in 0..dim {
+                out[j] += coef * mu[j];
+            }
+        }
+        for j in 0..dim {
+            out[j] += c1 * x[j];
+        }
+        out
+    }
+
+    /// Analytic Jacobian J_D = ∇_x D(x; σ) (dim×dim).
+    ///
+    /// With m_k the per-component posterior mean, g_k = −(x−μ_k)/v_k the
+    /// logit gradient and ḡ = Σ r_j g_j:
+    /// J_D = Σ_k [ r_k (τ_k²/v_k) I + m_k ⊗ r_k (g_k − ḡ) ].
+    pub fn jacobian(&self, x: &[f64], sigma: f64, mask: &[f32]) -> Mat {
+        let info = &self.info;
+        let (dim, k) = (info.dim, info.k);
+        let s2 = sigma * sigma;
+        let post = self.posterior(x, sigma, mask);
+
+        // g_k rows and weighted mean
+        let mut g = vec![0.0f64; k * dim];
+        let mut gbar = vec![0.0f64; dim];
+        for c in 0..k {
+            let mu = info.mu(c);
+            for j in 0..dim {
+                let val = -(x[j] - mu[j]) / post.var[c];
+                g[c * dim + j] = val;
+                gbar[j] += post.r[c] * val;
+            }
+        }
+        let mut jm = Mat::zeros(dim);
+        let mut diag = 0.0f64;
+        for c in 0..k {
+            let alpha = info.tau2[c] / post.var[c];
+            diag += post.r[c] * alpha;
+            // m_k = alpha x + (s2/v_k) mu_k
+            let mu = info.mu(c);
+            let coef = s2 / post.var[c];
+            for i in 0..dim {
+                let m_i = alpha * x[i] + coef * mu[i];
+                let r_i = post.r[c];
+                for j in 0..dim {
+                    jm[(i, j)] += m_i * r_i * (g[c * dim + j] - gbar[j]);
+                }
+            }
+        }
+        for i in 0..dim {
+            jm[(i, i)] += diag;
+        }
+        jm
+    }
+
+    /// D_σ = ∂D/∂σ via central finite differences (the paper also treats
+    /// this as an auxiliary term; exact closed form adds little here).
+    pub fn d_sigma(&self, x: &[f64], sigma: f64, mask: &[f32]) -> Vec<f64> {
+        let h = (sigma * 1e-4).max(1e-7);
+        let hi = self.denoise_row(x, sigma + h, mask);
+        let lo = self.denoise_row(x, sigma - h, mask);
+        hi.iter().zip(&lo).map(|(a, b)| (a - b) / (2.0 * h)).collect()
+    }
+
+    /// Exact trajectory acceleration ẍ of Theorem 3.1, evaluated at
+    /// integration time t of parameterization `p` with state x (x-space).
+    ///
+    /// Derived directly from our velocity definition
+    /// `v = (ṡ/s)x + (σ̇/σ)(x − s·D̂)` with `D̂ = D(x/s; σ)`:
+    ///
+    /// ẍ = ċ₁x + c₁ẋ + ċ₂(x − sD̂) + c₂(ẋ − ṡD̂ − s·dD̂/dt),
+    /// dD̂/dt = J_D·(ẋ/s − x·ṡ/s²) + D_σ·σ̇,
+    ///
+    /// with c₁ = ṡ/s, c₂ = σ̇/σ. For s ≡ 1 this reduces exactly to the
+    /// paper's eqs. (2) (EDM) and (4) (VE). For VP the paper's eq. (3)
+    /// applies the chain rule as if D were evaluated at x rather than
+    /// x/s; we keep the x/s convention consistently (DESIGN.md §3) —
+    /// the test suite verifies this form against finite differences of
+    /// the true flow for all three parameterizations.
+    pub fn xddot(&self, p: Param, t: f64, x: &[f64], mask: &[f32]) -> Vec<f64> {
+        let dim = self.info.dim;
+        let sigma = p.sigma(t);
+        let s = p.s(t);
+        let sdot = p.s_dot(t);
+        let sddot = p.s_ddot(t);
+        let sigdot = p.sigma_dot(t);
+        let sigddot = p.sigma_ddot(t);
+
+        let xhat: Vec<f64> = x.iter().map(|v| v / s).collect();
+        let d = self.denoise_row(&xhat, sigma, mask);
+        let jd = self.jacobian(&xhat, sigma, mask);
+        let dsig = self.d_sigma(&xhat, sigma, mask);
+
+        let c1 = sdot / s;
+        let c2 = sigdot / sigma;
+        let c1dot = sddot / s - c1 * c1;
+        let c2dot = sigddot / sigma - c2 * c2;
+
+        let xdot: Vec<f64> =
+            (0..dim).map(|j| c1 * x[j] + c2 * (x[j] - s * d[j])).collect();
+        let xhat_dot: Vec<f64> =
+            (0..dim).map(|j| xdot[j] / s - x[j] * sdot / (s * s)).collect();
+        let jd_xhd = matvec(&jd, &xhat_dot);
+        (0..dim)
+            .map(|j| {
+                let ddot = jd_xhd[j] + dsig[j] * sigdot;
+                c1dot * x[j] + c1 * xdot[j] + c2dot * (x[j] - s * d[j])
+                    + c2 * (xdot[j] - sdot * d[j] - s * ddot)
+            })
+            .collect()
+    }
+
+    /// Draw `n` samples from the data distribution (optionally restricted
+    /// to one class). Ground truth for metrics.
+    pub fn sample_data(&self, rng: &mut Rng, n: usize, class: Option<usize>) -> Vec<f64> {
+        let info = &self.info;
+        let dim = info.dim;
+        let weights: Vec<f64> = match class {
+            None => info.weights(),
+            Some(c) => {
+                let w = info.weights();
+                info.classes
+                    .iter()
+                    .zip(w)
+                    .map(|(&cls, wv)| if cls == c { wv } else { 0.0 })
+                    .collect()
+            }
+        };
+        assert!(weights.iter().sum::<f64>() > 0.0, "empty class selection");
+        let mut out = vec![0.0f64; n * dim];
+        for i in 0..n {
+            let c = rng.weighted_choice(&weights);
+            let tau = self.info.tau2[c].sqrt();
+            let mu = self.info.mu(c);
+            for j in 0..dim {
+                out[i * dim + j] = mu[j] + tau * rng.normal();
+            }
+        }
+        out
+    }
+
+    /// Exact moments restricted to a class (for conditional Fréchet).
+    pub fn class_moments(&self, class: usize) -> (Vec<f64>, Mat) {
+        let info = &self.info;
+        let dim = info.dim;
+        let w_all = info.weights();
+        let mut w: Vec<f64> = info
+            .classes
+            .iter()
+            .zip(&w_all)
+            .map(|(&c, &wv)| if c == class { wv } else { 0.0 })
+            .collect();
+        let z: f64 = w.iter().sum();
+        assert!(z > 0.0, "class {class} empty");
+        for v in &mut w {
+            *v /= z;
+        }
+        let mut mean = vec![0.0f64; dim];
+        for c in 0..info.k {
+            for j in 0..dim {
+                mean[j] += w[c] * info.mu(c)[j];
+            }
+        }
+        let mut cov = Mat::zeros(dim);
+        for c in 0..info.k {
+            if w[c] == 0.0 {
+                continue;
+            }
+            let mu = info.mu(c);
+            for i in 0..dim {
+                cov[(i, i)] += w[c] * info.tau2[c];
+                for j in 0..dim {
+                    cov[(i, j)] += w[c] * (mu[i] - mean[i]) * (mu[j] - mean[j]);
+                }
+            }
+        }
+        (mean, cov)
+    }
+}
+
+fn matvec(m: &Mat, v: &[f64]) -> Vec<f64> {
+    let n = m.n;
+    (0..n).map(|i| (0..n).map(|j| m.at(i, j) * v[j]).sum()).collect()
+}
+
+impl Denoiser for GmmModel {
+    fn dim(&self) -> usize {
+        self.info.dim
+    }
+
+    fn k(&self) -> usize {
+        self.info.k
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn denoise_v(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        let dim = self.info.dim;
+        let k = self.info.k;
+        let rows = sigma.len();
+        anyhow::ensure!(xhat.len() == rows * dim, "xhat shape");
+        anyhow::ensure!(mask.len() == rows * k, "mask shape");
+        let mut d_out = vec![0.0f32; rows * dim];
+        let mut v_out = vec![0.0f32; rows * dim];
+        let mut vn_out = vec![0.0f32; rows];
+        let mut xrow = vec![0.0f64; dim];
+        for r in 0..rows {
+            for j in 0..dim {
+                xrow[j] = xhat[r * dim + j] as f64;
+            }
+            let d = self.denoise_row(&xrow, sigma[r] as f64, &mask[r * k..(r + 1) * k]);
+            let (ar, br) = (a[r] as f64, b[r] as f64);
+            let mut vn = 0.0f64;
+            for j in 0..dim {
+                let vv = ar * xrow[j] + br * (xrow[j] - d[j]);
+                d_out[r * dim + j] = d[j] as f32;
+                v_out[r * dim + j] = vv as f32;
+                vn += vv * vv;
+            }
+            vn_out[r] = vn as f32;
+        }
+        Ok(EvalOut { d: d_out, v: v_out, vnorm2: vn_out })
+    }
+}
+
+/// Deterministic miniature model shared by unit, property, and
+/// integration tests (and usable from benches) — not gated on cfg(test)
+/// so external test targets can reach it.
+pub mod testmodel {
+    use super::*;
+    use crate::linalg::Mat;
+
+    /// Small deterministic 2-component model used across the test suite.
+    pub fn toy() -> GmmModel {
+        let dim = 3;
+        let mus = vec![2.0, 0.0, -1.0, -2.0, 1.0, 1.0];
+        let logw = vec![(0.4f64).ln(), (0.6f64).ln()];
+        let tau2 = vec![0.09, 0.16];
+        // exact moments
+        let w = [0.4, 0.6];
+        let mut mean = vec![0.0; dim];
+        for c in 0..2 {
+            for j in 0..dim {
+                mean[j] += w[c] * mus[c * dim + j];
+            }
+        }
+        let mut cov = Mat::zeros(dim);
+        for c in 0..2 {
+            for i in 0..dim {
+                cov[(i, i)] += w[c] * tau2[c];
+                for j in 0..dim {
+                    cov[(i, j)] +=
+                        w[c] * (mus[c * dim + i] - mean[i]) * (mus[c * dim + j] - mean[j]);
+                }
+            }
+        }
+        GmmModel::new(DatasetInfo {
+            name: "toy".into(),
+            paper_name: "Toy".into(),
+            dim,
+            k: 2,
+            n_classes: 2,
+            sigma_min: 0.002,
+            sigma_max: 80.0,
+            rho: 7.0,
+            default_steps: 12,
+            mus,
+            logw,
+            tau2,
+            classes: vec![0, 1],
+            exact_mean: mean,
+            exact_cov: cov,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testmodel::toy;
+    use super::*;
+    use crate::model::uncond_mask;
+
+    #[test]
+    fn denoiser_limits() {
+        let m = toy();
+        let mask = uncond_mask(1, 2);
+        // low sigma at a mean: D ≈ that mean
+        let d = m.denoise_row(&[2.0, 0.0, -1.0], 1e-3, &mask);
+        for (a, b) in d.iter().zip([2.0, 0.0, -1.0]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // high sigma: D ≈ prior mean
+        let d = m.denoise_row(&[0.3, -0.2, 0.5], 1e5, &mask);
+        for (a, b) in d.iter().zip(&m.info.exact_mean) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn jacobian_matches_finite_difference() {
+        let m = toy();
+        let mask = uncond_mask(1, 2);
+        let x = [0.4, -0.7, 0.2];
+        for &sigma in &[0.3, 1.0, 4.0] {
+            let jd = m.jacobian(&x, sigma, &mask);
+            let h = 1e-5;
+            for j in 0..3 {
+                let mut xp = x.to_vec();
+                let mut xm = x.to_vec();
+                xp[j] += h;
+                xm[j] -= h;
+                let dp = m.denoise_row(&xp, sigma, &mask);
+                let dm = m.denoise_row(&xm, sigma, &mask);
+                for i in 0..3 {
+                    let num = (dp[i] - dm[i]) / (2.0 * h);
+                    assert!(
+                        (jd.at(i, j) - num).abs() < 1e-5 * (1.0 + num.abs()),
+                        "sigma={sigma} J[{i}{j}]: ana={} num={num}",
+                        jd.at(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn score_identity_holds() {
+        // score = (D − x)/σ² must equal ∇ log p_σ(x); verify via the
+        // Jacobian-free finite difference of log density through D.
+        // Indirect check: denoiser of x slightly perturbed toward a mean
+        // moves toward that mean (posterior contraction).
+        let m = toy();
+        let mask = uncond_mask(1, 2);
+        let x = [1.8, 0.1, -0.8];
+        let d = m.denoise_row(&x, 0.5, &mask);
+        let mu0 = m.info.mu(0);
+        let dist_x: f64 = x.iter().zip(mu0).map(|(a, b)| (a - b).powi(2)).sum();
+        let dist_d: f64 = d.iter().zip(mu0).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(dist_d < dist_x);
+    }
+
+    #[test]
+    fn xddot_matches_velocity_finite_difference() {
+        // ẍ(t) must equal d/dt v(x*(t), t) along the true trajectory.
+        // Integrate x with tiny RK4 steps around t0 and difference v.
+        let m = toy();
+        let mask = uncond_mask(1, 2);
+        for p in [Param::Edm, Param::vp(), Param::Ve] {
+            let sigma0 = 1.5;
+            let t0 = p.t_of_sigma(sigma0);
+            let x0 = vec![1.0, -0.5, 0.7];
+
+            let vel = |t: f64, x: &[f64]| -> Vec<f64> {
+                let s = p.s(t);
+                let (a, b) = p.vel_coeffs(t);
+                let xhat: Vec<f64> = x.iter().map(|v| v / s).collect();
+                let d = m.denoise_row(&xhat, p.sigma(t), &mask);
+                (0..3).map(|j| a * xhat[j] + b * (xhat[j] - d[j])).collect()
+            };
+            // step x0 to t0±h along the exact flow (RK4)
+            let h = 1e-4 * t0.max(1e-3);
+            let rk4 = |t: f64, x: &[f64], dt: f64| -> Vec<f64> {
+                let k1 = vel(t, x);
+                let x2: Vec<f64> = x.iter().zip(&k1).map(|(a, k)| a + 0.5 * dt * k).collect();
+                let k2 = vel(t + 0.5 * dt, &x2);
+                let x3: Vec<f64> = x.iter().zip(&k2).map(|(a, k)| a + 0.5 * dt * k).collect();
+                let k3 = vel(t + 0.5 * dt, &x3);
+                let x4: Vec<f64> = x.iter().zip(&k3).map(|(a, k)| a + dt * k).collect();
+                let k4 = vel(t + dt, &x4);
+                (0..x.len())
+                    .map(|j| x[j] + dt / 6.0 * (k1[j] + 2.0 * k2[j] + 2.0 * k3[j] + k4[j]))
+                    .collect()
+            };
+            let xp = rk4(t0, &x0, h);
+            let xm = rk4(t0, &x0, -h);
+            let vp = vel(t0 + h, &xp);
+            let vm = vel(t0 - h, &xm);
+            let ana = m.xddot(p, t0, &x0, &mask);
+            for j in 0..3 {
+                let num = (vp[j] - vm[j]) / (2.0 * h);
+                let scale = 1.0 + num.abs();
+                assert!(
+                    (ana[j] - num).abs() / scale < 2e-2,
+                    "{} ẍ[{j}]: ana={} num={num}",
+                    p.name(),
+                    ana[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn curvature_spikes_near_manifold() {
+        // Theorem 3.1 implication: ‖ẍ‖ grows as σ→0 (EDM has 1/σ² terms).
+        let m = toy();
+        let mask = uncond_mask(1, 2);
+        let x = vec![1.9, 0.05, -0.9];
+        let hi = norm(&m.xddot(Param::Edm, 10.0, &x, &mask));
+        let lo = norm(&m.xddot(Param::Edm, 0.2, &x, &mask));
+        assert!(lo > 10.0 * hi, "low-sigma {lo} vs high-sigma {hi}");
+    }
+
+    fn norm(v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn sample_data_moments() {
+        let m = toy();
+        let mut rng = Rng::new(5);
+        let n = 100_000;
+        let xs = m.sample_data(&mut rng, n, None);
+        for j in 0..3 {
+            let mean: f64 = (0..n).map(|i| xs[i * 3 + j]).sum::<f64>() / n as f64;
+            assert!(
+                (mean - m.info.exact_mean[j]).abs() < 0.03,
+                "dim {j}: {mean} vs {}",
+                m.info.exact_mean[j]
+            );
+        }
+    }
+
+    #[test]
+    fn conditional_sampling_respects_class() {
+        let m = toy();
+        let mut rng = Rng::new(6);
+        let xs = m.sample_data(&mut rng, 1000, Some(0));
+        // class 0 = component 0 at mu=(2,0,-1), tau=0.3
+        for i in 0..1000 {
+            assert!((xs[i * 3] - 2.0).abs() < 2.0, "sample {i} far from class-0 mean");
+        }
+        let (mean, cov) = m.class_moments(0);
+        assert!((mean[0] - 2.0).abs() < 1e-12);
+        assert!((cov.at(0, 0) - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trait_batch_matches_row_oracle() {
+        let m = toy();
+        let rows = 5;
+        let mut rng = Rng::new(8);
+        let mut xhat = vec![0.0f32; rows * 3];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let sigma: Vec<f32> = (0..rows).map(|i| 0.1 + i as f32).collect();
+        let a = vec![0.3f32; rows];
+        let b = vec![-0.7f32; rows];
+        let mask = uncond_mask(rows, 2);
+        let out = m.denoise_v(&xhat, &sigma, &a, &b, &mask).unwrap();
+        for r in 0..rows {
+            let xr: Vec<f64> = (0..3).map(|j| xhat[r * 3 + j] as f64).collect();
+            let d = m.denoise_row(&xr, sigma[r] as f64, &mask[r * 2..(r + 1) * 2]);
+            let mut vn = 0.0f64;
+            for j in 0..3 {
+                assert!((out.d[r * 3 + j] as f64 - d[j]).abs() < 1e-5);
+                let v = 0.3 * xr[j] + (-0.7) * (xr[j] - d[j]);
+                assert!((out.v[r * 3 + j] as f64 - v).abs() < 1e-5);
+                vn += v * v;
+            }
+            assert!((out.vnorm2[r] as f64 - vn).abs() < 1e-3);
+        }
+    }
+}

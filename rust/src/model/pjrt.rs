@@ -1,0 +1,56 @@
+//! PJRT-backed [`Denoiser`]: the production request path.
+//!
+//! A thin, thread-safe facade over [`crate::runtime::RuntimeHandle`]; the
+//! heavy lifting (variant selection, padding, execution) happens on the
+//! executor thread.
+
+use crate::model::{Denoiser, EvalOut};
+use crate::runtime::RuntimeHandle;
+use crate::Result;
+
+/// Handle-based denoiser for one dataset.
+pub struct PjrtDenoiser {
+    handle: RuntimeHandle,
+    dataset: String,
+    dim: usize,
+    k: usize,
+}
+
+impl PjrtDenoiser {
+    pub fn new(handle: RuntimeHandle, dataset: &str, dim: usize, k: usize) -> PjrtDenoiser {
+        PjrtDenoiser { handle, dataset: dataset.to_string(), dim, k }
+    }
+}
+
+impl Denoiser for PjrtDenoiser {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn denoise_v(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        self.handle.eval(
+            &self.dataset,
+            sigma.len(),
+            xhat.to_vec(),
+            sigma.to_vec(),
+            a.to_vec(),
+            b.to_vec(),
+            mask.to_vec(),
+        )
+    }
+}

@@ -1,0 +1,334 @@
+//! PJRT runtime: loads AOT artifacts and executes them on the request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the whole
+//! runtime lives on one dedicated **executor thread** that owns the client
+//! and every compiled executable — the realistic single-accelerator serving
+//! shape. Callers hold a cheap, thread-safe [`RuntimeHandle`] and submit
+//! [`EvalJob`]s over a channel; replies come back on per-job channels.
+//!
+//! Artifact discovery goes through `artifacts/manifest.json` written by
+//! `python/compile/aot.py`. Each variant is `(dataset, batch)` with a fixed
+//! batch shape; padding to those shapes is the caller's concern (see
+//! [`crate::model::pjrt::PjrtDenoiser`] and the coordinator's batcher).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context};
+
+use crate::model::EvalOut;
+use crate::util::json::read_json_file;
+use crate::Result;
+
+/// One entry of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub dataset: String,
+    pub batch: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variants: Vec<VariantSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = read_json_file(&dir.join("manifest.json"))
+            .context("loading manifest (run `make artifacts`)")?;
+        let mut variants = Vec::new();
+        for e in v.get("variants")?.as_arr()? {
+            variants.push(VariantSpec {
+                dataset: e.get("dataset")?.as_str()?.to_string(),
+                batch: e.get("batch")?.as_usize()?,
+                dim: e.get("dim")?.as_usize()?,
+                k: e.get("k")?.as_usize()?,
+                file: e.get("file")?.as_str()?.to_string(),
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { variants, dir: dir.to_path_buf() })
+    }
+
+    /// Batch sizes available for one dataset, ascending.
+    pub fn batches_for(&self, dataset: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.dataset == dataset)
+            .map(|v| v.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+/// An evaluation request routed to the executor thread.
+pub struct EvalJob {
+    pub dataset: String,
+    /// logical rows (≤ padded batch size of the chosen variant)
+    pub rows: usize,
+    pub xhat: Vec<f32>,
+    pub sigma: Vec<f32>,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub reply: mpsc::Sender<Result<EvalOut>>,
+}
+
+enum Msg {
+    Eval(EvalJob),
+    Stats(mpsc::Sender<RuntimeStats>),
+    Shutdown,
+}
+
+/// Executor-side counters (exposed on the coordinator's metrics endpoint).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub jobs: u64,
+    pub rows: u64,
+    pub padded_rows: u64,
+    pub exec_us_total: f64,
+    pub per_variant_jobs: BTreeMap<String, u64>,
+}
+
+/// Thread-safe handle to the executor thread. Cloneable; dropping the last
+/// clone does NOT stop the runtime — call [`RuntimeHandle::shutdown`].
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Msg>>>,
+}
+
+impl RuntimeHandle {
+    /// Submit an eval job and block for the result.
+    pub fn eval(
+        &self,
+        dataset: &str,
+        rows: usize,
+        xhat: Vec<f32>,
+        sigma: Vec<f32>,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        mask: Vec<f32>,
+    ) -> Result<EvalOut> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = EvalJob {
+            dataset: dataset.to_string(),
+            rows,
+            xhat,
+            sigma,
+            a,
+            b,
+            mask,
+            reply: reply_tx,
+        };
+        self.send(Msg::Eval(job))?;
+        reply_rx.recv().context("runtime executor hung up")?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Msg::Stats(tx))?;
+        rx.recv().context("runtime executor hung up")
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.send(Msg::Shutdown);
+    }
+
+    fn send(&self, msg: Msg) -> Result<()> {
+        self.tx
+            .lock()
+            .expect("runtime handle poisoned")
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("runtime executor stopped"))
+    }
+}
+
+struct LoadedVariant {
+    spec: VariantSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Spawn the executor thread: loads + compiles every artifact in the
+/// manifest, then serves jobs until shutdown. Returns the handle and the
+/// join handle (joined by [`Runtime::drop`] semantics left to the caller).
+pub struct Runtime {
+    pub handle: RuntimeHandle,
+    pub manifest: Manifest,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Runtime {
+    pub fn start(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let manifest2 = manifest.clone();
+        let join = std::thread::Builder::new()
+            .name("sdm-pjrt-executor".into())
+            .spawn(move || executor_main(manifest2, rx, ready_tx))
+            .context("spawning executor thread")?;
+        // wait for compile to finish (or fail) before returning
+        ready_rx.recv().context("executor died during startup")??;
+        Ok(Runtime {
+            handle: RuntimeHandle { tx: Arc::new(Mutex::new(tx)) },
+            manifest,
+            join: Some(join),
+        })
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn executor_main(manifest: Manifest, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    // own the client and all executables on this thread
+    let setup = (|| -> Result<(xla::PjRtClient, Vec<LoadedVariant>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let mut variants = Vec::new();
+        for spec in &manifest.variants {
+            let path = manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+            variants.push(LoadedVariant { spec: spec.clone(), exe });
+        }
+        Ok((client, variants))
+    })();
+
+    let (_client, variants) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut stats = RuntimeStats::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Stats(tx) => {
+                let _ = tx.send(stats.clone());
+            }
+            Msg::Eval(job) => {
+                let timer = crate::util::Timer::start();
+                let result = run_job(&variants, &job);
+                stats.jobs += 1;
+                stats.rows += job.rows as u64;
+                stats.exec_us_total += timer.elapsed_us();
+                if let Ok((ref _out, padded, ref vkey)) = result {
+                    stats.padded_rows += (padded - job.rows) as u64;
+                    *stats.per_variant_jobs.entry(vkey.clone()).or_insert(0) += 1;
+                }
+                let _ = job.reply.send(result.map(|(out, _, _)| out));
+            }
+        }
+    }
+}
+
+/// Execute one job: select the smallest variant that fits, pad, run,
+/// truncate. Returns (out, padded_batch, variant_key).
+fn run_job(variants: &[LoadedVariant], job: &EvalJob) -> Result<(EvalOut, usize, String)> {
+    let v = variants
+        .iter()
+        .filter(|v| v.spec.dataset == job.dataset && v.spec.batch >= job.rows)
+        .min_by_key(|v| v.spec.batch)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact variant for dataset {:?} with batch >= {}",
+                job.dataset,
+                job.rows
+            )
+        })?;
+    let (bsz, dim, k) = (v.spec.batch, v.spec.dim, v.spec.k);
+    anyhow::ensure!(job.xhat.len() == job.rows * dim, "xhat shape");
+    anyhow::ensure!(job.sigma.len() == job.rows, "sigma shape");
+    anyhow::ensure!(job.mask.len() == job.rows * k, "mask shape");
+
+    // pad rows with sigma=1, a=b=0, x=0, mask=0 (harmless rows)
+    let mut x = vec![0.0f32; bsz * dim];
+    x[..job.rows * dim].copy_from_slice(&job.xhat);
+    let mut sigma = vec![1.0f32; bsz];
+    sigma[..job.rows].copy_from_slice(&job.sigma);
+    let mut a = vec![0.0f32; bsz];
+    a[..job.rows].copy_from_slice(&job.a);
+    let mut b = vec![0.0f32; bsz];
+    b[..job.rows].copy_from_slice(&job.b);
+    let mut mask = vec![0.0f32; bsz * k];
+    mask[..job.rows * k].copy_from_slice(&job.mask);
+
+    let mk = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+    };
+    let lits = [
+        mk(&x, &[bsz as i64, dim as i64])?,
+        mk(&sigma, &[bsz as i64])?,
+        mk(&a, &[bsz as i64])?,
+        mk(&b, &[bsz as i64])?,
+        mk(&mask, &[bsz as i64, k as i64])?,
+    ];
+    let result = v
+        .exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow::anyhow!("pjrt execute: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+    let (d_l, v_l, vn_l) = lit.to_tuple3().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+    let mut d: Vec<f32> = d_l.to_vec().map_err(|e| anyhow::anyhow!("d: {e}"))?;
+    let mut vel: Vec<f32> = v_l.to_vec().map_err(|e| anyhow::anyhow!("v: {e}"))?;
+    let mut vn: Vec<f32> = vn_l.to_vec().map_err(|e| anyhow::anyhow!("vn: {e}"))?;
+    d.truncate(job.rows * dim);
+    vel.truncate(job.rows * dim);
+    vn.truncate(job.rows);
+    let key = format!("{}_b{}", v.spec.dataset, bsz);
+    Ok((EvalOut { d, v: vel, vnorm2: vn }, bsz, key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-sdm")).is_err());
+    }
+
+    #[test]
+    fn manifest_loads_real_artifacts_if_present() {
+        let dir = crate::model::datasets::artifact_dir(None);
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.variants.is_empty());
+            let b = m.batches_for("cifar10g");
+            assert_eq!(b, vec![64, 256]);
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Declarative sampler configuration — the unit the coordinator routes,
+//! caches schedules for, and the experiment harness enumerates.
+
+use crate::diffusion::Param;
+use crate::schedule::ScheduleSpec;
+use crate::solvers::SolverSpec;
+
+/// Full sampling configuration for one workload.
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    pub dataset: String,
+    pub param: Param,
+    pub solver: SolverSpec,
+    pub schedule: ScheduleSpec,
+    /// schedule knots in [σ_max, σ_min] (final 0 appended by the builder).
+    pub steps: usize,
+    pub class: Option<usize>,
+}
+
+impl SamplerConfig {
+    /// Paper-default EDM baseline for a dataset.
+    pub fn edm_baseline(dataset: &str, param: Param, steps: usize) -> SamplerConfig {
+        SamplerConfig {
+            dataset: dataset.to_string(),
+            param,
+            solver: SolverSpec::Heun,
+            schedule: ScheduleSpec::Edm { rho: 7.0 },
+            steps,
+            class: None,
+        }
+    }
+
+    /// Cache key for schedule construction: everything that changes the
+    /// built σ grid (solver and class do not).
+    pub fn schedule_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}",
+            self.dataset,
+            self.param.name(),
+            self.schedule.tag(),
+            self.steps
+        )
+    }
+
+    /// Row label used by the experiment tables.
+    pub fn label(&self) -> String {
+        let cls = match self.class {
+            Some(c) => format!(",class={c}"),
+            None => String::new(),
+        };
+        format!(
+            "{}/{}/{}/{}steps{}",
+            self.dataset,
+            self.param.name(),
+            self.solver.tag(),
+            self.steps,
+            cls
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_key_ignores_solver_and_class() {
+        let mut a = SamplerConfig::edm_baseline("cifar10g", Param::Edm, 18);
+        let mut b = a.clone();
+        b.solver = SolverSpec::Euler;
+        b.class = Some(3);
+        assert_eq!(a.schedule_key(), b.schedule_key());
+        a.steps = 20;
+        assert_ne!(a.schedule_key(), b.schedule_key());
+    }
+
+    #[test]
+    fn label_mentions_everything() {
+        let mut c = SamplerConfig::edm_baseline("ffhqg", Param::vp(), 40);
+        c.class = Some(1);
+        let l = c.label();
+        assert!(l.contains("ffhqg") && l.contains("vp") && l.contains("heun"));
+        assert!(l.contains("class=1"));
+    }
+}

@@ -1,0 +1,464 @@
+//! The integration loop (EDM Algorithm-1 shaped, extended with the SDM
+//! adaptive solver gate and η̂/κ̂ tracing).
+//!
+//! One [`run_sampler`] call integrates a whole batch from the prior at
+//! σ_max down to σ = 0. The per-interval solver decision is batch-
+//! aggregate (the paper's curvature profile, Fig. 2, is tight across
+//! samples at a given σ, so gating per batch matches how the schedule-
+//! level decision is meant to work); NFE is therefore the number of model
+//! calls, identically the per-sample NFE.
+
+use crate::diffusion::{kappa_hat_rel, Param, SigmaGrid};
+use crate::model::{class_mask, eval_at, uncond_mask, DatasetInfo, Denoiser};
+use crate::solvers::{adaptive, dpm2m::Dpm2mState, euler, heun, LambdaKind, SolverSpec};
+use crate::util::Rng;
+use crate::Result;
+
+/// Per-run options.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// batch rows integrated together.
+    pub rows: usize,
+    pub seed: u64,
+    /// conditional class (None = unconditional).
+    pub class: Option<usize>,
+    /// record per-step trace (κ̂, η̂, solver decisions).
+    pub trace: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig { rows: 64, seed: 0, class: None, trace: false }
+    }
+}
+
+/// Trace entry for one integration interval.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub sigma: f64,
+    pub t: f64,
+    /// cache-based curvature κ̂_rel at the interval start (None on i=0).
+    pub kappa_hat: Option<f64>,
+    /// measured local error proxy η̂ = Δt²/2·Ŝ (None on the final σ→0
+    /// interval, where no forward evaluation exists).
+    pub eta_hat: Option<f64>,
+    /// Heun contribution this interval (0 = pure Euler, 1 = full Heun).
+    pub heun_weight: f64,
+    /// model evaluations spent on this interval.
+    pub evals: usize,
+}
+
+/// Result of one batch integration.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// generated samples at σ=0, row-major [rows, dim].
+    pub samples: Vec<f32>,
+    /// model calls == per-sample NFE.
+    pub nfe: usize,
+    /// per-interval trace (empty unless `cfg.trace`).
+    pub steps: Vec<StepRecord>,
+}
+
+/// Integrate one batch down the given σ grid.
+pub fn run_sampler(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    solver: &SolverSpec,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+) -> Result<RunResult> {
+    let dim = model.dim();
+    let rows = cfg.rows;
+    anyhow::ensure!(rows > 0, "rows must be positive");
+    let times = grid.times(param);
+    let sigmas = &grid.sigmas;
+    let n_int = grid.intervals();
+
+    if matches!(solver, SolverSpec::StochasticHeun(_)) {
+        anyhow::ensure!(
+            param == Param::Edm,
+            "the stochastic churn sampler is defined for the EDM parameterization"
+        );
+    }
+    if matches!(solver, SolverSpec::Dpm2m) {
+        anyhow::ensure!(
+            param.s(times[0]) == 1.0,
+            "dpm2m operates in the sigma domain and requires s(t) ≡ 1 (EDM/VE)"
+        );
+    }
+
+    let mask = match cfg.class {
+        Some(c) => {
+            anyhow::ensure!(c < ds.n_classes, "class {c} out of range");
+            class_mask(rows, &ds.classes, c)
+        }
+        None => uncond_mask(rows, model.k()),
+    };
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = vec![0.0f32; rows * dim];
+    rng.fill_normal_f32(&mut x, param.prior_std(times[0]));
+
+    let mut nfe = 0usize;
+    let mut steps: Vec<StepRecord> = Vec::new();
+    let mut dpm_state = Dpm2mState::new();
+    let mut prev_v: Option<Vec<f32>> = None;
+    let mut prev_t = times[0];
+    let mut prev_sigma = sigmas[0];
+    // pending η̂ measurement: (step index, v_i at interval start, Δt)
+    let mut pending_eta: Option<(usize, Vec<f32>, f64)> = None;
+    let mut euler_x: Vec<f32> = Vec::new();
+
+    for i in 0..n_int {
+        let (mut t_i, t_next) = (times[i], times[i + 1]);
+        let (mut sigma_i, sigma_next) = (sigmas[i], sigmas[i + 1]);
+
+        // stochastic churn (EDM param: t == σ)
+        if let SolverSpec::StochasticHeun(churn) = solver {
+            let sigma_hat = churn.churn(&mut x, sigma_i, n_int, &mut rng);
+            sigma_i = sigma_hat;
+            t_i = sigma_hat;
+        }
+
+        // v_i at the (possibly churned) interval start
+        let out = eval_at(model, param, &x, t_i, &mask, rows)?;
+        nfe += 1;
+
+        // resolve the η̂ of the previous interval with this fresh eval
+        if let Some((idx, v_then, dt_then)) = pending_eta.take() {
+            if cfg.trace {
+                let s_hat = mean_dv_norm(&v_then, &out.v, rows, dim) / dt_then.max(1e-30);
+                steps[idx].eta_hat = Some(0.5 * dt_then * dt_then * s_hat);
+            }
+        }
+
+        // cache-based curvature κ̂ (eq. 8) from the previous interval's v
+        let kappa = prev_v.as_ref().map(|pv| {
+            let clock = match solver {
+                SolverSpec::Adaptive { clock, .. } => *clock,
+                _ => crate::diffusion::CurvatureClock::Sigma,
+            };
+            let delta = clock.delta(prev_t, t_i, prev_sigma, sigma_i);
+            kappa_hat_rel(pv, &out.v, rows, dim, delta)
+        });
+
+        let dt = t_next - t_i;
+        let step_idx = steps.len();
+        let mut evals_this = 1usize;
+        let mut heun_weight = 0.0f64;
+        // η̂ measured directly when this interval spends a second eval
+        let mut eta_now: Option<f64> = None;
+        // measure η̂ = Δt²/2·Ŝ from the two velocities bracketing the step
+        let measure_eta = |v0: &[f32], v1: &[f32]| -> f64 {
+            let dt_abs = dt.abs().max(1e-30);
+            let s_hat = mean_dv_norm(v0, v1, rows, dim) / dt_abs;
+            0.5 * dt_abs * dt_abs * s_hat
+        };
+
+        match solver {
+            SolverSpec::Euler => {
+                euler::euler_step(&mut x, &out.v, dt);
+            }
+            SolverSpec::Dpm2m => {
+                dpm_state.step(&mut x, &out.d, sigma_i, sigma_next);
+            }
+            SolverSpec::Heun | SolverSpec::StochasticHeun(_) => {
+                euler::euler_step_to(&x, &out.v, dt, &mut euler_x);
+                if sigma_next > 0.0 {
+                    let out2 = eval_at(model, param, &euler_x, t_next, &mask, rows)?;
+                    nfe += 1;
+                    evals_this += 1;
+                    heun_weight = 1.0;
+                    heun::heun_correct(&mut x, &out.v, &out2.v, dt);
+                    if cfg.trace {
+                        eta_now = Some(measure_eta(&out.v, &out2.v));
+                    }
+                } else {
+                    x.copy_from_slice(&euler_x);
+                }
+            }
+            SolverSpec::Adaptive { lambda, tau_k, .. } => {
+                euler::euler_step_to(&x, &out.v, dt, &mut euler_x);
+                let last = sigma_next <= 0.0;
+                let use_heun = match lambda {
+                    LambdaKind::Step => !last && adaptive::step_gate(kappa, *tau_k),
+                    _ => !last,
+                };
+                if use_heun {
+                    let out2 = eval_at(model, param, &euler_x, t_next, &mask, rows)?;
+                    nfe += 1;
+                    evals_this += 1;
+                    let lam = match lambda {
+                        LambdaKind::Step => 0.0, // pure Heun once gated
+                        k => k.lambda(i, n_int),
+                    };
+                    heun_weight = 1.0 - lam;
+                    if lam == 0.0 {
+                        // step-Λ gated interval == pure Heun: correct in
+                        // place, no blend buffer (§Perf iteration 2)
+                        heun::heun_correct(&mut x, &out.v, &out2.v, dt);
+                    } else {
+                        // x^H from the predictor pair, then blend (eq. 9)
+                        let mut xh = x.clone();
+                        heun::heun_correct(&mut xh, &out.v, &out2.v, dt);
+                        adaptive::blend(&euler_x, &xh, lam, &mut x);
+                    }
+                    if cfg.trace {
+                        eta_now = Some(measure_eta(&out.v, &out2.v));
+                    }
+                } else {
+                    x.copy_from_slice(&euler_x);
+                }
+            }
+        }
+
+        if cfg.trace {
+            steps.push(StepRecord {
+                sigma: sigma_i,
+                t: t_i,
+                kappa_hat: kappa,
+                eta_hat: eta_now,
+                heun_weight,
+                evals: evals_this,
+            });
+            if eta_now.is_none() && sigma_next > 0.0 {
+                // defer: resolved by the eval at the next interval start
+                pending_eta = Some((step_idx, out.v.clone(), dt.abs()));
+            }
+        }
+
+        prev_v = Some(out.v);
+        prev_t = t_i;
+        prev_sigma = sigma_i;
+    }
+
+    Ok(RunResult { samples: x, nfe, steps })
+}
+
+fn mean_dv_norm(v_prev: &[f32], v_cur: &[f32], rows: usize, dim: usize) -> f64 {
+    let mut total = 0.0f64;
+    for r in 0..rows {
+        let mut dv2 = 0.0f64;
+        for c in 0..dim {
+            let d = (v_cur[r * dim + c] - v_prev[r * dim + c]) as f64;
+            dv2 += d * d;
+        }
+        total += dv2.sqrt();
+    }
+    total / rows as f64
+}
+
+/// Generate `total` samples in batches of `cfg.rows`, forking the seed per
+/// batch. Returns (samples [total, dim], mean NFE per batch, trace of the
+/// first batch).
+pub fn generate(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    solver: &SolverSpec,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>)> {
+    let dim = model.dim();
+    let mut samples = Vec::with_capacity(total * dim);
+    let mut nfes = Vec::new();
+    let mut first_trace = Vec::new();
+    let mut remaining = total;
+    let mut batch_idx = 0u64;
+    while remaining > 0 {
+        let rows = remaining.min(cfg.rows);
+        let bcfg = RunConfig {
+            rows,
+            seed: cfg.seed.wrapping_add(batch_idx.wrapping_mul(0x9E37_79B9)),
+            class: cfg.class,
+            trace: cfg.trace && batch_idx == 0,
+        };
+        let out = run_sampler(model, param, grid, solver, ds, &bcfg)?;
+        samples.extend_from_slice(&out.samples);
+        nfes.push(out.nfe as f64);
+        if batch_idx == 0 {
+            first_trace = out.steps;
+        }
+        remaining -= rows;
+        batch_idx += 1;
+    }
+    Ok((samples, crate::util::mean(&nfes), first_trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::testmodel::toy;
+    use crate::schedule::baselines::edm_schedule;
+
+    fn setup() -> (crate::model::GmmModel, DatasetInfo, SigmaGrid) {
+        let m = toy();
+        let ds = m.info.clone();
+        let grid = edm_schedule(24, ds.sigma_min, ds.sigma_max, ds.rho).unwrap();
+        (m, ds, grid)
+    }
+
+    fn fd_of(samples: &[f32], ds: &DatasetInfo) -> f64 {
+        let stats = crate::metrics::sample_mean_cov(samples, ds.dim);
+        crate::metrics::frechet_to_reference(&stats, &ds.exact_mean, &ds.exact_cov).unwrap()
+    }
+
+    #[test]
+    fn euler_nfe_equals_intervals() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 32, seed: 1, class: None, trace: false };
+        let out = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Euler, &ds, &cfg).unwrap();
+        assert_eq!(out.nfe, grid.intervals());
+        assert_eq!(out.samples.len(), 32 * ds.dim);
+        assert!(out.samples.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn heun_nfe_is_two_per_interval_minus_final() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 16, seed: 2, ..Default::default() };
+        let out = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
+        assert_eq!(out.nfe, 2 * grid.intervals() - 1);
+    }
+
+    #[test]
+    fn heun_beats_euler_in_quality() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 256, seed: 3, ..Default::default() };
+        let (se, _, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Euler, &ds, &cfg, 4096).unwrap();
+        let (sh, _, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg, 4096).unwrap();
+        let (fe, fh) = (fd_of(&se, &ds), fd_of(&sh, &ds));
+        assert!(fh < fe, "heun {fh} should beat euler {fe}");
+    }
+
+    #[test]
+    fn adaptive_step_saves_nfe_vs_heun() {
+        let (m, ds, grid) = setup();
+        let solver = SolverSpec::Adaptive {
+            lambda: LambdaKind::Step,
+            tau_k: 2e-4,
+            clock: crate::diffusion::CurvatureClock::Sigma,
+        };
+        let cfg = RunConfig { rows: 64, seed: 4, ..Default::default() };
+        let out = run_sampler(&m, Param::Edm, &grid, &solver, &ds, &cfg).unwrap();
+        let heun_nfe = 2 * grid.intervals() - 1;
+        assert!(out.nfe < heun_nfe, "adaptive {} vs heun {heun_nfe}", out.nfe);
+        assert!(out.nfe > grid.intervals(), "should use some heun steps");
+    }
+
+    #[test]
+    fn adaptive_quality_close_to_heun() {
+        let (m, ds, grid) = setup();
+        let solver = SolverSpec::Adaptive {
+            lambda: LambdaKind::Step,
+            tau_k: 2e-4,
+            clock: crate::diffusion::CurvatureClock::Sigma,
+        };
+        let cfg = RunConfig { rows: 256, seed: 5, ..Default::default() };
+        let (sa, _, _) = generate(&m, Param::Edm, &grid, &solver, &ds, &cfg, 4096).unwrap();
+        let (sh, _, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg, 4096).unwrap();
+        let (fa, fh) = (fd_of(&sa, &ds), fd_of(&sh, &ds));
+        assert!(fa < fh * 2.0 + 0.05, "adaptive {fa} vs heun {fh}");
+    }
+
+    #[test]
+    fn all_parameterizations_produce_finite_samples() {
+        let (m, ds, grid) = setup();
+        for p in [Param::Edm, Param::vp(), Param::Ve] {
+            let cfg = RunConfig { rows: 32, seed: 6, ..Default::default() };
+            let out = run_sampler(&m, p, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
+            assert!(
+                out.samples.iter().all(|v| v.is_finite()),
+                "{:?} produced non-finite samples",
+                p.name()
+            );
+            let fd = fd_of(&out.samples, &ds);
+            assert!(fd < 5.0, "{:?} fd={fd}", p.name());
+        }
+    }
+
+    #[test]
+    fn conditional_sampling_matches_class_moments() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 256, seed: 7, class: Some(0), ..Default::default() };
+        let (s, _, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg, 4096).unwrap();
+        let stats = crate::metrics::sample_mean_cov(&s, ds.dim);
+        let (cm, cc) = m.class_moments(0);
+        let fd = crate::metrics::frechet_to_reference(&stats, &cm, &cc).unwrap();
+        assert!(fd < 0.5, "conditional fd {fd}");
+    }
+
+    #[test]
+    fn dpm2m_runs_and_beats_euler() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 256, seed: 8, ..Default::default() };
+        let (sd, nfe, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Dpm2m, &ds, &cfg, 4096).unwrap();
+        let (se, _, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Euler, &ds, &cfg, 4096).unwrap();
+        assert_eq!(nfe as usize, grid.intervals());
+        let (fd_d, fd_e) = (fd_of(&sd, &ds), fd_of(&se, &ds));
+        assert!(fd_d < fd_e, "dpm2m {fd_d} vs euler {fd_e}");
+    }
+
+    #[test]
+    fn dpm2m_rejects_vp() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig::default();
+        assert!(run_sampler(&m, Param::vp(), &grid, &SolverSpec::Dpm2m, &ds, &cfg).is_err());
+    }
+
+    #[test]
+    fn stochastic_requires_edm_param() {
+        let (m, ds, grid) = setup();
+        let solver = SolverSpec::StochasticHeun(crate::solvers::ChurnParams::imagenet());
+        let cfg = RunConfig { rows: 16, seed: 9, ..Default::default() };
+        assert!(run_sampler(&m, Param::Ve, &grid, &solver, &ds, &cfg).is_err());
+        let out = run_sampler(&m, Param::Edm, &grid, &solver, &ds, &cfg).unwrap();
+        assert!(out.samples.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn trace_records_curvature_and_eta() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 64, seed: 10, trace: true, ..Default::default() };
+        let out = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
+        assert_eq!(out.steps.len(), grid.intervals());
+        assert!(out.steps[0].kappa_hat.is_none());
+        assert!(out.steps[1].kappa_hat.is_some());
+        // all but the final interval have η̂ measurements under Heun
+        for (i, s) in out.steps.iter().enumerate().take(out.steps.len() - 1) {
+            assert!(s.eta_hat.is_some(), "step {i} missing eta");
+            assert!(s.eta_hat.unwrap() >= 0.0);
+        }
+        // curvature rises toward sigma -> 0 (Figure 2 shape)
+        let early = out.steps[2].kappa_hat.unwrap();
+        let late = out.steps[out.steps.len() - 3].kappa_hat.unwrap();
+        assert!(late > early, "late {late} vs early {early}");
+    }
+
+    #[test]
+    fn generate_covers_requested_total_with_partial_batch() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 50, seed: 11, ..Default::default() };
+        let (s, nfe, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Euler, &ds, &cfg, 120).unwrap();
+        assert_eq!(s.len(), 120 * ds.dim);
+        assert!(nfe > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m, ds, grid) = setup();
+        let cfg = RunConfig { rows: 8, seed: 42, ..Default::default() };
+        let a = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
+        let b = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
+        assert_eq!(a.samples, b.samples);
+    }
+}

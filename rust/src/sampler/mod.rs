@@ -1,0 +1,8 @@
+//! The sampling engine: wires model × parameterization × schedule × solver
+//! into one integration loop with NFE accounting and per-step tracing.
+
+pub mod config;
+pub mod engine;
+
+pub use config::SamplerConfig;
+pub use engine::{generate, run_sampler, RunConfig, RunResult, StepRecord};

@@ -1,0 +1,130 @@
+//! Model-free baseline schedules (paper §2.3).
+
+use crate::diffusion::SigmaGrid;
+use crate::Result;
+
+/// EDM ρ-polynomial schedule (eq. 23):
+/// σ_i = (σ_max^{1/ρ} + i/(N−1)·(σ_min^{1/ρ} − σ_max^{1/ρ}))^ρ for i < N,
+/// σ_N = 0. `n` is the number of nonzero knots.
+pub fn edm_schedule(n: usize, sigma_min: f64, sigma_max: f64, rho: f64) -> Result<SigmaGrid> {
+    anyhow::ensure!(rho > 0.0, "rho must be positive");
+    anyhow::ensure!(sigma_min > 0.0 && sigma_max > sigma_min, "bad sigma range");
+    let inv = 1.0 / rho;
+    let (hi, lo) = (sigma_max.powf(inv), sigma_min.powf(inv));
+    let mut sigmas: Vec<f64> = (0..n)
+        .map(|i| {
+            let u = if n == 1 { 0.0 } else { i as f64 / (n - 1) as f64 };
+            (hi + u * (lo - hi)).powf(rho)
+        })
+        .collect();
+    sigmas.push(0.0);
+    SigmaGrid::new(sigmas)
+}
+
+/// σ linear from σ_max to σ_min (the "linear" heuristic).
+pub fn linear_sigma_schedule(n: usize, sigma_min: f64, sigma_max: f64) -> Result<SigmaGrid> {
+    anyhow::ensure!(sigma_min > 0.0 && sigma_max > sigma_min, "bad sigma range");
+    let mut sigmas: Vec<f64> = (0..n)
+        .map(|i| {
+            let u = i as f64 / (n - 1) as f64;
+            sigma_max + u * (sigma_min - sigma_max)
+        })
+        .collect();
+    sigmas.push(0.0);
+    SigmaGrid::new(sigmas)
+}
+
+/// Cosine-shaped interpolation in log σ (Nichol & Dhariwal style):
+/// ln σ_i = ln σ_max + (ln σ_min − ln σ_max)·(1 − cos(π u_i))/2.
+pub fn cosine_schedule(n: usize, sigma_min: f64, sigma_max: f64) -> Result<SigmaGrid> {
+    anyhow::ensure!(sigma_min > 0.0 && sigma_max > sigma_min, "bad sigma range");
+    let (lh, ll) = (sigma_max.ln(), sigma_min.ln());
+    let mut sigmas: Vec<f64> = (0..n)
+        .map(|i| {
+            let u = i as f64 / (n - 1) as f64;
+            let w = 0.5 * (1.0 - (std::f64::consts::PI * u).cos());
+            (lh + w * (ll - lh)).exp()
+        })
+        .collect();
+    sigmas.push(0.0);
+    SigmaGrid::new(sigmas)
+}
+
+/// Geometric σ spacing — uniform in log-SNR (λ = −ln σ).
+pub fn logsnr_schedule(n: usize, sigma_min: f64, sigma_max: f64) -> Result<SigmaGrid> {
+    anyhow::ensure!(sigma_min > 0.0 && sigma_max > sigma_min, "bad sigma range");
+    let (lh, ll) = (sigma_max.ln(), sigma_min.ln());
+    let mut sigmas: Vec<f64> = (0..n)
+        .map(|i| {
+            let u = i as f64 / (n - 1) as f64;
+            (lh + u * (ll - lh)).exp()
+        })
+        .collect();
+    sigmas.push(0.0);
+    SigmaGrid::new(sigmas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::{forall, UsizeIn};
+
+    #[test]
+    fn edm_matches_reference_values() {
+        // EDM N=18, sigma in [0.002, 80], rho 7: endpoints must be exact
+        let g = edm_schedule(18, 0.002, 80.0, 7.0).unwrap();
+        assert_eq!(g.sigmas.len(), 19);
+        assert!((g.sigmas[0] - 80.0).abs() < 1e-12);
+        assert!((g.sigmas[17] - 0.002).abs() < 1e-12);
+        assert_eq!(g.sigmas[18], 0.0);
+        // rho=7 concentrates knots at low sigma: first gap much larger
+        let first_gap = g.sigmas[0] - g.sigmas[1];
+        let last_gap = g.sigmas[16] - g.sigmas[17];
+        assert!(first_gap > 100.0 * last_gap);
+    }
+
+    #[test]
+    fn rho_one_is_linear() {
+        let g = edm_schedule(5, 1.0, 9.0, 1.0).unwrap();
+        let lin = linear_sigma_schedule(5, 1.0, 9.0).unwrap();
+        for (a, b) in g.sigmas.iter().zip(&lin.sigmas) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn all_schedules_valid_grids() {
+        forall(&UsizeIn(2, 64), |&n| {
+            for g in [
+                edm_schedule(n, 0.002, 80.0, 7.0),
+                linear_sigma_schedule(n, 0.002, 80.0),
+                cosine_schedule(n, 0.002, 80.0),
+                logsnr_schedule(n, 0.002, 80.0),
+            ] {
+                let g = g.map_err(|e| e.to_string())?;
+                if g.sigmas.len() != n + 1 {
+                    return Err(format!("n={n}: {} knots", g.sigmas.len()));
+                }
+                if (g.sigmas[0] - 80.0).abs() > 1e-9 || (g.sigmas[n - 1] - 0.002).abs() > 1e-9 {
+                    return Err(format!("n={n}: bad endpoints"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn logsnr_is_geometric() {
+        let g = logsnr_schedule(4, 1.0, 8.0).unwrap();
+        let r01 = g.sigmas[0] / g.sigmas[1];
+        let r12 = g.sigmas[1] / g.sigmas[2];
+        assert!((r01 - r12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_ranges() {
+        assert!(edm_schedule(8, 0.0, 80.0, 7.0).is_err());
+        assert!(edm_schedule(8, 2.0, 1.0, 7.0).is_err());
+        assert!(edm_schedule(8, 0.002, 80.0, -1.0).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! N-step resampling (paper §3.2.2, eqs. 17–22) and the COS baseline.
+//!
+//! Given measured incremental costs η_i along a source grid, the optimal
+//! N-knot schedule traverses the (weighted) geodesic length
+//! Γ̃ = Σ √(w(t_i) η_i) at constant speed (Prop. C.1). We accumulate Γ̃
+//! over the source knots and invert it at N uniform levels, interpolating
+//! in ln σ (σ spans five decades, so log-space interpolation is the
+//! numerically sensible choice).
+
+use crate::diffusion::{Param, SigmaGrid};
+use crate::model::{DatasetInfo, Denoiser};
+use crate::schedule::baselines::edm_schedule;
+use crate::schedule::pilot::pilot_measure;
+use crate::util::Rng;
+use crate::Result;
+
+/// Weight g(σ) = (σ/σ_max)^{−q} (eq. 22); w(t) = g(σ)².
+/// √w √η = g·√η is what accumulates into Γ̃.
+fn g_weight(sigma: f64, sigma_max: f64, q: f64) -> f64 {
+    (sigma / sigma_max).powf(-q)
+}
+
+/// Resample a measured schedule onto `n` knots (σ_max..σ_min) + final 0.
+///
+/// `src_sigmas`: source knots (decreasing, last = 0), `eta`: per-interval
+/// measured local error (len = knots − 1), `q`: low-σ emphasis.
+pub fn resample_n_steps(
+    src_sigmas: &[f64],
+    eta: &[f64],
+    n: usize,
+    q: f64,
+    sigma_max: f64,
+) -> Result<SigmaGrid> {
+    anyhow::ensure!(n >= 2, "need at least 2 output knots");
+    anyhow::ensure!(src_sigmas.len() >= 3, "source grid too small");
+    anyhow::ensure!(eta.len() == src_sigmas.len() - 1, "eta length mismatch");
+    // exclude the final interval to σ=0 (not resampled; re-appended)
+    let m = src_sigmas.len() - 2; // intervals within [σ_max, σ_min]
+    let sigma_min = src_sigmas[src_sigmas.len() - 2];
+
+    // cumulative weighted geodesic length over source knots (eq. 21)
+    let mut gamma = vec![0.0f64; m + 1];
+    for i in 0..m {
+        let w = g_weight(src_sigmas[i], sigma_max, q);
+        let inc = w * eta[i].max(0.0).sqrt();
+        gamma[i + 1] = gamma[i] + inc.max(1e-300);
+    }
+    let total = gamma[m];
+    anyhow::ensure!(total > 0.0, "zero geodesic length");
+
+    // invert Γ̃ at n uniform levels, interpolating in ln σ
+    let mut out = Vec::with_capacity(n + 1);
+    out.push(src_sigmas[0]);
+    let mut src_idx = 0usize;
+    for j in 1..(n - 1) {
+        let level = total * j as f64 / (n - 1) as f64;
+        while src_idx + 1 < m && gamma[src_idx + 1] < level {
+            src_idx += 1;
+        }
+        let (g0, g1) = (gamma[src_idx], gamma[src_idx + 1]);
+        let frac = if g1 > g0 { (level - g0) / (g1 - g0) } else { 0.0 };
+        let (s0, s1) = (src_sigmas[src_idx], src_sigmas[src_idx + 1]);
+        let sig = (s0.ln() + frac * (s1.ln() - s0.ln())).exp();
+        out.push(sig);
+    }
+    // strictness repair: concentrated Γ̃ can collide knots in f64, and
+    // log-interpolation can land an interior knot at/below σ_min.
+    // backward pass lifts interior knots strictly above σ_min...
+    for i in (1..out.len()).rev() {
+        let floor = sigma_min * (1.0 + 1e-7 * (n - i) as f64);
+        if out[i] < floor {
+            out[i] = floor;
+        }
+    }
+    // ...then a forward pass enforces strict descent.
+    for i in 1..out.len() {
+        if out[i] >= out[i - 1] {
+            out[i] = out[i - 1] * (1.0 - 1e-9);
+        }
+    }
+    out.push(sigma_min);
+    // the repaired tail must still sit strictly above σ_min
+    let last_interior = out.len() - 2;
+    if out[last_interior + 1] >= out[last_interior] {
+        // give up on the collided interior knot: pull it halfway up
+        out[last_interior] = (out[last_interior - 1] * sigma_min).sqrt().max(sigma_min * 1.000_001);
+    }
+    out.push(0.0);
+    SigmaGrid::new(out)
+}
+
+/// COS baseline (Williams et al., 2024): measure incremental cost on a
+/// dense EDM pilot grid (`pilot_mult`·n knots), equalize geodesic speed
+/// with w ≡ 1 (q = 0), resample to n knots.
+pub fn cos_schedule(
+    n: usize,
+    ds: &DatasetInfo,
+    param: Param,
+    model: &dyn Denoiser,
+    rng: &mut Rng,
+    pilot_mult: usize,
+    pilot_rows: usize,
+) -> Result<SigmaGrid> {
+    let dense_n = (n * pilot_mult.max(2)).max(n + 2);
+    let dense = edm_schedule(dense_n, ds.sigma_min, ds.sigma_max, ds.rho)?;
+    let pm = pilot_measure(ds.dim, ds.k, &dense, param, model, rng, pilot_rows)?;
+    resample_n_steps(&pm.sigmas, &pm.eta, n, 0.0, ds.sigma_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::testmodel::toy;
+    use crate::testutil::prop::{forall, Pair, UsizeIn};
+
+    fn toy_source() -> (Vec<f64>, Vec<f64>) {
+        let grid = edm_schedule(32, 0.002, 80.0, 7.0).unwrap();
+        // synthetic η rising toward low σ
+        let eta: Vec<f64> = (0..grid.intervals())
+            .map(|i| 1e-4 + 1e-2 * (i as f64 / 31.0).powi(2))
+            .collect();
+        (grid.sigmas, eta)
+    }
+
+    #[test]
+    fn resample_endpoints_and_monotonicity() {
+        let (src, eta) = toy_source();
+        forall(&Pair(UsizeIn(2, 64), UsizeIn(0, 3)), |&(n, qi)| {
+            let q = qi as f64 * 0.25;
+            let g = resample_n_steps(&src, &eta, n, q, 80.0).map_err(|e| e.to_string())?;
+            if g.sigmas.len() != n + 1 {
+                return Err(format!("n={n}: got {} knots", g.sigmas.len()));
+            }
+            if (g.sigmas[0] - 80.0).abs() > 1e-9 {
+                return Err("first knot".into());
+            }
+            if (g.sigmas[n - 1] - 0.002).abs() > 1e-9 {
+                return Err(format!("last nonzero knot {}", g.sigmas[n - 1]));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uniform_cost_reproduces_source_spacing() {
+        // with η constant and q=0, resampling a geometric grid must stay
+        // (approximately) geometric: equal Γ̃ increments per interval
+        let grid = crate::schedule::baselines::logsnr_schedule(33, 0.01, 10.0).unwrap();
+        let eta = vec![1.0; grid.intervals()];
+        let g = resample_n_steps(&grid.sigmas, &eta, 9, 0.0, 10.0).unwrap();
+        let ratios: Vec<f64> =
+            g.sigmas[..9].windows(2).map(|w| w[0] / w[1]).collect();
+        for r in &ratios {
+            assert!((r - ratios[0]).abs() / ratios[0] < 0.05, "{ratios:?}");
+        }
+    }
+
+    #[test]
+    fn larger_q_concentrates_low_sigma() {
+        let (src, eta) = toy_source();
+        let g0 = resample_n_steps(&src, &eta, 16, 0.0, 80.0).unwrap();
+        let g1 = resample_n_steps(&src, &eta, 16, 1.0, 80.0).unwrap();
+        // count knots below sigma=0.1
+        let below = |g: &SigmaGrid| g.sigmas.iter().filter(|&&s| s > 0.0 && s < 0.1).count();
+        assert!(
+            below(&g1) > below(&g0),
+            "q=1 {:?} vs q=0 {:?}",
+            below(&g1),
+            below(&g0)
+        );
+    }
+
+    #[test]
+    fn cos_schedule_builds_and_differs_from_edm() {
+        let m = toy();
+        let ds = m.info.clone();
+        let mut rng = Rng::new(17);
+        let g = cos_schedule(12, &ds, Param::Edm, &m, &mut rng, 4, 32).unwrap();
+        assert_eq!(g.sigmas.len(), 13);
+        let edm = edm_schedule(12, ds.sigma_min, ds.sigma_max, ds.rho).unwrap();
+        let diff: f64 = g
+            .sigmas
+            .iter()
+            .zip(&edm.sigmas)
+            .map(|(a, b)| (a.max(1e-9).ln() - b.max(1e-9).ln()).abs())
+            .sum();
+        assert!(diff > 0.1, "COS should differ from EDM, diff={diff}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (src, eta) = toy_source();
+        assert!(resample_n_steps(&src, &eta, 1, 0.0, 80.0).is_err());
+        assert!(resample_n_steps(&src[..2], &eta[..1], 8, 0.0, 80.0).is_err());
+        assert!(resample_n_steps(&src, &eta[..3], 8, 0.0, 80.0).is_err());
+    }
+}

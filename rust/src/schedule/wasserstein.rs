@@ -1,0 +1,290 @@
+//! Wasserstein-bounded adaptive timestep construction — Algorithm 1.
+//!
+//! For each step from t_i: warm-start a candidate t̃ from a reference grid
+//! (NEXTTIMESTEP), Euler-trial to t̃, measure Ŝ = ‖ṽ − v_i‖/Δt_trial
+//! (eq. 13), and LINESEARCH the candidate by exponential backoff until the
+//! trial step is consistent with the theoretical maximum
+//! Δt_max = √(2η(σ)/Ŝ) (Theorem 3.2). Commit the Euler step with
+//! Δt = min(Δt_max, t_i − t_min) and record the *achieved* local error
+//! proxy η_i = Δt²/2·Ŝ, which later drives the N-step resampler.
+//!
+//! Runs once per (dataset, param, η-config) on a pilot batch and is cached
+//! by the coordinator; its NFE is build-time, exactly as the paper
+//! computes COS/SDM schedules offline with batch 128.
+
+use crate::diffusion::{Param, SigmaGrid};
+use crate::model::{eval_at, uncond_mask, DatasetInfo, Denoiser};
+use crate::schedule::baselines::edm_schedule;
+use crate::util::Rng;
+use crate::Result;
+
+/// η-scheduling (eq. 16): η(σ) = (η_max − η_min)(σ/σ_max)^p + η_min.
+#[derive(Clone, Copy, Debug)]
+pub struct EtaSchedule {
+    pub eta_min: f64,
+    pub eta_max: f64,
+    pub p: f64,
+    pub sigma_max: f64,
+}
+
+impl EtaSchedule {
+    pub fn eta(&self, sigma: f64) -> f64 {
+        (self.eta_max - self.eta_min) * (sigma / self.sigma_max).powf(self.p) + self.eta_min
+    }
+}
+
+/// Tunables of Algorithm 1.
+#[derive(Clone, Copy, Debug)]
+pub struct WassersteinConfig {
+    pub eta: EtaSchedule,
+    /// knots of the warm-start reference grid (EDM ρ=7, dense).
+    pub ref_grid_n: usize,
+    /// LINESEARCH multiplicative factor (expansion/contraction).
+    pub backoff: f64,
+    /// accept when Δt_trial ∈ [Δt_max/backoff, Δt_max].
+    pub max_linesearch_iters: usize,
+    /// hard cap on produced steps (divergence guard).
+    pub max_steps: usize,
+}
+
+impl Default for WassersteinConfig {
+    fn default() -> Self {
+        WassersteinConfig {
+            eta: EtaSchedule { eta_min: 0.02, eta_max: 0.2, p: 1.0, sigma_max: 80.0 },
+            ref_grid_n: 256,
+            backoff: 2.0,
+            max_linesearch_iters: 24,
+            max_steps: 4096,
+        }
+    }
+}
+
+/// Output of Algorithm 1: the variable-length schedule plus its per-step
+/// error budget trace.
+#[derive(Clone, Debug)]
+pub struct WassersteinOutput {
+    /// σ knots, strictly decreasing, ending at σ_min then 0.
+    pub sigmas: Vec<f64>,
+    /// achieved η_i per interval (len = sigmas.len() − 1).
+    pub eta: Vec<f64>,
+    /// measured Ŝ_i per interval.
+    pub s_hat: Vec<f64>,
+    /// pilot model evaluations spent building the schedule.
+    pub pilot_nfe: usize,
+}
+
+/// Run Algorithm 1 on a pilot batch.
+pub fn wasserstein_schedule(
+    ds: &DatasetInfo,
+    param: Param,
+    model: &dyn Denoiser,
+    rng: &mut Rng,
+    cfg: &WassersteinConfig,
+    pilot_rows: usize,
+) -> Result<WassersteinOutput> {
+    let (dim, k) = (ds.dim, ds.k);
+    anyhow::ensure!(pilot_rows > 0, "pilot rows");
+    let t_min = param.t_of_sigma(ds.sigma_min);
+    let t_max = param.t_of_sigma(ds.sigma_max);
+
+    // NEXTTIMESTEP warm-start grid (paper: "pre-defined reference grid")
+    let ref_grid: Vec<f64> = edm_schedule(cfg.ref_grid_n, ds.sigma_min, ds.sigma_max, 7.0)?
+        .sigmas
+        .iter()
+        .take(cfg.ref_grid_n) // drop the final 0
+        .map(|&s| param.t_of_sigma(s))
+        .collect();
+
+    let mask = uncond_mask(pilot_rows, k);
+    let mut x = vec![0.0f32; pilot_rows * dim];
+    rng.fill_normal_f32(&mut x, param.prior_std(t_max));
+
+    let mut t_i = t_max;
+    let mut v_i = eval_at(model, param, &x, t_i, &mask, pilot_rows)?;
+    let mut pilot_nfe = 1usize;
+
+    let mut sigmas = vec![ds.sigma_max];
+    let mut etas = Vec::new();
+    let mut s_hats = Vec::new();
+
+    while t_i > t_min && sigmas.len() < cfg.max_steps {
+        let eta_target = cfg.eta.eta(param.sigma(t_i));
+
+        // NEXTTIMESTEP: largest reference knot strictly below t_i
+        let mut t_trial = ref_grid
+            .iter()
+            .copied()
+            .filter(|&t| t < t_i - 1e-12)
+            .fold(t_min, f64::max)
+            .max(t_min);
+        if t_trial >= t_i {
+            t_trial = 0.5 * (t_i + t_min);
+        }
+
+        // LINESEARCH: trial-evaluate, compare to Δt_max, backoff/expand
+        let mut s_hat = 0.0f64;
+        let mut dt_max = t_i - t_min;
+        for _ in 0..cfg.max_linesearch_iters {
+            let dt_trial = t_i - t_trial;
+            if dt_trial <= 0.0 {
+                break;
+            }
+            // Euler trial step x̃ = x + (t̃ − t_i)·v_i, evaluate ṽ
+            let xt: Vec<f32> = x
+                .iter()
+                .zip(&v_i.v)
+                .map(|(xv, vv)| xv + (t_trial - t_i) as f32 * vv)
+                .collect();
+            let vt = eval_at(model, param, &xt, t_trial, &mask, pilot_rows)?;
+            pilot_nfe += 1;
+            s_hat = mean_dv_norm(&v_i.v, &vt.v, pilot_rows, dim) / dt_trial;
+            if s_hat <= 0.0 {
+                // flat field: take the largest allowed step
+                dt_max = t_i - t_min;
+                break;
+            }
+            dt_max = (2.0 * eta_target / s_hat).sqrt();
+            // accept when the trial is within one backoff factor of Δt_max
+            if dt_trial <= dt_max && dt_trial * cfg.backoff > dt_max {
+                break;
+            }
+            // exponential backoff (contract if too bold, expand if timid)
+            let next_dt = if dt_trial > dt_max {
+                dt_trial / cfg.backoff
+            } else {
+                (dt_trial * cfg.backoff).min(t_i - t_min)
+            };
+            let next_t = t_i - next_dt;
+            if (next_t - t_trial).abs() < 1e-12 {
+                break; // no further change in t̃ (Algorithm 1 `until`)
+            }
+            t_trial = next_t;
+        }
+
+        // commit: Δt = min(Δt_max, distance to t_min)  (Theorem 3.2)
+        let dt = dt_max.min(t_i - t_min).max(1e-12);
+        let t_next = (t_i - dt).max(t_min);
+        for (xv, vv) in x.iter_mut().zip(&v_i.v) {
+            *xv += (t_next - t_i) as f32 * vv;
+        }
+        etas.push(0.5 * dt * dt * s_hat);
+        s_hats.push(s_hat);
+        sigmas.push(param.sigma(t_next));
+        t_i = t_next;
+        if t_i > t_min {
+            v_i = eval_at(model, param, &x, t_i, &mask, pilot_rows)?;
+            pilot_nfe += 1;
+        }
+    }
+
+    // snap the tail to exactly σ_min, dropping any float-noise knots that
+    // already collided with it (tiny final steps land at σ_min ± ulp)
+    while sigmas.len() > 1 && *sigmas.last().unwrap() <= ds.sigma_min * (1.0 + 1e-9) {
+        sigmas.pop();
+        etas.pop();
+        s_hats.pop();
+    }
+    sigmas.push(ds.sigma_min);
+    sigmas.push(0.0);
+    // re-pad the per-interval traces to len(sigmas) − 1
+    while etas.len() < sigmas.len() - 1 {
+        etas.push(*etas.last().unwrap_or(&0.0));
+        s_hats.push(*s_hats.last().unwrap_or(&0.0));
+    }
+    etas.truncate(sigmas.len() - 1);
+    s_hats.truncate(sigmas.len() - 1);
+
+    // validate monotonicity (defensive: float snapping above)
+    let grid = SigmaGrid::new(sigmas)?;
+    Ok(WassersteinOutput { sigmas: grid.sigmas, eta: etas, s_hat: s_hats, pilot_nfe })
+}
+
+fn mean_dv_norm(v_prev: &[f32], v_cur: &[f32], rows: usize, dim: usize) -> f64 {
+    let mut total = 0.0f64;
+    for r in 0..rows {
+        let mut dv2 = 0.0f64;
+        for c in 0..dim {
+            let d = (v_cur[r * dim + c] - v_prev[r * dim + c]) as f64;
+            dv2 += d * d;
+        }
+        total += dv2.sqrt();
+    }
+    total / rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::testmodel::toy;
+
+    fn run(eta_scale: f64) -> WassersteinOutput {
+        let m = toy();
+        let ds = m.info.clone();
+        let cfg = WassersteinConfig {
+            eta: EtaSchedule {
+                eta_min: 0.02 * eta_scale,
+                eta_max: 0.2 * eta_scale,
+                p: 1.0,
+                sigma_max: ds.sigma_max,
+            },
+            ..Default::default()
+        };
+        let mut rng = Rng::new(11);
+        wasserstein_schedule(&ds, Param::Edm, &m, &mut rng, &cfg, 32).unwrap()
+    }
+
+    #[test]
+    fn produces_valid_decreasing_schedule() {
+        let out = run(1.0);
+        assert!(out.sigmas.len() >= 4);
+        for w in out.sigmas.windows(2) {
+            assert!(w[1] < w[0], "{:?}", out.sigmas);
+        }
+        assert_eq!(*out.sigmas.last().unwrap(), 0.0);
+        assert_eq!(out.eta.len(), out.sigmas.len() - 1);
+        assert!(out.pilot_nfe >= out.sigmas.len() - 2);
+    }
+
+    #[test]
+    fn achieved_eta_respects_target_bound() {
+        // Theorem 3.2: committed Δt ≤ √(2η/Ŝ) ⇒ η_i = Δt²Ŝ/2 ≤ η(σ_i)
+        let out = run(1.0);
+        let eta_sched =
+            EtaSchedule { eta_min: 0.02, eta_max: 0.2, p: 1.0, sigma_max: 80.0 };
+        // the last two intervals carry snapped/padded values (tail repair)
+        for (i, &e) in out.eta.iter().enumerate().take(out.eta.len().saturating_sub(2)) {
+            let target = eta_sched.eta(out.sigmas[i]);
+            assert!(
+                e <= target * 1.0001,
+                "interval {i}: achieved {e} > target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn tighter_eta_gives_more_steps() {
+        let loose = run(1.0);
+        let tight = run(0.05);
+        assert!(
+            tight.sigmas.len() > loose.sigmas.len(),
+            "tight {} vs loose {}",
+            tight.sigmas.len(),
+            loose.sigmas.len()
+        );
+    }
+
+    #[test]
+    fn works_for_vp_and_ve() {
+        let m = toy();
+        let ds = m.info.clone();
+        for p in [Param::vp(), Param::Ve] {
+            let cfg = WassersteinConfig::default();
+            let mut rng = Rng::new(13);
+            let out = wasserstein_schedule(&ds, p, &m, &mut rng, &cfg, 16).unwrap();
+            assert!(out.sigmas.len() >= 4, "{:?}: {:?}", p.name(), out.sigmas.len());
+            for w in out.sigmas.windows(2) {
+                assert!(w[1] < w[0]);
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! SDM adaptive solver pieces (paper §3.1.2).
+//!
+//! The scheduling function Λ(t) ∈ [0,1] mixes the Euler and Heun outputs
+//! (eq. 9): x = Λ·x^E + (1−Λ)·x^H. Step-Λ specializes to a *gate*: when
+//! the cached curvature proxy κ̂_rel(i) (eq. 8) is below τ_k the Heun
+//! correction — and its extra NFE — is skipped entirely, which is why the
+//! step scheduler achieves NFE < 2 per interval (paper Table 5).
+
+/// Λ(t) families considered by the paper (step / linear / cosine).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LambdaKind {
+    /// Λ = 1 while κ̂ < τ_k (pure Euler, no second eval), else 0 (Heun).
+    Step,
+    /// Λ decreases linearly in step progress: 1 at i=0, 0 at i=N−1.
+    Linear,
+    /// Λ = cos²(π/2 · u): Nichol–Dhariwal-shaped decay.
+    Cosine,
+}
+
+impl LambdaKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LambdaKind::Step => "step",
+            LambdaKind::Linear => "linear",
+            LambdaKind::Cosine => "cosine",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<LambdaKind> {
+        match name {
+            "step" => Ok(LambdaKind::Step),
+            "linear" => Ok(LambdaKind::Linear),
+            "cosine" => Ok(LambdaKind::Cosine),
+            other => anyhow::bail!("unknown lambda schedule {other:?}"),
+        }
+    }
+
+    /// Blend weight for interval i of n (continuous kinds only).
+    pub fn lambda(&self, i: usize, n: usize) -> f64 {
+        let u = if n <= 1 { 1.0 } else { i as f64 / (n - 1) as f64 };
+        match self {
+            LambdaKind::Step => unreachable!("step lambda is curvature-gated"),
+            LambdaKind::Linear => 1.0 - u,
+            LambdaKind::Cosine => {
+                let c = (std::f64::consts::FRAC_PI_2 * u).cos();
+                c * c
+            }
+        }
+    }
+}
+
+/// Convex combination x = Λ·x^E + (1−Λ)·x^H written into `out` (eq. 9).
+pub fn blend(x_euler: &[f32], x_heun: &[f32], lambda: f64, out: &mut [f32]) {
+    debug_assert_eq!(x_euler.len(), x_heun.len());
+    debug_assert_eq!(x_euler.len(), out.len());
+    let l = lambda as f32;
+    let one_l = 1.0 - l;
+    for i in 0..out.len() {
+        out[i] = l * x_euler[i] + one_l * x_heun[i];
+    }
+}
+
+/// The step-Λ gate: use Heun iff the cached curvature estimate crossed the
+/// threshold. The first interval has no cached velocity (κ̂ undefined) and
+/// runs Euler — consistent with the near-linear high-noise regime.
+pub fn step_gate(kappa_hat: Option<f64>, tau_k: f64) -> bool {
+    match kappa_hat {
+        Some(k) => k >= tau_k,
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_boundaries() {
+        for kind in [LambdaKind::Linear, LambdaKind::Cosine] {
+            assert!((kind.lambda(0, 10) - 1.0).abs() < 1e-12);
+            assert!(kind.lambda(9, 10).abs() < 1e-12);
+            // monotone decreasing
+            for i in 1..10 {
+                assert!(kind.lambda(i, 10) <= kind.lambda(i - 1, 10) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn blend_endpoints() {
+        let e = vec![1.0f32, 2.0];
+        let h = vec![3.0f32, 6.0];
+        let mut out = vec![0.0f32; 2];
+        blend(&e, &h, 1.0, &mut out);
+        assert_eq!(out, e);
+        blend(&e, &h, 0.0, &mut out);
+        assert_eq!(out, h);
+        blend(&e, &h, 0.5, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn gate_logic() {
+        assert!(!step_gate(None, 1e-4));
+        assert!(!step_gate(Some(5e-5), 1e-4));
+        assert!(step_gate(Some(2e-4), 1e-4));
+        assert!(step_gate(Some(1e-4), 1e-4)); // inclusive
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for k in [LambdaKind::Step, LambdaKind::Linear, LambdaKind::Cosine] {
+            assert_eq!(LambdaKind::from_name(k.tag()).unwrap(), k);
+        }
+        assert!(LambdaKind::from_name("sigmoid").is_err());
+    }
+}

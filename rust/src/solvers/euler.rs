@@ -1,0 +1,45 @@
+//! First-order Euler step: x' = x + Δt·v. O(h²) local truncation error,
+//! 1 NFE per interval — the efficient choice in the near-linear high-noise
+//! regime (paper §3.1).
+
+/// In-place Euler update over a flat [rows·dim] state.
+pub fn euler_step(x: &mut [f32], v: &[f32], dt: f64) {
+    debug_assert_eq!(x.len(), v.len());
+    let dt = dt as f32;
+    for (xv, vv) in x.iter_mut().zip(v) {
+        *xv += dt * vv;
+    }
+}
+
+/// Out-of-place Euler step (used for trial/predictor states).
+pub fn euler_step_to(x: &[f32], v: &[f32], dt: f64, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), v.len());
+    out.clear();
+    out.reserve(x.len());
+    let dt = dt as f32;
+    out.extend(x.iter().zip(v).map(|(xv, vv)| xv + dt * vv));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn euler_on_linear_field_is_exact() {
+        // v = const ⇒ Euler exact
+        let mut x = vec![1.0f32, -2.0];
+        euler_step(&mut x, &[0.5, 1.0], 2.0);
+        assert_eq!(x, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn out_of_place_matches_in_place() {
+        let x = vec![0.3f32, 0.7, -0.1];
+        let v = vec![1.0f32, -1.0, 2.0];
+        let mut out = Vec::new();
+        euler_step_to(&x, &v, -0.25, &mut out);
+        let mut x2 = x.clone();
+        euler_step(&mut x2, &v, -0.25);
+        assert_eq!(out, x2);
+    }
+}

@@ -1,0 +1,47 @@
+//! Heun (improved Euler) step — EDM's deterministic 2nd-order sampler.
+//! O(h³) local error at 2 NFE per interval; the correction is skipped on
+//! the final σ→0 interval where the velocity is singular (EDM Alg. 1).
+
+/// Heun correction: given the Euler predictor x̃ (already at t+Δt) and the
+/// velocities at both ends, produce the corrected state
+/// x' = x + Δt·(v + ṽ)/2 in place of x.
+pub fn heun_correct(x: &mut [f32], v0: &[f32], v1: &[f32], dt: f64) {
+    debug_assert_eq!(x.len(), v0.len());
+    debug_assert_eq!(x.len(), v1.len());
+    let half_dt = 0.5 * dt as f32;
+    for i in 0..x.len() {
+        x[i] += half_dt * (v0[i] + v1[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::euler::euler_step_to;
+
+    #[test]
+    fn heun_exact_on_linear_in_t_field() {
+        // dx/dt = t has exact solution x(t) = x0 + (t1²−t0²)/2; Heun
+        // integrates polynomials of degree 1 in t exactly, Euler does not.
+        let (t0, t1) = (0.0, 1.0);
+        let x0 = vec![0.0f32];
+        let v0 = vec![t0 as f32];
+        let mut pred = Vec::new();
+        euler_step_to(&x0, &v0, t1 - t0, &mut pred);
+        let v1 = vec![t1 as f32];
+        let mut x = x0.clone();
+        heun_correct(&mut x, &v0, &v1, t1 - t0);
+        assert!((x[0] - 0.5).abs() < 1e-7, "{}", x[0]);
+    }
+
+    #[test]
+    fn heun_equals_euler_when_field_constant() {
+        let x0 = vec![1.0f32, 2.0];
+        let v = vec![3.0f32, -1.0];
+        let mut e = Vec::new();
+        euler_step_to(&x0, &v, 0.1, &mut e);
+        let mut h = x0.clone();
+        heun_correct(&mut h, &v, &v, 0.1);
+        assert_eq!(e, h);
+    }
+}

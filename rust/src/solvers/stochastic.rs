@@ -1,0 +1,89 @@
+//! EDM stochastic sampler support: per-step churn noise injection.
+//!
+//! Before each (Heun) step at noise level σ_i ∈ [S_min, S_max], raise the
+//! noise level to σ̂ = σ_i·(1+γ) with γ = min(S_churn/N, √2−1) and add
+//! matching Gaussian noise scaled by S_noise. Used by the paper only for
+//! the ImageNet baseline rows (§4.1); defined for the EDM parameterization
+//! (t = σ), as in the original sampler.
+
+use crate::util::Rng;
+
+/// EDM churn hyperparameters (paper §4.1: S_churn=40, S_min=0.05,
+/// S_max=50, S_noise=1.003 for ImageNet).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnParams {
+    pub s_churn: f64,
+    pub s_min: f64,
+    pub s_max: f64,
+    pub s_noise: f64,
+}
+
+impl ChurnParams {
+    pub fn imagenet() -> ChurnParams {
+        ChurnParams { s_churn: 40.0, s_min: 0.05, s_max: 50.0, s_noise: 1.003 }
+    }
+
+    /// γ for one step given the schedule length (number of intervals).
+    pub fn gamma(&self, sigma: f64, n_intervals: usize) -> f64 {
+        if sigma >= self.s_min && sigma <= self.s_max {
+            (self.s_churn / n_intervals as f64).min(std::f64::consts::SQRT_2 - 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Churn the state: returns σ̂ and perturbs x in place with
+    /// ε·S_noise·√(σ̂² − σ²).
+    pub fn churn(&self, x: &mut [f32], sigma: f64, n_intervals: usize, rng: &mut Rng) -> f64 {
+        let gamma = self.gamma(sigma, n_intervals);
+        if gamma == 0.0 {
+            return sigma;
+        }
+        let sigma_hat = sigma * (1.0 + gamma);
+        let add = (sigma_hat * sigma_hat - sigma * sigma).sqrt() * self.s_noise;
+        for xv in x.iter_mut() {
+            *xv += (add * rng.normal()) as f32;
+        }
+        sigma_hat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_respects_window_and_cap() {
+        let c = ChurnParams::imagenet();
+        assert_eq!(c.gamma(0.01, 64), 0.0); // below S_min
+        assert_eq!(c.gamma(60.0, 64), 0.0); // above S_max
+        let g = c.gamma(1.0, 64);
+        assert!((g - 40.0 / 64.0).abs() < 1e-12 || (g - (2f64.sqrt() - 1.0)).abs() < 1e-12);
+        assert!(g <= 2f64.sqrt() - 1.0);
+        // tiny N caps at sqrt(2)-1
+        assert!((c.gamma(1.0, 10) - (2f64.sqrt() - 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn churn_increases_noise_level_and_variance() {
+        let c = ChurnParams::imagenet();
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let mut x = vec![0.0f32; n];
+        let sigma_hat = c.churn(&mut x, 1.0, 256, &mut rng);
+        assert!(sigma_hat > 1.0);
+        let var: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / n as f64;
+        let expect = (sigma_hat * sigma_hat - 1.0) * 1.003f64.powi(2);
+        assert!((var - expect).abs() / expect < 0.1, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn no_churn_outside_window() {
+        let c = ChurnParams::imagenet();
+        let mut rng = Rng::new(9);
+        let mut x = vec![1.0f32; 8];
+        let sigma_hat = c.churn(&mut x, 0.01, 256, &mut rng);
+        assert_eq!(sigma_hat, 0.01);
+        assert!(x.iter().all(|&v| v == 1.0));
+    }
+}

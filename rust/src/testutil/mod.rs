@@ -1,0 +1,8 @@
+//! Test-only substrates, including the miniature property-testing
+//! framework standing in for `proptest` (absent from the vendored crate
+//! set — DESIGN.md §2). Exposed as a normal module so integration tests
+//! and examples can use it too.
+
+pub mod prop;
+
+pub use prop::{forall, forall_cfg, Gen, PropConfig};

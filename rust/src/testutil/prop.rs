@@ -1,0 +1,269 @@
+//! Miniature property-based testing framework (proptest substitute).
+//!
+//! Shape: a [`Gen`] produces random cases from a seeded [`Rng`]; [`forall`]
+//! runs a property over many cases and, on failure, greedily shrinks the
+//! case through `Gen::shrink` candidates before panicking with the seed and
+//! the minimal counterexample. Deterministic: failures reproduce from the
+//! printed seed via `SDM_PROP_SEED`.
+
+use crate::util::Rng;
+
+/// Case generator with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate strictly-smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let seed = std::env::var("SDM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD1FF_05E5);
+        PropConfig { cases: 128, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated values; panic with the shrunk
+/// counterexample on the first failure.
+pub fn forall_cfg<G, F>(cfg: PropConfig, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // greedy shrink
+            let mut cur = value;
+            let mut cur_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in gen.shrink(&cur) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {seed}): {cur_msg}\n\
+                 counterexample: {cur:?}\n\
+                 reproduce with SDM_PROP_SEED={seed}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// [`forall_cfg`] with the default config.
+pub fn forall<G, F>(gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    forall_cfg(PropConfig::default(), gen, prop)
+}
+
+// ---------------------------------------------------------------------------
+// standard generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi] with halving shrink toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi] with shrink toward the midpoint-free simple
+/// values (lo, 0 if contained, halved).
+pub struct F64In(pub f64, pub f64);
+
+impl Gen for F64In {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.uniform_range(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = vec![self.0];
+        if self.0 < 0.0 && self.1 > 0.0 {
+            out.push(0.0);
+        }
+        out.push(self.0 + (v - self.0) / 2.0);
+        out.retain(|c| c < v);
+        out
+    }
+}
+
+/// Log-uniform f64 in [lo, hi] (lo > 0) — the natural generator for noise
+/// levels sigma.
+pub struct LogUniform(pub f64, pub f64);
+
+impl Gen for LogUniform {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        (rng.uniform_range(self.0.ln(), self.1.ln())).exp()
+    }
+}
+
+/// Vector of f64 with length in a range; shrinks by halving the length.
+pub struct VecF64 {
+    pub len_lo: usize,
+    pub len_hi: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for VecF64 {
+    type Value = Vec<f64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.len_lo + rng.below(self.len_hi - self.len_lo + 1);
+        (0..n).map(|_| rng.uniform_range(self.lo, self.hi)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        if v.len() <= self.len_lo {
+            return vec![];
+        }
+        let half = self.len_lo.max(v.len() / 2);
+        vec![v[..half].to_vec(), v[..v.len() - 1].to_vec()]
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|x| (x, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|y| (a.clone(), y)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(&UsizeIn(1, 100), |&n| {
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        forall(&UsizeIn(0, 1000), |&n| {
+            if n < 50 {
+                Ok(())
+            } else {
+                Err(format!("{n} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_counterexample() {
+        // capture panic message; shrink should get below 2*threshold
+        let res = std::panic::catch_unwind(|| {
+            forall(&UsizeIn(0, 10_000), |&n| {
+                if n < 500 {
+                    Ok(())
+                } else {
+                    Err("big".into())
+                }
+            });
+        });
+        let msg = match res {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // extract the counterexample number
+        let ce: usize = msg
+            .lines()
+            .find(|l| l.starts_with("counterexample:"))
+            .and_then(|l| l.split(':').nth(1))
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap();
+        assert!(ce < 1000, "shrunk counterexample {ce} still large\n{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(&F64In(-2.0, 3.0), |&x| {
+            if (-2.0..=3.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        forall(&LogUniform(1e-3, 1e2), |&x| {
+            if (1e-3..=1e2 + 1e-9).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        forall(&VecF64 { len_lo: 2, len_hi: 8, lo: 0.0, hi: 1.0 }, |v| {
+            if (2..=8).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Criterion-style micro-bench harness (criterion itself is absent from
+//! the vendored crate set). Used by the `benches/` targets
+//! (`harness = false`): warmup, timed iterations, median + MAD +
+//! throughput reporting, environment-stable output format:
+//!
+//! `bench <name> ... median 1.234 ms  mad 0.012 ms  (N iters)`
+
+use crate::util::Timer;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_us: f64,
+    pub mad_us: f64,
+    pub iters: usize,
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_us());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[dev.len() / 2];
+    let r = BenchResult {
+        name: name.to_string(),
+        median_us: median,
+        mad_us: mad,
+        iters,
+    };
+    report(&r, None);
+    r
+}
+
+/// Like [`bench`] but also prints a derived throughput in `unit`/s.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items_per_iter: f64,
+    unit: &str,
+    f: F,
+) -> BenchResult {
+    let mut r = bench_quiet(name, warmup, iters, f);
+    report(&r, Some((items_per_iter, unit)));
+    r.name = name.to_string();
+    r
+}
+
+fn bench_quiet<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_us());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        median_us: median,
+        mad_us: dev[dev.len() / 2],
+        iters,
+    }
+}
+
+fn report(r: &BenchResult, thr: Option<(f64, &str)>) {
+    let (m, u) = scale(r.median_us);
+    let (d, du) = scale(r.mad_us);
+    match thr {
+        Some((items, unit)) => println!(
+            "bench {:<44} median {m:>9.3} {u:<2} mad {d:>8.3} {du:<2} {:>12.1} {unit}/s  ({} iters)",
+            r.name,
+            items / (r.median_us / 1e6),
+            r.iters
+        ),
+        None => println!(
+            "bench {:<44} median {m:>9.3} {u:<2} mad {d:>8.3} {du:<2} ({} iters)",
+            r.name, r.iters
+        ),
+    }
+}
+
+fn scale(us: f64) -> (f64, &'static str) {
+    if us < 1e3 {
+        (us, "us")
+    } else if us < 1e6 {
+        (us / 1e3, "ms")
+    } else {
+        (us / 1e6, "s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-spin", 2, 16, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.median_us >= 0.0);
+        assert_eq!(r.iters, 16);
+        assert!(r.mad_us <= r.median_us.max(1.0) * 10.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Tiny CLI argument substrate (no `clap` in the vendored crate set).
+//!
+//! Supports the subcommand + `--key value` / `--flag` grammar used by the
+//! `sdm` binary and the examples. Unknown flags are an error (typo safety),
+//! and every flag lookup records itself so `finish()` can report unused
+//! arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: one optional subcommand, flags, free args.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminator: rest are positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => Ok(v.clone()),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+
+    /// Numeric flag with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Boolean switch (`--flag`).
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Error on any flag that was provided but never consumed by the
+    /// subcommand — catches typos like `--stpes 18`.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for k in &self.bools {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown switch --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table1 --steps 18 --dataset cifar10g --verbose");
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 18);
+        assert_eq!(a.get("dataset", ""), "cifar10g");
+        assert!(a.has("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --eta-max=0.4");
+        assert_eq!(a.get_f64("eta-max", 0.0).unwrap(), 0.4);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("run --stpes 18");
+        let _ = a.get_usize("steps", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = parse("serve");
+        assert!(a.require("port").is_err());
+    }
+
+    #[test]
+    fn bool_flag_before_another_flag() {
+        let a = parse("x --dry-run --n 3");
+        assert!(a.has("dry-run"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn positional_after_terminator() {
+        let a = parse("x --v 1 -- a b");
+        assert_eq!(a.get("v", ""), "1");
+        assert_eq!(a.positional, vec!["a", "b"]);
+    }
+}

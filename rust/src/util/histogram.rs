@@ -1,0 +1,181 @@
+//! Log-bucketed latency histogram (HDR-style, fixed memory).
+//!
+//! Serving metrics substrate: record microsecond latencies into
+//! geometrically spaced buckets, report count/mean/quantiles. Quantile
+//! error is bounded by the bucket growth factor (~4.6% here), which is the
+//! usual operating point for serving dashboards.
+
+/// Geometric-bucket histogram over (0, ~17 minutes] in microseconds.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BUCKETS: usize = 512;
+/// bucket upper edge i = LO * GROWTH^i ; GROWTH chosen so 512 buckets span
+/// 1us .. 1e9us.
+const LO: f64 = 1.0;
+const GROWTH: f64 = 1.0414; // 1.0414^512 ~= 1.05e9
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= LO {
+            return 0;
+        }
+        let idx = (v / LO).ln() / GROWTH.ln();
+        (idx.ceil() as usize).min(BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        LO * GROWTH.powi(i as i32)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let v = v.max(0.0);
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.max }
+    }
+
+    /// Quantile in [0,1]; returns the representative value of the bucket
+    /// containing the q-th sample.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// One-line serving summary: `n=..., mean=..., p50/p95/p99=...` (us).
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.1}{u} p50={:.1}{u} p95={:.1}{u} p99={:.1}{u} max={:.1}{u}",
+            self.total,
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max(),
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bounded_error() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 10_000);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 5_000.0).abs() / 5_000.0 < 0.06, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.06, "p99={p99}");
+        assert!((h.mean() - 5_000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn min_max_clamping() {
+        let mut h = Histogram::new();
+        h.record(42.0);
+        assert_eq!(h.quantile(0.0), 42.0);
+        assert_eq!(h.quantile(1.0), 42.0);
+        assert_eq!(h.min(), 42.0);
+        assert_eq!(h.max(), 42.0);
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 0..100 {
+            a.record(i as f64);
+            b.record((i + 100) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.max() >= 199.0);
+    }
+
+    #[test]
+    fn huge_values_saturate_last_bucket() {
+        let mut h = Histogram::new();
+        h.record(1e12);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(0.5) <= 1e12);
+    }
+}

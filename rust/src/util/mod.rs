@@ -1,0 +1,84 @@
+//! Shared substrates: RNG, JSON, thread pool, histograms, CLI, timing.
+//!
+//! Everything here exists because the vendored offline crate set ships
+//! neither `rand`, `serde`, `tokio`, `clap`, nor `criterion` (see
+//! DESIGN.md §2, "Offline-toolchain substitutions").
+
+pub mod bench;
+pub mod cli;
+pub mod histogram;
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+
+pub use bench::{bench, bench_throughput, BenchResult};
+pub use cli::Args;
+pub use histogram::Histogram;
+pub use json::Json;
+pub use rng::Rng;
+pub use threadpool::ThreadPool;
+
+use std::time::Instant;
+
+/// Stopwatch returning elapsed microseconds (the unit all serving
+/// histograms record).
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Mean of a slice (0.0 for empty — callers treat empty as "no data").
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Median via partial sort (copies; slices here are small).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_us() >= 1000.0);
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: the PJRT AOT artifact must agree with the native oracle.
+//!
+//! These tests require `make artifacts` to have been run; they are
+//! skipped (not failed) when artifacts are absent so `cargo test` stays
+//! meaningful in a fresh checkout.
+
+use sdm::coordinator::{EngineHub, ModelBackend};
+use sdm::diffusion::Param;
+use sdm::model::{datasets::artifact_dir, eval_at, uncond_mask, Denoiser};
+use sdm::sampler::{run_sampler, RunConfig};
+use sdm::schedule::ScheduleSpec;
+use sdm::solvers::SolverSpec;
+use sdm::util::Rng;
+
+fn artifacts_present() -> bool {
+    artifact_dir(None).join("manifest.json").exists()
+}
+
+fn hubs() -> (EngineHub, EngineHub) {
+    let dir = artifact_dir(None);
+    (
+        EngineHub::load(&dir, ModelBackend::Pjrt).expect("pjrt hub"),
+        EngineHub::load(&dir, ModelBackend::Native).expect("native hub"),
+    )
+}
+
+#[test]
+fn pjrt_matches_native_oracle_pointwise() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (pjrt, native) = hubs();
+    for ds in ["cifar10g", "ffhqg", "afhqg", "imagenetg"] {
+        let info = pjrt.info(ds).unwrap().clone();
+        let pm = pjrt.model(ds).unwrap();
+        let nm = native.model(ds).unwrap();
+        let mut rng = Rng::new(42);
+        for &rows in &[1usize, 7, 64, 200] {
+            let mut x = vec![0.0f32; rows * info.dim];
+            rng.fill_normal_f32(&mut x, 2.0);
+            let sigma: Vec<f32> =
+                (0..rows).map(|i| (0.01 + i as f32 * 0.37) % 60.0 + 0.01).collect();
+            let a = vec![0.1f32; rows];
+            let b: Vec<f32> = sigma.iter().map(|s| 1.0 / s).collect();
+            let mask = uncond_mask(rows, info.k);
+            let po = pm.denoise_v(&x, &sigma, &a, &b, &mask).unwrap();
+            let no = nm.denoise_v(&x, &sigma, &a, &b, &mask).unwrap();
+            for (i, (p, n)) in po.d.iter().zip(&no.d).enumerate() {
+                assert!(
+                    (p - n).abs() < 1e-3 * (1.0 + n.abs()),
+                    "{ds} rows={rows} d[{i}]: pjrt={p} native={n}"
+                );
+            }
+            for (i, (p, n)) in po.v.iter().zip(&no.v).enumerate() {
+                assert!(
+                    (p - n).abs() < 1e-2 * (1.0 + n.abs()),
+                    "{ds} rows={rows} v[{i}]: pjrt={p} native={n}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_end_to_end_sampling_quality() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (pjrt, _) = hubs();
+    let ds = "cifar10g";
+    let info = pjrt.info(ds).unwrap().clone();
+    let model = pjrt.model(ds).unwrap();
+    let grid = pjrt
+        .schedule(ds, Param::Edm, &ScheduleSpec::Edm { rho: 7.0 }, 18)
+        .unwrap();
+    let cfg = RunConfig { rows: 256, seed: 9, class: None, trace: false };
+    let out = run_sampler(model.as_ref(), Param::Edm, &grid, &SolverSpec::Heun, &info, &cfg)
+        .unwrap();
+    let stats = sdm::metrics::sample_mean_cov(&out.samples, info.dim);
+    let fd = sdm::metrics::frechet_to_reference(&stats, &info.exact_mean, &info.exact_cov)
+        .unwrap();
+    assert!(fd < 2.0, "pjrt end-to-end FD too high: {fd}");
+}
+
+#[test]
+fn eval_at_agrees_between_backends_on_trajectory_states() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (pjrt, native) = hubs();
+    let ds = "ffhqg";
+    let info = pjrt.info(ds).unwrap().clone();
+    let pm = pjrt.model(ds).unwrap();
+    let nm = native.model(ds).unwrap();
+    let mask = uncond_mask(16, info.k);
+    let mut rng = Rng::new(7);
+    for p in [Param::Edm, Param::vp(), Param::Ve] {
+        let t = p.t_of_sigma(3.0);
+        let mut x = vec![0.0f32; 16 * info.dim];
+        rng.fill_normal_f32(&mut x, p.prior_std(t));
+        let po = eval_at(pm.as_ref(), p, &x, t, &mask, 16).unwrap();
+        let no = eval_at(nm.as_ref(), p, &x, t, &mask, 16).unwrap();
+        for (i, (a, b)) in po.v.iter().zip(&no.v).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-2 * (1.0 + b.abs()),
+                "{} v[{i}]: {a} vs {b}",
+                p.name()
+            );
+        }
+    }
+}

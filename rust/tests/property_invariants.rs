@@ -1,0 +1,181 @@
+//! Cross-module property tests (testutil::prop — the proptest substitute):
+//! NFE accounting, schedule/resampling invariants, batcher conservation.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use sdm::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
+use sdm::coordinator::hub::EngineHub;
+use sdm::coordinator::metrics::ServerMetrics;
+use sdm::coordinator::protocol::{Request, Response, SampleRequest};
+use sdm::diffusion::{CurvatureClock, Param};
+use sdm::model::gmm::testmodel::toy;
+use sdm::sampler::{run_sampler, RunConfig};
+use sdm::schedule::baselines::edm_schedule;
+use sdm::solvers::{LambdaKind, SolverSpec};
+use sdm::testutil::prop::{forall_cfg, Gen, Pair, PropConfig, UsizeIn};
+use sdm::util::{Rng, Timer};
+
+struct ParamGen;
+
+impl Gen for ParamGen {
+    type Value = &'static str;
+
+    fn generate(&self, rng: &mut Rng) -> &'static str {
+        ["edm", "vp", "ve"][rng.below(3)]
+    }
+}
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+#[test]
+fn nfe_accounting_invariants() {
+    // Euler: NFE == intervals; Heun: 2·intervals − 1; adaptive step-Λ:
+    // intervals ≤ NFE ≤ 2·intervals − 1, for every (steps, param).
+    let m = toy();
+    let info = m.info.clone();
+    forall_cfg(cfg(24), &Pair(UsizeIn(3, 24), ParamGen), |&(steps, pname)| {
+        let param = Param::from_name(pname).unwrap();
+        let grid =
+            edm_schedule(steps, info.sigma_min, info.sigma_max, info.rho).map_err(|e| e.to_string())?;
+        let run_cfg = RunConfig { rows: 8, seed: steps as u64, class: None, trace: false };
+        let n = grid.intervals();
+        let e = run_sampler(&m, param, &grid, &SolverSpec::Euler, &info, &run_cfg)
+            .map_err(|e| e.to_string())?;
+        if e.nfe != n {
+            return Err(format!("euler nfe {} != intervals {n}", e.nfe));
+        }
+        let h = run_sampler(&m, param, &grid, &SolverSpec::Heun, &info, &run_cfg)
+            .map_err(|e| e.to_string())?;
+        if h.nfe != 2 * n - 1 {
+            return Err(format!("heun nfe {} != {}", h.nfe, 2 * n - 1));
+        }
+        let solver = SolverSpec::Adaptive {
+            lambda: LambdaKind::Step,
+            tau_k: 5e-2,
+            clock: CurvatureClock::Sigma,
+        };
+        let a = run_sampler(&m, param, &grid, &solver, &info, &run_cfg)
+            .map_err(|e| e.to_string())?;
+        if a.nfe < n || a.nfe > 2 * n - 1 {
+            return Err(format!("adaptive nfe {} outside [{n}, {}]", a.nfe, 2 * n - 1));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn samples_always_finite_across_design_space() {
+    let m = toy();
+    let info = m.info.clone();
+    forall_cfg(cfg(20), &Pair(UsizeIn(4, 32), UsizeIn(0, 2)), |&(steps, pidx)| {
+        let param = [Param::Edm, Param::vp(), Param::Ve][pidx];
+        let grid =
+            edm_schedule(steps, info.sigma_min, info.sigma_max, info.rho).map_err(|e| e.to_string())?;
+        for solver in [
+            SolverSpec::Euler,
+            SolverSpec::Heun,
+            SolverSpec::Adaptive {
+                lambda: LambdaKind::Cosine,
+                tau_k: 0.0,
+                clock: CurvatureClock::Sigma,
+            },
+        ] {
+            let run_cfg = RunConfig { rows: 4, seed: 99, class: None, trace: true };
+            let out = run_sampler(&m, param, &grid, &solver, &info, &run_cfg)
+                .map_err(|e| e.to_string())?;
+            if !out.samples.iter().all(|v| v.is_finite()) {
+                return Err(format!("non-finite samples: {} {:?}", param.name(), solver));
+            }
+            if out.steps.len() != grid.intervals() {
+                return Err("trace length mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+fn mk_request(n: usize, seed: u64) -> SampleRequest {
+    let line = format!(
+        r#"{{"op":"sample","dataset":"toy","n":{n},"solver":"euler","steps":5,"seed":{seed},"return_samples":true}}"#
+    );
+    match Request::parse(&line).unwrap() {
+        Request::Sample(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn batcher_conserves_requests_under_random_load() {
+    // every submitted request gets exactly one reply with exactly its rows,
+    // regardless of arrival pattern or group composition.
+    forall_cfg(cfg(12), &UsizeIn(1, 24), |&n_requests| {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let (tx, rx) = mpsc::channel();
+        let m2 = metrics.clone();
+        let handle = std::thread::spawn(move || {
+            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default())
+        });
+        let mut rng = Rng::new(n_requests as u64);
+        let mut expected = Vec::new();
+        let mut receivers = Vec::new();
+        for i in 0..n_requests {
+            let rows = 1 + rng.below(9);
+            expected.push(rows);
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Pending {
+                req: mk_request(rows, i as u64),
+                reply: rtx,
+                enqueued: Instant::now(),
+                timer: Timer::start(),
+            })
+            .unwrap();
+            receivers.push(rrx);
+        }
+        drop(tx);
+        for (rrx, rows) in receivers.iter().zip(&expected) {
+            match rrx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Response::SampleOk { n, samples, dim, .. }) => {
+                    if n != *rows {
+                        return Err(format!("rows {n} != requested {rows}"));
+                    }
+                    if samples.unwrap().len() != rows * dim {
+                        return Err("sample slice length mismatch".into());
+                    }
+                }
+                other => return Err(format!("bad reply: {other:?}")),
+            }
+        }
+        handle.join().unwrap();
+        Ok(())
+    });
+}
+
+#[test]
+fn resampling_preserves_interval_count_for_any_source() {
+    // random measured-eta vectors on random geometric grids never break
+    // the resampler's contract (n+1 knots, exact endpoints, strict order).
+    forall_cfg(
+        cfg(64),
+        &Pair(UsizeIn(8, 128), UsizeIn(2, 48)),
+        |&(src_n, out_n)| {
+            let grid = sdm::schedule::baselines::logsnr_schedule(src_n, 0.002, 80.0)
+                .map_err(|e| e.to_string())?;
+            let mut rng = Rng::new((src_n * 1000 + out_n) as u64);
+            let eta: Vec<f64> = (0..grid.intervals()).map(|_| rng.uniform() + 1e-6).collect();
+            let q = rng.uniform();
+            let g = sdm::schedule::resample_n_steps(&grid.sigmas, &eta, out_n, q, 80.0)
+                .map_err(|e| e.to_string())?;
+            if g.sigmas.len() != out_n + 1 {
+                return Err(format!("knots {} != {}", g.sigmas.len(), out_n + 1));
+            }
+            if (g.sigmas[0] - 80.0).abs() > 1e-9 {
+                return Err("sigma_max endpoint".into());
+            }
+            Ok(())
+        },
+    );
+}

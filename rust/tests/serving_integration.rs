@@ -1,0 +1,103 @@
+//! Serving-stack integration: TCP server over the PJRT backend, batching
+//! semantics, conditional requests, error paths, stats.
+
+use std::sync::Arc;
+
+use sdm::coordinator::{Client, EngineHub, ModelBackend, Server, ServerConfig};
+use sdm::model::datasets::artifact_dir;
+use sdm::util::Json;
+
+fn artifacts_present() -> bool {
+    artifact_dir(None).join("manifest.json").exists()
+}
+
+fn start(backend: ModelBackend) -> (Server, String) {
+    let hub = Arc::new(EngineHub::load(&artifact_dir(None), backend).unwrap());
+    let server = Server::start(hub, ServerConfig::default()).unwrap();
+    let addr = server.local_addr.to_string();
+    (server, addr)
+}
+
+#[test]
+fn pjrt_serving_round_trip_with_samples() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (server, addr) = start(ModelBackend::Pjrt);
+    let mut c = Client::connect(&addr).unwrap();
+    let resp = c
+        .send(r#"{"op":"sample","dataset":"cifar10g","n":32,"param":"vp","solver":"heun","schedule":"edm","steps":12,"return_samples":true}"#)
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(resp.get("nfe").unwrap().as_f64().unwrap(), 23.0);
+    let dim = resp.get("dim").unwrap().as_usize().unwrap();
+    let samples = resp.get("samples").unwrap().as_vec_f64().unwrap();
+    assert_eq!(samples.len(), 32 * dim);
+    assert!(samples.iter().all(|v| v.is_finite()));
+    server.shutdown();
+}
+
+#[test]
+fn conditional_and_adaptive_requests() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (server, addr) = start(ModelBackend::Native);
+    let mut c = Client::connect(&addr).unwrap();
+    // conditional class on the conditional workload
+    let resp = c
+        .send(r#"{"op":"sample","dataset":"cifar10g","n":16,"solver":"sdm","tau_k":0.05,"schedule":"edm","steps":18,"class":3}"#)
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(true), "{resp:?}");
+    let nfe = resp.get("nfe").unwrap().as_f64().unwrap();
+    assert!(nfe < 35.0, "adaptive should save NFE, got {nfe}");
+    // out-of-range class is an error, connection survives
+    let resp = c
+        .send(r#"{"op":"sample","dataset":"cifar10g","n":4,"class":99}"#)
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(false));
+    assert!(c.ping().unwrap());
+    server.shutdown();
+}
+
+#[test]
+fn sdm_schedule_request_hits_cache_on_second_call() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let hub = Arc::new(EngineHub::load(&artifact_dir(None), ModelBackend::Native).unwrap());
+    let server = Server::start(hub.clone(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr.to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    assert_eq!(hub.cached_schedules(), 0);
+    let r1 = c.sample("cifar10g", 8, "vp", "euler", "sdm", 18, 1).unwrap();
+    assert_eq!(r1.get("ok").unwrap(), &Json::Bool(true));
+    let after_first = hub.cached_schedules();
+    assert!(after_first >= 1, "SDM schedule should be cached");
+    let r2 = c.sample("cifar10g", 8, "vp", "euler", "sdm", 18, 2).unwrap();
+    assert_eq!(r2.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(hub.cached_schedules(), after_first, "second call must hit the cache");
+    server.shutdown();
+}
+
+#[test]
+fn stats_reflect_traffic() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (server, addr) = start(ModelBackend::Native);
+    let mut c = Client::connect(&addr).unwrap();
+    for seed in 0..3 {
+        c.sample("afhqg", 8, "ve", "heun", "edm", 10, seed).unwrap();
+    }
+    let stats = c.send(r#"{"op":"stats"}"#).unwrap();
+    let afhq = stats.get("stats").unwrap().get("afhqg").unwrap();
+    assert_eq!(afhq.get("requests").unwrap().as_f64().unwrap(), 3.0);
+    assert_eq!(afhq.get("samples").unwrap().as_f64().unwrap(), 24.0);
+    assert_eq!(afhq.get("avg_nfe").unwrap().as_f64().unwrap(), 19.0);
+    server.shutdown();
+}
