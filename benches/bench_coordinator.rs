@@ -1,16 +1,141 @@
 //! Coordinator benches: batcher/router throughput and the serving stack's
 //! overhead over raw engine calls. `cargo bench --bench bench_coordinator`.
+//!
+//! The mixed-group scenario runs against the in-process toy workload (no
+//! artifacts needed): four mutually incompatible solver/schedule groups
+//! are offered as one burst, once with the inline single-thread batcher
+//! (`max_inflight = 0`, the pre-pool behavior) and once with the pooled
+//! batcher — the pooled configuration must sustain higher throughput
+//! because the groups integrate concurrently instead of head-of-line
+//! blocking one another.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use sdm::coordinator::batcher::BatchPolicy;
+use sdm::coordinator::loadgen::{RequestTemplate, TraceProfile};
+use sdm::coordinator::metrics::ServerMetrics;
+use sdm::coordinator::protocol::{Request, Response, SampleRequest};
+use sdm::coordinator::router::Router;
 use sdm::coordinator::{Client, EngineHub, ModelBackend, Server, ServerConfig};
 use sdm::model::datasets::artifact_dir;
-use sdm::util::{bench_throughput, Json};
+use sdm::model::gmm::testmodel::toy;
+use sdm::util::{bench_throughput, Json, ThreadPool};
+
+fn mk_request(n: usize, solver: &str, schedule: &str, steps: usize, seed: u64) -> SampleRequest {
+    let line = format!(
+        r#"{{"op":"sample","dataset":"toy","n":{n},"solver":"{solver}","schedule":"{schedule}","steps":{steps},"seed":{seed}}}"#
+    );
+    match Request::parse(&line).unwrap() {
+        Request::Sample(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+fn req_from_template(t: &RequestTemplate, seed: u64) -> SampleRequest {
+    let line = format!(
+        r#"{{"op":"sample","dataset":"{}","n":{},"param":"{}","solver":"{}","schedule":"{}","steps":{},"seed":{seed}}}"#,
+        t.dataset, t.n, t.param, t.solver, t.schedule, t.steps
+    );
+    match Request::parse(&line).unwrap() {
+        Request::Sample(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+/// One burst over [`TraceProfile::mixed_solvers`]'s four incompatible
+/// groups: `per_group` requests × `n` rows each, arrivals interleaved so
+/// every group is always pending.
+fn mixed_burst(per_group: usize, n: usize) -> Vec<SampleRequest> {
+    let profile = TraceProfile::mixed_solvers("toy", n);
+    let k = profile.templates.len();
+    let mut reqs = Vec::with_capacity(k * per_group);
+    for i in 0..per_group {
+        for (g, (_, tpl)) in profile.templates.iter().enumerate() {
+            reqs.push(req_from_template(tpl, (i * k + g) as u64));
+        }
+    }
+    reqs
+}
+
+fn run_burst(router: &Router, reqs: Vec<SampleRequest>) {
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| router.submit(r).expect("route"))
+        .collect();
+    for rx in rxs {
+        match rx.recv().expect("reply") {
+            Response::SampleOk { .. } => {}
+            Response::Err(e) => panic!("burst request failed: {e}"),
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+}
+
+/// Bench one policy over the mixed burst; returns samples/s.
+fn bench_mixed(name: &str, policy: BatchPolicy, pool_threads: usize) -> f64 {
+    let per_group = 16usize;
+    let n = 16usize;
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let metrics = Arc::new(ServerMetrics::new());
+    let pool = Arc::new(ThreadPool::new(pool_threads));
+    let router = Router::start(hub, metrics, policy, pool);
+    run_burst(&router, mixed_burst(2, n)); // warm the schedule cache
+    let r = bench_throughput(
+        &format!("serve/mixed-4groups/{name}"),
+        1,
+        6,
+        (4 * per_group * n) as f64,
+        "samples",
+        || run_burst(&router, mixed_burst(per_group, n)),
+    );
+    router.shutdown();
+    (4 * per_group * n) as f64 / (r.median_us / 1e6)
+}
+
+/// Regression scenario: a slow group must not delay an unrelated group's
+/// reply beyond `max_wait` + its own integration time (the hard assert
+/// lives in rust/tests/async_batcher.rs; here we report the latencies).
+fn slow_fast_isolation() {
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let metrics = Arc::new(ServerMetrics::new());
+    let pool = Arc::new(ThreadPool::new(4));
+    let router = Router::start(hub, metrics, BatchPolicy::default(), pool);
+
+    let slow = mk_request(256, "dpm2m", "edm", 4000, 1);
+    let fast = mk_request(2, "heun", "edm", 4, 2);
+    let slow_rx = router.submit(slow).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let t = Instant::now();
+    let fast_rx = router.submit(fast).unwrap();
+    fast_rx.recv().unwrap();
+    let fast_ms = t.elapsed().as_secs_f64() * 1e3;
+    slow_rx.recv().unwrap();
+    let slow_ms = t.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "serve/slow-fast-isolation: fast reply {fast_ms:.2} ms while slow group ran {slow_ms:.2} ms"
+    );
+    router.shutdown();
+}
 
 fn main() {
+    // --- mixed-group batcher scenario (no artifacts required) ---
+    let inline = BatchPolicy { max_inflight: 0, ..BatchPolicy::default() };
+    let pooled = BatchPolicy::default();
+    let inline_sps = bench_mixed("inline-baseline", inline, 1);
+    let pooled_sps = bench_mixed("pooled", pooled, 8);
+    println!(
+        "serve/mixed-4groups: pooled {:.1} samples/s vs inline {:.1} samples/s ({:.2}x)",
+        pooled_sps,
+        inline_sps,
+        pooled_sps / inline_sps.max(1e-9)
+    );
+    slow_fast_isolation();
+
+    // --- TCP serving stack over real artifacts (skipped if absent) ---
     let dir = artifact_dir(None);
     if !dir.join("manifest.json").exists() {
-        println!("bench_coordinator: no artifacts, skipping");
+        println!("bench_coordinator: no artifacts, skipping TCP scenarios");
         return;
     }
     let hub = Arc::new(EngineHub::load(&dir, ModelBackend::Native).expect("hub"));

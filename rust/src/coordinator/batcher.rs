@@ -1,22 +1,31 @@
-//! Dynamic batcher: one thread per dataset route.
+//! Dynamic batcher: one grouping thread per dataset route, integration on
+//! the coordinator's shared worker pool.
 //!
 //! Compatible requests (same parameterization, solver, schedule, steps,
 //! class) are merged into a single integration batch up to `max_batch`
 //! rows, or flushed after `max_wait` — the standard latency/throughput
-//! dial of serving systems. Padding to the AOT artifact's static batch
-//! shapes happens one level down (the PJRT executor); the batcher's job is
-//! to fill those shapes as much as possible.
+//! dial of serving systems. The batcher thread itself only *groups*:
+//! ready groups are chunked at `max_batch` rows and submitted to the
+//! shared [`ThreadPool`], bounded by `max_inflight` concurrently
+//! integrating groups per dataset, with results routed back through each
+//! [`Pending::reply`]. One slow group therefore no longer head-of-line
+//! blocks unrelated groups or new arrivals (`max_inflight: 0` restores
+//! the old inline behavior for comparison benches).
+//!
+//! Padding to the AOT artifact's static batch shapes happens one level
+//! down (the PJRT executor); the batcher's job is to fill those shapes as
+//! much as possible.
 
-use std::collections::BTreeMap;
-use std::sync::{mpsc, Arc};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Response, SampleRequest};
 use crate::metrics::sample_mean_cov;
-use crate::sampler::{run_sampler, RunConfig};
-use crate::util::Timer;
+use crate::sampler::{generate, generate_pooled, run_sampler, RunConfig};
+use crate::util::{ThreadPool, Timer};
 use crate::Result;
 
 /// A request waiting in a batch group.
@@ -34,11 +43,19 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// flush age for a non-full group.
     pub max_wait: Duration,
+    /// max groups of one dataset integrating concurrently on the worker
+    /// pool; `0` integrates inline on the batcher thread (the pre-pool
+    /// behavior, kept for regression benches).
+    pub max_inflight: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) }
+        BatchPolicy {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+            max_inflight: 4,
+        }
     }
 }
 
@@ -55,15 +72,74 @@ fn group_key(r: &SampleRequest) -> String {
     )
 }
 
+/// Count of groups a dataset currently has integrating on the pool.
+struct Inflight {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Inflight {
+    fn new() -> Inflight {
+        Inflight { count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn current(&self) -> usize {
+        *self.count.lock().expect("inflight poisoned")
+    }
+
+    fn inc(&self) -> usize {
+        let mut c = self.count.lock().expect("inflight poisoned");
+        *c += 1;
+        *c
+    }
+
+    fn dec(&self) {
+        let mut c = self.count.lock().expect("inflight poisoned");
+        *c -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until fewer than `limit` groups are in flight.
+    fn wait_below(&self, limit: usize) {
+        let mut c = self.count.lock().expect("inflight poisoned");
+        while *c >= limit {
+            c = self.cv.wait(c).expect("inflight poisoned");
+        }
+    }
+
+    /// Block until every submitted group has finished.
+    fn wait_zero(&self) {
+        self.wait_below(1);
+    }
+}
+
+/// Decrement-on-drop so a panicking flush can't wedge the gauge.
+struct InflightGuard(Arc<Inflight>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.dec();
+    }
+}
+
 /// Run the batcher loop for one dataset until the inbox closes.
+///
+/// The loop never blocks on the worker pool: ready groups are chunked at
+/// `max_batch` rows, chunks that fit under the `max_inflight` bound are
+/// submitted immediately, and the rest queue in a FIFO backlog that is
+/// drained as integrations finish — so a many-chunk burst in one group
+/// can neither stall the inbox nor burst past the bound when slots free.
 pub fn batcher_loop(
     dataset: String,
     hub: Arc<EngineHub>,
     metrics: Arc<ServerMetrics>,
     rx: mpsc::Receiver<Pending>,
     policy: BatchPolicy,
+    pool: Arc<ThreadPool>,
 ) {
+    let inflight = Arc::new(Inflight::new());
     let mut groups: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
+    let mut backlog: VecDeque<Vec<Pending>> = VecDeque::new();
     loop {
         // wait for work, with a timeout so aged groups still flush
         match rx.recv_timeout(policy.max_wait) {
@@ -72,14 +148,36 @@ pub fn batcher_loop(
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // drain and flush everything, then exit
+                // drain everything; with no more arrivals, blocking on
+                // the in-flight bound is fine. wait_zero() then makes
+                // joining the batcher thread imply every reply was sent
                 for (_, g) in std::mem::take(&mut groups) {
-                    flush(&dataset, &hub, &metrics, g);
+                    backlog.extend(chunk_ready(&dataset, &metrics, g, &policy));
                 }
+                for chunk in backlog.drain(..) {
+                    if policy.max_inflight == 0 {
+                        flush(&dataset, &hub, &metrics, chunk, &policy, None);
+                    } else {
+                        inflight.wait_below(policy.max_inflight);
+                        submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
+                    }
+                }
+                inflight.wait_zero();
                 return;
             }
         }
-        // flush full or aged groups
+        // 1) drain backlogged chunks into freed integration slots
+        while !backlog.is_empty()
+            && (policy.max_inflight == 0 || inflight.current() < policy.max_inflight)
+        {
+            let chunk = backlog.pop_front().unwrap();
+            if policy.max_inflight == 0 {
+                flush(&dataset, &hub, &metrics, chunk, &policy, None);
+            } else {
+                submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
+            }
+        }
+        // 2) chunk full or aged groups; submit what fits, backlog the rest
         let now = Instant::now();
         let keys: Vec<String> = groups.keys().cloned().collect();
         for key in keys {
@@ -91,19 +189,118 @@ pub fn batcher_loop(
                 .unwrap_or_default();
             if rows >= policy.max_batch || age >= policy.max_wait {
                 let g = groups.remove(&key).unwrap();
-                flush(&dataset, &hub, &metrics, g);
+                for chunk in chunk_ready(&dataset, &metrics, g, &policy) {
+                    if policy.max_inflight == 0 {
+                        flush(&dataset, &hub, &metrics, chunk, &policy, None);
+                    } else if inflight.current() < policy.max_inflight {
+                        submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
+                    } else {
+                        backlog.push_back(chunk);
+                    }
+                }
             }
         }
     }
 }
 
-/// Integrate one group and split results back to its requests.
-fn flush(dataset: &str, hub: &EngineHub, metrics: &ServerMetrics, group: Vec<Pending>) {
+/// Chunk a ready group at `max_batch` rows, recording the split metric.
+fn chunk_ready(
+    dataset: &str,
+    metrics: &ServerMetrics,
+    group: Vec<Pending>,
+    policy: &BatchPolicy,
+) -> Vec<Vec<Pending>> {
+    if group.is_empty() {
+        return Vec::new();
+    }
+    let chunks = chunk_group(group, policy.max_batch.max(1));
+    if chunks.len() > 1 {
+        metrics.record_split(dataset, chunks.len());
+    }
+    chunks
+}
+
+/// Hand one chunk to the worker pool (caller has checked/awaited the
+/// in-flight bound).
+fn submit_chunk(
+    dataset: &str,
+    hub: &Arc<EngineHub>,
+    metrics: &Arc<ServerMetrics>,
+    chunk: Vec<Pending>,
+    policy: &BatchPolicy,
+    pool: &Arc<ThreadPool>,
+    inflight: &Arc<Inflight>,
+) {
+    metrics.record_inflight(dataset, inflight.inc());
+    let guard = InflightGuard(Arc::clone(inflight));
+    let d = dataset.to_string();
+    let h = Arc::clone(hub);
+    let m = Arc::clone(metrics);
+    let p = Arc::clone(pool);
+    let pol = *policy;
+    pool.execute(move || {
+        let _dec = guard;
+        flush(&d, &h, &m, chunk, &pol, Some(&p));
+    });
+}
+
+/// Split one compatible group into chunks of at most `max_batch` total
+/// rows, at request boundaries (a request is never split across chunks;
+/// a single request larger than `max_batch` forms its own chunk and is
+/// row-sharded by [`generate_pooled`] during integration instead).
+fn chunk_group(group: Vec<Pending>, max_batch: usize) -> Vec<Vec<Pending>> {
+    let mut chunks: Vec<Vec<Pending>> = Vec::new();
+    let mut cur: Vec<Pending> = Vec::new();
+    let mut cur_rows = 0usize;
+    for p in group {
+        let n = p.req.n;
+        if !cur.is_empty() && cur_rows + n > max_batch {
+            chunks.push(std::mem::take(&mut cur));
+            cur_rows = 0;
+        }
+        cur_rows += n;
+        cur.push(p);
+    }
+    if !cur.is_empty() {
+        chunks.push(cur);
+    }
+    chunks
+}
+
+/// Mix every group member's seed into the integration seed, so each
+/// client's seed always influences its rows. The fold is order-sensitive
+/// on the group's row layout (which already fixes reply slicing), so for
+/// a given group composition replies are fully deterministic, and no two
+/// members' seeds can cancel each other out.
+fn mix_group_seed(group: &[Pending]) -> u64 {
+    group.iter().fold(0x5D3_1E55u64, |h, p| {
+        (h ^ splitmix64(p.req.seed.wrapping_add(p.req.n as u64)))
+            .wrapping_mul(0x100_0000_01B3)
+    })
+}
+
+/// SplitMix64 finalizer: decorrelates adjacent client seeds.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Integrate one chunk and split results back to its requests.
+fn flush(
+    dataset: &str,
+    hub: &EngineHub,
+    metrics: &ServerMetrics,
+    group: Vec<Pending>,
+    policy: &BatchPolicy,
+    pool: Option<&Arc<ThreadPool>>,
+) {
     if group.is_empty() {
         return;
     }
     let batched_with = group.len();
-    match run_group(dataset, hub, &group) {
+    match run_group(dataset, hub, &group, policy, pool) {
         Ok((samples, nfe, dim)) => {
             let mut offset = 0usize;
             for p in &group {
@@ -136,21 +333,52 @@ fn flush(dataset: &str, hub: &EngineHub, metrics: &ServerMetrics, group: Vec<Pen
     }
 }
 
-/// Integrate the union of a group's rows in one run.
-fn run_group(dataset: &str, hub: &EngineHub, group: &[Pending]) -> Result<(Vec<f32>, f64, usize)> {
+/// Integrate the union of a chunk's rows in one run (row-sharded over the
+/// pool when a single oversized request exceeds `max_batch`).
+fn run_group(
+    dataset: &str,
+    hub: &EngineHub,
+    group: &[Pending],
+    policy: &BatchPolicy,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<(Vec<f32>, f64, usize)> {
     let head = &group[0].req;
     let total: usize = group.iter().map(|p| p.req.n).sum();
     let info = hub.info(dataset)?;
     let model = hub.model(dataset)?;
     let grid = hub.schedule(dataset, head.param, &head.schedule, head.steps)?;
-    let cfg = RunConfig {
-        rows: total,
-        seed: head.seed ^ 0x5D3_1E55,
-        class: head.class,
-        trace: false,
-    };
-    let out = run_sampler(model.as_ref(), head.param, &grid, &head.solver, info, &cfg)?;
-    Ok((out.samples, out.nfe as f64, info.dim))
+    let seed = mix_group_seed(group);
+    let max_batch = policy.max_batch.max(1);
+    if total > max_batch {
+        // only reachable for a chunk holding one oversized request
+        let cfg = RunConfig { rows: max_batch, seed, class: head.class, trace: false };
+        let (samples, nfe, _) = match pool {
+            Some(p) => generate_pooled(
+                &model,
+                head.param,
+                &grid,
+                &head.solver,
+                info,
+                &cfg,
+                total,
+                p,
+            )?,
+            None => generate(
+                model.as_ref(),
+                head.param,
+                &grid,
+                &head.solver,
+                info,
+                &cfg,
+                total,
+            )?,
+        };
+        Ok((samples, nfe, info.dim))
+    } else {
+        let cfg = RunConfig { rows: total, seed, class: head.class, trace: false };
+        let out = run_sampler(model.as_ref(), head.param, &grid, &head.solver, info, &cfg)?;
+        Ok((out.samples, out.nfe as f64, info.dim))
+    }
 }
 
 #[cfg(test)]
@@ -169,21 +397,31 @@ mod tests {
         }
     }
 
-    fn spawn_batcher() -> (mpsc::Sender<Pending>, Arc<ServerMetrics>) {
+    fn mk_pending(req: SampleRequest) -> (Pending, mpsc::Receiver<Response>) {
+        let (rtx, rrx) = mpsc::channel();
+        (
+            Pending { req, reply: rtx, enqueued: Instant::now(), timer: Timer::start() },
+            rrx,
+        )
+    }
+
+    fn spawn_batcher_with(policy: BatchPolicy) -> (mpsc::Sender<Pending>, Arc<ServerMetrics>) {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
+        let pool = Arc::new(ThreadPool::new(4));
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
-        std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default())
-        });
+        std::thread::spawn(move || batcher_loop("toy".into(), hub, m2, rx, policy, pool));
         (tx, metrics)
     }
 
+    fn spawn_batcher() -> (mpsc::Sender<Pending>, Arc<ServerMetrics>) {
+        spawn_batcher_with(BatchPolicy::default())
+    }
+
     fn submit(tx: &mpsc::Sender<Pending>, req: SampleRequest) -> mpsc::Receiver<Response> {
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Pending { req, reply: rtx, enqueued: Instant::now(), timer: Timer::start() })
-            .unwrap();
+        let (p, rrx) = mk_pending(req);
+        tx.send(p).unwrap();
         rrx
     }
 
@@ -244,27 +482,80 @@ mod tests {
     }
 
     #[test]
+    fn inline_mode_still_serves() {
+        let policy = BatchPolicy { max_inflight: 0, ..BatchPolicy::default() };
+        let (tx, _m) = spawn_batcher_with(policy);
+        let rx = submit(&tx, mk_request(6, "heun"));
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Response::SampleOk { n, .. } => assert_eq!(n, 6),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn unknown_dataset_in_group_yields_error() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
+        let pool = Arc::new(ThreadPool::new(2));
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
         std::thread::spawn(move || {
-            batcher_loop("ghost".into(), hub, m2, rx, BatchPolicy::default())
+            batcher_loop("ghost".into(), hub, m2, rx, BatchPolicy::default(), pool)
         });
         let mut req = mk_request(2, "euler");
         req.dataset = "ghost".into();
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Pending {
-            req,
-            reply: rtx,
-            enqueued: Instant::now(),
-            timer: Timer::start(),
-        })
-        .unwrap();
+        let (p, rrx) = mk_pending(req);
+        tx.send(p).unwrap();
         match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {
             Response::Err(e) => assert!(e.contains("unknown dataset")),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn chunking_respects_max_batch_at_request_boundaries() {
+        let reqs = [4usize, 4, 4, 4, 4];
+        let group: Vec<Pending> = reqs
+            .iter()
+            .map(|&n| mk_pending(mk_request(n, "euler")).0)
+            .collect();
+        let chunks = chunk_group(group, 8);
+        assert_eq!(chunks.len(), 3);
+        let rows: Vec<usize> = chunks
+            .iter()
+            .map(|c| c.iter().map(|p| p.req.n).sum())
+            .collect();
+        assert_eq!(rows, vec![8, 8, 4]);
+    }
+
+    #[test]
+    fn chunking_gives_oversized_requests_their_own_chunk() {
+        let group: Vec<Pending> = [2usize, 50, 3]
+            .iter()
+            .map(|&n| mk_pending(mk_request(n, "euler")).0)
+            .collect();
+        let chunks = chunk_group(group, 8);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[1].len(), 1);
+        assert_eq!(chunks[1][0].req.n, 50);
+    }
+
+    #[test]
+    fn group_seed_mixes_every_member() {
+        let mk = |n: usize, seed: u64| {
+            let mut r = mk_request(n, "euler");
+            r.seed = seed;
+            mk_pending(r).0
+        };
+        let a = mix_group_seed(&[mk(4, 1), mk(4, 2)]);
+        let b = mix_group_seed(&[mk(4, 1), mk(4, 3)]);
+        let c = mix_group_seed(&[mk(4, 9), mk(4, 2)]);
+        let a2 = mix_group_seed(&[mk(4, 1), mk(4, 2)]);
+        assert_eq!(a, a2, "same composition must be deterministic");
+        assert_ne!(a, b, "second member's seed must influence the batch");
+        assert_ne!(a, c, "first member's seed must influence the batch");
+        // identical seeds must not cancel to the empty-group baseline
+        let twin = mix_group_seed(&[mk(4, 7), mk(4, 7)]);
+        assert_ne!(twin, mix_group_seed(&[]));
     }
 }

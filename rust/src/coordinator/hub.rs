@@ -105,6 +105,24 @@ impl EngineHub {
         }
     }
 
+    /// Build a hub with explicit serving models (the oracle is still
+    /// derived from each `DatasetInfo`) — used by concurrency tests that
+    /// need instrumented [`Denoiser`] implementations on the request
+    /// path.
+    pub fn from_models(models: Vec<(DatasetInfo, Arc<dyn Denoiser>)>) -> EngineHub {
+        let mut datasets = BTreeMap::new();
+        for (info, model) in models {
+            let oracle = Arc::new(GmmModel::new(info.clone()));
+            datasets.insert(info.name.clone(), DatasetEntry { info, model, oracle });
+        }
+        EngineHub {
+            datasets,
+            schedule_cache: Mutex::new(BTreeMap::new()),
+            _runtime: None,
+            backend: ModelBackend::Native,
+        }
+    }
+
     pub fn dataset_names(&self) -> Vec<String> {
         self.datasets.keys().cloned().collect()
     }

@@ -51,6 +51,31 @@ impl TraceProfile {
         }
     }
 
+    /// Four mutually incompatible request groups (distinct solver /
+    /// schedule / steps) on one dataset — the worst case for an inline
+    /// batcher (every group head-of-line blocks the rest) and the
+    /// headline case for the pooled batcher, which integrates them
+    /// concurrently. `bench_coordinator`'s mixed-group scenario builds
+    /// its burst from this profile.
+    pub fn mixed_solvers(dataset: &str, n: usize) -> TraceProfile {
+        let t = |solver: &str, schedule: &str, steps: usize| RequestTemplate {
+            dataset: dataset.into(),
+            n,
+            param: "edm".into(),
+            solver: solver.into(),
+            schedule: schedule.into(),
+            steps,
+        };
+        TraceProfile {
+            templates: vec![
+                (0.25, t("euler", "edm", 24)),
+                (0.25, t("heun", "edm", 12)),
+                (0.25, t("dpm2m", "logsnr", 16)),
+                (0.25, t("sdm", "edm", 18)),
+            ],
+        }
+    }
+
     pub fn draw(&self, rng: &mut Rng) -> &RequestTemplate {
         let weights: Vec<f64> = self.templates.iter().map(|(w, _)| *w).collect();
         &self.templates[rng.weighted_choice(&weights)].1
@@ -158,6 +183,19 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(profile.draw(&mut rng).dataset, "cifar10g");
         }
+    }
+
+    #[test]
+    fn mixed_profile_serves_all_four_groups() {
+        let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        let profile = TraceProfile::mixed_solvers("toy", 4);
+        assert_eq!(profile.templates.len(), 4);
+        let report = open_loop(&addr, &profile, 400.0, 32, 4, 11).unwrap();
+        assert_eq!(report.sent, 32);
+        assert_eq!(report.errors, 0, "mixed-solver traffic must all succeed");
+        server.shutdown();
     }
 
     #[test]

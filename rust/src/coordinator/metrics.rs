@@ -15,6 +15,14 @@ struct RouteMetrics {
     batches: u64,
     batched_rows: u64,
     nfe_total: f64,
+    /// groups chunked at `max_batch` before integration
+    splits: u64,
+    /// total chunks produced by split groups
+    split_chunks: u64,
+    /// high-water mark of in-flight integration chunks (submitted to the
+    /// pool and not yet finished — includes chunks queued behind busy
+    /// workers, so it can read above the worker count)
+    inflight_hwm: u64,
 }
 
 /// Thread-safe metrics sink shared across batchers and connections.
@@ -55,6 +63,22 @@ impl ServerMetrics {
         routes.entry(dataset.to_string()).or_default().errors += 1;
     }
 
+    /// A ready group was chunked into `chunks` integrations at `max_batch`.
+    pub fn record_split(&self, dataset: &str, chunks: usize) {
+        let mut routes = self.routes.lock().unwrap();
+        let r = routes.entry(dataset.to_string()).or_default();
+        r.splits += 1;
+        r.split_chunks += chunks as u64;
+    }
+
+    /// Observe the current number of in-flight (submitted, unfinished)
+    /// integration chunks.
+    pub fn record_inflight(&self, dataset: &str, current: usize) {
+        let mut routes = self.routes.lock().unwrap();
+        let r = routes.entry(dataset.to_string()).or_default();
+        r.inflight_hwm = r.inflight_hwm.max(current as u64);
+    }
+
     /// JSON snapshot for the `stats` op / operator dashboards.
     pub fn snapshot(&self) -> Json {
         let routes = self.routes.lock().unwrap();
@@ -71,6 +95,9 @@ impl ServerMetrics {
                 0.0
             };
             m.insert("avg_batch_rows".into(), Json::Num(avg_batch));
+            m.insert("splits".into(), Json::Num(r.splits as f64));
+            m.insert("split_chunks".into(), Json::Num(r.split_chunks as f64));
+            m.insert("inflight_hwm".into(), Json::Num(r.inflight_hwm as f64));
             let avg_nfe = if r.samples > 0 { r.nfe_total / r.samples as f64 } else { 0.0 };
             m.insert("avg_nfe".into(), Json::Num(avg_nfe));
             m.insert("latency_p50_us".into(), Json::Num(r.latency_us.quantile(0.5)));
@@ -102,5 +129,20 @@ mod tests {
         assert_eq!(a.get("avg_batch_rows").unwrap().as_f64().unwrap(), 16.0);
         let b = snap.get("b").unwrap();
         assert_eq!(b.get("errors").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn split_and_inflight_gauges() {
+        let m = ServerMetrics::new();
+        m.record_split("a", 3);
+        m.record_split("a", 2);
+        m.record_inflight("a", 2);
+        m.record_inflight("a", 5);
+        m.record_inflight("a", 1);
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        assert_eq!(a.get("splits").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(a.get("split_chunks").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(a.get("inflight_hwm").unwrap().as_f64().unwrap(), 5.0);
     }
 }

@@ -3,18 +3,27 @@
 //! Shape (vLLM-router-like, see DESIGN.md §1):
 //!
 //! ```text
-//! TCP conn ─► protocol parse ─► Router ─► per-dataset Batcher ─► Engine hub
-//!                                            │  (group, pad, flush)   │
-//!                                            └───── schedule cache ◄──┘
+//! TCP conn ─► protocol parse ─► Router ─► per-dataset Batcher ─► Worker pool ─► Engine hub
+//!                                            │ (group, chunk)     (integrate,       │
+//!                                            │                     ≤ max_inflight)   │
+//!                                            └────────── schedule cache ◄────────────┘
 //! ```
+//!
+//! The batcher thread only *groups and chunks*; integration runs on the
+//! coordinator's shared worker pool so a slow group never head-of-line
+//! blocks unrelated groups or new arrivals.
 //!
 //! - [`protocol`]: JSON-lines request/response wire format.
 //! - [`hub`]: engine hub — datasets, model backends, schedule cache.
-//! - [`batcher`]: dynamic batching of compatible sample requests.
-//! - [`router`]: routes parsed requests to per-dataset batcher queues.
+//! - [`batcher`]: dynamic batching of compatible sample requests, flushed
+//!   asynchronously onto the worker pool.
+//! - [`router`]: routes parsed requests to per-dataset batcher queues and
+//!   owns the shared integration pool.
 //! - [`server`]: TCP accept loop + connection threads.
 //! - [`client`]: blocking client used by examples and benches.
-//! - [`metrics`]: per-route latency histograms and counters.
+//! - [`loadgen`]: open-loop Poisson workload generator and trace profiles.
+//! - [`metrics`]: per-route latency histograms and counters (including
+//!   split/in-flight gauges of the pooled batcher).
 
 pub mod batcher;
 pub mod client;

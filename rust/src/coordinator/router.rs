@@ -1,9 +1,12 @@
-//! Request router: one batcher queue per dataset route.
+//! Request router: one batcher queue per dataset route, one shared worker
+//! pool for integration.
 //!
 //! Routes are created eagerly for every dataset the hub loaded, each with
 //! its own batcher thread — requests for different workloads never block
 //! each other, while requests for the same workload flow into one batcher
-//! where they can be merged.
+//! where they can be merged. All batchers submit their ready groups to
+//! the same [`ThreadPool`], so integration capacity is a property of the
+//! coordinator, not of any single route.
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Mutex};
@@ -13,16 +16,23 @@ use crate::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Response, SampleRequest};
-use crate::util::Timer;
+use crate::util::{ThreadPool, Timer};
 use crate::Result;
 
 pub struct Router {
     routes: BTreeMap<String, Mutex<mpsc::Sender<Pending>>>,
     joins: Vec<std::thread::JoinHandle<()>>,
+    /// the shared integration pool, kept alive for the router's lifetime
+    pool: Arc<ThreadPool>,
 }
 
 impl Router {
-    pub fn start(hub: Arc<EngineHub>, metrics: Arc<ServerMetrics>, policy: BatchPolicy) -> Router {
+    pub fn start(
+        hub: Arc<EngineHub>,
+        metrics: Arc<ServerMetrics>,
+        policy: BatchPolicy,
+        pool: Arc<ThreadPool>,
+    ) -> Router {
         let mut routes = BTreeMap::new();
         let mut joins = Vec::new();
         for name in hub.dataset_names() {
@@ -30,14 +40,20 @@ impl Router {
             let hub2 = hub.clone();
             let metrics2 = metrics.clone();
             let name2 = name.clone();
+            let pool2 = pool.clone();
             let join = std::thread::Builder::new()
                 .name(format!("sdm-batcher-{name}"))
-                .spawn(move || batcher_loop(name2, hub2, metrics2, rx, policy))
+                .spawn(move || batcher_loop(name2, hub2, metrics2, rx, policy, pool2))
                 .expect("spawning batcher");
             routes.insert(name, Mutex::new(tx));
             joins.push(join);
         }
-        Router { routes, joins }
+        Router { routes, joins, pool }
+    }
+
+    /// Worker threads available for integration.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Submit a request; returns the channel the response arrives on.
@@ -94,11 +110,16 @@ mod tests {
         }
     }
 
+    fn test_pool() -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(4))
+    }
+
     #[test]
     fn routes_and_replies() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
-        let router = Router::start(hub, metrics, BatchPolicy::default());
+        let router = Router::start(hub, metrics, BatchPolicy::default(), test_pool());
+        assert_eq!(router.pool_threads(), 4);
         match router.call(mk(4, "toy")).unwrap() {
             Response::SampleOk { n, .. } => assert_eq!(n, 4),
             other => panic!("{other:?}"),
@@ -111,7 +132,12 @@ mod tests {
     fn concurrent_submissions_all_served() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
-        let router = Arc::new(Router::start(hub, metrics, BatchPolicy::default()));
+        let router = Arc::new(Router::start(
+            hub,
+            metrics,
+            BatchPolicy::default(),
+            test_pool(),
+        ));
         let mut handles = Vec::new();
         for i in 0..16 {
             let r = router.clone();

@@ -18,6 +18,7 @@ use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Request, Response};
 use crate::coordinator::router::Router;
+use crate::util::ThreadPool;
 use crate::Result;
 
 #[derive(Clone, Debug)]
@@ -25,11 +26,32 @@ pub struct ServerConfig {
     /// bind address, e.g. "127.0.0.1:7433" (port 0 = ephemeral).
     pub addr: String,
     pub policy: BatchPolicy,
+    /// integration worker threads shared by every dataset route
+    /// (0 = derive from available parallelism).
+    pub pool_threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:0".into(), policy: BatchPolicy::default() }
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            policy: BatchPolicy::default(),
+            pool_threads: 0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Resolve `pool_threads == 0` to a hardware-derived worker count.
+    pub fn resolved_pool_threads(&self) -> usize {
+        if self.pool_threads > 0 {
+            self.pool_threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .clamp(2, 16)
+        }
     }
 }
 
@@ -46,7 +68,8 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(ServerMetrics::new());
-        let router = Arc::new(Router::start(hub, metrics.clone(), cfg.policy));
+        let pool = Arc::new(ThreadPool::new(cfg.resolved_pool_threads()));
+        let router = Arc::new(Router::start(hub, metrics.clone(), cfg.policy, pool));
         let stop = Arc::new(AtomicBool::new(false));
 
         let stop2 = stop.clone();

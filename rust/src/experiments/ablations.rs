@@ -84,7 +84,7 @@ mod tests {
     #[test]
     fn clock_ablation_runs_on_toy() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        let ctx = ExpContext { samples: 512, rows: 256, seed: 3, threads: 2, hub };
+        let ctx = ExpContext { samples: 512, rows: 256, seed: 3, threads: 2, hub, pool: None };
         let rows = run_clock_ablation(&ctx, "toy").unwrap();
         assert_eq!(rows.len(), 2 * 9);
         // under EDM-native vs sigma clock the gate coincides for EDM param;

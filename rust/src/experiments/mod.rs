@@ -35,11 +35,21 @@ pub struct ExpContext {
     pub seed: u64,
     /// worker threads for config-parallel sweeps.
     pub threads: usize,
+    /// shared worker pool: when set, [`evaluate`] row-shards its batches
+    /// via [`engine::generate_pooled`] (identical output, concurrent
+    /// execution), and [`evaluate_all`] reuses it for config parallelism.
+    pub pool: Option<Arc<crate::util::ThreadPool>>,
 }
 
 impl ExpContext {
     pub fn new(hub: Arc<EngineHub>) -> ExpContext {
-        ExpContext { hub, samples: 8192, rows: 256, seed: 2026, threads: 8 }
+        ExpContext { hub, samples: 8192, rows: 256, seed: 2026, threads: 8, pool: None }
+    }
+
+    /// Attach a freshly built pool sized to `self.threads`.
+    pub fn with_pool(mut self) -> ExpContext {
+        self.pool = Some(Arc::new(crate::util::ThreadPool::new(self.threads.max(1))));
+        self
     }
 }
 
@@ -66,15 +76,27 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
         class: cfg.class,
         trace: false,
     };
-    let (samples, nfe, _) = engine::generate(
-        model.as_ref(),
-        cfg.param,
-        &grid,
-        &cfg.solver,
-        &info,
-        &run_cfg,
-        ctx.samples,
-    )?;
+    let (samples, nfe, _) = match &ctx.pool {
+        Some(pool) => engine::generate_pooled(
+            &model,
+            cfg.param,
+            &grid,
+            &cfg.solver,
+            &info,
+            &run_cfg,
+            ctx.samples,
+            pool,
+        )?,
+        None => engine::generate(
+            model.as_ref(),
+            cfg.param,
+            &grid,
+            &cfg.solver,
+            &info,
+            &run_cfg,
+            ctx.samples,
+        )?,
+    };
 
     let stats = sample_mean_cov(&samples, info.dim);
     let (ref_mean, ref_cov) = match cfg.class {
@@ -93,15 +115,23 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
     Ok(RowResult { label: cfg.label(), fd, sliced: sl, nfe })
 }
 
-/// Evaluate a list of configs, parallel over a thread pool.
+/// Evaluate a list of configs, parallel over the shared worker pool.
+///
+/// Config-level jobs and each config's row shards share one pool (the
+/// help-first scheduling of [`engine::generate_pooled`] makes the nesting
+/// deadlock-free), so a sweep with fewer configs than workers still
+/// saturates the machine.
 pub fn evaluate_all(ctx: &ExpContext, cfgs: Vec<SamplerConfig>) -> Vec<Result<RowResult>> {
     if cfgs.is_empty() {
         return Vec::new();
     }
     // PJRT executes on a single executor thread anyway; parallelism only
     // helps the native backend, but is harmless either way.
-    let pool = crate::util::ThreadPool::new(ctx.threads.max(1));
-    let ctx2 = ctx.clone();
+    let pool = match &ctx.pool {
+        Some(p) => p.clone(),
+        None => Arc::new(crate::util::ThreadPool::new(ctx.threads.max(1))),
+    };
+    let ctx2 = ExpContext { pool: Some(pool.clone()), ..ctx.clone() };
     let cfgs = Arc::new(cfgs);
     let cfgs2 = cfgs.clone();
     pool.map_indices(cfgs.len(), move |i| evaluate(&ctx2, &cfgs2[i]))
@@ -132,7 +162,7 @@ mod tests {
 
     fn ctx() -> ExpContext {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        ExpContext { hub, samples: 2048, rows: 256, seed: 7, threads: 4 }
+        ExpContext { hub, samples: 2048, rows: 256, seed: 7, threads: 4, pool: None }
     }
 
     #[test]

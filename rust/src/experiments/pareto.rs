@@ -83,7 +83,7 @@ mod tests {
     #[test]
     fn frontier_shapes() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        let ctx = ExpContext { samples: 2048, rows: 256, seed: 5, threads: 4, hub };
+        let ctx = ExpContext { samples: 2048, rows: 256, seed: 5, threads: 4, hub, pool: None };
         let pts = run(&ctx, "toy", Param::Edm, &[8, 16]).unwrap();
         assert_eq!(pts.len(), 10);
         // more steps should not hurt quality within a family (weak check:

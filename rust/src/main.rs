@@ -42,7 +42,9 @@ fn exp_context(args: &Args) -> Result<ExpContext> {
     ctx.rows = args.get_usize("rows", 256)?;
     ctx.seed = args.get_u64("seed", 2026)?;
     ctx.threads = args.get_usize("threads", 8)?;
-    Ok(ctx)
+    // shared worker pool: config sweeps and row-sharded generation both
+    // draw from it (identical numerics to the serial path)
+    Ok(ctx.with_pool())
 }
 
 fn run() -> Result<()> {
@@ -149,8 +151,12 @@ fn run() -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let hub = load_hub(args)?;
     let addr = args.get("addr", "127.0.0.1:7433");
+    let pool_threads = args.get_usize("pool-threads", 0)?;
+    let max_inflight = args.get_usize("max-inflight", 4)?;
     args.finish()?;
-    let server = Server::start(hub, ServerConfig { addr: addr.clone(), ..Default::default() })?;
+    let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, ..Default::default() };
+    cfg.policy.max_inflight = max_inflight;
+    let server = Server::start(hub, cfg)?;
     println!(
         "sdm serving on {} (send {{\"op\":\"shutdown\"}} to stop)",
         server.local_addr
@@ -335,7 +341,8 @@ fn print_help() {
         "sdm — Sampling Design space of diffusion Models (adaptive solvers +\n\
          Wasserstein-bounded timesteps), three-layer rust+JAX+Pallas serving repro.\n\n\
          subcommands:\n\
-         \x20 serve         start the TCP coordinator (--addr, --backend)\n\
+         \x20 serve         start the TCP coordinator (--addr, --backend,\n\
+         \x20               --pool-threads N, --max-inflight N)\n\
          \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...)\n\
          \x20 schedule      print a built sigma grid (--dataset --schedule --steps)\n\
          \x20 table1        Table 1  (unconditional FD/NFE grid)\n\

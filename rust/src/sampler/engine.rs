@@ -8,10 +8,13 @@
 //! level decision is meant to work); NFE is therefore the number of model
 //! calls, identically the per-sample NFE.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
 use crate::diffusion::{kappa_hat_rel, Param, SigmaGrid};
 use crate::model::{class_mask, eval_at, uncond_mask, DatasetInfo, Denoiser};
 use crate::solvers::{adaptive, dpm2m::Dpm2mState, euler, heun, LambdaKind, SolverSpec};
-use crate::util::Rng;
+use crate::util::{Rng, ThreadPool};
 use crate::Result;
 
 /// Per-run options.
@@ -287,6 +290,114 @@ pub fn generate(
     Ok((samples, crate::util::mean(&nfes), first_trace))
 }
 
+/// Per-shard state of a pooled [`generate_pooled`] run.
+struct ShardState {
+    done: usize,
+    slots: Vec<Option<Result<RunResult>>>,
+}
+
+/// Row-sharded [`generate`]: bit-identical output (same per-batch forked
+/// seeds, same assembly order, same mean-NFE arithmetic), but the batches
+/// execute concurrently on the shared worker pool.
+///
+/// Scheduling is **help-first**: the caller claims and integrates shards
+/// itself while offering the remainder to the pool, so calling this from
+/// *inside* a pool job (the batcher's flush path, a config-sweep worker)
+/// can never deadlock — even a fully saturated pool makes progress
+/// through the caller, and helper jobs that arrive late simply find the
+/// shard counter exhausted and exit.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_pooled(
+    model: &Arc<dyn Denoiser>,
+    param: Param,
+    grid: &SigmaGrid,
+    solver: &SolverSpec,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+    pool: &ThreadPool,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>)> {
+    anyhow::ensure!(cfg.rows > 0, "rows must be positive");
+    if total == 0 {
+        return Ok((Vec::new(), 0.0, Vec::new()));
+    }
+    let batch_rows = cfg.rows;
+    let n_batches = (total + batch_rows - 1) / batch_rows;
+
+    let shared = Arc::new((
+        Mutex::new(ShardState {
+            done: 0,
+            slots: (0..n_batches).map(|_| None).collect(),
+        }),
+        Condvar::new(),
+    ));
+    let next = Arc::new(AtomicUsize::new(0));
+
+    let worker: Arc<dyn Fn() + Send + Sync> = {
+        let model = Arc::clone(model);
+        let grid = grid.clone();
+        let solver = *solver;
+        let ds = ds.clone();
+        let cfg = cfg.clone();
+        let shared = Arc::clone(&shared);
+        let next = Arc::clone(&next);
+        Arc::new(move || loop {
+            let i = next.fetch_add(1, Ordering::SeqCst);
+            if i >= n_batches {
+                break;
+            }
+            let rows_i = batch_rows.min(total - i * batch_rows);
+            let bcfg = RunConfig {
+                rows: rows_i,
+                seed: cfg.seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9)),
+                class: cfg.class,
+                trace: cfg.trace && i == 0,
+            };
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_sampler(model.as_ref(), param, &grid, &solver, &ds, &bcfg)
+            }))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("generation batch {i} panicked")));
+            let (lock, cv) = &*shared;
+            let mut st = lock.lock().expect("shard state poisoned");
+            st.slots[i] = Some(out);
+            st.done += 1;
+            cv.notify_all();
+        })
+    };
+
+    // the caller takes a share of the work itself, so never hand the pool
+    // more helpers than there are *other* shards
+    let helpers = pool.threads().min(n_batches.saturating_sub(1));
+    for _ in 0..helpers {
+        let w = Arc::clone(&worker);
+        pool.execute(move || (*w)());
+    }
+    (*worker)();
+
+    let slots = {
+        let (lock, cv) = &*shared;
+        let mut st = lock.lock().expect("shard state poisoned");
+        while st.done < n_batches {
+            st = cv.wait(st).expect("shard state poisoned");
+        }
+        std::mem::take(&mut st.slots)
+    };
+
+    let dim = model.dim();
+    let mut samples = Vec::with_capacity(total * dim);
+    let mut nfes = Vec::with_capacity(n_batches);
+    let mut first_trace = Vec::new();
+    for (i, slot) in slots.into_iter().enumerate() {
+        let out = slot.expect("all shards accounted for")?;
+        samples.extend_from_slice(&out.samples);
+        nfes.push(out.nfe as f64);
+        if i == 0 {
+            first_trace = out.steps;
+        }
+    }
+    Ok((samples, crate::util::mean(&nfes), first_trace))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -451,6 +562,83 @@ mod tests {
             generate(&m, Param::Edm, &grid, &SolverSpec::Euler, &ds, &cfg, 120).unwrap();
         assert_eq!(s.len(), 120 * ds.dim);
         assert!(nfe > 0.0);
+    }
+
+    #[test]
+    fn generate_pooled_matches_generate_exactly() {
+        let (m, ds, grid) = setup();
+        let model: Arc<dyn Denoiser> = Arc::new(toy());
+        let pool = ThreadPool::new(4);
+        for (total, rows) in [(333usize, 50usize), (64, 64), (7, 64), (256, 32)] {
+            let cfg = RunConfig { rows, seed: 11, ..Default::default() };
+            let (s1, n1, t1) =
+                generate(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg, total).unwrap();
+            let (s2, n2, t2) = generate_pooled(
+                &model,
+                Param::Edm,
+                &grid,
+                &SolverSpec::Heun,
+                &ds,
+                &cfg,
+                total,
+                &pool,
+            )
+            .unwrap();
+            assert_eq!(s1, s2, "samples diverge at total={total} rows={rows}");
+            assert_eq!(n1, n2, "nfe diverges at total={total} rows={rows}");
+            assert_eq!(t1.len(), t2.len());
+        }
+    }
+
+    #[test]
+    fn generate_pooled_traces_first_batch_only() {
+        let (_, ds, grid) = setup();
+        let model: Arc<dyn Denoiser> = Arc::new(toy());
+        let pool = ThreadPool::new(2);
+        let cfg = RunConfig { rows: 16, seed: 3, trace: true, ..Default::default() };
+        let (s, _, trace) = generate_pooled(
+            &model,
+            Param::Edm,
+            &grid,
+            &SolverSpec::Heun,
+            &ds,
+            &cfg,
+            48,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(s.len(), 48 * ds.dim);
+        assert_eq!(trace.len(), grid.intervals());
+    }
+
+    #[test]
+    fn generate_pooled_from_inside_a_pool_job_does_not_deadlock() {
+        // a single-thread pool whose only worker runs the outer job: every
+        // helper is stuck behind it, so only caller-help can finish
+        let (_, ds, grid) = setup();
+        let dim = ds.dim;
+        let model: Arc<dyn Denoiser> = Arc::new(toy());
+        let pool = Arc::new(ThreadPool::new(1));
+        let p2 = Arc::clone(&pool);
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.execute(move || {
+            let cfg = RunConfig { rows: 8, seed: 5, ..Default::default() };
+            let out = generate_pooled(
+                &model,
+                Param::Edm,
+                &grid,
+                &SolverSpec::Euler,
+                &ds,
+                &cfg,
+                40,
+                &p2,
+            );
+            let _ = tx.send(out.map(|(s, _, _)| s.len()));
+        });
+        let got = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("pooled generation deadlocked");
+        assert_eq!(got.unwrap(), 40 * dim);
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod config;
 pub mod engine;
 
 pub use config::SamplerConfig;
-pub use engine::{generate, run_sampler, RunConfig, RunResult, StepRecord};
+pub use engine::{generate, generate_pooled, run_sampler, RunConfig, RunResult, StepRecord};

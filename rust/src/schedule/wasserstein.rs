@@ -87,6 +87,12 @@ pub fn wasserstein_schedule(
     let t_min = param.t_of_sigma(ds.sigma_min);
     let t_max = param.t_of_sigma(ds.sigma_max);
 
+    // the η-schedule normalizes by σ_max (eq. 16); that is a property of
+    // the *dataset*, not a tunable, so derive it here — a stale
+    // `cfg.eta.sigma_max` (e.g. the EDM-scale 80.0 default) would
+    // otherwise skew every η(σ) target on non-EDM-scale datasets
+    let eta_sched = EtaSchedule { sigma_max: ds.sigma_max, ..cfg.eta };
+
     // NEXTTIMESTEP warm-start grid (paper: "pre-defined reference grid")
     let ref_grid: Vec<f64> = edm_schedule(cfg.ref_grid_n, ds.sigma_min, ds.sigma_max, 7.0)?
         .sigmas
@@ -108,7 +114,7 @@ pub fn wasserstein_schedule(
     let mut s_hats = Vec::new();
 
     while t_i > t_min && sigmas.len() < cfg.max_steps {
-        let eta_target = cfg.eta.eta(param.sigma(t_i));
+        let eta_target = eta_sched.eta(param.sigma(t_i));
 
         // NEXTTIMESTEP: largest reference knot strictly below t_i
         let mut t_trial = ref_grid
@@ -271,6 +277,41 @@ mod tests {
             tight.sigmas.len(),
             loose.sigmas.len()
         );
+    }
+
+    #[test]
+    fn eta_sigma_max_is_derived_from_the_dataset() {
+        // a dataset with σ_max = 10: whatever (stale) σ_max the caller
+        // left in the config, the η-schedule must normalize by the
+        // dataset's σ_max, so both runs build the identical schedule
+        let mut info = toy().info;
+        info.sigma_max = 10.0;
+        let m = crate::model::GmmModel::new(info.clone());
+        let run = |stale_sigma_max: f64| {
+            let cfg = WassersteinConfig {
+                eta: EtaSchedule {
+                    eta_min: 0.02,
+                    eta_max: 0.2,
+                    p: 1.0,
+                    sigma_max: stale_sigma_max,
+                },
+                ..Default::default()
+            };
+            let mut rng = Rng::new(5);
+            wasserstein_schedule(&info, Param::Edm, &m, &mut rng, &cfg, 16).unwrap()
+        };
+        let stale = run(80.0);
+        let fresh = run(10.0);
+        assert_eq!(
+            stale.sigmas, fresh.sigmas,
+            "stale cfg σ_max must be ignored in favor of ds.sigma_max"
+        );
+        assert_eq!(stale.sigmas[0], 10.0);
+        // and the achieved η still respects the *dataset-scaled* targets
+        let target = EtaSchedule { eta_min: 0.02, eta_max: 0.2, p: 1.0, sigma_max: 10.0 };
+        for (i, &e) in stale.eta.iter().enumerate().take(stale.eta.len().saturating_sub(2)) {
+            assert!(e <= target.eta(stale.sigmas[i]) * 1.0001, "interval {i}");
+        }
     }
 
     #[test]

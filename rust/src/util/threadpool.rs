@@ -1,21 +1,47 @@
 //! Fixed-size worker pool substrate (no tokio in the vendored crate set).
 //!
-//! The coordinator's event loop, the TCP connection handlers, and the
-//! experiment grids all run on this pool. Jobs are boxed closures over an
-//! mpsc channel guarded by a mutex on the receiving side; `scope_chunks`
-//! provides the one data-parallel primitive the experiments need.
+//! The coordinator's batcher flushes, pooled row-sharded generation, and
+//! the experiment grids all run on this pool (TCP connection handlers
+//! stay on their own plain threads — see `coordinator::server`). Jobs are
+//! boxed closures over an mpsc channel guarded by a mutex on the
+//! receiving side; `map_indices` / `try_map_indices` provide the one
+//! data-parallel primitive the experiments need.
+//!
+//! Panic policy: a panicking job must not poison the substrate. Workers
+//! catch unwinds, so a panic neither kills the worker thread nor leaks
+//! the `queued` gauge (the decrement is a drop guard); panics are counted
+//! and surfaced by [`ThreadPool::panicked`], and `try_map_indices`
+//! reports them as errors instead of hanging or aborting the caller.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::Result;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed pool of worker threads executing boxed jobs.
+///
+/// The pool is shared across threads (`Arc<ThreadPool>` is how the
+/// coordinator hands it to every batcher), so the submission side is
+/// mutex-wrapped — same idiom as the router's route senders — keeping
+/// `ThreadPool: Sync` without relying on `mpsc::Sender`'s `Sync`-ness.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
     queued: Arc<AtomicUsize>,
+    panicked: Arc<AtomicUsize>,
+}
+
+/// Decrements the in-flight gauge even when the job unwinds.
+struct QueuedGuard<'a>(&'a AtomicUsize);
+
+impl Drop for QueuedGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl ThreadPool {
@@ -24,10 +50,12 @@ impl ThreadPool {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let queued = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..threads)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let queued = Arc::clone(&queued);
+                let panicked = Arc::clone(&panicked);
                 std::thread::Builder::new()
                     .name(format!("sdm-worker-{i}"))
                     .spawn(move || loop {
@@ -37,8 +65,12 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
+                                let _dec = QueuedGuard(&queued);
+                                // a panicking job is the job's bug, not the
+                                // pool's: swallow the unwind, keep serving
+                                if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panicked.fetch_add(1, Ordering::SeqCst);
+                                }
                             }
                             Err(_) => break, // sender dropped: shut down
                         }
@@ -46,12 +78,17 @@ impl ThreadPool {
                     .expect("spawning worker thread")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, queued }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers, queued, panicked }
     }
 
     /// Number of jobs submitted but not yet finished.
     pub fn pending(&self) -> usize {
         self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Number of jobs that panicked since the pool started.
+    pub fn panicked(&self) -> usize {
+        self.panicked.load(Ordering::SeqCst)
     }
 
     pub fn threads(&self) -> usize {
@@ -64,14 +101,29 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool already shut down")
+            .lock()
+            .expect("pool sender poisoned")
             .send(Box::new(f))
             .expect("pool workers gone");
     }
 
     /// Run `f` over each index in `0..n`, blocking until all complete, and
-    /// return results in order. The closure must be cloneable state-free
-    /// work (all mutation flows through the returned values).
+    /// return results in order. Panics (with the index list) if any worker
+    /// job panicked; use [`ThreadPool::try_map_indices`] to get an error
+    /// instead.
     pub fn map_indices<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        self.try_map_indices(n, f).expect("map_indices worker panicked")
+    }
+
+    /// Like [`ThreadPool::map_indices`], but worker panics surface as an
+    /// `Err` naming the failed indices instead of a panic or a hang: a
+    /// panicking job drops its result sender during unwind, so the
+    /// collection loop always terminates and the gaps are reported.
+    pub fn try_map_indices<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
@@ -92,7 +144,18 @@ impl ThreadPool {
         for (i, v) in rx {
             slots[i] = Some(v);
         }
-        slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+        let missing: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect();
+        anyhow::ensure!(
+            missing.is_empty(),
+            "{} worker job(s) panicked (indices {:?})",
+            missing.len(),
+            missing
+        );
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
     }
 }
 
@@ -136,5 +199,41 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<usize> = pool.map_indices(0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panicking_job_neither_kills_workers_nor_leaks_pending() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("job bug"));
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        while pool.pending() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+        assert_eq!(pool.panicked(), 1);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn try_map_indices_surfaces_panics_as_errors() {
+        let pool = ThreadPool::new(3);
+        let res = pool.try_map_indices(8, |i| {
+            if i == 3 {
+                panic!("index 3 is cursed");
+            }
+            i
+        });
+        let err = format!("{:#}", res.err().expect("panic must surface"));
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains('3'), "{err}");
+        // the pool is still fully usable afterwards
+        assert_eq!(pool.map_indices(4, |i| i + 1), vec![1, 2, 3, 4]);
+        assert_eq!(pool.panicked(), 1);
     }
 }

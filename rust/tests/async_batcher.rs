@@ -1,0 +1,312 @@
+//! Async-batcher integration: the pooled flush path must (1) integrate
+//! incompatible groups concurrently, (2) chunk oversized groups at
+//! `max_batch`, (3) conserve every request's rows under concurrent flush,
+//! (4) never let a slow group delay an unrelated group's reply, and
+//! (5) keep batched replies deterministic while mixing every member's
+//! seed into the integration.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use sdm::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
+use sdm::coordinator::hub::EngineHub;
+use sdm::coordinator::metrics::ServerMetrics;
+use sdm::coordinator::protocol::{Request, Response, SampleRequest};
+use sdm::model::gmm::testmodel::toy;
+use sdm::model::{Denoiser, EvalOut, GmmModel};
+use sdm::util::{Rng, ThreadPool, Timer};
+
+/// Wraps the toy oracle with concurrency/shape gauges and an optional
+/// per-eval hold (to make "slow" requests deterministically slow).
+struct GaugeDenoiser {
+    inner: GmmModel,
+    current: AtomicUsize,
+    peak: AtomicUsize,
+    max_rows: AtomicUsize,
+    hold: Duration,
+}
+
+impl GaugeDenoiser {
+    fn new(hold: Duration) -> Arc<GaugeDenoiser> {
+        Arc::new(GaugeDenoiser {
+            inner: toy(),
+            current: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            max_rows: AtomicUsize::new(0),
+            hold,
+        })
+    }
+}
+
+impl Denoiser for GaugeDenoiser {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn backend(&self) -> &'static str {
+        "gauge"
+    }
+
+    fn denoise_v(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+    ) -> sdm::Result<EvalOut> {
+        let cur = self.current.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(cur, Ordering::SeqCst);
+        self.max_rows.fetch_max(sigma.len(), Ordering::SeqCst);
+        if !self.hold.is_zero() {
+            std::thread::sleep(self.hold);
+        }
+        let out = self.inner.denoise_v(xhat, sigma, a, b, mask);
+        self.current.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+}
+
+fn mk_request(n: usize, solver: &str, steps: usize, seed: u64) -> SampleRequest {
+    let line = format!(
+        r#"{{"op":"sample","dataset":"toy","n":{n},"solver":"{solver}","steps":{steps},"seed":{seed}}}"#
+    );
+    match Request::parse(&line).unwrap() {
+        Request::Sample(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+struct TestBatcher {
+    tx: Option<mpsc::Sender<Pending>>,
+    metrics: Arc<ServerMetrics>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestBatcher {
+    fn start(hub: EngineHub, policy: BatchPolicy, threads: usize) -> TestBatcher {
+        let metrics = Arc::new(ServerMetrics::new());
+        let pool = Arc::new(ThreadPool::new(threads));
+        let (tx, rx) = mpsc::channel();
+        let m2 = metrics.clone();
+        let hub = Arc::new(hub);
+        let join = std::thread::spawn(move || {
+            batcher_loop("toy".into(), hub, m2, rx, policy, pool)
+        });
+        TestBatcher { tx: Some(tx), metrics, join: Some(join) }
+    }
+
+    fn submit(&self, req: SampleRequest) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .unwrap()
+            .send(Pending { req, reply: rtx, enqueued: Instant::now(), timer: Timer::start() })
+            .unwrap();
+        rrx
+    }
+
+    /// Close the inbox and join — proves every reply was flushed.
+    fn finish(mut self) {
+        drop(self.tx.take());
+        self.join.take().unwrap().join().unwrap();
+    }
+}
+
+impl Drop for TestBatcher {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn ok_samples(rx: &mpsc::Receiver<Response>, timeout: Duration) -> (usize, Option<Vec<f32>>, usize) {
+    match rx.recv_timeout(timeout).unwrap() {
+        Response::SampleOk { n, samples, dim, .. } => (n, samples, dim),
+        other => panic!("expected SampleOk, got {other:?}"),
+    }
+}
+
+#[test]
+fn incompatible_groups_integrate_concurrently() {
+    let gauge = GaugeDenoiser::new(Duration::from_millis(3));
+    let model: Arc<dyn Denoiser> = gauge.clone();
+    let hub = EngineHub::from_models(vec![(toy().info, model)]);
+    let b = TestBatcher::start(hub, BatchPolicy::default(), 4);
+
+    // two incompatible groups, each long enough (≥24 evals × 3 ms) that
+    // concurrent integration must overlap
+    let rx1 = b.submit(mk_request(8, "euler", 24, 1));
+    let rx2 = b.submit(mk_request(8, "heun", 24, 2));
+    let t = Duration::from_secs(30);
+    ok_samples(&rx1, t);
+    ok_samples(&rx2, t);
+    assert!(
+        gauge.peak.load(Ordering::SeqCst) >= 2,
+        "incompatible groups never overlapped: the pooled batcher is \
+         integrating inline again (peak concurrency {})",
+        gauge.peak.load(Ordering::SeqCst)
+    );
+    b.finish();
+}
+
+#[test]
+fn oversized_groups_are_chunked_at_max_batch() {
+    let gauge = GaugeDenoiser::new(Duration::ZERO);
+    let model: Arc<dyn Denoiser> = gauge.clone();
+    let hub = EngineHub::from_models(vec![(toy().info, model)]);
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        max_inflight: 4,
+    };
+    let b = TestBatcher::start(hub, policy, 4);
+
+    // 5 × 4 rows of one compatible group: must flush as ≤8-row chunks
+    let rxs: Vec<_> = (0..5)
+        .map(|i| {
+            let mut r = mk_request(4, "euler", 8, i);
+            r.return_samples = true;
+            b.submit(r)
+        })
+        .collect();
+    for rx in &rxs {
+        let (n, samples, dim) = ok_samples(rx, Duration::from_secs(30));
+        assert_eq!(n, 4);
+        assert_eq!(samples.unwrap().len(), 4 * dim);
+    }
+    assert!(
+        gauge.max_rows.load(Ordering::SeqCst) <= 8,
+        "an integration exceeded max_batch rows: {}",
+        gauge.max_rows.load(Ordering::SeqCst)
+    );
+
+    // a single oversized request is row-sharded by the pooled generate
+    let mut big = mk_request(20, "euler", 8, 99);
+    big.return_samples = true;
+    let rx = b.submit(big);
+    let (n, samples, dim) = ok_samples(&rx, Duration::from_secs(30));
+    assert_eq!(n, 20);
+    assert_eq!(samples.unwrap().len(), 20 * dim);
+    assert!(
+        gauge.max_rows.load(Ordering::SeqCst) <= 8,
+        "oversized request was integrated unsharded: {} rows",
+        gauge.max_rows.load(Ordering::SeqCst)
+    );
+    let metrics = b.metrics.clone();
+    b.finish(); // join first so every record_batch has landed
+    let snap = metrics.snapshot();
+    let batches = snap.get("toy").unwrap().get("batches").unwrap().as_f64().unwrap();
+    assert!(batches >= 4.0, "expected >=4 integrations (chunked), got {batches}");
+}
+
+#[test]
+fn every_request_gets_exactly_its_rows_back_under_concurrent_flush() {
+    let hub = EngineHub::from_infos(vec![toy().info]);
+    let policy = BatchPolicy {
+        max_batch: 32,
+        max_wait: Duration::from_millis(1),
+        max_inflight: 4,
+    };
+    let b = TestBatcher::start(hub, policy, 4);
+    let mut rng = Rng::new(7);
+    let solvers = ["euler", "heun", "dpm2m"];
+    let mut expected = Vec::new();
+    let mut receivers = Vec::new();
+    for i in 0..48u64 {
+        let n = 1 + rng.below(9);
+        let solver = solvers[rng.below(solvers.len())];
+        let mut r = mk_request(n, solver, 6, i);
+        r.return_samples = true;
+        expected.push(n);
+        receivers.push(b.submit(r));
+    }
+    for (rx, n) in receivers.iter().zip(&expected) {
+        let (got, samples, dim) = ok_samples(rx, Duration::from_secs(30));
+        assert_eq!(got, *n);
+        assert_eq!(samples.unwrap().len(), n * dim);
+    }
+    b.finish();
+}
+
+#[test]
+fn slow_group_does_not_delay_unrelated_fast_group() {
+    // per-eval hold makes the slow group deterministically slow (~500
+    // evals × 1 ms ≈ 500 ms) and the fast group deterministically fast
+    // (7 evals ≈ 7 ms): with inline integration the fast reply queued
+    // behind the slow one; pooled, it must come back first
+    let gauge = GaugeDenoiser::new(Duration::from_millis(1));
+    let model: Arc<dyn Denoiser> = gauge.clone();
+    let hub = EngineHub::from_models(vec![(toy().info, model)]);
+    let b = TestBatcher::start(hub, BatchPolicy::default(), 4);
+
+    let slow_rx = b.submit(mk_request(64, "dpm2m", 500, 1));
+    // let the slow group flush (max_wait = 2 ms) and start integrating
+    std::thread::sleep(Duration::from_millis(20));
+    let fast_submitted = Instant::now();
+    let fast_rx = b.submit(mk_request(2, "heun", 4, 2));
+
+    let slow_done = std::thread::spawn(move || {
+        match slow_rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            Response::SampleOk { .. } => Instant::now(),
+            other => panic!("{other:?}"),
+        }
+    });
+    match fast_rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        Response::SampleOk { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    let fast_done = Instant::now();
+    let fast_latency = fast_done.duration_since(fast_submitted);
+    let slow_done = slow_done.join().unwrap();
+
+    assert!(
+        fast_done < slow_done,
+        "fast reply arrived after the slow group: head-of-line blocking is back"
+    );
+    assert!(
+        fast_latency < Duration::from_millis(200),
+        "fast group took {fast_latency:?}: it queued behind the slow group's \
+         integration instead of max_wait + its own integration time"
+    );
+    b.finish();
+}
+
+#[test]
+fn batched_replies_are_deterministic_and_mix_every_seed() {
+    let grouping = BatchPolicy {
+        max_batch: 256,
+        max_wait: Duration::from_millis(50),
+        max_inflight: 4,
+    };
+    // submit one compatible pair and return member 1's samples
+    let run_pair = |seed_a: u64, seed_b: u64| -> Vec<f32> {
+        let hub = EngineHub::from_infos(vec![toy().info]);
+        let b = TestBatcher::start(hub, grouping, 2);
+        let mut r1 = mk_request(4, "euler", 5, seed_a);
+        r1.return_samples = true;
+        let rx1 = b.submit(r1);
+        let rx2 = b.submit(mk_request(4, "euler", 5, seed_b));
+        let (_, samples, _) = ok_samples(&rx1, Duration::from_secs(30));
+        ok_samples(&rx2, Duration::from_secs(30));
+        b.finish();
+        samples.unwrap()
+    };
+
+    let a = run_pair(1, 2);
+    let a_again = run_pair(1, 2);
+    let b = run_pair(1, 3);
+    assert_eq!(a, a_again, "same group composition must reproduce bit-identically");
+    assert_ne!(
+        a, b,
+        "changing ONLY the second member's seed must change the batch: \
+         every client's seed has to influence the integration"
+    );
+}

@@ -14,7 +14,7 @@ use sdm::sampler::{run_sampler, RunConfig};
 use sdm::schedule::baselines::edm_schedule;
 use sdm::solvers::{LambdaKind, SolverSpec};
 use sdm::testutil::prop::{forall_cfg, Gen, Pair, PropConfig, UsizeIn};
-use sdm::util::{Rng, Timer};
+use sdm::util::{Rng, ThreadPool, Timer};
 
 struct ParamGen;
 
@@ -114,10 +114,11 @@ fn batcher_conserves_requests_under_random_load() {
     forall_cfg(cfg(12), &UsizeIn(1, 24), |&n_requests| {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
+        let pool = Arc::new(ThreadPool::new(4));
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
         let handle = std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default())
+            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default(), pool)
         });
         let mut rng = Rng::new(n_requests as u64);
         let mut expected = Vec::new();
