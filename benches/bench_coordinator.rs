@@ -118,6 +118,53 @@ fn slow_fast_isolation() {
     router.shutdown();
 }
 
+/// Submit-path contention datapoint: T threads hammer `Router::call` with
+/// tiny single-row requests. The route table is lock-free (submits go
+/// straight to the shared sender instead of a `Mutex<Sender>` serializing
+/// every submitter), so this measures the whole enqueue+reply path under
+/// contention.
+fn router_submit_contention() {
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let metrics = Arc::new(ServerMetrics::new());
+    let pool = Arc::new(ThreadPool::new(8));
+    let router = Arc::new(Router::start(hub, metrics, BatchPolicy::default(), pool));
+    run_burst(&router, vec![mk_request(1, "euler", "edm", 4, 0)]); // warm cache
+    for threads in [1usize, 8] {
+        let per_thread = 64usize;
+        let r = bench_throughput(
+            &format!("serve/router-submit/{threads}-threads"),
+            1,
+            6,
+            (threads * per_thread) as f64,
+            "reqs",
+            || {
+                let mut hs = Vec::new();
+                for t in 0..threads {
+                    let router = router.clone();
+                    hs.push(std::thread::spawn(move || {
+                        for i in 0..per_thread {
+                            let req =
+                                mk_request(1, "euler", "edm", 4, (t * per_thread + i) as u64);
+                            match router.call(req).expect("route") {
+                                Response::SampleOk { .. } => {}
+                                other => panic!("unexpected reply {other:?}"),
+                            }
+                        }
+                    }));
+                }
+                for h in hs {
+                    h.join().unwrap();
+                }
+            },
+        );
+        println!(
+            "serve/router-submit: {threads} threads -> {:.0} req/s",
+            (threads * per_thread) as f64 / (r.median_us / 1e6)
+        );
+    }
+    router.shutdown();
+}
+
 fn main() {
     // --- mixed-group batcher scenario (no artifacts required) ---
     let inline = BatchPolicy { max_inflight: 0, ..BatchPolicy::default() };
@@ -131,6 +178,7 @@ fn main() {
         pooled_sps / inline_sps.max(1e-9)
     );
     slow_fast_isolation();
+    router_submit_contention();
 
     // --- TCP serving stack over real artifacts (skipped if absent) ---
     let dir = artifact_dir(None);

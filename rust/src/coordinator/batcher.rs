@@ -122,7 +122,10 @@ impl Drop for InflightGuard {
     }
 }
 
-/// Run the batcher loop for one dataset until the inbox closes.
+/// Run the batcher loop for one dataset until the inbox closes or `stop`
+/// is raised (the router's shutdown signal — the inbox senders stay alive
+/// inside the lock-free route table, so disconnect alone cannot end the
+/// loop anymore).
 ///
 /// The loop never blocks on the worker pool: ready groups are chunked at
 /// `max_batch` rows, chunks that fit under the `max_inflight` bound are
@@ -136,35 +139,44 @@ pub fn batcher_loop(
     rx: mpsc::Receiver<Pending>,
     policy: BatchPolicy,
     pool: Arc<ThreadPool>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
 ) {
+    use std::sync::atomic::Ordering;
+
     let inflight = Arc::new(Inflight::new());
     let mut groups: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
     let mut backlog: VecDeque<Vec<Pending>> = VecDeque::new();
     loop {
         // wait for work, with a timeout so aged groups still flush
+        let mut closing = false;
         match rx.recv_timeout(policy.max_wait) {
             Ok(p) => {
                 groups.entry(group_key(&p.req)).or_default().push(p);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // drain everything; with no more arrivals, blocking on
-                // the in-flight bound is fine. wait_zero() then makes
-                // joining the batcher thread imply every reply was sent
-                for (_, g) in std::mem::take(&mut groups) {
-                    backlog.extend(chunk_ready(&dataset, &metrics, g, &policy));
-                }
-                for chunk in backlog.drain(..) {
-                    if policy.max_inflight == 0 {
-                        flush(&dataset, &hub, &metrics, chunk, &policy, None);
-                    } else {
-                        inflight.wait_below(policy.max_inflight);
-                        submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
-                    }
-                }
-                inflight.wait_zero();
-                return;
+            Err(mpsc::RecvTimeoutError::Disconnected) => closing = true,
+        }
+        if closing || stop.load(Ordering::SeqCst) {
+            // drain everything already accepted (including requests still
+            // queued in the inbox); with no more arrivals, blocking on
+            // the in-flight bound is fine. wait_zero() then makes
+            // joining the batcher thread imply every reply was sent
+            while let Ok(p) = rx.try_recv() {
+                groups.entry(group_key(&p.req)).or_default().push(p);
             }
+            for (_, g) in std::mem::take(&mut groups) {
+                backlog.extend(chunk_ready(&dataset, &metrics, g, &policy));
+            }
+            for chunk in backlog.drain(..) {
+                if policy.max_inflight == 0 {
+                    flush(&dataset, &hub, &metrics, chunk, &policy, None);
+                } else {
+                    inflight.wait_below(policy.max_inflight);
+                    submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
+                }
+            }
+            inflight.wait_zero();
+            return;
         }
         // 1) drain backlogged chunks into freed integration slots
         while !backlog.is_empty()
@@ -411,7 +423,8 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(4));
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
-        std::thread::spawn(move || batcher_loop("toy".into(), hub, m2, rx, policy, pool));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::spawn(move || batcher_loop("toy".into(), hub, m2, rx, policy, pool, stop));
         (tx, metrics)
     }
 
@@ -499,8 +512,9 @@ mod tests {
         let pool = Arc::new(ThreadPool::new(2));
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         std::thread::spawn(move || {
-            batcher_loop("ghost".into(), hub, m2, rx, BatchPolicy::default(), pool)
+            batcher_loop("ghost".into(), hub, m2, rx, BatchPolicy::default(), pool, stop)
         });
         let mut req = mk_request(2, "euler");
         req.dataset = "ghost".into();

@@ -2,24 +2,37 @@
 //!
 //! The hub is the coordinator's shared state: for each dataset it holds
 //! the sidecar-derived [`DatasetInfo`], a thread-safe [`Denoiser`] (PJRT
-//! handle or native oracle), and a cache of built σ grids keyed by
-//! [`crate::sampler::SamplerConfig::schedule_key`]-style strings. Pilot-
-//! based schedules (COS, SDM) are expensive to construct — Algorithm 1
-//! runs a pilot batch — so the cache is the coordinator's "state
-//! management" contribution: first request pays construction, the rest
-//! reuse it.
+//! handle or native oracle), and the [`ScheduleCache`] of built σ grids.
+//! Pilot-based schedules (COS, SDM) are expensive to construct —
+//! Algorithm 1 runs a pilot batch — so the cache is the coordinator's
+//! "state management" contribution: the first request for a key pays
+//! construction (single-flight: concurrent first requests share one
+//! build), persisted entries survive restarts, and SDM misses warm-start
+//! from the nearest cached neighbor. See `schedule::cache`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::diffusion::{Param, SigmaGrid};
 use crate::model::pjrt::PjrtDenoiser;
 use crate::model::{DatasetInfo, DatasetRegistry, Denoiser, GmmModel};
 use crate::runtime::Runtime;
-use crate::schedule::ScheduleSpec;
-use crate::util::Rng;
+use crate::schedule::{CacheConfig, CacheKey, ScheduleCache, ScheduleSpec};
+use crate::util::{Json, Rng};
 use crate::Result;
+
+/// File name of the persisted schedule cache under the artifact dir.
+///
+/// Backend-specific: pilot-based schedules run their pilot on the
+/// *serving* model, and the native oracle only agrees with the PJRT
+/// artifact to integration-test tolerance — a PJRT hub restoring grids
+/// whose pilots ran natively (or vice versa) would silently serve
+/// schedules the artifact never shaped. One file per backend keeps each
+/// hub's persisted pilots honest.
+pub fn schedule_cache_file(backend: ModelBackend) -> String {
+    format!("schedule_cache.{}.jsonl", backend.name())
+}
 
 /// Which denoiser implementation serves requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +51,13 @@ impl ModelBackend {
             other => anyhow::bail!("unknown backend {other:?} (pjrt|native)"),
         }
     }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelBackend::Pjrt => "pjrt",
+            ModelBackend::Native => "native",
+        }
+    }
 }
 
 struct DatasetEntry {
@@ -45,20 +65,69 @@ struct DatasetEntry {
     model: Arc<dyn Denoiser>,
     /// native oracle always available (ground truth, pilot fallback)
     oracle: Arc<GmmModel>,
+    /// fingerprint of the sidecar parameters, cached for cache keys
+    fp: u64,
+}
+
+/// Fingerprint of everything that defines a dataset's model: mixture
+/// parameters, σ range, dimensionality. Regenerating an artifact — even
+/// with the same σ range — changes this, which changes every schedule
+/// cache key for the dataset, so persisted pilots built against the old
+/// model can neither be looked up nor seed warm starts. Masked to 53
+/// bits so the value survives the JSON f64 round trip exactly.
+fn dataset_fingerprint(info: &DatasetInfo) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    mix(info.dim as u64);
+    mix(info.k as u64);
+    mix(info.n_classes as u64);
+    for f in [info.sigma_min, info.sigma_max, info.rho] {
+        mix(f.to_bits());
+    }
+    for f in info.mus.iter().chain(&info.logw).chain(&info.tau2) {
+        mix(f.to_bits());
+    }
+    for &c in &info.classes {
+        mix(c as u64);
+    }
+    drop(mix);
+    h & ((1u64 << 53) - 1)
 }
 
 /// Shared coordinator state (cheaply cloneable via Arc by the server).
 pub struct EngineHub {
     datasets: BTreeMap<String, DatasetEntry>,
-    schedule_cache: Mutex<BTreeMap<String, SigmaGrid>>,
+    schedule_cache: ScheduleCache,
     /// kept alive so the executor thread persists as long as the hub
     _runtime: Option<Runtime>,
     pub backend: ModelBackend,
 }
 
 impl EngineHub {
-    /// Load every dataset under `artifact_dir` with the chosen backend.
+    /// Load every dataset under `artifact_dir` with the chosen backend
+    /// and the default cache policy: persistence enabled at
+    /// `<artifact_dir>/schedule_cache.<backend>.jsonl`, so a restarted
+    /// coordinator serves pilot schedules without re-running a single
+    /// pilot (and never restores pilots built by a different backend).
     pub fn load(artifact_dir: &Path, backend: ModelBackend) -> Result<EngineHub> {
+        let cache = CacheConfig {
+            persist_path: Some(artifact_dir.join(schedule_cache_file(backend))),
+            ..CacheConfig::default()
+        };
+        EngineHub::load_with(artifact_dir, backend, cache)
+    }
+
+    /// [`EngineHub::load`] with an explicit [`CacheConfig`] (TTL,
+    /// capacity, persistence path, warm-start — see the `--cache-*` CLI
+    /// flags).
+    pub fn load_with(
+        artifact_dir: &Path,
+        backend: ModelBackend,
+        cache: CacheConfig,
+    ) -> Result<EngineHub> {
         let registry = DatasetRegistry::load(artifact_dir)?;
         let runtime = match backend {
             ModelBackend::Pjrt => Some(Runtime::start(artifact_dir)?),
@@ -76,30 +145,57 @@ impl EngineHub {
                 )),
                 _ => oracle.clone(),
             };
-            datasets.insert(name.clone(), DatasetEntry { info: info.clone(), model, oracle });
+            let fp = dataset_fingerprint(info);
+            datasets.insert(name.clone(), DatasetEntry { info: info.clone(), model, oracle, fp });
         }
+        let schedule_cache = Self::restore_cache(cache, &datasets);
         Ok(EngineHub {
             datasets,
-            schedule_cache: Mutex::new(BTreeMap::new()),
+            schedule_cache,
             _runtime: runtime,
             backend,
         })
     }
 
+    /// Build the cache and restore persisted entries, vetoing entries for
+    /// datasets we no longer serve or whose model fingerprint no longer
+    /// matches the current artifact — a regenerated artifact (new model
+    /// weights, new σ range) must re-run its pilots, not silently serve
+    /// stale grids. Restore failure never stops the hub from serving.
+    fn restore_cache(
+        cache: CacheConfig,
+        datasets: &BTreeMap<String, DatasetEntry>,
+    ) -> ScheduleCache {
+        let schedule_cache = ScheduleCache::new(cache);
+        let result = schedule_cache.load_persisted_validated(|key, _built| {
+            datasets
+                .get(&key.dataset)
+                .map(|e| e.fp == key.model_fp)
+                .unwrap_or(false)
+        });
+        if let Err(e) = result {
+            eprintln!("schedule cache: restore failed, starting cold: {e:#}");
+        }
+        schedule_cache
+    }
+
     /// Build a hub over native oracles only, without artifacts on disk —
-    /// used by unit tests with synthetic `DatasetInfo`s.
+    /// used by unit tests with synthetic `DatasetInfo`s. The oracle and
+    /// the serving model share one `GmmModel` instance.
     pub fn from_infos(infos: Vec<DatasetInfo>) -> EngineHub {
         let mut datasets = BTreeMap::new();
         for info in infos {
             let oracle = Arc::new(GmmModel::new(info.clone()));
+            let fp = dataset_fingerprint(&info);
             datasets.insert(
                 info.name.clone(),
-                DatasetEntry { info, model: oracle.clone(), oracle },
+                DatasetEntry { info, model: oracle.clone(), oracle, fp },
             );
         }
+        let schedule_cache = Self::restore_cache(CacheConfig::default(), &datasets);
         EngineHub {
             datasets,
-            schedule_cache: Mutex::new(BTreeMap::new()),
+            schedule_cache,
             _runtime: None,
             backend: ModelBackend::Native,
         }
@@ -110,14 +206,26 @@ impl EngineHub {
     /// need instrumented [`Denoiser`] implementations on the request
     /// path.
     pub fn from_models(models: Vec<(DatasetInfo, Arc<dyn Denoiser>)>) -> EngineHub {
+        EngineHub::from_models_with_cache(models, CacheConfig::default())
+    }
+
+    /// [`EngineHub::from_models`] with an explicit cache policy — the
+    /// stampede/persistence regression tests drive TTL, persistence, and
+    /// warm-start through here.
+    pub fn from_models_with_cache(
+        models: Vec<(DatasetInfo, Arc<dyn Denoiser>)>,
+        cache: CacheConfig,
+    ) -> EngineHub {
         let mut datasets = BTreeMap::new();
         for (info, model) in models {
             let oracle = Arc::new(GmmModel::new(info.clone()));
-            datasets.insert(info.name.clone(), DatasetEntry { info, model, oracle });
+            let fp = dataset_fingerprint(&info);
+            datasets.insert(info.name.clone(), DatasetEntry { info, model, oracle, fp });
         }
+        let schedule_cache = Self::restore_cache(cache, &datasets);
         EngineHub {
             datasets,
-            schedule_cache: Mutex::new(BTreeMap::new()),
+            schedule_cache,
             _runtime: None,
             backend: ModelBackend::Native,
         }
@@ -160,6 +268,13 @@ impl EngineHub {
     /// Get or build the σ grid for a (dataset, param, schedule, steps)
     /// combination. Pilot-based schedules run their pilot on the serving
     /// model (so the PJRT path exercises the artifact end to end).
+    ///
+    /// Concurrent misses on the same key are single-flight: one thread
+    /// builds, the rest block on that build instead of racing duplicate
+    /// pilots (the old check-then-insert under two separate lock
+    /// acquisitions let N first requests each pay a full pilot). SDM
+    /// misses warm-start Algorithm 1 from the nearest cached neighbor of
+    /// the same (dataset, param, spec).
     pub fn schedule(
         &self,
         dataset: &str,
@@ -168,26 +283,37 @@ impl EngineHub {
         steps: usize,
     ) -> Result<SigmaGrid> {
         let steps = self.resolve_steps(dataset, steps)?;
-        let key = format!("{dataset}|{}|{}|{steps}", param.name(), spec.tag());
-        if let Some(g) = self.schedule_cache.lock().unwrap().get(&key) {
-            return Ok(g.clone());
-        }
         let entry = self.entry(dataset)?;
-        // deterministic pilot seed per key so cached schedules reproduce
-        let seed = key.bytes().fold(0xC0FFEEu64, |h, b| {
-            h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
-        });
-        let mut rng = Rng::new(seed);
-        let grid = spec.build(steps, &entry.info, param, entry.model.as_ref(), &mut rng)?;
-        self.schedule_cache
-            .lock()
-            .unwrap()
-            .insert(key, grid.clone());
-        Ok(grid)
+        let key = CacheKey {
+            dataset: dataset.to_string(),
+            param: param.name().to_string(),
+            tag: spec.tag(),
+            steps,
+            model_fp: entry.fp,
+        };
+        let built = self.schedule_cache.get_or_build(&key, |warm| {
+            // deterministic pilot seed per key so cached schedules reproduce
+            let seed = key.encode().bytes().fold(0xC0FFEEu64, |h, b| {
+                h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+            });
+            let mut rng = Rng::new(seed);
+            spec.build_with(steps, &entry.info, param, entry.model.as_ref(), &mut rng, warm)
+        })?;
+        Ok(built.grid.clone())
     }
 
     pub fn cached_schedules(&self) -> usize {
-        self.schedule_cache.lock().unwrap().len()
+        self.schedule_cache.len()
+    }
+
+    /// The schedule cache (stats, test instrumentation).
+    pub fn schedule_cache(&self) -> &ScheduleCache {
+        &self.schedule_cache
+    }
+
+    /// Cache counters for the `stats` op.
+    pub fn cache_stats(&self) -> Json {
+        self.schedule_cache.stats_json()
     }
 }
 
@@ -228,6 +354,19 @@ mod tests {
         let g2 = h.schedule("toy", Param::Edm, &spec, 10).unwrap();
         assert_eq!(g1, g2);
         assert_eq!(g1.sigmas.len(), 11);
+    }
+
+    #[test]
+    fn pilot_configs_do_not_alias_in_cache() {
+        // regression: bare "cos" tags once collapsed differently
+        // configured pilots onto one cache entry
+        let h = hub();
+        let a = ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 16 };
+        let b = ScheduleSpec::Cos { pilot_mult: 8, pilot_rows: 16 };
+        let ga = h.schedule("toy", Param::Edm, &a, 10).unwrap();
+        let gb = h.schedule("toy", Param::Edm, &b, 10).unwrap();
+        assert_eq!(h.cached_schedules(), 2, "distinct pilot configs must not alias");
+        assert_eq!(ga.sigmas.len(), gb.sigmas.len());
     }
 
     #[test]

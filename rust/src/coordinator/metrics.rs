@@ -79,6 +79,22 @@ impl ServerMetrics {
         r.inflight_hwm = r.inflight_hwm.max(current as u64);
     }
 
+    /// [`ServerMetrics::snapshot`] with extra top-level sections merged in
+    /// beside the per-route entries — the server uses this to expose the
+    /// hub's schedule-cache counters (`schedule_cache` key) on the same
+    /// `stats` object without changing the per-route schema.
+    pub fn snapshot_with(&self, extra: Vec<(String, Json)>) -> Json {
+        match self.snapshot() {
+            Json::Obj(mut m) => {
+                for (k, v) in extra {
+                    m.insert(k, v);
+                }
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
+
     /// JSON snapshot for the `stats` op / operator dashboards.
     pub fn snapshot(&self) -> Json {
         let routes = self.routes.lock().unwrap();
@@ -129,6 +145,25 @@ mod tests {
         assert_eq!(a.get("avg_batch_rows").unwrap().as_f64().unwrap(), 16.0);
         let b = snap.get("b").unwrap();
         assert_eq!(b.get("errors").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn snapshot_with_merges_extra_sections() {
+        let m = ServerMetrics::new();
+        m.record_request("a", 100.0, 8, 35.0);
+        let snap = m.snapshot_with(vec![(
+            "schedule_cache".into(),
+            Json::Obj(std::collections::BTreeMap::from([(
+                "hits".to_string(),
+                Json::Num(3.0),
+            )])),
+        )]);
+        assert_eq!(
+            snap.get("schedule_cache").unwrap().get("hits").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        // route sections are untouched
+        assert_eq!(snap.get("a").unwrap().get("requests").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

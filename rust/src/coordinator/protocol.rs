@@ -10,6 +10,13 @@
 //! ```
 //! Sample responses carry the Gaussian summary of the generated rows, the
 //! NFE spent, and optionally the raw samples.
+//!
+//! The `stats` response's `stats` object holds one section per dataset
+//! route (requests, latency quantiles, batch/split gauges — see
+//! `coordinator::metrics`) plus a `schedule_cache` section with the hub's
+//! cache counters: `entries`, `hits`, `misses`, `stampedes_averted`,
+//! `evictions`, `expirations`, `persisted_loads`, `warm_starts`,
+//! `pilot_nfe_built`, `pilot_nfe_saved`.
 
 use std::collections::BTreeMap;
 

@@ -7,8 +7,21 @@
 //! where they can be merged. All batchers submit their ready groups to
 //! the same [`ThreadPool`], so integration capacity is a property of the
 //! coordinator, not of any single route.
+//!
+//! The route table is immutable after start and submit sends directly on
+//! the route's shared `mpsc::Sender` (`Sender` is `Sync` since the std
+//! channel rewrite, so `send(&self)` is safe from many threads) — no
+//! mutex on the hot path, so concurrent connection threads never
+//! serialize on a lock to enqueue. Shutdown is a
+//! stop flag: [`Router::shutdown`] takes `&self`, raises the flag every
+//! batcher polls, and joins the batcher threads, so the server can stop
+//! the router even while connection handlers still hold `Arc<Router>`
+//! clones ([`Router::drop`] does the same as a backstop, which also ends
+//! the pool's job senders and lets [`ThreadPool`]'s own `Drop` join the
+//! workers).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -20,8 +33,11 @@ use crate::util::{ThreadPool, Timer};
 use crate::Result;
 
 pub struct Router {
-    routes: BTreeMap<String, Mutex<mpsc::Sender<Pending>>>,
-    joins: Vec<std::thread::JoinHandle<()>>,
+    routes: BTreeMap<String, mpsc::Sender<Pending>>,
+    /// raised by [`Router::shutdown`]; every batcher polls it.
+    stop: Arc<AtomicBool>,
+    /// batcher thread handles (cold path only: drained by shutdown).
+    joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// the shared integration pool, kept alive for the router's lifetime
     pool: Arc<ThreadPool>,
 }
@@ -33,6 +49,7 @@ impl Router {
         policy: BatchPolicy,
         pool: Arc<ThreadPool>,
     ) -> Router {
+        let stop = Arc::new(AtomicBool::new(false));
         let mut routes = BTreeMap::new();
         let mut joins = Vec::new();
         for name in hub.dataset_names() {
@@ -41,14 +58,15 @@ impl Router {
             let metrics2 = metrics.clone();
             let name2 = name.clone();
             let pool2 = pool.clone();
+            let stop2 = stop.clone();
             let join = std::thread::Builder::new()
                 .name(format!("sdm-batcher-{name}"))
-                .spawn(move || batcher_loop(name2, hub2, metrics2, rx, policy, pool2))
+                .spawn(move || batcher_loop(name2, hub2, metrics2, rx, policy, pool2, stop2))
                 .expect("spawning batcher");
-            routes.insert(name, Mutex::new(tx));
+            routes.insert(name, tx);
             joins.push(join);
         }
-        Router { routes, joins, pool }
+        Router { routes, stop, joins: Mutex::new(joins), pool }
     }
 
     /// Worker threads available for integration.
@@ -58,6 +76,7 @@ impl Router {
 
     /// Submit a request; returns the channel the response arrives on.
     pub fn submit(&self, req: SampleRequest) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(!self.stop.load(Ordering::SeqCst), "router stopped");
         let route = self.routes.get(&req.dataset).ok_or_else(|| {
             anyhow::anyhow!(
                 "no route for dataset {:?}; available: {:?}",
@@ -67,8 +86,6 @@ impl Router {
         })?;
         let (rtx, rrx) = mpsc::channel();
         route
-            .lock()
-            .unwrap()
             .send(Pending {
                 req,
                 reply: rtx,
@@ -85,12 +102,27 @@ impl Router {
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))
     }
 
-    /// Close all routes and join batcher threads.
-    pub fn shutdown(mut self) {
-        self.routes.clear(); // drop senders -> batcher loops exit
-        for j in self.joins.drain(..) {
+    /// Stop every batcher (each drains accepted requests, waits for its
+    /// in-flight integrations, then exits) and join the threads.
+    /// Idempotent, and callable through `&self` so the server can shut
+    /// the router down while connection threads still hold clones; their
+    /// subsequent submits fail with "router stopped".
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let joins: Vec<_> = {
+            let mut guard = self.joins.lock().expect("router joins poisoned");
+            guard.drain(..).collect()
+        };
+        for j in joins {
             let _ = j.join();
         }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // backstop for routers never explicitly shut down (tests, panics)
+        self.shutdown();
     }
 }
 
@@ -151,5 +183,42 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn shutdown_joins_batchers_and_rejects_new_submissions() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let pool = test_pool();
+        let router = Arc::new(Router::start(
+            hub,
+            metrics,
+            BatchPolicy::default(),
+            pool.clone(),
+        ));
+        // a request accepted before shutdown still gets its reply
+        let rx = router.submit(mk(4, "toy")).unwrap();
+        // shutdown through a *clone*, as the server does while connection
+        // threads still hold their own Arc<Router>
+        let r2 = router.clone();
+        router.shutdown();
+        match rx.recv().expect("pre-shutdown request must be served") {
+            Response::SampleOk { n, .. } => assert_eq!(n, 4),
+            other => panic!("{other:?}"),
+        }
+        // batcher threads joined: no integrations remain queued (the
+        // pool's gauge decrements a hair after the in-flight gauge, so
+        // poll briefly instead of racing it)
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        while pool.pending() > 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.pending(), 0);
+        // post-shutdown submissions fail fast instead of queueing forever
+        let err = format!("{:#}", r2.submit(mk(1, "toy")).unwrap_err());
+        assert!(err.contains("router stopped"), "{err}");
+        // idempotent: a second shutdown (and the Drop backstop) must not
+        // hang or double-join
+        r2.shutdown();
     }
 }

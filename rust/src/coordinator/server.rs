@@ -41,6 +41,12 @@ impl Default for ServerConfig {
     }
 }
 
+// NB: the schedule-cache policy (`schedule::CacheConfig`) deliberately
+// does NOT live here. The cache belongs to the hub, which is built before
+// the server — a field on ServerConfig would be a silent no-op for any
+// caller other than `sdm serve`. Configure it at `EngineHub::load_with`
+// (the `--cache-*` CLI flags do exactly that).
+
 impl ServerConfig {
     /// Resolve `pool_threads == 0` to a hardware-derived worker count.
     pub fn resolved_pool_threads(&self) -> usize {
@@ -59,6 +65,8 @@ pub struct Server {
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_join: Option<std::thread::JoinHandle<()>>,
+    /// kept so shutdown can stop/join the batcher threads and worker pool
+    router: Arc<Router>,
 }
 
 impl Server {
@@ -69,10 +77,11 @@ impl Server {
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(ServerMetrics::new());
         let pool = Arc::new(ThreadPool::new(cfg.resolved_pool_threads()));
-        let router = Arc::new(Router::start(hub, metrics.clone(), cfg.policy, pool));
+        let router = Arc::new(Router::start(hub.clone(), metrics.clone(), cfg.policy, pool));
         let stop = Arc::new(AtomicBool::new(false));
 
         let stop2 = stop.clone();
+        let router2 = router.clone();
         let accept_join = std::thread::Builder::new()
             .name("sdm-accept".into())
             .spawn(move || {
@@ -87,13 +96,16 @@ impl Server {
                             // the classic ~40 ms delayed-ACK window
                             // (EXPERIMENTS.md §Perf iteration 5)
                             stream.set_nodelay(true).ok();
-                            let router = router.clone();
+                            let router = router2.clone();
                             let metrics = metrics.clone();
+                            let hub = hub.clone();
                             let stop3 = stop2.clone();
                             let _ = std::thread::Builder::new()
                                 .name("sdm-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_conn(stream, &router, &metrics, &stop3);
+                                    let _ = handle_conn(
+                                        stream, &router, &hub, &metrics, &stop3, local_addr,
+                                    );
                                 });
                         }
                         Err(_) => break,
@@ -101,10 +113,14 @@ impl Server {
                 }
             })?;
 
-        Ok(Server { local_addr, stop, accept_join: Some(accept_join) })
+        Ok(Server { local_addr, stop, accept_join: Some(accept_join), router })
     }
 
-    /// Request shutdown and join the accept loop.
+    /// Request shutdown, join the accept loop, then stop the router: the
+    /// per-dataset batcher threads drain and join, which also releases
+    /// their references to the shared worker pool (previously both leaked
+    /// because the accept loop's `Arc<Router>` was dropped without
+    /// `Router::shutdown`).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // unblock the accept loop
@@ -112,6 +128,7 @@ impl Server {
         if let Some(j) = self.accept_join.take() {
             let _ = j.join();
         }
+        self.router.shutdown();
     }
 
     pub fn is_stopping(&self) -> bool {
@@ -122,8 +139,10 @@ impl Server {
 fn handle_conn(
     stream: TcpStream,
     router: &Router,
+    hub: &EngineHub,
     metrics: &ServerMetrics,
     stop: &AtomicBool,
+    local_addr: std::net::SocketAddr,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -139,9 +158,17 @@ fn handle_conn(
         let response = match Request::parse(&line) {
             Err(e) => Response::Err(format!("bad request: {e:#}")),
             Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Stats) => Response::Stats(metrics.snapshot()),
+            Ok(Request::Stats) => Response::Stats(
+                metrics.snapshot_with(vec![("schedule_cache".into(), hub.cache_stats())]),
+            ),
             Ok(Request::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
+                // the accept loop blocks in `listener.incoming()` and only
+                // rechecks the flag per connection — self-connect to wake
+                // it, exactly as `Server::shutdown` does, so the server
+                // stops accepting *now* rather than whenever an unrelated
+                // connection happens to arrive
+                let _ = TcpStream::connect(local_addr);
                 let _ = writeln!(writer, "{}", Response::Pong.to_line());
                 break;
             }
@@ -200,6 +227,60 @@ mod tests {
         assert_eq!(resp.get("ok").unwrap(), &crate::util::Json::Bool(false));
         // connection still usable afterwards
         assert!(client.ping().unwrap());
+        server.shutdown();
+    }
+
+    #[test]
+    fn client_shutdown_op_stops_accepting() {
+        use std::time::{Duration, Instant};
+        let (server, addr) = start_server();
+        let addr_s = addr.to_string();
+        let mut client = Client::connect(&addr_s).unwrap();
+        client.shutdown_server().unwrap();
+        // regression: the shutdown op used to set the stop flag but left
+        // the accept loop blocked in `incoming()`, so the server kept
+        // accepting until an unrelated connection arrived. Now it must
+        // stop on its own: poll until fresh connections are refused (or
+        // accepted by a stale backlog and then drained dead).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut stopped = false;
+        while Instant::now() < deadline {
+            match Client::connect(&addr_s) {
+                Err(_) => {
+                    stopped = true;
+                    break;
+                }
+                Ok(mut c) => {
+                    if c.ping().is_err() {
+                        stopped = true;
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(stopped, "server kept accepting after the client shutdown op");
+        assert!(server.is_stopping());
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_include_schedule_cache_section() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let r = client
+            .send(r#"{"op":"sample","dataset":"toy","n":4,"solver":"euler","schedule":"edm","steps":6}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap(), &crate::util::Json::Bool(true));
+        let stats = client.send(r#"{"op":"stats"}"#).unwrap();
+        let cache = stats.get("stats").unwrap().get("schedule_cache").unwrap();
+        assert_eq!(cache.get("misses").unwrap().as_f64().unwrap(), 1.0);
+        assert!(cache.get("hits").is_ok());
+        assert!(cache.get("stampedes_averted").is_ok());
+        assert!(cache.get("evictions").is_ok());
+        assert!(cache.get("persisted_loads").is_ok());
+        // per-route sections still sit beside it, unchanged
+        assert!(stats.get("stats").unwrap().get("toy").is_ok());
         server.shutdown();
     }
 

@@ -29,10 +29,46 @@ fn main() {
     }
 }
 
+/// Schedule-cache policy flags, shared by every hub-loading subcommand:
+/// `--cache-capacity N` (0 = unbounded), `--cache-ttl-s SECS` (0 = never
+/// expire), plus persistence / warm-start switches.
+///
+/// `default_on` selects the amortization stance. Serving (`sdm serve`)
+/// defaults both persistence and warm start ON (opt out with
+/// `--no-cache-persist` / `--no-warm-start`). Experiment and one-shot
+/// subcommands default both OFF (opt in with `--cache-persist` /
+/// `--warm-start`): paper-reproduction numbers must not depend on what
+/// schedules an earlier run left in the artifact dir — warm-started
+/// builds are deliberately order-dependent (DESIGN.md §5).
+fn cache_config(
+    args: &Args,
+    artifact_dir: &std::path::Path,
+    backend: ModelBackend,
+    default_on: bool,
+) -> Result<sdm::schedule::CacheConfig> {
+    let mut cache = sdm::schedule::CacheConfig::default();
+    cache.capacity = args.get_usize("cache-capacity", cache.capacity)?;
+    let ttl_s = args.get_f64("cache-ttl-s", 0.0)?;
+    if ttl_s > 0.0 {
+        cache.ttl = Some(std::time::Duration::from_secs_f64(ttl_s));
+    }
+    // consume every switch in both modes so `finish()` accepts them
+    let no_persist = args.has("no-cache-persist");
+    let yes_persist = args.has("cache-persist");
+    let no_warm = args.has("no-warm-start");
+    let yes_warm = args.has("warm-start");
+    let persist = if default_on { !no_persist } else { yes_persist && !no_persist };
+    cache.persist_path = persist
+        .then(|| artifact_dir.join(sdm::coordinator::hub::schedule_cache_file(backend)));
+    cache.warm_start = if default_on { !no_warm } else { yes_warm && !no_warm };
+    Ok(cache)
+}
+
 fn load_hub(args: &Args) -> Result<Arc<EngineHub>> {
     let dir = artifact_dir(args.opt("artifacts"));
     let backend = ModelBackend::from_name(&args.get("backend", "pjrt"))?;
-    Ok(Arc::new(EngineHub::load(&dir, backend)?))
+    let cache = cache_config(args, &dir, backend, false)?;
+    Ok(Arc::new(EngineHub::load_with(&dir, backend, cache)?))
 }
 
 fn exp_context(args: &Args) -> Result<ExpContext> {
@@ -149,13 +185,16 @@ fn run() -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let hub = load_hub(args)?;
+    let dir = artifact_dir(args.opt("artifacts"));
+    let backend = ModelBackend::from_name(&args.get("backend", "pjrt"))?;
     let addr = args.get("addr", "127.0.0.1:7433");
     let pool_threads = args.get_usize("pool-threads", 0)?;
     let max_inflight = args.get_usize("max-inflight", 4)?;
+    let cache = cache_config(args, &dir, backend, true)?;
     args.finish()?;
     let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, ..Default::default() };
     cfg.policy.max_inflight = max_inflight;
+    let hub = Arc::new(EngineHub::load_with(&dir, backend, cache)?);
     let server = Server::start(hub, cfg)?;
     println!(
         "sdm serving on {} (send {{\"op\":\"shutdown\"}} to stop)",
@@ -343,6 +382,12 @@ fn print_help() {
          subcommands:\n\
          \x20 serve         start the TCP coordinator (--addr, --backend,\n\
          \x20               --pool-threads N, --max-inflight N)\n\
+         \x20               schedule cache: --cache-capacity N (0=unbounded),\n\
+         \x20               --cache-ttl-s SECS (0=never expire),\n\
+         \x20               --no-cache-persist, --no-warm-start (serve defaults\n\
+         \x20               both ON; experiment subcommands default OFF for\n\
+         \x20               reproducibility — opt in with --cache-persist,\n\
+         \x20               --warm-start)\n\
          \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...)\n\
          \x20 schedule      print a built sigma grid (--dataset --schedule --steps)\n\
          \x20 table1        Table 1  (unconditional FD/NFE grid)\n\

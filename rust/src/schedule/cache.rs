@@ -1,0 +1,815 @@
+//! Schedule cache: single-flight builds, TTL + LRU eviction, disk
+//! persistence, and warm-started pilots (DESIGN.md §6).
+//!
+//! The paper's amortization story is that COS/SDM schedules are built
+//! *once* offline (Algorithm 1's pilot, batch 128) and reused across all
+//! sampling. The serving-side realization of that story is this cache,
+//! keyed by `(dataset, parameterization, schedule tag, steps)`:
+//!
+//! - **Single-flight**: N concurrent misses on one key block on a single
+//!   builder instead of racing N duplicate pilots (the check-then-insert
+//!   stampede the old two-lock `Mutex<BTreeMap>` allowed). Waiters are
+//!   counted as `stampedes_averted` and credited the pilot NFE they did
+//!   not spend.
+//! - **TTL + capacity**: entries carry build timestamps and hit counts;
+//!   lookups drop entries past the configured TTL, and inserts evict
+//!   least-recently-used entries past `capacity`.
+//! - **Persistence**: completed builds are appended as JSON-lines (key,
+//!   σ grid, η/Ŝ traces, pilot NFE) under the artifact dir;
+//!   [`ScheduleCache::load_persisted`] restores them at hub load and
+//!   compacts the file, so restarts never re-run pilots.
+//! - **Warm start**: a miss for an SDM spec seeds Algorithm 1's reference
+//!   grid from the nearest cached neighbor (same dataset/param/spec,
+//!   different steps) instead of the dense EDM grid, cutting pilot NFE on
+//!   neighboring step budgets (see `WassersteinConfig::ref_sigmas`).
+//!
+//! Lock order is `state` before `persist`; the builder closure runs with
+//! neither lock held, so pilots never serialize unrelated cache traffic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::diffusion::SigmaGrid;
+use crate::schedule::BuiltSchedule;
+use crate::util::json::{append_jsonl, num_arr, read_jsonl_lenient};
+use crate::util::Json;
+use crate::Result;
+
+/// Identity of one cached schedule build.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CacheKey {
+    pub dataset: String,
+    /// `Param::name()` of the parameterization.
+    pub param: String,
+    /// `ScheduleSpec::tag()` — includes every schedule-affecting field.
+    pub tag: String,
+    pub steps: usize,
+    /// Fingerprint of the model/dataset parameters the pilot ran against
+    /// (the hub hashes the GMM sidecar — see `hub::dataset_fingerprint`).
+    /// Kept ≤ 53 bits so it survives the JSON f64 round trip exactly.
+    /// A regenerated artifact changes the fingerprint, so its stale
+    /// persisted pilots can neither be looked up nor seed warm starts.
+    pub model_fp: u64,
+}
+
+impl CacheKey {
+    /// Canonical string form (map key, metrics label, persisted identity).
+    pub fn encode(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{:x}",
+            self.dataset, self.param, self.tag, self.steps, self.model_fp
+        )
+    }
+}
+
+/// Cache policy knobs (hub-level; see `--cache-*` CLI flags).
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Max resident entries; LRU-evicted beyond this. 0 = unbounded.
+    pub capacity: usize,
+    /// Entry lifetime from build time; `None` = never expires.
+    pub ttl: Option<Duration>,
+    /// JSON-lines file completed builds are appended to and restored
+    /// from; `None` disables persistence.
+    pub persist_path: Option<PathBuf>,
+    /// Seed SDM pilots from the nearest cached neighbor's σ knots.
+    pub warm_start: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { capacity: 512, ttl: None, persist_path: None, warm_start: true }
+    }
+}
+
+struct Entry {
+    key: CacheKey,
+    /// `Arc` so hits hand out a refcount bump instead of deep-cloning the
+    /// grid + pilot traces under the cache lock on every request.
+    built: Arc<BuiltSchedule>,
+    built_at_unix: f64,
+    /// monotone LRU tick of the last lookup/insert.
+    last_used: u64,
+    hits: u64,
+}
+
+#[derive(Default)]
+struct StatCounters {
+    hits: u64,
+    misses: u64,
+    stampedes_averted: u64,
+    evictions: u64,
+    expirations: u64,
+    persisted_loads: u64,
+    warm_starts: u64,
+    /// pilot NFE actually spent building entries this process.
+    pilot_nfe_built: u64,
+    /// pilot NFE hits and averted stampedes did not have to spend.
+    pilot_nfe_saved: u64,
+}
+
+struct State {
+    entries: BTreeMap<String, Entry>,
+    /// keys currently being built by exactly one thread each.
+    inflight: BTreeSet<String>,
+    tick: u64,
+    stats: StatCounters,
+}
+
+/// Thread-safe schedule cache shared by every request path of a hub.
+pub struct ScheduleCache {
+    cfg: CacheConfig,
+    state: Mutex<State>,
+    cv: Condvar,
+    /// serializes file appends/rewrites (never held with `state` wanted).
+    persist: Mutex<()>,
+}
+
+fn now_unix() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+impl ScheduleCache {
+    pub fn new(cfg: CacheConfig) -> ScheduleCache {
+        ScheduleCache {
+            cfg,
+            state: Mutex::new(State {
+                entries: BTreeMap::new(),
+                inflight: BTreeSet::new(),
+                tick: 0,
+                stats: StatCounters::default(),
+            }),
+            cv: Condvar::new(),
+            persist: Mutex::new(()),
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Resident entry count (expired entries still resident count until a
+    /// lookup or insert touches them).
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("schedule cache poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Get the build for `key`, running `build` at most once per miss
+    /// across all threads: concurrent misses on the same key block until
+    /// the single in-flight builder finishes and then share its result.
+    ///
+    /// `build` receives the warm-start neighbor (nearest cached build of
+    /// the same dataset/param/tag at a different step count) when warm
+    /// starting is enabled, and runs without any cache lock held. If the
+    /// builder fails, its error is returned to it alone and one waiter
+    /// takes over as the next builder; a builder that *panics* unwinds
+    /// through a drop guard that unregisters the key, so a buggy pilot
+    /// can never wedge the key's waiters forever.
+    pub fn get_or_build<F>(&self, key: &CacheKey, build: F) -> Result<Arc<BuiltSchedule>>
+    where
+        F: FnOnce(Option<&BuiltSchedule>) -> Result<BuiltSchedule>,
+    {
+        let ks = key.encode();
+        let neighbor: Option<Arc<BuiltSchedule>>;
+        {
+            let mut guard = self.state.lock().expect("schedule cache poisoned");
+            let mut waited = false;
+            loop {
+                if let Some(built) = Self::lookup(&self.cfg, &mut guard, &ks) {
+                    return Ok(built);
+                }
+                if guard.inflight.contains(&ks) {
+                    if !waited {
+                        guard.stats.stampedes_averted += 1;
+                        waited = true;
+                    }
+                    guard = self.cv.wait(guard).expect("schedule cache poisoned");
+                    continue;
+                }
+                guard.inflight.insert(ks.clone());
+                guard.stats.misses += 1;
+                break;
+            }
+            neighbor = if self.cfg.warm_start {
+                Self::nearest_neighbor(&guard, key)
+            } else {
+                None
+            };
+        }
+
+        // Unwind guard: if `build` panics, unregister the key and wake the
+        // waiters (they will retry as builders). Disarmed on the normal
+        // path, where removal happens atomically with the insert below so
+        // no waiter can slip in a duplicate build between the two.
+        let mut unreg = UnregisterOnUnwind { cache: self, ks: &ks, armed: true };
+        let result = build(neighbor.as_deref());
+        unreg.armed = false;
+        drop(unreg);
+
+        let mut guard = self.state.lock().expect("schedule cache poisoned");
+        guard.inflight.remove(&ks);
+        self.cv.notify_all();
+        match result {
+            Ok(built) => {
+                let built = Arc::new(built);
+                guard.stats.pilot_nfe_built += built.pilot_nfe as u64;
+                // only SDM builds consume the neighbor (they are the ones
+                // with pilot η traces); COS/model-free builds ignore it
+                if neighbor.is_some() && built.pilot_nfe > 0 && !built.eta.is_empty() {
+                    guard.stats.warm_starts += 1;
+                }
+                Self::insert_locked(&self.cfg, &mut guard, key.clone(), built.clone(), now_unix());
+                drop(guard);
+                // only pilot-built schedules are worth a disk line:
+                // model-free grids rebuild for free and would crowd
+                // expensive SDM/COS entries out of a capacity-limited
+                // restore
+                if built.pilot_nfe > 0 {
+                    self.persist_append(key, &built);
+                }
+                Ok(built)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// TTL-aware lookup; bumps LRU/hit/saved-NFE accounting on a hit.
+    fn lookup(cfg: &CacheConfig, st: &mut State, ks: &str) -> Option<Arc<BuiltSchedule>> {
+        let expired = match st.entries.get(ks) {
+            None => return None,
+            Some(e) => cfg
+                .ttl
+                .map(|ttl| now_unix() - e.built_at_unix > ttl.as_secs_f64())
+                .unwrap_or(false),
+        };
+        if expired {
+            st.entries.remove(ks);
+            st.stats.expirations += 1;
+            return None;
+        }
+        st.tick += 1;
+        let tick = st.tick;
+        let saved;
+        let built;
+        {
+            let e = st.entries.get_mut(ks).expect("checked above");
+            e.last_used = tick;
+            e.hits += 1;
+            saved = e.built.pilot_nfe as u64;
+            built = e.built.clone();
+        }
+        st.stats.hits += 1;
+        st.stats.pilot_nfe_saved += saved;
+        Some(built)
+    }
+
+    /// Nearest cached build with the same dataset/param/tag and a
+    /// different step count (minimum |Δsteps|).
+    fn nearest_neighbor(st: &State, key: &CacheKey) -> Option<Arc<BuiltSchedule>> {
+        let mut best: Option<(usize, &Entry)> = None;
+        for e in st.entries.values() {
+            if e.key.dataset == key.dataset
+                && e.key.param == key.param
+                && e.key.tag == key.tag
+                && e.key.model_fp == key.model_fp
+                && e.key.steps != key.steps
+            {
+                let d = key.steps.abs_diff(e.key.steps);
+                if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                    best = Some((d, e));
+                }
+            }
+        }
+        best.map(|(_, e)| e.built.clone())
+    }
+
+    fn insert_locked(
+        cfg: &CacheConfig,
+        st: &mut State,
+        key: CacheKey,
+        built: Arc<BuiltSchedule>,
+        built_at_unix: f64,
+    ) {
+        st.tick += 1;
+        let tick = st.tick;
+        st.entries.insert(
+            key.encode(),
+            Entry { key, built, built_at_unix, last_used: tick, hits: 0 },
+        );
+        Self::evict_past_capacity(cfg, st);
+    }
+
+    /// Evict least-recently-used entries down to `cfg.capacity`,
+    /// recording every eviction (shared by the insert and restore paths).
+    fn evict_past_capacity(cfg: &CacheConfig, st: &mut State) {
+        if cfg.capacity == 0 {
+            return;
+        }
+        while st.entries.len() > cfg.capacity {
+            let victim = st
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    st.entries.remove(&k);
+                    st.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Restore entries persisted by earlier processes, accepting
+    /// everything parseable. See [`ScheduleCache::load_persisted_validated`].
+    pub fn load_persisted(&self) -> Result<usize> {
+        self.load_persisted_validated(|_, _| true)
+    }
+
+    /// Restore entries persisted by earlier processes. Call once, on a
+    /// freshly constructed cache (the hub does this at load). Corrupt
+    /// lines and free-to-rebuild entries (pilot NFE 0) are skipped, later
+    /// duplicates win, TTL-expired entries are dropped, capacity is
+    /// enforced, and the file is compacted so append-only growth stays
+    /// bounded across restarts. Returns the number of live entries
+    /// restored.
+    ///
+    /// `valid` vetoes individual entries — the hub rejects grids whose σ
+    /// range no longer matches the dataset's current artifact, so
+    /// regenerated artifacts never silently serve stale pilot schedules.
+    pub fn load_persisted_validated<F>(&self, valid: F) -> Result<usize>
+    where
+        F: Fn(&CacheKey, &BuiltSchedule) -> bool,
+    {
+        let Some(path) = self.cfg.persist_path.clone() else { return Ok(0) };
+        let lines = read_jsonl_lenient(&path)?;
+        let now = now_unix();
+        let restored;
+        {
+            let mut guard = self.state.lock().expect("schedule cache poisoned");
+            let st = &mut *guard;
+            for v in &lines {
+                let Ok((key, built, built_at)) = entry_from_json(v) else { continue };
+                if built.pilot_nfe == 0 {
+                    continue; // model-free: rebuilding is cheaper than trusting disk
+                }
+                if let Some(ttl) = self.cfg.ttl {
+                    if now - built_at > ttl.as_secs_f64() {
+                        continue;
+                    }
+                }
+                if !valid(&key, &built) {
+                    continue;
+                }
+                st.tick += 1;
+                let tick = st.tick;
+                st.entries.insert(
+                    key.encode(),
+                    Entry {
+                        key,
+                        built: Arc::new(built),
+                        built_at_unix: built_at,
+                        last_used: tick,
+                        hits: 0,
+                    },
+                );
+            }
+            Self::evict_past_capacity(&self.cfg, st);
+            restored = st.entries.len();
+            st.stats.persisted_loads += restored as u64;
+            if !lines.is_empty() {
+                self.persist_rewrite_locked(st);
+            }
+        }
+        Ok(restored)
+    }
+
+    /// Append one completed build to the persistence file (best-effort:
+    /// persistence failures must not fail serving).
+    fn persist_append(&self, key: &CacheKey, built: &BuiltSchedule) {
+        let Some(path) = &self.cfg.persist_path else { return };
+        let line = entry_to_json(key, built, now_unix());
+        let _io = self.persist.lock().expect("persist lock poisoned");
+        if let Err(e) = append_jsonl(path, &line) {
+            eprintln!("schedule cache: persist append to {} failed: {e:#}", path.display());
+        }
+    }
+
+    /// Rewrite the persistence file from the resident entries (compaction;
+    /// caller holds the state lock). Best-effort, atomic via tmp+rename.
+    fn persist_rewrite_locked(&self, st: &State) {
+        let Some(path) = &self.cfg.persist_path else { return };
+        let _io = self.persist.lock().expect("persist lock poisoned");
+        let mut text = String::new();
+        for e in st.entries.values().filter(|e| e.built.pilot_nfe > 0) {
+            text.push_str(&entry_to_json(&e.key, &e.built, e.built_at_unix).to_string());
+            text.push('\n');
+        }
+        let tmp = path.with_extension("tmp");
+        let write = (|| -> std::io::Result<()> {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(&tmp, text)?;
+            std::fs::rename(&tmp, path)
+        })();
+        if let Err(e) = write {
+            eprintln!("schedule cache: compacting {} failed: {e}", path.display());
+        }
+    }
+
+    /// Counters for the `stats` op / operator dashboards.
+    pub fn stats_json(&self) -> Json {
+        let guard = self.state.lock().expect("schedule cache poisoned");
+        let s = &guard.stats;
+        let mut m = BTreeMap::new();
+        m.insert("entries".into(), Json::Num(guard.entries.len() as f64));
+        // hits absorbed by currently-resident entries (resets as entries
+        // are evicted/expired — the delta vs `hits` shows churn)
+        let resident_hits: u64 = guard.entries.values().map(|e| e.hits).sum();
+        m.insert("resident_hits".into(), Json::Num(resident_hits as f64));
+        m.insert("inflight".into(), Json::Num(guard.inflight.len() as f64));
+        m.insert("hits".into(), Json::Num(s.hits as f64));
+        m.insert("misses".into(), Json::Num(s.misses as f64));
+        m.insert("stampedes_averted".into(), Json::Num(s.stampedes_averted as f64));
+        m.insert("evictions".into(), Json::Num(s.evictions as f64));
+        m.insert("expirations".into(), Json::Num(s.expirations as f64));
+        m.insert("persisted_loads".into(), Json::Num(s.persisted_loads as f64));
+        m.insert("warm_starts".into(), Json::Num(s.warm_starts as f64));
+        m.insert("pilot_nfe_built".into(), Json::Num(s.pilot_nfe_built as f64));
+        m.insert("pilot_nfe_saved".into(), Json::Num(s.pilot_nfe_saved as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Removes `ks` from the in-flight set and wakes waiters when dropped
+/// while armed — the unwind path of a panicking builder. On the normal
+/// path the caller disarms it and performs the removal together with the
+/// result handling instead.
+struct UnregisterOnUnwind<'a> {
+    cache: &'a ScheduleCache,
+    ks: &'a str,
+    armed: bool,
+}
+
+impl Drop for UnregisterOnUnwind<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // avoid a double panic if the state mutex is somehow poisoned
+        if let Ok(mut st) = self.cache.state.lock() {
+            st.inflight.remove(self.ks);
+        }
+        self.cache.cv.notify_all();
+    }
+}
+
+fn entry_to_json(key: &CacheKey, built: &BuiltSchedule, built_at_unix: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("dataset".into(), Json::Str(key.dataset.clone()));
+    m.insert("param".into(), Json::Str(key.param.clone()));
+    m.insert("tag".into(), Json::Str(key.tag.clone()));
+    m.insert("steps".into(), Json::Num(key.steps as f64));
+    m.insert("model_fp".into(), Json::Num(key.model_fp as f64));
+    m.insert("built_at_unix".into(), Json::Num(built_at_unix));
+    m.insert("pilot_nfe".into(), Json::Num(built.pilot_nfe as f64));
+    m.insert("sigmas".into(), num_arr(&built.grid.sigmas));
+    m.insert("raw_sigmas".into(), num_arr(&built.raw_sigmas));
+    m.insert("eta".into(), num_arr(&built.eta));
+    m.insert("s_hat".into(), num_arr(&built.s_hat));
+    Json::Obj(m)
+}
+
+fn entry_from_json(v: &Json) -> Result<(CacheKey, BuiltSchedule, f64)> {
+    let key = CacheKey {
+        dataset: v.get("dataset")?.as_str()?.to_string(),
+        param: v.get("param")?.as_str()?.to_string(),
+        tag: v.get("tag")?.as_str()?.to_string(),
+        steps: v.get("steps")?.as_usize()?,
+        model_fp: v.get("model_fp")?.as_f64()? as u64,
+    };
+    let grid = SigmaGrid::new(v.get("sigmas")?.as_vec_f64()?)?;
+    // absent in files written before raw knots were persisted; entries
+    // without them simply cannot seed warm starts
+    let raw_sigmas = match v.get("raw_sigmas") {
+        Ok(x) => x.as_vec_f64().unwrap_or_default(),
+        Err(_) => Vec::new(),
+    };
+    let built = BuiltSchedule {
+        grid,
+        raw_sigmas,
+        eta: v.get("eta")?.as_vec_f64()?,
+        s_hat: v.get("s_hat")?.as_vec_f64()?,
+        pilot_nfe: v.get("pilot_nfe")?.as_usize()?,
+    };
+    let built_at = v.get("built_at_unix")?.as_f64()?;
+    Ok((key, built, built_at))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn key(dataset: &str, steps: usize) -> CacheKey {
+        CacheKey {
+            dataset: dataset.into(),
+            param: "edm".into(),
+            tag: "sdm(test)".into(),
+            steps,
+            model_fp: 7,
+        }
+    }
+
+    fn grid(top: f64) -> BuiltSchedule {
+        BuiltSchedule {
+            grid: SigmaGrid::new(vec![top, 1.0, 0.002, 0.0]).unwrap(),
+            raw_sigmas: vec![top, 2.0, 1.0, 0.002],
+            eta: vec![0.1, 0.2, 0.3],
+            s_hat: vec![1.0, 2.0, 3.0],
+            pilot_nfe: 7,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "sdm_cache_test_{name}_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let c = ScheduleCache::new(CacheConfig::default());
+        let k = key("toy", 12);
+        let b1 = c.get_or_build(&k, |_| Ok(grid(80.0))).unwrap();
+        let b2 = c.get_or_build(&k, |_| panic!("must not rebuild")).unwrap();
+        assert_eq!(b1.grid, b2.grid);
+        assert_eq!(c.len(), 1);
+        let s = c.stats_json();
+        assert_eq!(s.get("hits").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(s.get("misses").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(s.get("pilot_nfe_built").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(s.get("pilot_nfe_saved").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn builder_error_is_returned_and_key_stays_buildable() {
+        let c = ScheduleCache::new(CacheConfig::default());
+        let k = key("toy", 12);
+        let err = c.get_or_build(&k, |_| anyhow::bail!("pilot exploded"));
+        assert!(err.is_err());
+        assert_eq!(c.len(), 0);
+        // the failed key is not wedged in-flight
+        let ok = c.get_or_build(&k, |_| Ok(grid(80.0)));
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn panicking_builder_does_not_wedge_the_key() {
+        // ThreadPool workers survive job panics (PR 1), so a panicking
+        // pilot must not leave its key registered in-flight forever —
+        // that would block every future requester of the key
+        let c = ScheduleCache::new(CacheConfig::default());
+        let k = key("toy", 12);
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = c.get_or_build(&k, |_| panic!("pilot blew up"));
+        }));
+        assert!(unwound.is_err());
+        let b = c.get_or_build(&k, |_| Ok(grid(80.0))).unwrap();
+        assert_eq!(b.grid.sigmas[0], 80.0);
+        let s = c.stats_json();
+        assert_eq!(s.get("inflight").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn lru_eviction_past_capacity() {
+        let c = ScheduleCache::new(CacheConfig { capacity: 2, ..CacheConfig::default() });
+        let (ka, kb, kc) = (key("a", 8), key("b", 8), key("c", 8));
+        c.get_or_build(&ka, |_| Ok(grid(80.0))).unwrap();
+        c.get_or_build(&kb, |_| Ok(grid(80.0))).unwrap();
+        // touch `a` so `b` is the LRU victim when `c` arrives
+        c.get_or_build(&ka, |_| panic!("hit expected")).unwrap();
+        c.get_or_build(&kc, |_| Ok(grid(80.0))).unwrap();
+        assert_eq!(c.len(), 2);
+        // `a` was recently used, so it survived the eviction of `b`
+        c.get_or_build(&ka, |_| panic!("a must have survived (recently used)"))
+            .unwrap();
+        let rebuilt_b = AtomicUsize::new(0);
+        c.get_or_build(&kb, |_| {
+            rebuilt_b.fetch_add(1, Ordering::SeqCst);
+            Ok(grid(80.0))
+        })
+        .unwrap();
+        assert_eq!(rebuilt_b.load(Ordering::SeqCst), 1, "evicted b must rebuild");
+        let s = c.stats_json();
+        assert_eq!(s.get("evictions").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let c = ScheduleCache::new(CacheConfig {
+            ttl: Some(Duration::from_millis(30)),
+            ..CacheConfig::default()
+        });
+        let k = key("toy", 12);
+        c.get_or_build(&k, |_| Ok(grid(80.0))).unwrap();
+        c.get_or_build(&k, |_| panic!("fresh entry must hit")).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let rebuilt = AtomicUsize::new(0);
+        c.get_or_build(&k, |_| {
+            rebuilt.fetch_add(1, Ordering::SeqCst);
+            Ok(grid(80.0))
+        })
+        .unwrap();
+        assert_eq!(rebuilt.load(Ordering::SeqCst), 1, "expired entry must rebuild");
+        let s = c.stats_json();
+        assert_eq!(s.get("expirations").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn warm_start_picks_nearest_neighbor_same_family() {
+        let c = ScheduleCache::new(CacheConfig::default());
+        c.get_or_build(&key("toy", 8), |_| Ok(grid(8.0))).unwrap();
+        c.get_or_build(&key("toy", 32), |_| Ok(grid(32.0))).unwrap();
+        // different dataset must never be offered as a neighbor
+        c.get_or_build(&key("other", 10), |w| {
+            assert!(w.is_none(), "cross-dataset neighbor offered");
+            Ok(grid(10.0))
+        })
+        .unwrap();
+        // a different model fingerprint (regenerated artifact) must not
+        // seed either, even at the nearest step count
+        let stale = CacheKey { model_fp: 8, ..key("toy", 11) };
+        c.get_or_build(&stale, |w| {
+            assert!(w.is_none(), "cross-fingerprint neighbor offered");
+            Ok(grid(11.0))
+        })
+        .unwrap();
+        // steps=12 is nearest to the steps=8 entry (σ_max encodes which)
+        c.get_or_build(&key("toy", 12), |w| {
+            let w = w.expect("neighbor expected");
+            assert_eq!(w.grid.sigmas[0], 8.0);
+            Ok(grid(12.0))
+        })
+        .unwrap();
+        let s = c.stats_json();
+        assert_eq!(s.get("warm_starts").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn warm_start_disabled_offers_no_neighbor() {
+        let c = ScheduleCache::new(CacheConfig { warm_start: false, ..CacheConfig::default() });
+        c.get_or_build(&key("toy", 8), |_| Ok(grid(8.0))).unwrap();
+        c.get_or_build(&key("toy", 12), |w| {
+            assert!(w.is_none());
+            Ok(grid(12.0))
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn concurrent_misses_single_flight() {
+        let c = Arc::new(ScheduleCache::new(CacheConfig::default()));
+        let builds = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let c = c.clone();
+            let builds = builds.clone();
+            handles.push(std::thread::spawn(move || {
+                c.get_or_build(&key("toy", 12), |_| {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(40));
+                    Ok(grid(80.0))
+                })
+                .unwrap()
+            }));
+        }
+        let outs: Vec<Arc<BuiltSchedule>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one builder must run");
+        for o in &outs {
+            assert_eq!(o.grid, outs[0].grid);
+        }
+        let s = c.stats_json();
+        let averted = s.get("stampedes_averted").unwrap().as_f64().unwrap();
+        let hits = s.get("hits").unwrap().as_f64().unwrap();
+        assert_eq!(s.get("misses").unwrap().as_f64().unwrap(), 1.0);
+        // every non-builder lands a hit (waiters hit after waking, late
+        // arrivals hit directly); waiters additionally count as averted
+        assert_eq!(hits, 5.0);
+        assert!((1.0..=5.0).contains(&averted), "averted {averted}");
+    }
+
+    #[test]
+    fn persistence_roundtrip_and_compaction() {
+        let path = tmp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let cfg = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+        let c1 = ScheduleCache::new(cfg.clone());
+        c1.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        c1.get_or_build(&key("toy", 18), |_| Ok(grid(70.0))).unwrap();
+        drop(c1);
+
+        let c2 = ScheduleCache::new(cfg.clone());
+        let restored = c2.load_persisted().unwrap();
+        assert_eq!(restored, 2);
+        assert_eq!(c2.len(), 2);
+        let b = c2
+            .get_or_build(&key("toy", 12), |_| panic!("restored entry must hit"))
+            .unwrap();
+        assert_eq!(b.grid.sigmas, vec![80.0, 1.0, 0.002, 0.0]);
+        assert_eq!(b.raw_sigmas, vec![80.0, 2.0, 1.0, 0.002]);
+        assert_eq!(b.eta, vec![0.1, 0.2, 0.3]);
+        assert_eq!(b.pilot_nfe, 7);
+        let s = c2.stats_json();
+        assert_eq!(s.get("persisted_loads").unwrap().as_f64().unwrap(), 2.0);
+
+        // the compacted file reloads identically
+        let c3 = ScheduleCache::new(cfg);
+        assert_eq!(c3.load_persisted().unwrap(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn model_free_entries_are_not_persisted() {
+        let path = tmp_path("modelfree");
+        let _ = std::fs::remove_file(&path);
+        let cfg = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+        let c1 = ScheduleCache::new(cfg.clone());
+        let free = BuiltSchedule {
+            grid: SigmaGrid::new(vec![80.0, 1.0, 0.002, 0.0]).unwrap(),
+            raw_sigmas: Vec::new(),
+            eta: Vec::new(),
+            s_hat: Vec::new(),
+            pilot_nfe: 0,
+        };
+        c1.get_or_build(&key("toy", 12), |_| Ok(free)).unwrap();
+        c1.get_or_build(&key("toy", 18), |_| Ok(grid(80.0))).unwrap();
+        assert_eq!(c1.len(), 2, "model-free grids still cache in memory");
+        drop(c1);
+        let c2 = ScheduleCache::new(cfg);
+        assert_eq!(
+            c2.load_persisted().unwrap(),
+            1,
+            "only the pilot-built entry earns a disk line"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validated_restore_vetoes_entries() {
+        let path = tmp_path("veto");
+        let _ = std::fs::remove_file(&path);
+        let cfg = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+        let c1 = ScheduleCache::new(cfg.clone());
+        c1.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        c1.get_or_build(&key("other", 12), |_| Ok(grid(70.0))).unwrap();
+        drop(c1);
+        let c2 = ScheduleCache::new(cfg);
+        let n = c2
+            .load_persisted_validated(|key, built| {
+                assert!(built.grid.sigmas[0] > 0.0);
+                key.dataset == "toy"
+            })
+            .unwrap();
+        assert_eq!(n, 1, "vetoed entries must not be restored");
+        c2.get_or_build(&key("toy", 12), |_| panic!("survivor must hit")).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_persist_lines_are_skipped() {
+        let path = tmp_path("corrupt");
+        let _ = std::fs::remove_file(&path);
+        let cfg = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+        let c1 = ScheduleCache::new(cfg.clone());
+        c1.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        drop(c1);
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{\"dataset\":\"x\",\"param\":").unwrap(); // torn
+            writeln!(f, "{{\"dataset\":\"x\"}}").unwrap(); // missing fields
+        }
+        let c2 = ScheduleCache::new(cfg);
+        assert_eq!(c2.load_persisted().unwrap(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

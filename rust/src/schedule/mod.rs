@@ -9,17 +9,20 @@
 //!
 //! Model-free schedules build from `(n, dataset)` alone; pilot-based
 //! schedules (COS, SDM) additionally run a small pilot batch through the
-//! denoiser. The coordinator caches built schedules per config
-//! ([`crate::coordinator::schedule_cache`]).
+//! denoiser. The coordinator caches built schedules per config in the
+//! [`cache`] subsystem (single-flight, TTL/LRU, persistence, warm-started
+//! pilots — DESIGN.md §6).
 
 pub mod baselines;
+pub mod cache;
 pub mod pilot;
 pub mod resample;
 pub mod wasserstein;
 
 pub use baselines::{cosine_schedule, edm_schedule, linear_sigma_schedule, logsnr_schedule};
+pub use cache::{CacheConfig, CacheKey, ScheduleCache};
 pub use pilot::{pilot_measure, PilotMeasurement};
-pub use resample::{cos_schedule, resample_n_steps};
+pub use resample::{cos_schedule, cos_schedule_measured, resample_n_steps};
 pub use wasserstein::{wasserstein_schedule, EtaSchedule, WassersteinConfig, WassersteinOutput};
 
 use crate::diffusion::{Param, SigmaGrid};
@@ -49,15 +52,22 @@ pub enum ScheduleSpec {
 
 impl ScheduleSpec {
     /// Short tag used in table rows and cache keys.
+    ///
+    /// Every schedule-affecting field must appear here: the coordinator's
+    /// schedule cache and the batcher's group key both key on this string,
+    /// so omitting a field (as `Cos` and `Sdm { pilot_rows }` once did)
+    /// silently aliases differently-configured pilots to one cached grid.
     pub fn tag(&self) -> String {
         match self {
             ScheduleSpec::Edm { rho } => format!("edm(rho={rho})"),
             ScheduleSpec::LinearSigma => "linear".into(),
             ScheduleSpec::Cosine => "cosine".into(),
             ScheduleSpec::LogSnr => "logsnr".into(),
-            ScheduleSpec::Cos { .. } => "cos".into(),
-            ScheduleSpec::Sdm { eta_min, eta_max, p, q, .. } => {
-                format!("sdm(eta={eta_min}..{eta_max},p={p},q={q})")
+            ScheduleSpec::Cos { pilot_mult, pilot_rows } => {
+                format!("cos(m={pilot_mult},r={pilot_rows})")
+            }
+            ScheduleSpec::Sdm { eta_min, eta_max, p, q, pilot_rows } => {
+                format!("sdm(eta={eta_min}..{eta_max},p={p},q={q},r={pilot_rows})")
             }
         }
     }
@@ -94,14 +104,54 @@ impl ScheduleSpec {
         model: &dyn Denoiser,
         rng: &mut Rng,
     ) -> Result<SigmaGrid> {
+        Ok(self.build_with(n, ds, param, model, rng, None)?.grid)
+    }
+
+    /// Like [`ScheduleSpec::build`], but returns the full build record
+    /// (grid + pilot traces + pilot NFE) and accepts an optional
+    /// warm-start schedule: a cached build for a neighboring step budget
+    /// of the *same* (dataset, parameterization, spec) whose σ knots seed
+    /// Algorithm 1's NEXTTIMESTEP reference grid, cutting the pilot's
+    /// LINESEARCH evaluations. Warm starting only affects SDM builds;
+    /// every other variant ignores it.
+    pub fn build_with(
+        &self,
+        n: usize,
+        ds: &DatasetInfo,
+        param: Param,
+        model: &dyn Denoiser,
+        rng: &mut Rng,
+        warm: Option<&BuiltSchedule>,
+    ) -> Result<BuiltSchedule> {
         anyhow::ensure!(n >= 2, "need at least 2 schedule knots");
+        let model_free = |grid: Result<SigmaGrid>| {
+            grid.map(|grid| BuiltSchedule {
+                grid,
+                raw_sigmas: Vec::new(),
+                eta: Vec::new(),
+                s_hat: Vec::new(),
+                pilot_nfe: 0,
+            })
+        };
         match self {
-            ScheduleSpec::Edm { rho } => edm_schedule(n, ds.sigma_min, ds.sigma_max, *rho),
-            ScheduleSpec::LinearSigma => linear_sigma_schedule(n, ds.sigma_min, ds.sigma_max),
-            ScheduleSpec::Cosine => cosine_schedule(n, ds.sigma_min, ds.sigma_max),
-            ScheduleSpec::LogSnr => logsnr_schedule(n, ds.sigma_min, ds.sigma_max),
+            ScheduleSpec::Edm { rho } => {
+                model_free(edm_schedule(n, ds.sigma_min, ds.sigma_max, *rho))
+            }
+            ScheduleSpec::LinearSigma => {
+                model_free(linear_sigma_schedule(n, ds.sigma_min, ds.sigma_max))
+            }
+            ScheduleSpec::Cosine => model_free(cosine_schedule(n, ds.sigma_min, ds.sigma_max)),
+            ScheduleSpec::LogSnr => model_free(logsnr_schedule(n, ds.sigma_min, ds.sigma_max)),
             ScheduleSpec::Cos { pilot_mult, pilot_rows } => {
-                cos_schedule(n, ds, param, model, rng, *pilot_mult, *pilot_rows)
+                let (grid, pilot_nfe) =
+                    cos_schedule_measured(n, ds, param, model, rng, *pilot_mult, *pilot_rows)?;
+                Ok(BuiltSchedule {
+                    grid,
+                    raw_sigmas: Vec::new(),
+                    eta: Vec::new(),
+                    s_hat: Vec::new(),
+                    pilot_nfe,
+                })
             }
             ScheduleSpec::Sdm { eta_min, eta_max, p, q, pilot_rows } => {
                 let cfg = WassersteinConfig {
@@ -111,13 +161,44 @@ impl ScheduleSpec {
                         p: *p,
                         sigma_max: ds.sigma_max,
                     },
+                    // seed NEXTTIMESTEP from the neighbor's *raw committed*
+                    // pilot knots: those are the ones Algorithm 1 accepted
+                    // near Δt_max, so the line search starts near
+                    // acceptance. The resampled grid is q-warped to a step
+                    // budget and would seed over/under-bold trials.
+                    ref_sigmas: warm.and_then(|w| {
+                        (w.raw_sigmas.len() >= 2).then(|| w.raw_sigmas.clone())
+                    }),
                     ..WassersteinConfig::default()
                 };
                 let out = wasserstein_schedule(ds, param, model, rng, &cfg, *pilot_rows)?;
-                resample_n_steps(&out.sigmas, &out.eta, n, *q, ds.sigma_max)
+                let grid = resample_n_steps(&out.sigmas, &out.eta, n, *q, ds.sigma_max)?;
+                Ok(BuiltSchedule {
+                    grid,
+                    raw_sigmas: out.sigmas,
+                    eta: out.eta,
+                    s_hat: out.s_hat,
+                    pilot_nfe: out.pilot_nfe,
+                })
             }
         }
     }
+}
+
+/// One completed schedule build: the N-knot grid plus Algorithm 1's raw
+/// output — the committed variable-length σ knots (`raw_sigmas`, which
+/// future neighboring builds warm-start from) and the per-interval
+/// achieved η_i / Ŝ_i traces (lengths follow `raw_sigmas`, not the
+/// resampled grid; all empty for model-free and COS builds) — plus the
+/// pilot NFE spent. This is the unit the schedule cache stores, persists,
+/// and warm-starts from.
+#[derive(Clone, Debug)]
+pub struct BuiltSchedule {
+    pub grid: SigmaGrid,
+    pub raw_sigmas: Vec<f64>,
+    pub eta: Vec<f64>,
+    pub s_hat: Vec<f64>,
+    pub pilot_nfe: usize,
 }
 
 #[cfg(test)]
@@ -128,6 +209,29 @@ mod tests {
     fn tags_are_stable() {
         assert_eq!(ScheduleSpec::Edm { rho: 7.0 }.tag(), "edm(rho=7)");
         assert!(ScheduleSpec::sdm_defaults("cifar10g", Param::vp()).tag().starts_with("sdm("));
+    }
+
+    #[test]
+    fn tags_do_not_alias_across_pilot_configs() {
+        // regression: `Cos { .. }` used to serialize to a bare "cos" and
+        // `Sdm` omitted pilot_rows, so specs with different pilot configs
+        // collided on one cache key and one batcher group
+        let cos_a = ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 };
+        let cos_b = ScheduleSpec::Cos { pilot_mult: 8, pilot_rows: 128 };
+        let cos_c = ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 64 };
+        assert_ne!(cos_a.tag(), cos_b.tag());
+        assert_ne!(cos_a.tag(), cos_c.tag());
+        assert_eq!(cos_a.tag(), ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 }.tag());
+
+        let sdm = |pilot_rows| ScheduleSpec::Sdm {
+            eta_min: 0.02,
+            eta_max: 0.2,
+            p: 1.0,
+            q: 0.25,
+            pilot_rows,
+        };
+        assert_ne!(sdm(128).tag(), sdm(16).tag());
+        assert_eq!(sdm(128).tag(), sdm(128).tag());
     }
 
     #[test]

@@ -101,10 +101,27 @@ pub fn cos_schedule(
     pilot_mult: usize,
     pilot_rows: usize,
 ) -> Result<SigmaGrid> {
+    Ok(cos_schedule_measured(n, ds, param, model, rng, pilot_mult, pilot_rows)?.0)
+}
+
+/// [`cos_schedule`] plus the pilot NFE it spent (one model evaluation per
+/// dense-grid interval — the schedule cache records this so hits/averted
+/// stampedes can report the build cost they amortized).
+pub fn cos_schedule_measured(
+    n: usize,
+    ds: &DatasetInfo,
+    param: Param,
+    model: &dyn Denoiser,
+    rng: &mut Rng,
+    pilot_mult: usize,
+    pilot_rows: usize,
+) -> Result<(SigmaGrid, usize)> {
     let dense_n = (n * pilot_mult.max(2)).max(n + 2);
     let dense = edm_schedule(dense_n, ds.sigma_min, ds.sigma_max, ds.rho)?;
+    let pilot_nfe = dense.intervals();
     let pm = pilot_measure(ds.dim, ds.k, &dense, param, model, rng, pilot_rows)?;
-    resample_n_steps(&pm.sigmas, &pm.eta, n, 0.0, ds.sigma_max)
+    let grid = resample_n_steps(&pm.sigmas, &pm.eta, n, 0.0, ds.sigma_max)?;
+    Ok((grid, pilot_nfe))
 }
 
 #[cfg(test)]

@@ -151,6 +151,47 @@ pub fn read_json_file(path: &std::path::Path) -> Result<Json> {
     Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
 }
 
+/// Build a JSON array from a numeric slice.
+pub fn num_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// Append one value as a line to a JSON-lines file, creating the file (and
+/// any parent directory) on first use. The write is a single `writeln!`,
+/// so concurrent appenders should serialize externally.
+pub fn append_jsonl(path: &std::path::Path, v: &Json) -> Result<()> {
+    use std::io::Write as _;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    writeln!(f, "{}", v.to_string()).with_context(|| format!("appending {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a JSON-lines file leniently: blank and unparseable lines (e.g. a
+/// torn tail from a crash mid-append) are skipped, and a missing file is
+/// an empty result. Only real I/O failures are errors.
+pub fn read_jsonl_lenient(path: &std::path::Path) -> Result<Vec<Json>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    Ok(text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| Json::parse(l).ok())
+        .collect())
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -353,5 +394,29 @@ mod tests {
         assert!(v.get("y").is_err());
         assert!(v.get("x").unwrap().as_usize().is_err());
         assert!(v.get("x").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn jsonl_roundtrip_skips_torn_tail() {
+        let path = std::env::temp_dir().join(format!(
+            "sdm_jsonl_test_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        assert!(read_jsonl_lenient(&path).unwrap().is_empty(), "missing file is empty");
+        append_jsonl(&path, &Json::parse(r#"{"a":1}"#).unwrap()).unwrap();
+        append_jsonl(&path, &num_arr(&[1.0, 2.5])).unwrap();
+        // simulate a crash mid-append: a torn, unparseable final line
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"torn\":").unwrap();
+        }
+        let lines = read_jsonl_lenient(&path).unwrap();
+        assert_eq!(lines.len(), 2, "torn tail must be skipped: {lines:?}");
+        assert_eq!(lines[0].get("a").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(lines[1].as_vec_f64().unwrap(), vec![1.0, 2.5]);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -26,8 +26,10 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 ///
 /// The pool is shared across threads (`Arc<ThreadPool>` is how the
 /// coordinator hands it to every batcher), so the submission side is
-/// mutex-wrapped — same idiom as the router's route senders — keeping
-/// `ThreadPool: Sync` without relying on `mpsc::Sender`'s `Sync`-ness.
+/// mutex-wrapped. (The router's route senders dropped their mutexes —
+/// `mpsc::Sender` is `Sync` on modern std — but `execute` also guards the
+/// `tx: Option<..>` shutdown state, so the lock stays; job submission is
+/// not the coordinator's hot path.)
 pub struct ThreadPool {
     tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,

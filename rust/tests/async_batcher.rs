@@ -95,8 +95,9 @@ impl TestBatcher {
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
         let hub = Arc::new(hub);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let join = std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, rx, policy, pool)
+            batcher_loop("toy".into(), hub, m2, rx, policy, pool, stop)
         });
         TestBatcher { tx: Some(tx), metrics, join: Some(join) }
     }

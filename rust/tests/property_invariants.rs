@@ -117,8 +117,9 @@ fn batcher_conserves_requests_under_random_load() {
         let pool = Arc::new(ThreadPool::new(4));
         let (tx, rx) = mpsc::channel();
         let m2 = metrics.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let handle = std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default(), pool)
+            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default(), pool, stop)
         });
         let mut rng = Rng::new(n_requests as u64);
         let mut expected = Vec::new();

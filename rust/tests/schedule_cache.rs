@@ -1,0 +1,214 @@
+//! Schedule-cache integration: single-flight stampede protection,
+//! persistence across hub restarts, and warm-started pilots — asserted
+//! with an eval-counting [`Denoiser`] so "how many pilots actually ran"
+//! is measured at the model boundary, not inferred from cache counters.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+
+use sdm::coordinator::EngineHub;
+use sdm::diffusion::Param;
+use sdm::model::gmm::testmodel::toy;
+use sdm::model::{Denoiser, EvalOut, GmmModel};
+use sdm::schedule::{CacheConfig, ScheduleSpec};
+
+/// Counts every `denoise_v` call reaching the model.
+struct CountingDenoiser {
+    inner: GmmModel,
+    calls: AtomicUsize,
+}
+
+impl CountingDenoiser {
+    fn new() -> Arc<CountingDenoiser> {
+        Arc::new(CountingDenoiser { inner: toy(), calls: AtomicUsize::new(0) })
+    }
+
+    fn calls(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl Denoiser for CountingDenoiser {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn backend(&self) -> &'static str {
+        "counting"
+    }
+
+    fn denoise_v(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+    ) -> sdm::Result<EvalOut> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.denoise_v(xhat, sigma, a, b, mask)
+    }
+}
+
+fn sdm_spec() -> ScheduleSpec {
+    ScheduleSpec::Sdm { eta_min: 0.02, eta_max: 0.2, p: 1.0, q: 0.25, pilot_rows: 8 }
+}
+
+fn counting_hub(cache: CacheConfig) -> (EngineHub, Arc<CountingDenoiser>) {
+    let counter = CountingDenoiser::new();
+    let model: Arc<dyn Denoiser> = counter.clone();
+    let hub = EngineHub::from_models_with_cache(vec![(toy().info, model)], cache);
+    (hub, counter)
+}
+
+fn tmp_cache_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "sdm_schedule_cache_it_{name}_{}.jsonl",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn concurrent_misses_on_one_sdm_key_run_exactly_one_pilot() {
+    // measure what one pilot costs at the model boundary
+    let (ref_hub, ref_counter) = counting_hub(CacheConfig::default());
+    ref_hub.schedule("toy", Param::Edm, &sdm_spec(), 10).unwrap();
+    let one_pilot_calls = ref_counter.calls();
+    assert!(one_pilot_calls > 0, "an SDM build must evaluate the model");
+
+    // stampede: K threads miss the same key at the same instant
+    let (hub, counter) = counting_hub(CacheConfig::default());
+    let hub = Arc::new(hub);
+    let k = 8usize;
+    let barrier = Arc::new(Barrier::new(k));
+    let mut handles = Vec::new();
+    for _ in 0..k {
+        let hub = hub.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            hub.schedule("toy", Param::Edm, &sdm_spec(), 10).unwrap()
+        }));
+    }
+    let grids: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for g in &grids {
+        assert_eq!(g, &grids[0], "all threads must share the single build");
+    }
+    assert_eq!(
+        counter.calls(),
+        one_pilot_calls,
+        "{k} concurrent misses must run exactly one pilot, not {k}"
+    );
+    assert_eq!(hub.cached_schedules(), 1);
+    let stats = hub.cache_stats();
+    assert_eq!(stats.get("misses").unwrap().as_f64().unwrap(), 1.0);
+    let averted = stats.get("stampedes_averted").unwrap().as_f64().unwrap();
+    assert!(averted >= 1.0, "waiters must be counted: {averted}");
+    assert!(
+        stats.get("pilot_nfe_saved").unwrap().as_f64().unwrap() > 0.0,
+        "hits/waits must be credited the pilot NFE they skipped"
+    );
+}
+
+#[test]
+fn reloaded_hub_serves_persisted_sdm_schedules_with_zero_pilot_nfe() {
+    let path = tmp_cache_path("roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let cache = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+
+    let (hub1, counter1) = counting_hub(cache.clone());
+    let g1 = hub1.schedule("toy", Param::Edm, &sdm_spec(), 12).unwrap();
+    assert!(counter1.calls() > 0);
+    drop(hub1);
+
+    // a "restarted" hub over the same persist path: the schedule must be
+    // served from disk without a single model evaluation
+    let (hub2, counter2) = counting_hub(cache);
+    assert_eq!(hub2.cached_schedules(), 1, "persisted entry must be restored at load");
+    let g2 = hub2.schedule("toy", Param::Edm, &sdm_spec(), 12).unwrap();
+    assert_eq!(g1, g2, "restored schedule must be bit-identical");
+    assert_eq!(
+        counter2.calls(),
+        0,
+        "a hub reloaded from a persisted cache must spend zero pilot NFE"
+    );
+    let stats = hub2.cache_stats();
+    assert_eq!(stats.get("persisted_loads").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(stats.get("hits").unwrap().as_f64().unwrap(), 1.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn regenerated_artifact_invalidates_persisted_entries() {
+    // "regenerate" the artifact two ways: a changed σ range, and changed
+    // mixture parameters with the σ range intact (the common retrain
+    // case). Both change the dataset fingerprint, so the persisted grid
+    // piloted against the old model must NOT be restored.
+    let mutations: Vec<(&str, Box<dyn Fn(&mut sdm::model::DatasetInfo)>)> = vec![
+        ("sigma_max", Box::new(|info| info.sigma_max = 9.0)),
+        ("mus", Box::new(|info| info.mus[0] += 0.5)),
+    ];
+    for (label, mutate) in mutations {
+        let path = tmp_cache_path(&format!("stale_{label}"));
+        let _ = std::fs::remove_file(&path);
+        let cache = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+        let (hub1, _counter1) = counting_hub(cache.clone());
+        hub1.schedule("toy", Param::Edm, &sdm_spec(), 12).unwrap();
+        drop(hub1);
+
+        let mut info = toy().info;
+        mutate(&mut info);
+        let model: Arc<dyn Denoiser> = CountingDenoiser::new();
+        let hub2 = EngineHub::from_models_with_cache(vec![(info, model)], cache);
+        assert_eq!(
+            hub2.cached_schedules(),
+            0,
+            "{label}: entries piloted against a different artifact must be vetoed"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn sdm_miss_warm_starts_from_neighboring_step_count() {
+    // cold baseline: what building steps=18 costs with no neighbors
+    let (cold_hub, cold_counter) = counting_hub(CacheConfig::default());
+    cold_hub.schedule("toy", Param::Edm, &sdm_spec(), 18).unwrap();
+    let cold_calls = cold_counter.calls();
+
+    // warm: build steps=16 first, then 18 warm-starts from its knots
+    let (hub, counter) = counting_hub(CacheConfig::default());
+    hub.schedule("toy", Param::Edm, &sdm_spec(), 16).unwrap();
+    let before = counter.calls();
+    hub.schedule("toy", Param::Edm, &sdm_spec(), 18).unwrap();
+    let warm_calls = counter.calls() - before;
+    assert!(
+        warm_calls <= cold_calls,
+        "warm-started pilot ({warm_calls} evals) must not cost more than a \
+         cold pilot ({cold_calls} evals)"
+    );
+    let stats = hub.cache_stats();
+    assert_eq!(stats.get("warm_starts").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(hub.cached_schedules(), 2);
+
+    // and disabling warm start stays cold-deterministic
+    let (off_hub, off_counter) =
+        counting_hub(CacheConfig { warm_start: false, ..CacheConfig::default() });
+    off_hub.schedule("toy", Param::Edm, &sdm_spec(), 16).unwrap();
+    let before = off_counter.calls();
+    off_hub.schedule("toy", Param::Edm, &sdm_spec(), 18).unwrap();
+    assert_eq!(
+        off_counter.calls() - before,
+        cold_calls,
+        "with warm start off, the second budget must pay the full cold pilot"
+    );
+    assert_eq!(
+        off_hub.cache_stats().get("warm_starts").unwrap().as_f64().unwrap(),
+        0.0
+    );
+}

@@ -68,7 +68,13 @@ fn sdm_schedule_request_hits_cache_on_second_call() {
         eprintln!("skipping: no artifacts");
         return;
     }
-    let hub = Arc::new(EngineHub::load(&artifact_dir(None), ModelBackend::Native).unwrap());
+    // non-persistent cache: this test asserts the cache starts empty, so
+    // it must not restore entries a previous run persisted next to the
+    // artifacts
+    let cache = sdm::schedule::CacheConfig { persist_path: None, ..Default::default() };
+    let hub = Arc::new(
+        EngineHub::load_with(&artifact_dir(None), ModelBackend::Native, cache).unwrap(),
+    );
     let server = Server::start(hub.clone(), ServerConfig::default()).unwrap();
     let addr = server.local_addr.to_string();
     let mut c = Client::connect(&addr).unwrap();
