@@ -1,0 +1,32 @@
+//! Sampler/denoiser-kernel bench target (perf trajectory recorder).
+//!
+//! Registers the counting global allocator so the harness reports real
+//! allocations-per-eval, then drives [`sdm::perf::run_sampler_bench`]:
+//! legacy `denoise_v` (the pre-kernel baseline — re-measured every run),
+//! the uniform-σ into-kernel (serial + row-sharded), and end-to-end
+//! `run_sampler` per solver. Appends one labeled run to
+//! `BENCH_sampler.json`.
+//!
+//! Usage: `cargo bench --bench bench_sampler [-- --smoke] [-- --label X]`
+
+use sdm::util::alloc::CountingAlloc;
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let label = argv
+        .iter()
+        .position(|a| a == "--label")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| if smoke { "smoke".to_string() } else { "bench".to_string() });
+    sdm::perf::run_sampler_bench(&sdm::perf::BenchOptions {
+        smoke,
+        out_path: Some(std::path::PathBuf::from("BENCH_sampler.json")),
+        label,
+    })
+    .expect("bench_sampler harness failed");
+}

@@ -320,17 +320,20 @@ fn flush(
                 let slice = &samples[offset * dim..(offset + rows) * dim];
                 offset += rows;
                 let stats = sample_mean_cov(slice, dim);
+                // one clock read per reply: the recorded latency and the
+                // reported latency are the same number
+                let latency_us = p.timer.elapsed_us();
                 let resp = Response::SampleOk {
                     n: rows,
                     nfe,
                     mean: stats.mean.clone(),
                     trace_cov: stats.cov.trace(),
-                    latency_us: p.timer.elapsed_us(),
+                    latency_us,
                     batched_with,
                     samples: p.req.return_samples.then(|| slice.to_vec()),
                     dim,
                 };
-                metrics.record_request(dataset, p.timer.elapsed_us(), rows, nfe);
+                metrics.record_request(dataset, latency_us, rows, nfe);
                 let _ = p.reply.send(resp);
             }
             metrics.record_batch(dataset, batched_with, offset);

@@ -231,6 +231,30 @@ impl EngineHub {
         }
     }
 
+    /// Wire a worker pool into every native oracle so large uniform-σ
+    /// batches row-shard deterministically across it
+    /// ([`GmmModel::with_shard_pool`]; output stays bit-identical to the
+    /// serial kernel). Affects the serving model only on native-backend
+    /// hubs — PJRT batching belongs to the executor. Call before wrapping
+    /// the hub in an `Arc` (serving does; experiment subcommands keep the
+    /// serial oracle).
+    pub fn attach_shard_pool(&mut self, pool: Arc<crate::util::ThreadPool>, min_rows: usize) {
+        for e in self.datasets.values_mut() {
+            // only swap the serving model when it *is* the oracle — hubs
+            // built over instrumented test doubles keep their models
+            let serves_oracle = std::ptr::eq(
+                Arc::as_ptr(&e.model) as *const u8,
+                Arc::as_ptr(&e.oracle) as *const u8,
+            );
+            let sharded =
+                Arc::new((*e.oracle).clone().with_shard_pool(Arc::clone(&pool), min_rows));
+            if serves_oracle {
+                e.model = sharded.clone();
+            }
+            e.oracle = sharded;
+        }
+    }
+
     pub fn dataset_names(&self) -> Vec<String> {
         self.datasets.keys().cloned().collect()
     }

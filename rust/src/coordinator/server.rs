@@ -72,11 +72,23 @@ pub struct Server {
 impl Server {
     /// Bind and start serving in background threads.
     pub fn start(hub: Arc<EngineHub>, cfg: ServerConfig) -> Result<Server> {
+        let pool = Arc::new(ThreadPool::new(cfg.resolved_pool_threads()));
+        Server::start_with_pool(hub, cfg, pool)
+    }
+
+    /// [`Server::start`] with a caller-built worker pool — the serve path
+    /// creates the pool first so it can also be wired into the hub's
+    /// native oracles for row-sharded kernel evals
+    /// ([`EngineHub::attach_shard_pool`]) before the hub is shared.
+    pub fn start_with_pool(
+        hub: Arc<EngineHub>,
+        cfg: ServerConfig,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(ServerMetrics::new());
-        let pool = Arc::new(ThreadPool::new(cfg.resolved_pool_threads()));
         let router = Arc::new(Router::start(hub.clone(), metrics.clone(), cfg.policy, pool));
         let stop = Arc::new(AtomicBool::new(false));
 

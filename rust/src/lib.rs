@@ -30,6 +30,7 @@ pub mod metrics;
 pub mod sampler;
 pub mod coordinator;
 pub mod experiments;
+pub mod perf;
 
 /// Crate-wide result type (anyhow-based; this is an application-grade
 /// library whose errors are surfaced to operators, not matched on).

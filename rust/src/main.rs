@@ -177,6 +177,20 @@ fn run() -> Result<()> {
             Ok(())
         }
         "bench-client" => bench_client(&args),
+        "bench-sampler" => {
+            // same harness as `cargo bench --bench bench_sampler`; the CLI
+            // binary has no counting allocator, so allocs/call is omitted
+            let smoke = args.has("smoke");
+            let out = args.get("out", "BENCH_sampler.json");
+            let label = args.get("label", "cli");
+            args.finish()?;
+            sdm::perf::run_sampler_bench(&sdm::perf::BenchOptions {
+                smoke,
+                out_path: Some(std::path::PathBuf::from(out)),
+                label,
+            })?;
+            Ok(())
+        }
         _ => {
             print_help();
             Ok(())
@@ -190,12 +204,20 @@ fn serve(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7433");
     let pool_threads = args.get_usize("pool-threads", 0)?;
     let max_inflight = args.get_usize("max-inflight", 4)?;
+    // native-oracle kernel evals row-shard across the worker pool from
+    // this batch size up (0 disables sharding entirely)
+    let shard_min_rows = args.get_usize("shard-min-rows", 512)?;
     let cache = cache_config(args, &dir, backend, true)?;
     args.finish()?;
     let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, ..Default::default() };
     cfg.policy.max_inflight = max_inflight;
-    let hub = Arc::new(EngineHub::load_with(&dir, backend, cache)?);
-    let server = Server::start(hub, cfg)?;
+    let pool = Arc::new(sdm::util::ThreadPool::new(cfg.resolved_pool_threads()));
+    let mut hub = EngineHub::load_with(&dir, backend, cache)?;
+    if shard_min_rows > 0 {
+        hub.attach_shard_pool(Arc::clone(&pool), shard_min_rows);
+    }
+    let hub = Arc::new(hub);
+    let server = Server::start_with_pool(hub, cfg, pool)?;
     println!(
         "sdm serving on {} (send {{\"op\":\"shutdown\"}} to stop)",
         server.local_addr
@@ -381,7 +403,8 @@ fn print_help() {
          Wasserstein-bounded timesteps), three-layer rust+JAX+Pallas serving repro.\n\n\
          subcommands:\n\
          \x20 serve         start the TCP coordinator (--addr, --backend,\n\
-         \x20               --pool-threads N, --max-inflight N)\n\
+         \x20               --pool-threads N, --max-inflight N, --shard-min-rows N\n\
+         \x20               [0 disables row-sharded native kernel evals])\n\
          \x20               schedule cache: --cache-capacity N (0=unbounded),\n\
          \x20               --cache-ttl-s SECS (0=never expire),\n\
          \x20               --no-cache-persist, --no-warm-start (serve defaults\n\
@@ -401,6 +424,8 @@ fn print_help() {
          \x20 qualitative   sample dumps (Figs. 5-9 analogue)\n\
          \x20 bench-client  drive a running server (--addr --requests --concurrency\n\
          \x20               [--open-loop-rps R  Poisson offered-load mode])\n\
+         \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
+         \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\
          \x20 ablate-clock  curvature-clock ablation; ablate-refgrid: Alg.1 warm-start\n\n\
          common flags: --artifacts DIR --backend pjrt|native --samples N --seed S"
     );

@@ -11,16 +11,44 @@
 //! oracle is the test reference, the fast backend for wide experiment
 //! grids, and the source of ground-truth samples/moments for metrics.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
 use crate::diffusion::Param;
 use crate::linalg::Mat;
+use crate::model::kernel::{KernelScratch, MaskRef};
 use crate::model::{DatasetInfo, Denoiser, EvalOut};
-use crate::util::Rng;
+use crate::util::{Rng, ThreadPool};
 use crate::Result;
 
 /// Closed-form mixture model over one workload.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct GmmModel {
     pub info: DatasetInfo,
+    /// optional deterministic row-sharding of large batches (serving
+    /// wires the coordinator's worker pool in via
+    /// [`GmmModel::with_shard_pool`]; experiments and tests default off).
+    shard: Option<ShardCfg>,
+}
+
+impl std::fmt::Debug for GmmModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GmmModel")
+            .field("info", &self.info)
+            .field("sharded", &self.shard.is_some())
+            .finish()
+    }
+}
+
+/// Row-sharding policy for the uniform-σ kernel.
+#[derive(Clone)]
+struct ShardCfg {
+    pool: Arc<ThreadPool>,
+    /// batches below this row count stay on the caller thread.
+    min_rows: usize,
+    /// snapshot of the model's `info` taken at [`GmmModel::with_shard_pool`]
+    /// time, shareable with 'static pool jobs without a per-eval clone.
+    info: Arc<DatasetInfo>,
 }
 
 /// Posterior responsibilities and shared intermediates for one row.
@@ -33,7 +61,24 @@ struct Posterior {
 
 impl GmmModel {
     pub fn new(info: DatasetInfo) -> GmmModel {
-        GmmModel { info }
+        GmmModel { info, shard: None }
+    }
+
+    /// Enable deterministic row-sharding of large uniform-σ batches
+    /// across `pool`: batches of at least `min_rows` rows split into
+    /// contiguous shards, each integrated by whichever worker (or the
+    /// caller — scheduling is help-first, so calling from inside a pool
+    /// job can never deadlock) claims it. Shard results are placed by
+    /// index, and every shard runs the identical row kernel with the
+    /// identical σ-precompute, so output stays bit-identical to the
+    /// serial path.
+    ///
+    /// Snapshots `self.info` for the shard workers — call (or re-call)
+    /// this *after* any mutation of the public `info` field.
+    pub fn with_shard_pool(mut self, pool: Arc<ThreadPool>, min_rows: usize) -> GmmModel {
+        let info = Arc::new(self.info.clone());
+        self.shard = Some(ShardCfg { pool, min_rows: min_rows.max(2), info });
+        self
     }
 
     pub fn dim(&self) -> usize {
@@ -268,6 +313,133 @@ fn matvec(m: &Mat, v: &[f64]) -> Vec<f64> {
     (0..n).map(|i| (0..n).map(|j| m.at(i, j) * v[j]).sum()).collect()
 }
 
+/// Hoist the σ-only per-component terms of the posterior into `sc`:
+/// v_k = τ_k² + σ², the log-det term 0.5·dim·ln v_k, and α_k = τ_k²/v_k.
+/// Each is computed with exactly the arithmetic the per-row path used, so
+/// hoisting cannot change a single bit of any row's output.
+fn precompute_sigma_terms(info: &DatasetInfo, s2: f64, sc: &mut KernelScratch) {
+    let (dim, k) = (info.dim, info.k);
+    for c in 0..k {
+        let v = info.tau2[c] + s2;
+        sc.var[c] = v;
+        sc.half_dim_ln_var[c] = 0.5 * (dim as f64) * v.ln();
+        sc.alpha[c] = info.tau2[c] / v;
+    }
+}
+
+/// One row of the fused denoise + velocity kernel, writing into caller
+/// slices. Expression-for-expression this is [`GmmModel::posterior`] +
+/// [`GmmModel::denoise_row`] + the velocity fold of the legacy batch
+/// loop; the f64 accumulation order is the bit-identity contract
+/// (DESIGN.md §7) — do not re-associate any of it.
+#[allow(clippy::too_many_arguments)]
+fn row_kernel(
+    info: &DatasetInfo,
+    x: &[f32],
+    s2: f64,
+    ar: f64,
+    br: f64,
+    mask_row: &[f32],
+    sc: &mut KernelScratch,
+    d_out: &mut [f32],
+    v_out: &mut [f32],
+    vn_out: &mut f32,
+) {
+    let (dim, k) = (info.dim, info.k);
+    for j in 0..dim {
+        sc.xrow[j] = x[j] as f64;
+    }
+    // posterior logits over the hoisted σ-terms
+    for c in 0..k {
+        let mu = info.mu(c);
+        let mut d2 = 0.0f64;
+        for j in 0..dim {
+            let d = sc.xrow[j] - mu[j];
+            d2 += d * d;
+        }
+        sc.logits[c] =
+            info.logw[c] - 0.5 * d2 / sc.var[c] - sc.half_dim_ln_var[c] + mask_row[c] as f64;
+    }
+    let m = sc.logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    for c in 0..k {
+        sc.resp[c] = (sc.logits[c] - m).exp();
+    }
+    let z: f64 = sc.resp.iter().sum();
+    for c in 0..k {
+        sc.resp[c] /= z;
+    }
+    // weighted accumulate: D = Σ r_k [(σ²/v_k)μ_k] + (Σ r_k α_k)·x
+    for j in 0..dim {
+        sc.drow[j] = 0.0;
+    }
+    let mut c1 = 0.0f64;
+    for c in 0..k {
+        let alpha = sc.alpha[c];
+        c1 += sc.resp[c] * alpha;
+        let coef = sc.resp[c] * s2 / sc.var[c];
+        let mu = info.mu(c);
+        for j in 0..dim {
+            sc.drow[j] += coef * mu[j];
+        }
+    }
+    for j in 0..dim {
+        sc.drow[j] += c1 * sc.xrow[j];
+    }
+    // fused velocity + rowwise ‖v‖²
+    let mut vn = 0.0f64;
+    for j in 0..dim {
+        let xj = sc.xrow[j];
+        let dj = sc.drow[j];
+        let vv = ar * xj + br * (xj - dj);
+        d_out[j] = dj as f32;
+        v_out[j] = vv as f32;
+        vn += vv * vv;
+    }
+    *vn_out = vn as f32;
+}
+
+/// Do the live `info` and the shard snapshot agree on every parameter the
+/// row kernel reads (dim, k, μ, log w, τ²)? Everything else (name, σ
+/// range, classes, exact moments) never enters `row_kernel`.
+fn kernel_params_match(live: &DatasetInfo, snap: &DatasetInfo) -> bool {
+    live.dim == snap.dim
+        && live.k == snap.k
+        && live.mus == snap.mus
+        && live.logw == snap.logw
+        && live.tau2 == snap.tau2
+}
+
+/// Owned mask copy for the sharded path ('static pool jobs cannot borrow
+/// the caller's slices).
+struct MaskData {
+    data: Vec<f32>,
+    shared_row: bool,
+}
+
+impl MaskData {
+    fn row(&self, r: usize, k: usize) -> &[f32] {
+        if self.shared_row {
+            &self.data
+        } else {
+            &self.data[r * k..(r + 1) * k]
+        }
+    }
+}
+
+/// σ-precompute snapshot shared read-only by every shard worker.
+struct SigmaTerms {
+    var: Vec<f64>,
+    half_dim_ln_var: Vec<f64>,
+    alpha: Vec<f64>,
+}
+
+/// One shard's output block, placed by shard index on collection.
+struct ShardOut {
+    d: Vec<f32>,
+    v: Vec<f32>,
+    vnorm2: Vec<f32>,
+}
+
 impl Denoiser for GmmModel {
     fn dim(&self) -> usize {
         self.info.dim
@@ -281,6 +453,11 @@ impl Denoiser for GmmModel {
         "native"
     }
 
+    /// Legacy batch entry point — kept verbatim as the *seed reference
+    /// implementation* (allocating per-row oracle): the `kernel_parity`
+    /// suite asserts the fast paths against it bit-for-bit, and the
+    /// sampler bench re-measures it every run as the "before" side of
+    /// the §Perf-iteration-3 trajectory. Not on the hot path.
     fn denoise_v(
         &self,
         xhat: &[f32],
@@ -315,6 +492,227 @@ impl Denoiser for GmmModel {
         }
         Ok(EvalOut { d: d_out, v: v_out, vnorm2: vn_out })
     }
+
+    /// Generic per-row-σ path, allocation-free: the σ-terms are
+    /// recomputed per row (σ may differ row to row) with the identical
+    /// arithmetic, so this is bit-for-bit the legacy `denoise_row` loop.
+    fn denoise_v_into(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        out: &mut EvalOut,
+        scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        let (dim, k) = (self.info.dim, self.info.k);
+        let rows = sigma.len();
+        anyhow::ensure!(xhat.len() == rows * dim, "xhat shape");
+        anyhow::ensure!(mask.len() == rows * k, "mask shape");
+        anyhow::ensure!(a.len() == rows && b.len() == rows, "coeff shape");
+        out.ensure_shape(rows, dim);
+        scratch.ensure_dims(dim, k);
+        for r in 0..rows {
+            let sr = sigma[r] as f64;
+            precompute_sigma_terms(&self.info, sr * sr, scratch);
+            row_kernel(
+                &self.info,
+                &xhat[r * dim..(r + 1) * dim],
+                sr * sr,
+                a[r] as f64,
+                b[r] as f64,
+                &mask[r * k..(r + 1) * k],
+                scratch,
+                &mut out.d[r * dim..(r + 1) * dim],
+                &mut out.v[r * dim..(r + 1) * dim],
+                &mut out.vnorm2[r],
+            );
+        }
+        Ok(())
+    }
+
+    /// Uniform-σ fast path: σ-terms hoisted out of the row loop, no
+    /// broadcast vectors, zero heap allocations inside the row loop —
+    /// and, when a shard pool is attached, deterministic help-first
+    /// row-sharding for large batches.
+    fn denoise_v_uniform_into(
+        &self,
+        xhat: &[f32],
+        rows: usize,
+        sigma: f32,
+        a: f32,
+        b: f32,
+        mask: MaskRef<'_>,
+        out: &mut EvalOut,
+        scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        let (dim, k) = (self.info.dim, self.info.k);
+        anyhow::ensure!(xhat.len() == rows * dim, "xhat shape");
+        mask.validate(rows, k)?;
+        out.ensure_shape(rows, dim);
+        scratch.ensure_dims(dim, k);
+        let s2 = (sigma as f64) * (sigma as f64);
+        precompute_sigma_terms(&self.info, s2, scratch);
+        let (ar, br) = (a as f64, b as f64);
+        if let Some(cfg) = &self.shard {
+            // Sharding is bit-identical to the serial loop, so choosing
+            // between them per call is free of numeric consequences.
+            // Serial wins when:
+            // - the pool is saturated (pending ≥ threads): helpers would
+            //   queue behind other jobs and the caller would compute every
+            //   shard alone *after* paying the owned-copy setup — strictly
+            //   worse than not sharding (the batcher's flush jobs share
+            //   this pool, so saturation is the common high-load case);
+            // - the snapshot went stale: `info` is a public field, so it
+            //   can in principle be mutated after `with_shard_pool`
+            //   snapshotted it. The O(k·dim) parameter comparison — noise
+            //   next to a ≥min_rows batch — turns that into a silent perf
+            //   fallback instead of a silent numeric divergence.
+            if rows >= cfg.min_rows
+                && cfg.pool.threads() > 1
+                && cfg.pool.pending() < cfg.pool.threads()
+                && kernel_params_match(&self.info, &cfg.info)
+            {
+                return denoise_uniform_sharded(cfg, xhat, rows, s2, ar, br, mask, scratch, out);
+            }
+        }
+        for r in 0..rows {
+            row_kernel(
+                &self.info,
+                &xhat[r * dim..(r + 1) * dim],
+                s2,
+                ar,
+                br,
+                mask.row(r, k),
+                scratch,
+                &mut out.d[r * dim..(r + 1) * dim],
+                &mut out.v[r * dim..(r + 1) * dim],
+                &mut out.vnorm2[r],
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Help-first sharded evaluation of one uniform-σ batch: contiguous row
+/// shards are claimed from a shared counter by pool workers *and* the
+/// caller (so a saturated pool still progresses through the caller —
+/// the same non-deadlock argument as `generate_pooled`), computed into
+/// per-shard blocks with the identical row kernel and σ-precompute, and
+/// placed by shard index — bit-identical to the serial loop. The owned
+/// input/precompute copies are per-eval setup cost outside the row loop,
+/// paid only on batches above the sharding threshold.
+#[allow(clippy::too_many_arguments)]
+fn denoise_uniform_sharded(
+    cfg: &ShardCfg,
+    xhat: &[f32],
+    rows: usize,
+    s2: f64,
+    ar: f64,
+    br: f64,
+    mask: MaskRef<'_>,
+    scratch: &KernelScratch,
+    out: &mut EvalOut,
+) -> Result<()> {
+    let (dim, k) = (cfg.info.dim, cfg.info.k);
+    let threads = cfg.pool.threads();
+    let n_shards = threads.min(rows).max(1);
+    let shard_rows = (rows + n_shards - 1) / n_shards;
+    let n_shards = (rows + shard_rows - 1) / shard_rows;
+
+    // 'static job state: owned copies of the inputs + σ-precompute (the
+    // DatasetInfo snapshot was taken once in with_shard_pool)
+    let x: Arc<Vec<f32>> = Arc::new(xhat.to_vec());
+    let mask_data = Arc::new(match mask {
+        MaskRef::Row(m) => MaskData { data: m.to_vec(), shared_row: true },
+        MaskRef::Full(m) => MaskData { data: m.to_vec(), shared_row: false },
+    });
+    let pre = Arc::new(SigmaTerms {
+        var: scratch.var[..k].to_vec(),
+        half_dim_ln_var: scratch.half_dim_ln_var[..k].to_vec(),
+        alpha: scratch.alpha[..k].to_vec(),
+    });
+
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<(usize, ShardOut)>();
+
+    let worker: Arc<dyn Fn() + Send + Sync> = {
+        let info = Arc::clone(&cfg.info);
+        let x = Arc::clone(&x);
+        let mask_data = Arc::clone(&mask_data);
+        let pre = Arc::clone(&pre);
+        let next = Arc::clone(&next);
+        Arc::new(move || {
+            let mut sc = KernelScratch::new();
+            sc.ensure_dims(dim, k);
+            sc.var.copy_from_slice(&pre.var);
+            sc.half_dim_ln_var.copy_from_slice(&pre.half_dim_ln_var);
+            sc.alpha.copy_from_slice(&pre.alpha);
+            loop {
+                let s = next.fetch_add(1, Ordering::SeqCst);
+                if s >= n_shards {
+                    break;
+                }
+                let r0 = s * shard_rows;
+                let r1 = rows.min(r0 + shard_rows);
+                let n = r1 - r0;
+                let mut sh = ShardOut {
+                    d: vec![0.0f32; n * dim],
+                    v: vec![0.0f32; n * dim],
+                    vnorm2: vec![0.0f32; n],
+                };
+                for (i, r) in (r0..r1).enumerate() {
+                    row_kernel(
+                        &info,
+                        &x[r * dim..(r + 1) * dim],
+                        s2,
+                        ar,
+                        br,
+                        mask_data.row(r, k),
+                        &mut sc,
+                        &mut sh.d[i * dim..(i + 1) * dim],
+                        &mut sh.v[i * dim..(i + 1) * dim],
+                        &mut sh.vnorm2[i],
+                    );
+                }
+                // receiver outlives every claimable shard (see below)
+                let _ = tx.send((s, sh));
+            }
+        })
+    };
+
+    // never hand the pool more helpers than there are *other* shards
+    let helpers = threads.min(n_shards.saturating_sub(1));
+    for _ in 0..helpers {
+        let w = Arc::clone(&worker);
+        cfg.pool.execute(move || (*w)());
+    }
+    (*worker)();
+    // drop the caller's sender handle: once every helper finishes (or
+    // panics inside the pool's catch_unwind, dropping its Arc), the
+    // channel closes and a missing shard surfaces as an error instead of
+    // a hang
+    drop(worker);
+
+    let mut got = 0usize;
+    while got < n_shards {
+        match rx.recv() {
+            Ok((s, sh)) => {
+                let r0 = s * shard_rows;
+                let n = sh.vnorm2.len();
+                out.d[r0 * dim..r0 * dim + n * dim].copy_from_slice(&sh.d);
+                out.v[r0 * dim..r0 * dim + n * dim].copy_from_slice(&sh.v);
+                out.vnorm2[r0..r0 + n].copy_from_slice(&sh.vnorm2);
+                got += 1;
+            }
+            Err(_) => anyhow::bail!(
+                "sharded denoise lost {} shard(s) to a worker panic",
+                n_shards - got
+            ),
+        }
+    }
+    Ok(())
 }
 
 /// Deterministic miniature model shared by unit, property, and
@@ -372,7 +770,7 @@ pub mod testmodel {
 mod tests {
     use super::testmodel::toy;
     use super::*;
-    use crate::model::uncond_mask;
+    use crate::model::{uncond_mask, uncond_mask_row};
 
     #[test]
     fn denoiser_limits() {
@@ -526,6 +924,112 @@ mod tests {
         let (mean, cov) = m.class_moments(0);
         assert!((mean[0] - 2.0).abs() < 1e-12);
         assert!((cov.at(0, 0) - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_fast_path_is_bit_identical_to_generic() {
+        // the kernel contract: scalar σ/a/b + shared mask row must equal
+        // the broadcast-vector legacy path to the last bit
+        let m = toy();
+        let rows = 33; // deliberately odd
+        let mut rng = Rng::new(17);
+        let mut xhat = vec![0.0f32; rows * 3];
+        rng.fill_normal_f32(&mut xhat, 3.0);
+        for sigma in [0.002f32, 0.7, 80.0] {
+            let legacy = m
+                .denoise_v(
+                    &xhat,
+                    &vec![sigma; rows],
+                    &vec![0.4f32; rows],
+                    &vec![-1.2f32; rows],
+                    &uncond_mask(rows, 2),
+                )
+                .unwrap();
+            let mut out = EvalOut::default();
+            let mut sc = KernelScratch::new();
+            let row = uncond_mask_row(2);
+            m.denoise_v_uniform_into(
+                &xhat,
+                rows,
+                sigma,
+                0.4,
+                -1.2,
+                MaskRef::Row(&row),
+                &mut out,
+                &mut sc,
+            )
+            .unwrap();
+            assert_bits_eq(&legacy.d, &out.d, "d");
+            assert_bits_eq(&legacy.v, &out.v, "v");
+            assert_bits_eq(&legacy.vnorm2, &out.vnorm2, "vnorm2");
+        }
+    }
+
+    #[test]
+    fn sharded_uniform_path_is_bit_identical_to_serial() {
+        let serial = toy();
+        let pool = Arc::new(ThreadPool::new(3));
+        // min_rows below the batch size forces the sharded path
+        let sharded = toy().with_shard_pool(pool, 2);
+        let rows = 41; // odd: exercises the ragged final shard
+        let mut rng = Rng::new(23);
+        let mut xhat = vec![0.0f32; rows * 3];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let row = crate::model::class_mask_row(&serial.info.classes, 1);
+        for mask in [MaskRef::Row(&row), MaskRef::Full(&class_full(rows))] {
+            let mut a = EvalOut::default();
+            let mut b = EvalOut::default();
+            let mut sc = KernelScratch::new();
+            serial
+                .denoise_v_uniform_into(&xhat, rows, 1.3, 0.9, -0.4, mask, &mut a, &mut sc)
+                .unwrap();
+            sharded
+                .denoise_v_uniform_into(&xhat, rows, 1.3, 0.9, -0.4, mask, &mut b, &mut sc)
+                .unwrap();
+            assert_bits_eq(&a.d, &b.d, "d");
+            assert_bits_eq(&a.v, &b.v, "v");
+            assert_bits_eq(&a.vnorm2, &b.vnorm2, "vnorm2");
+        }
+    }
+
+    fn class_full(rows: usize) -> Vec<f32> {
+        crate::model::class_mask(rows, &toy().info.classes, 1)
+    }
+
+    #[test]
+    fn sharding_falls_back_to_live_info_when_snapshot_is_stale() {
+        // `info` is public: mutating it after with_shard_pool must not
+        // let the sharded path serve the stale snapshot — the guard
+        // detects the divergence and the serial loop answers from the
+        // live parameters, bit-identically to a fresh model
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut stale = toy().with_shard_pool(pool, 2);
+        stale.info.tau2[0] *= 2.0;
+        let fresh = GmmModel::new(stale.info.clone());
+        let rows = 24; // ≥ min_rows: would shard if the snapshot matched
+        let mut rng = Rng::new(3);
+        let mut xhat = vec![0.0f32; rows * 3];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let row = uncond_mask_row(2);
+        let mut a = EvalOut::default();
+        let mut b = EvalOut::default();
+        let mut sc = KernelScratch::new();
+        stale
+            .denoise_v_uniform_into(&xhat, rows, 0.9, 0.5, -0.5, MaskRef::Row(&row), &mut a, &mut sc)
+            .unwrap();
+        fresh
+            .denoise_v_uniform_into(&xhat, rows, 0.9, 0.5, -0.5, MaskRef::Row(&row), &mut b, &mut sc)
+            .unwrap();
+        assert_bits_eq(&a.d, &b.d, "d");
+        assert_bits_eq(&a.v, &b.v, "v");
+        assert_bits_eq(&a.vnorm2, &b.vnorm2, "vnorm2");
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what} length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Batched, allocation-free denoiser kernel substrate (§Perf iteration 3).
+//!
+//! Three pieces live here:
+//!
+//! - [`MaskRef`] — the component-mask argument of the fast eval entry
+//!   points: either one shared `k`-wide row (the overwhelmingly common
+//!   case — every row of a batch shares its class restriction) or a full
+//!   `[rows·k]` matrix for per-row conditioning.
+//! - [`KernelScratch`] — reusable temporaries for one model call: the
+//!   native oracle's per-row f64 workspace, its σ-only per-component
+//!   precompute, and the broadcast staging buffers the default trait
+//!   impls use to adapt legacy [`Denoiser::denoise_v`](crate::model::Denoiser::denoise_v)
+//!   implementations.
+//! - [`EvalScratch`] — the sampler-owned arena: every buffer
+//!   [`run_sampler`](crate::sampler::engine::run_sampler) (and the
+//!   schedule pilot paths) needs across steps and evals, allocated once
+//!   per run and reused for its whole lifetime.
+//!
+//! **Bit-identity invariant.** The fast paths must produce outputs
+//! bit-for-bit equal to the legacy per-row oracle (`GmmModel::denoise_row`
+//! driven through broadcast vectors): f64 row arithmetic and accumulation
+//! order are part of the kernel contract, not an implementation detail —
+//! determinism tests, the schedule cache, and pooled-vs-serial equality
+//! all rely on it. Only row-independent quantities whose computation is
+//! *unchanged* (merely hoisted) may be precomputed. See DESIGN.md §7.
+
+use crate::model::EvalOut;
+
+/// Component-logit mask argument for the fast eval entry points.
+///
+/// `Row` is one `k`-wide mask shared by every batch row; `Full` is the
+/// legacy row-major `[rows·k]` layout. Values are additive logits
+/// (0 = allowed, [`MASK_OFF`](crate::model::MASK_OFF) = excluded).
+#[derive(Clone, Copy, Debug)]
+pub enum MaskRef<'a> {
+    /// One `k`-wide row shared by all batch rows.
+    Row(&'a [f32]),
+    /// Full row-major `[rows·k]` mask.
+    Full(&'a [f32]),
+}
+
+impl<'a> MaskRef<'a> {
+    /// The mask row for batch row `r`.
+    #[inline]
+    pub fn row(&self, r: usize, k: usize) -> &'a [f32] {
+        match self {
+            MaskRef::Row(m) => m,
+            MaskRef::Full(m) => &m[r * k..(r + 1) * k],
+        }
+    }
+
+    /// Shape check against a `[rows, k]` batch.
+    pub fn validate(&self, rows: usize, k: usize) -> crate::Result<()> {
+        let (got, want) = match self {
+            MaskRef::Row(m) => (m.len(), k),
+            MaskRef::Full(m) => (m.len(), rows * k),
+        };
+        anyhow::ensure!(got == want, "mask shape: {got} values, want {want}");
+        Ok(())
+    }
+}
+
+/// Reusable temporaries for one fused model call.
+///
+/// All buffers grow on demand and are never shrunk; a scratch owned by a
+/// sampler run makes every subsequent model call allocation-free. The
+/// fields are crate-private: implementations inside this crate index them
+/// directly, external [`Denoiser`](crate::model::Denoiser) impls only
+/// pass the scratch through.
+#[derive(Clone, Debug, Default)]
+pub struct KernelScratch {
+    // --- native-kernel per-row f64 workspace ---------------------------
+    /// current row in f64 (len `dim`).
+    pub(crate) xrow: Vec<f64>,
+    /// denoised row accumulator in f64 (len `dim`).
+    pub(crate) drow: Vec<f64>,
+    /// per-component posterior logits (len `k`).
+    pub(crate) logits: Vec<f64>,
+    /// per-component responsibilities r_k (len `k`).
+    pub(crate) resp: Vec<f64>,
+    // --- σ-only per-component precompute (len `k` each) ----------------
+    /// v_k = τ_k² + σ².
+    pub(crate) var: Vec<f64>,
+    /// 0.5 · dim · ln v_k (the row-independent log-det term).
+    pub(crate) half_dim_ln_var: Vec<f64>,
+    /// α_k = τ_k² / v_k.
+    pub(crate) alpha: Vec<f64>,
+    // --- broadcast staging for legacy/batched backends -----------------
+    /// uniform σ broadcast to `rows`.
+    pub(crate) sig_v: Vec<f32>,
+    /// uniform a broadcast to `rows`.
+    pub(crate) a_v: Vec<f32>,
+    /// uniform b broadcast to `rows`.
+    pub(crate) b_v: Vec<f32>,
+    /// shared mask row tiled to `[rows·k]`.
+    pub(crate) mask_full: Vec<f32>,
+}
+
+impl KernelScratch {
+    pub fn new() -> KernelScratch {
+        KernelScratch::default()
+    }
+
+    /// Size the f64 workspace and precompute buffers for a `[dim, k]`
+    /// model (no-op once grown).
+    pub(crate) fn ensure_dims(&mut self, dim: usize, k: usize) {
+        self.xrow.resize(dim, 0.0);
+        self.drow.resize(dim, 0.0);
+        self.logits.resize(k, 0.0);
+        self.resp.resize(k, 0.0);
+        self.var.resize(k, 0.0);
+        self.half_dim_ln_var.resize(k, 0.0);
+        self.alpha.resize(k, 0.0);
+    }
+
+    /// Stage uniform scalars (and, for a shared-row mask, the tiled mask)
+    /// as broadcast vectors for backends that only speak the legacy
+    /// per-row-σ interface.
+    pub(crate) fn fill_broadcast(
+        &mut self,
+        rows: usize,
+        k: usize,
+        sigma: f32,
+        a: f32,
+        b: f32,
+        mask: MaskRef<'_>,
+    ) {
+        self.sig_v.clear();
+        self.sig_v.resize(rows, sigma);
+        self.a_v.clear();
+        self.a_v.resize(rows, a);
+        self.b_v.clear();
+        self.b_v.resize(rows, b);
+        if let MaskRef::Row(m) = mask {
+            debug_assert_eq!(m.len(), k);
+            self.mask_full.clear();
+            self.mask_full.reserve(rows * k);
+            for _ in 0..rows {
+                self.mask_full.extend_from_slice(m);
+            }
+        }
+    }
+}
+
+/// The sampler-owned arena: one allocation site for every buffer an
+/// integration (or pilot) loop touches per eval and per step.
+///
+/// Ownership rules (DESIGN.md §7): the arena belongs to exactly one
+/// sequential loop. `cur` receives the eval at the current interval
+/// start, `prev` holds the previous interval's (they swap roles at the
+/// end of each step — velocities are double-buffered, never cloned), and
+/// `aux` receives any second eval inside an interval (Heun correction,
+/// Algorithm-1 trial). `xhat`, `euler_x`, and `blend_x` are staging
+/// buffers whose contents never survive a step.
+#[derive(Clone, Debug, Default)]
+pub struct EvalScratch {
+    /// model output at the current interval start (v_i).
+    pub cur: EvalOut,
+    /// previous interval's output (κ̂ cache, deferred-η̂ reference).
+    pub prev: EvalOut,
+    /// second eval inside one interval (Heun / trial states).
+    pub aux: EvalOut,
+    /// x̂ = x/s(t) staging for s ≠ 1 parameterizations.
+    pub xhat: Vec<f32>,
+    /// Euler predictor state.
+    pub euler_x: Vec<f32>,
+    /// Heun-corrected state staged for the Λ blend (eq. 9).
+    pub blend_x: Vec<f32>,
+    /// kernel temporaries shared by every eval of the run.
+    pub kernel: KernelScratch,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_ref_rows() {
+        let shared = [0.0f32, -1.0];
+        let m = MaskRef::Row(&shared);
+        assert_eq!(m.row(0, 2), &shared);
+        assert_eq!(m.row(7, 2), &shared);
+        assert!(m.validate(64, 2).is_ok());
+        assert!(m.validate(64, 3).is_err());
+
+        let full = [0.0f32, -1.0, -2.0, 0.0];
+        let f = MaskRef::Full(&full);
+        assert_eq!(f.row(0, 2), &full[0..2]);
+        assert_eq!(f.row(1, 2), &full[2..4]);
+        assert!(f.validate(2, 2).is_ok());
+        assert!(f.validate(3, 2).is_err());
+    }
+
+    #[test]
+    fn scratch_grows_and_broadcasts() {
+        let mut sc = KernelScratch::new();
+        sc.ensure_dims(3, 2);
+        assert_eq!(sc.xrow.len(), 3);
+        assert_eq!(sc.alpha.len(), 2);
+        let row = [0.0f32, -5.0];
+        sc.fill_broadcast(4, 2, 1.5, 0.25, -0.5, MaskRef::Row(&row));
+        assert_eq!(sc.sig_v, vec![1.5; 4]);
+        assert_eq!(sc.a_v, vec![0.25; 4]);
+        assert_eq!(sc.b_v, vec![-0.5; 4]);
+        assert_eq!(sc.mask_full.len(), 8);
+        assert_eq!(&sc.mask_full[2..4], &row);
+        // shrinking rows shrinks the staged broadcasts too
+        sc.fill_broadcast(2, 2, 9.0, 0.0, 0.0, MaskRef::Row(&row));
+        assert_eq!(sc.sig_v.len(), 2);
+    }
+}

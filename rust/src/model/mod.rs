@@ -6,15 +6,17 @@
 pub mod chaos;
 pub mod datasets;
 pub mod gmm;
+pub mod kernel;
 pub mod pjrt;
 
 pub use datasets::{DatasetInfo, DatasetRegistry};
 pub use gmm::GmmModel;
+pub use kernel::{EvalScratch, KernelScratch, MaskRef};
 
 use crate::Result;
 
 /// Output of one fused model evaluation over a batch (row-major [B, D]).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct EvalOut {
     /// Denoised prediction D(x̂; σ).
     pub d: Vec<f32>,
@@ -25,8 +27,24 @@ pub struct EvalOut {
     pub vnorm2: Vec<f32>,
 }
 
+impl EvalOut {
+    /// Size the buffers for a `[rows, dim]` batch (grow or truncate; the
+    /// into-kernels overwrite every element, so stale values never leak).
+    pub fn ensure_shape(&mut self, rows: usize, dim: usize) {
+        self.d.resize(rows * dim, 0.0);
+        self.v.resize(rows * dim, 0.0);
+        self.vnorm2.resize(rows, 0.0);
+    }
+}
+
 /// The request-path model interface. Implementations must be thread-safe:
 /// the coordinator calls them from batcher workers.
+///
+/// `denoise_v` is the required legacy entry point (allocating, per-row
+/// broadcast vectors); the `*_into` methods are the allocation-free hot
+/// path with default impls that adapt any legacy implementation, so
+/// external wrappers keep working unchanged while the native oracle and
+/// the PJRT facade override them.
 pub trait Denoiser: Send + Sync {
     /// Data dimensionality D.
     fn dim(&self) -> usize;
@@ -48,6 +66,60 @@ pub trait Denoiser: Send + Sync {
         b: &[f32],
         mask: &[f32],
     ) -> Result<EvalOut>;
+
+    /// [`Denoiser::denoise_v`] writing into a caller-owned [`EvalOut`].
+    ///
+    /// Default impl evaluates the legacy path and moves the result into
+    /// `out`; allocation-free implementations overwrite `out` in place.
+    #[allow(clippy::too_many_arguments)]
+    fn denoise_v_into(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        out: &mut EvalOut,
+        scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        let _ = scratch;
+        *out = self.denoise_v(xhat, sigma, a, b, mask)?;
+        Ok(())
+    }
+
+    /// Uniform-σ fast path: one scalar (σ, a, b) triple for the whole
+    /// batch — the only shape [`eval_at`] ever produces — plus a
+    /// [`MaskRef`] that is usually one shared row. Implementations must
+    /// return outputs bit-identical to broadcasting the scalars through
+    /// [`Denoiser::denoise_v`] (the kernel contract, DESIGN.md §7).
+    ///
+    /// Default impl stages broadcast vectors in `scratch` and calls the
+    /// legacy path, so wrapper models (chaos, counting test doubles)
+    /// observe exactly one `denoise_v` call per eval, as before.
+    #[allow(clippy::too_many_arguments)]
+    fn denoise_v_uniform_into(
+        &self,
+        xhat: &[f32],
+        rows: usize,
+        sigma: f32,
+        a: f32,
+        b: f32,
+        mask: MaskRef<'_>,
+        out: &mut EvalOut,
+        scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        let k = self.k();
+        // reject wrong-shaped masks here: a bad Row would otherwise be
+        // silently tiled into a wrong-shaped full mask in release builds
+        mask.validate(rows, k)?;
+        scratch.fill_broadcast(rows, k, sigma, a, b, mask);
+        let mask_full: &[f32] = match mask {
+            MaskRef::Full(m) => m,
+            MaskRef::Row(_) => &scratch.mask_full,
+        };
+        *out = self.denoise_v(xhat, &scratch.sig_v, &scratch.a_v, &scratch.b_v, mask_full)?;
+        Ok(())
+    }
 }
 
 /// Additive logit value that excludes a component (matches the python
@@ -57,6 +129,10 @@ pub const MASK_OFF: f32 = -1.0e30;
 /// Evaluate the model at integration time `t` of parameterization `p` with
 /// state `x` in x-space: builds x̂ = x/s(t) and the velocity coefficients,
 /// calls the fused kernel once. The returned `v` is the true dx/dt.
+///
+/// Convenience wrapper over [`eval_at_into`] that allocates its own
+/// output and scratch — fine for one-shot callers; loops should own an
+/// [`EvalScratch`] and use [`eval_at_into`] directly.
 pub fn eval_at(
     model: &dyn Denoiser,
     p: crate::diffusion::Param,
@@ -65,23 +141,46 @@ pub fn eval_at(
     mask: &[f32],
     rows: usize,
 ) -> Result<EvalOut> {
+    let mut out = EvalOut::default();
+    let mut xhat = Vec::new();
+    let mut kernel = KernelScratch::new();
+    eval_at_into(model, p, x, t, MaskRef::Full(mask), rows, &mut xhat, &mut kernel, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free [`eval_at`]: σ, a, b are passed as scalars (no
+/// broadcast vectors are materialized), x̂ staging reuses `xhat_buf`, and
+/// the result lands in `out`. The buffers are typically fields of one
+/// [`EvalScratch`], borrowed disjointly.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_at_into(
+    model: &dyn Denoiser,
+    p: crate::diffusion::Param,
+    x: &[f32],
+    t: f64,
+    mask: MaskRef<'_>,
+    rows: usize,
+    xhat_buf: &mut Vec<f32>,
+    kernel: &mut KernelScratch,
+    out: &mut EvalOut,
+) -> Result<()> {
     let dim = model.dim();
     debug_assert_eq!(x.len(), rows * dim);
     let sigma = p.sigma(t);
     let s = p.s(t);
     let (a, b) = p.vel_coeffs(t);
-    let sig_v = vec![sigma as f32; rows];
-    let a_v = vec![a as f32; rows];
-    let b_v = vec![b as f32; rows];
     if s == 1.0 {
         // EDM/VE hot path: x̂ == x, skip the scale-copy entirely
-        // (§Perf iteration 1 — saves one rows×dim pass + allocation per
-        // model call on the two s≡1 parameterizations)
-        model.denoise_v(x, &sig_v, &a_v, &b_v, mask)
+        // (§Perf iteration 1 — saves one rows×dim pass per model call on
+        // the two s≡1 parameterizations)
+        model.denoise_v_uniform_into(x, rows, sigma as f32, a as f32, b as f32, mask, out, kernel)
     } else {
         let inv_s = (1.0 / s) as f32;
-        let xhat: Vec<f32> = x.iter().map(|v| v * inv_s).collect();
-        model.denoise_v(&xhat, &sig_v, &a_v, &b_v, mask)
+        xhat_buf.clear();
+        xhat_buf.extend(x.iter().map(|v| v * inv_s));
+        model.denoise_v_uniform_into(
+            xhat_buf, rows, sigma as f32, a as f32, b as f32, mask, out, kernel,
+        )
     }
 }
 
@@ -90,8 +189,13 @@ pub fn uncond_mask(rows: usize, k: usize) -> Vec<f32> {
     vec![0.0; rows * k]
 }
 
-/// Build a class-conditional mask: only components whose class matches.
-pub fn class_mask(rows: usize, classes: &[usize], class: usize) -> Vec<f32> {
+/// One unconditional mask row (the shared-row form for [`MaskRef::Row`]).
+pub fn uncond_mask_row(k: usize) -> Vec<f32> {
+    vec![0.0; k]
+}
+
+/// One class-conditional mask row: only components whose class matches.
+pub fn class_mask_row(classes: &[usize], class: usize) -> Vec<f32> {
     let k = classes.len();
     let mut row = vec![MASK_OFF; k];
     let mut any = false;
@@ -102,6 +206,13 @@ pub fn class_mask(rows: usize, classes: &[usize], class: usize) -> Vec<f32> {
         }
     }
     assert!(any, "class {class} has no mixture components");
+    row
+}
+
+/// Build a class-conditional mask: only components whose class matches.
+pub fn class_mask(rows: usize, classes: &[usize], class: usize) -> Vec<f32> {
+    let k = classes.len();
+    let row = class_mask_row(classes, class);
     let mut out = Vec::with_capacity(rows * k);
     for _ in 0..rows {
         out.extend_from_slice(&row);
@@ -129,8 +240,27 @@ mod tests {
     }
 
     #[test]
+    fn mask_row_tiles_to_full_mask() {
+        let row = class_mask_row(&[0, 1, 0, 2], 1);
+        let full = class_mask(3, &[0, 1, 0, 2], 1);
+        for r in 0..3 {
+            assert_eq!(&full[r * 4..(r + 1) * 4], &row[..]);
+        }
+        assert_eq!(uncond_mask_row(5), vec![0.0; 5]);
+    }
+
+    #[test]
     #[should_panic(expected = "no mixture components")]
     fn class_mask_rejects_empty_class() {
         class_mask(1, &[0, 1], 7);
+    }
+
+    #[test]
+    fn eval_out_ensure_shape_grows_and_truncates() {
+        let mut o = EvalOut::default();
+        o.ensure_shape(4, 3);
+        assert_eq!((o.d.len(), o.v.len(), o.vnorm2.len()), (12, 12, 4));
+        o.ensure_shape(2, 3);
+        assert_eq!((o.d.len(), o.v.len(), o.vnorm2.len()), (6, 6, 2));
     }
 }

@@ -4,6 +4,7 @@
 //! heavy lifting (variant selection, padding, execution) happens on the
 //! executor thread.
 
+use crate::model::kernel::{KernelScratch, MaskRef};
 use crate::model::{Denoiser, EvalOut};
 use crate::runtime::RuntimeHandle;
 use crate::Result;
@@ -52,5 +53,43 @@ impl Denoiser for PjrtDenoiser {
             b.to_vec(),
             mask.to_vec(),
         )
+    }
+
+    /// The executor thread needs owned buffers anyway, so the uniform
+    /// path builds the broadcast vectors directly from the scalars —
+    /// one staging pass fewer than the default impl (no scratch copy
+    /// followed by a `to_vec`), with identical payload bits on the wire.
+    fn denoise_v_uniform_into(
+        &self,
+        xhat: &[f32],
+        rows: usize,
+        sigma: f32,
+        a: f32,
+        b: f32,
+        mask: MaskRef<'_>,
+        out: &mut EvalOut,
+        _scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        mask.validate(rows, self.k)?;
+        let mask_full = match mask {
+            MaskRef::Full(m) => m.to_vec(),
+            MaskRef::Row(m) => {
+                let mut full = Vec::with_capacity(rows * m.len());
+                for _ in 0..rows {
+                    full.extend_from_slice(m);
+                }
+                full
+            }
+        };
+        *out = self.handle.eval(
+            &self.dataset,
+            rows,
+            xhat.to_vec(),
+            vec![sigma; rows],
+            vec![a; rows],
+            vec![b; rows],
+            mask_full,
+        )?;
+        Ok(())
     }
 }

@@ -1,0 +1,351 @@
+//! Sampler/kernel performance harness — the recorded perf trajectory.
+//!
+//! Both `benches/bench_sampler.rs` (with a counting global allocator for
+//! real allocations-per-eval numbers) and the `sdm bench-sampler` CLI
+//! mode drive this module. Every run measures, on the deterministic toy
+//! workload:
+//!
+//! - `denoise_v/legacy/*` — the pre-kernel hot path (allocating per-row
+//!   oracle behind broadcast σ/a/b vectors). The legacy entry point is
+//!   kept as the reference implementation, so the "before" side of the
+//!   §Perf-iteration-3 trajectory is re-measured by every future run
+//!   instead of being a one-off number in a PR description.
+//! - `denoise_v/kernel/*` — the uniform-σ into-kernel (scratch arena,
+//!   shared mask row, hoisted σ-terms); `kernel-sharded` adds the
+//!   help-first row-sharded variant on a 4-thread pool.
+//! - `run_sampler/*` — end-to-end integration per solver through the
+//!   arena-owning engine.
+//!
+//! Results append to `BENCH_sampler.json` as one labeled run, so future
+//! PRs diff their numbers against this one (`smoke` runs are marked and
+//! should not be compared — they exist so CI keeps the harness and the
+//! JSON emission exercised).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::diffusion::Param;
+use crate::model::gmm::testmodel::toy;
+use crate::model::{uncond_mask, uncond_mask_row, Denoiser, EvalOut, KernelScratch, MaskRef};
+use crate::sampler::{run_sampler, RunConfig};
+use crate::schedule::baselines::edm_schedule;
+use crate::solvers::SolverSpec;
+use crate::util::alloc::alloc_count;
+use crate::util::{Json, Rng, ThreadPool, Timer};
+use crate::Result;
+
+/// Harness options.
+pub struct BenchOptions {
+    /// single timed iteration per entry (CI smoke) instead of medians.
+    pub smoke: bool,
+    /// trajectory file to append to (None = measure only).
+    pub out_path: Option<PathBuf>,
+    /// run label recorded in the trajectory (e.g. "pr4", "nightly").
+    pub label: String,
+}
+
+/// One measured entry.
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub name: String,
+    /// batch rows the entry ran with.
+    pub rows: usize,
+    /// median wall time per row per call, in nanoseconds.
+    pub ns_per_row: f64,
+    /// heap allocations per call (None when the binary did not register
+    /// the counting allocator — e.g. the CLI mode).
+    pub allocs_per_call: Option<f64>,
+    /// model evals per call (1 for kernel entries, NFE for end-to-end).
+    pub nfe: f64,
+}
+
+/// Run the full harness, print a human report, optionally append the run
+/// to the trajectory file, and return the entries.
+pub fn run_sampler_bench(opts: &BenchOptions) -> Result<Vec<BenchEntry>> {
+    let model = toy();
+    let ds = model.info.clone();
+    let dim = ds.dim;
+    let k = ds.k;
+    let counting = counting_allocator_active();
+    if !counting {
+        println!("bench_sampler: no counting allocator in this binary; allocs-per-eval omitted");
+    }
+
+    let mut entries: Vec<BenchEntry> = Vec::new();
+
+    // --- kernel-level: legacy vs uniform-σ into-kernel ------------------
+    for &rows in &[32usize, 256, 1024] {
+        let mut rng = Rng::new(0xBE7C + rows as u64);
+        let mut xhat = vec![0.0f32; rows * dim];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let sigma = 0.8f32;
+        let (a, b) = (0.3f32, -0.7f32);
+        let sig_v = vec![sigma; rows];
+        let a_v = vec![a; rows];
+        let b_v = vec![b; rows];
+        let mask_full = uncond_mask(rows, k);
+        let mask_row = uncond_mask_row(k);
+
+        entries.push(measure(
+            opts,
+            &format!("denoise_v/legacy/rows{rows}"),
+            rows,
+            1.0,
+            counting,
+            || {
+                let out = model.denoise_v(&xhat, &sig_v, &a_v, &b_v, &mask_full).unwrap();
+                std::hint::black_box(out.vnorm2[0]);
+            },
+        ));
+
+        let mut out = EvalOut::default();
+        let mut scratch = KernelScratch::new();
+        entries.push(measure(
+            opts,
+            &format!("denoise_v/kernel/rows{rows}"),
+            rows,
+            1.0,
+            counting,
+            || {
+                model
+                    .denoise_v_uniform_into(
+                        &xhat,
+                        rows,
+                        sigma,
+                        a,
+                        b,
+                        MaskRef::Row(&mask_row),
+                        &mut out,
+                        &mut scratch,
+                    )
+                    .unwrap();
+                std::hint::black_box(out.vnorm2[0]);
+            },
+        ));
+
+        if rows >= 1024 {
+            let pool = Arc::new(ThreadPool::new(4));
+            let sharded = toy().with_shard_pool(pool, 256);
+            let mut out2 = EvalOut::default();
+            let mut scratch2 = KernelScratch::new();
+            entries.push(measure(
+                opts,
+                &format!("denoise_v/kernel-sharded/rows{rows}"),
+                rows,
+                1.0,
+                counting,
+                || {
+                    sharded
+                        .denoise_v_uniform_into(
+                            &xhat,
+                            rows,
+                            sigma,
+                            a,
+                            b,
+                            MaskRef::Row(&mask_row),
+                            &mut out2,
+                            &mut scratch2,
+                        )
+                        .unwrap();
+                    std::hint::black_box(out2.vnorm2[0]);
+                },
+            ));
+        }
+    }
+
+    // --- end-to-end: run_sampler per solver -----------------------------
+    let grid = edm_schedule(18, ds.sigma_min, ds.sigma_max, ds.rho)?;
+    let solvers: Vec<(&str, SolverSpec)> = vec![
+        ("euler", SolverSpec::Euler),
+        ("heun", SolverSpec::Heun),
+        ("dpm2m", SolverSpec::Dpm2m),
+        (
+            "sdm-step",
+            SolverSpec::Adaptive {
+                lambda: crate::solvers::LambdaKind::Step,
+                tau_k: 5e-2,
+                clock: crate::diffusion::CurvatureClock::Sigma,
+            },
+        ),
+    ];
+    let rows = 256usize;
+    for (tag, solver) in &solvers {
+        let cfg = RunConfig { rows, seed: 7, class: None, trace: false };
+        let nfe = run_sampler(&model, Param::Edm, &grid, solver, &ds, &cfg)?.nfe as f64;
+        entries.push(measure(
+            opts,
+            &format!("run_sampler/{tag}/rows{rows}"),
+            rows,
+            nfe,
+            counting,
+            || {
+                let out = run_sampler(&model, Param::Edm, &grid, solver, &ds, &cfg).unwrap();
+                std::hint::black_box(out.samples[0]);
+            },
+        ));
+    }
+
+    print_speedups(&entries);
+    if let Some(path) = &opts.out_path {
+        append_run(path, opts, &entries)?;
+        println!("bench_sampler: appended run {:?} to {}", opts.label, path.display());
+    }
+    Ok(entries)
+}
+
+/// Time one entry (median over iterations; single iteration in smoke
+/// mode) and, when the counting allocator is live, measure its
+/// allocations per call.
+fn measure<F: FnMut()>(
+    opts: &BenchOptions,
+    name: &str,
+    rows: usize,
+    nfe: f64,
+    counting: bool,
+    mut f: F,
+) -> BenchEntry {
+    let (warmup, iters) = if opts.smoke { (1usize, 1usize) } else { (10, 60) };
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_us());
+    }
+    let median_us = crate::util::median(&samples);
+    let allocs_per_call = if counting {
+        let reps = if opts.smoke { 1u64 } else { 8 };
+        let before = alloc_count();
+        for _ in 0..reps {
+            f();
+        }
+        Some((alloc_count() - before) as f64 / reps as f64)
+    } else {
+        None
+    };
+    let entry = BenchEntry {
+        name: name.to_string(),
+        rows,
+        ns_per_row: median_us * 1e3 / rows as f64,
+        allocs_per_call,
+        nfe,
+    };
+    match entry.allocs_per_call {
+        Some(ac) => println!(
+            "bench {:<38} {:>10.1} ns/row  {:>9.1} allocs/call  nfe {:>5.1}  ({iters} iters)",
+            entry.name, entry.ns_per_row, ac, entry.nfe
+        ),
+        None => println!(
+            "bench {:<38} {:>10.1} ns/row  {:>9} allocs/call  nfe {:>5.1}  ({iters} iters)",
+            entry.name, entry.ns_per_row, "n/a", entry.nfe
+        ),
+    }
+    entry
+}
+
+/// Report legacy-vs-kernel speedups per batch size (the acceptance
+/// criterion of §Perf iteration 3 is ≥2× at rows=256).
+fn print_speedups(entries: &[BenchEntry]) {
+    for &rows in &[32usize, 256, 1024] {
+        let find = |p: &str| {
+            entries
+                .iter()
+                .find(|e| e.name == format!("{p}/rows{rows}"))
+                .map(|e| e.ns_per_row)
+        };
+        if let (Some(legacy), Some(kernel)) = (find("denoise_v/legacy"), find("denoise_v/kernel"))
+        {
+            if kernel > 0.0 {
+                println!(
+                    "speedup rows={rows:<5} legacy {legacy:.1} ns/row -> kernel {kernel:.1} ns/row  ({:.2}x)",
+                    legacy / kernel
+                );
+            }
+        }
+    }
+}
+
+/// Detect whether this binary registered [`crate::util::alloc::CountingAlloc`].
+fn counting_allocator_active() -> bool {
+    let before = alloc_count();
+    let probe: Vec<u64> = Vec::with_capacity(8);
+    std::hint::black_box(&probe);
+    drop(probe);
+    alloc_count() != before
+}
+
+/// Append one labeled run to the trajectory file (object with a `runs`
+/// array; created on first use, prior runs preserved).
+fn append_run(path: &PathBuf, opts: &BenchOptions, entries: &[BenchEntry]) -> Result<()> {
+    let mut doc = match crate::util::json::read_json_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    doc.entry("benchmark".to_string())
+        .or_insert_with(|| Json::Str("bench_sampler".to_string()));
+    doc.entry("units".to_string())
+        .or_insert_with(|| Json::Str("ns_per_row (median); allocs_per_call; nfe".to_string()));
+
+    let mut run = BTreeMap::new();
+    run.insert("label".to_string(), Json::Str(opts.label.clone()));
+    run.insert("smoke".to_string(), Json::Bool(opts.smoke));
+    run.insert(
+        "entries".to_string(),
+        Json::Arr(
+            entries
+                .iter()
+                .map(|e| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(e.name.clone()));
+                    o.insert("rows".to_string(), Json::Num(e.rows as f64));
+                    o.insert("ns_per_row".to_string(), Json::Num(e.ns_per_row));
+                    o.insert(
+                        "allocs_per_call".to_string(),
+                        e.allocs_per_call.map(Json::Num).unwrap_or(Json::Null),
+                    );
+                    o.insert("nfe".to_string(), Json::Num(e.nfe));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+
+    let runs = doc.entry("runs".to_string()).or_insert_with(|| Json::Arr(Vec::new()));
+    if let Json::Arr(rs) = runs {
+        rs.push(Json::Obj(run));
+    }
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_harness_runs_and_appends() {
+        let dir = std::env::temp_dir().join(format!("sdm_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_sampler.json");
+        let _ = std::fs::remove_file(&path);
+        let opts = BenchOptions {
+            smoke: true,
+            out_path: Some(path.clone()),
+            label: "unit-test".to_string(),
+        };
+        let entries = run_sampler_bench(&opts).unwrap();
+        assert!(entries.iter().any(|e| e.name == "denoise_v/legacy/rows32"));
+        assert!(entries.iter().any(|e| e.name == "denoise_v/kernel/rows256"));
+        assert!(entries.iter().any(|e| e.name == "run_sampler/heun/rows256"));
+        assert!(entries.iter().all(|e| e.ns_per_row >= 0.0 && e.nfe >= 1.0));
+        // a second run appends, never truncates
+        run_sampler_bench(&opts).unwrap();
+        let doc = crate::util::json::read_json_file(&path).unwrap();
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -12,7 +12,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::diffusion::{kappa_hat_rel, Param, SigmaGrid};
-use crate::model::{class_mask, eval_at, uncond_mask, DatasetInfo, Denoiser};
+use crate::model::{
+    class_mask_row, eval_at_into, uncond_mask_row, DatasetInfo, Denoiser, EvalScratch, MaskRef,
+};
 use crate::solvers::{adaptive, dpm2m::Dpm2mState, euler, heun, LambdaKind, SolverSpec};
 use crate::util::{Rng, ThreadPool};
 use crate::Result;
@@ -62,6 +64,18 @@ pub struct RunResult {
     pub steps: Vec<StepRecord>,
 }
 
+/// Build the shared mask row for a run: one `k`-wide logit row that every
+/// batch row shares (class bounds checked once, not per batch).
+pub fn mask_row_for(class: Option<usize>, ds: &DatasetInfo, k: usize) -> Result<Vec<f32>> {
+    match class {
+        Some(c) => {
+            anyhow::ensure!(c < ds.n_classes, "class {c} out of range");
+            Ok(class_mask_row(&ds.classes, c))
+        }
+        None => Ok(uncond_mask_row(k)),
+    }
+}
+
 /// Integrate one batch down the given σ grid.
 pub fn run_sampler(
     model: &dyn Denoiser,
@@ -71,9 +85,38 @@ pub fn run_sampler(
     ds: &DatasetInfo,
     cfg: &RunConfig,
 ) -> Result<RunResult> {
+    let mask_row = mask_row_for(cfg.class, ds, model.k())?;
+    run_sampler_masked(model, param, grid, solver, cfg, &mask_row)
+}
+
+/// [`run_sampler`] with a caller-built shared mask row — the batched
+/// generators build the row once per request and reuse it across every
+/// batch/shard instead of materializing a fresh `[rows·k]` mask per
+/// batch.
+///
+/// All per-step buffers live in one [`EvalScratch`] arena owned by the
+/// run: model outputs are double-buffered (`cur`/`prev` swap roles each
+/// interval; the second in-interval eval lands in `aux`), so after the
+/// prior draw the whole integration performs no per-step heap
+/// allocation — and with a native-oracle model, none per eval either
+/// (§Perf iteration 3, DESIGN.md §7).
+pub fn run_sampler_masked(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    solver: &SolverSpec,
+    cfg: &RunConfig,
+    mask_row: &[f32],
+) -> Result<RunResult> {
     let dim = model.dim();
     let rows = cfg.rows;
     anyhow::ensure!(rows > 0, "rows must be positive");
+    anyhow::ensure!(
+        mask_row.len() == model.k(),
+        "mask row has {} entries, model has k={}",
+        mask_row.len(),
+        model.k()
+    );
     let times = grid.times(param);
     let sigmas = &grid.sigmas;
     let n_int = grid.intervals();
@@ -91,27 +134,23 @@ pub fn run_sampler(
         );
     }
 
-    let mask = match cfg.class {
-        Some(c) => {
-            anyhow::ensure!(c < ds.n_classes, "class {c} out of range");
-            class_mask(rows, &ds.classes, c)
-        }
-        None => uncond_mask(rows, model.k()),
-    };
+    let mask = MaskRef::Row(mask_row);
 
     let mut rng = Rng::new(cfg.seed);
     let mut x = vec![0.0f32; rows * dim];
     rng.fill_normal_f32(&mut x, param.prior_std(times[0]));
 
+    let mut scr = EvalScratch::new();
     let mut nfe = 0usize;
     let mut steps: Vec<StepRecord> = Vec::new();
     let mut dpm_state = Dpm2mState::new();
-    let mut prev_v: Option<Vec<f32>> = None;
+    let mut have_prev = false;
     let mut prev_t = times[0];
     let mut prev_sigma = sigmas[0];
-    // pending η̂ measurement: (step index, v_i at interval start, Δt)
-    let mut pending_eta: Option<(usize, Vec<f32>, f64)> = None;
-    let mut euler_x: Vec<f32> = Vec::new();
+    // pending η̂ measurement: (step index, Δt). The velocity it will be
+    // measured against is the interval-start eval already double-buffered
+    // in `scr.prev` by the time it resolves — no clone needed.
+    let mut pending_eta: Option<(usize, f64)> = None;
 
     for i in 0..n_int {
         let (mut t_i, t_next) = (times[i], times[i + 1]);
@@ -124,27 +163,30 @@ pub fn run_sampler(
             t_i = sigma_hat;
         }
 
-        // v_i at the (possibly churned) interval start
-        let out = eval_at(model, param, &x, t_i, &mask, rows)?;
+        // v_i at the (possibly churned) interval start → scr.cur
+        // (scr.prev still holds the previous interval's eval)
+        eval_at_into(model, param, &x, t_i, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
         nfe += 1;
 
         // resolve the η̂ of the previous interval with this fresh eval
-        if let Some((idx, v_then, dt_then)) = pending_eta.take() {
+        if let Some((idx, dt_then)) = pending_eta.take() {
             if cfg.trace {
-                let s_hat = mean_dv_norm(&v_then, &out.v, rows, dim) / dt_then.max(1e-30);
+                let s_hat = mean_dv_norm(&scr.prev.v, &scr.cur.v, rows, dim) / dt_then.max(1e-30);
                 steps[idx].eta_hat = Some(0.5 * dt_then * dt_then * s_hat);
             }
         }
 
         // cache-based curvature κ̂ (eq. 8) from the previous interval's v
-        let kappa = prev_v.as_ref().map(|pv| {
+        let kappa = if have_prev {
             let clock = match solver {
                 SolverSpec::Adaptive { clock, .. } => *clock,
                 _ => crate::diffusion::CurvatureClock::Sigma,
             };
             let delta = clock.delta(prev_t, t_i, prev_sigma, sigma_i);
-            kappa_hat_rel(pv, &out.v, rows, dim, delta)
-        });
+            Some(kappa_hat_rel(&scr.prev.v, &scr.cur.v, rows, dim, delta))
+        } else {
+            None
+        };
 
         let dt = t_next - t_i;
         let step_idx = steps.len();
@@ -161,35 +203,55 @@ pub fn run_sampler(
 
         match solver {
             SolverSpec::Euler => {
-                euler::euler_step(&mut x, &out.v, dt);
+                euler::euler_step(&mut x, &scr.cur.v, dt);
             }
             SolverSpec::Dpm2m => {
-                dpm_state.step(&mut x, &out.d, sigma_i, sigma_next);
+                dpm_state.step(&mut x, &scr.cur.d, sigma_i, sigma_next);
             }
             SolverSpec::Heun | SolverSpec::StochasticHeun(_) => {
-                euler::euler_step_to(&x, &out.v, dt, &mut euler_x);
+                euler::euler_step_to(&x, &scr.cur.v, dt, &mut scr.euler_x);
                 if sigma_next > 0.0 {
-                    let out2 = eval_at(model, param, &euler_x, t_next, &mask, rows)?;
+                    eval_at_into(
+                        model,
+                        param,
+                        &scr.euler_x,
+                        t_next,
+                        mask,
+                        rows,
+                        &mut scr.xhat,
+                        &mut scr.kernel,
+                        &mut scr.aux,
+                    )?;
                     nfe += 1;
                     evals_this += 1;
                     heun_weight = 1.0;
-                    heun::heun_correct(&mut x, &out.v, &out2.v, dt);
+                    heun::heun_correct(&mut x, &scr.cur.v, &scr.aux.v, dt);
                     if cfg.trace {
-                        eta_now = Some(measure_eta(&out.v, &out2.v));
+                        eta_now = Some(measure_eta(&scr.cur.v, &scr.aux.v));
                     }
                 } else {
-                    x.copy_from_slice(&euler_x);
+                    x.copy_from_slice(&scr.euler_x);
                 }
             }
             SolverSpec::Adaptive { lambda, tau_k, .. } => {
-                euler::euler_step_to(&x, &out.v, dt, &mut euler_x);
+                euler::euler_step_to(&x, &scr.cur.v, dt, &mut scr.euler_x);
                 let last = sigma_next <= 0.0;
                 let use_heun = match lambda {
                     LambdaKind::Step => !last && adaptive::step_gate(kappa, *tau_k),
                     _ => !last,
                 };
                 if use_heun {
-                    let out2 = eval_at(model, param, &euler_x, t_next, &mask, rows)?;
+                    eval_at_into(
+                        model,
+                        param,
+                        &scr.euler_x,
+                        t_next,
+                        mask,
+                        rows,
+                        &mut scr.xhat,
+                        &mut scr.kernel,
+                        &mut scr.aux,
+                    )?;
                     nfe += 1;
                     evals_this += 1;
                     let lam = match lambda {
@@ -200,18 +262,20 @@ pub fn run_sampler(
                     if lam == 0.0 {
                         // step-Λ gated interval == pure Heun: correct in
                         // place, no blend buffer (§Perf iteration 2)
-                        heun::heun_correct(&mut x, &out.v, &out2.v, dt);
+                        heun::heun_correct(&mut x, &scr.cur.v, &scr.aux.v, dt);
                     } else {
-                        // x^H from the predictor pair, then blend (eq. 9)
-                        let mut xh = x.clone();
-                        heun::heun_correct(&mut xh, &out.v, &out2.v, dt);
-                        adaptive::blend(&euler_x, &xh, lam, &mut x);
+                        // x^H from the predictor pair staged in the arena
+                        // (no per-step x.clone()), then blend (eq. 9)
+                        scr.blend_x.clear();
+                        scr.blend_x.extend_from_slice(&x);
+                        heun::heun_correct(&mut scr.blend_x, &scr.cur.v, &scr.aux.v, dt);
+                        adaptive::blend(&scr.euler_x, &scr.blend_x, lam, &mut x);
                     }
                     if cfg.trace {
-                        eta_now = Some(measure_eta(&out.v, &out2.v));
+                        eta_now = Some(measure_eta(&scr.cur.v, &scr.aux.v));
                     }
                 } else {
-                    x.copy_from_slice(&euler_x);
+                    x.copy_from_slice(&scr.euler_x);
                 }
             }
         }
@@ -226,12 +290,15 @@ pub fn run_sampler(
                 evals: evals_this,
             });
             if eta_now.is_none() && sigma_next > 0.0 {
-                // defer: resolved by the eval at the next interval start
-                pending_eta = Some((step_idx, out.v.clone(), dt.abs()));
+                // defer: resolved against scr.prev at the next interval
+                // start (this interval's only eval is about to become
+                // scr.prev in the swap below)
+                pending_eta = Some((step_idx, dt.abs()));
             }
         }
 
-        prev_v = Some(out.v);
+        std::mem::swap(&mut scr.prev, &mut scr.cur);
+        have_prev = true;
         prev_t = t_i;
         prev_sigma = sigma_i;
     }
@@ -265,6 +332,8 @@ pub fn generate(
     total: usize,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>)> {
     let dim = model.dim();
+    // one shared mask row for every batch of the request
+    let mask_row = mask_row_for(cfg.class, ds, model.k())?;
     let mut samples = Vec::with_capacity(total * dim);
     let mut nfes = Vec::new();
     let mut first_trace = Vec::new();
@@ -278,7 +347,7 @@ pub fn generate(
             class: cfg.class,
             trace: cfg.trace && batch_idx == 0,
         };
-        let out = run_sampler(model, param, grid, solver, ds, &bcfg)?;
+        let out = run_sampler_masked(model, param, grid, solver, &bcfg, &mask_row)?;
         samples.extend_from_slice(&out.samples);
         nfes.push(out.nfe as f64);
         if batch_idx == 0 {
@@ -323,6 +392,9 @@ pub fn generate_pooled(
     }
     let batch_rows = cfg.rows;
     let n_batches = (total + batch_rows - 1) / batch_rows;
+    // one shared mask row built up front and shared by every shard
+    // (previously each shard rebuilt a full [rows·k] mask)
+    let mask_row: Arc<Vec<f32>> = Arc::new(mask_row_for(cfg.class, ds, model.k())?);
 
     let shared = Arc::new((
         Mutex::new(ShardState {
@@ -337,8 +409,8 @@ pub fn generate_pooled(
         let model = Arc::clone(model);
         let grid = grid.clone();
         let solver = *solver;
-        let ds = ds.clone();
         let cfg = cfg.clone();
+        let mask_row = Arc::clone(&mask_row);
         let shared = Arc::clone(&shared);
         let next = Arc::clone(&next);
         Arc::new(move || loop {
@@ -354,7 +426,7 @@ pub fn generate_pooled(
                 trace: cfg.trace && i == 0,
             };
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_sampler(model.as_ref(), param, &grid, &solver, &ds, &bcfg)
+                run_sampler_masked(model.as_ref(), param, &grid, &solver, &bcfg, &mask_row)
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("generation batch {i} panicked")));
             let (lock, cv) = &*shared;

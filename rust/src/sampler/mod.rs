@@ -5,4 +5,7 @@ pub mod config;
 pub mod engine;
 
 pub use config::SamplerConfig;
-pub use engine::{generate, generate_pooled, run_sampler, RunConfig, RunResult, StepRecord};
+pub use engine::{
+    generate, generate_pooled, mask_row_for, run_sampler, run_sampler_masked, RunConfig,
+    RunResult, StepRecord,
+};

@@ -8,7 +8,7 @@
 //! Figure 3 (η_t profiles).
 
 use crate::diffusion::{kappa_hat_rel, CurvatureClock, CurvaturePoint, Param, SigmaGrid};
-use crate::model::{eval_at, uncond_mask, Denoiser};
+use crate::model::{eval_at_into, uncond_mask_row, Denoiser, EvalScratch, MaskRef};
 use crate::util::Rng;
 use crate::Result;
 
@@ -43,7 +43,8 @@ pub fn pilot_measure(
     let intervals = grid.intervals();
     anyhow::ensure!(rows > 0, "pilot rows");
 
-    let mask = uncond_mask(rows, ds_k);
+    let mask_row = uncond_mask_row(ds_k);
+    let mask = MaskRef::Row(&mask_row);
     let mut x = vec![0.0f32; rows * ds_dim];
     rng.fill_normal_f32(&mut x, param.prior_std(times[0]));
 
@@ -51,31 +52,34 @@ pub fn pilot_measure(
     let mut eta = Vec::with_capacity(intervals);
     let mut kappa = Vec::new();
 
-    let mut prev_v: Option<Vec<f32>> = None;
+    // velocities double-buffered in the arena: cur = v_i, prev = v_{i−1}
+    let mut scr = EvalScratch::new();
+    let mut have_prev = false;
     let mut prev_t = times[0];
     let mut prev_sig = sigmas[0];
 
     for i in 0..intervals {
         let (t_i, t_next) = (times[i], times[i + 1]);
-        let out = eval_at(model, param, &x, t_i, &mask, rows)?;
-        if let Some(pv) = &prev_v {
+        eval_at_into(model, param, &x, t_i, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
+        if have_prev {
             // Ŝ for the *previous* interval: ‖v_i − v_{i−1}‖ / Δt_{i−1}
             let dt_prev = prev_t - t_i;
-            let s = mean_dv_norm(pv, &out.v, rows, ds_dim) / dt_prev.max(1e-30);
+            let s = mean_dv_norm(&scr.prev.v, &scr.cur.v, rows, ds_dim) / dt_prev.max(1e-30);
             s_hat.push(s);
             eta.push(0.5 * dt_prev * dt_prev * s);
             let dsig = CurvatureClock::Sigma.delta(prev_t, t_i, prev_sig, sigmas[i]);
             kappa.push(CurvaturePoint {
                 sigma: sigmas[i],
-                kappa_hat: kappa_hat_rel(pv, &out.v, rows, ds_dim, dsig),
+                kappa_hat: kappa_hat_rel(&scr.prev.v, &scr.cur.v, rows, ds_dim, dsig),
             });
         }
         // Euler commit
         let dt = (t_next - t_i) as f32;
-        for (xv, vv) in x.iter_mut().zip(&out.v) {
+        for (xv, vv) in x.iter_mut().zip(&scr.cur.v) {
             *xv += dt * vv;
         }
-        prev_v = Some(out.v);
+        std::mem::swap(&mut scr.prev, &mut scr.cur);
+        have_prev = true;
         prev_t = t_i;
         prev_sig = sigmas[i];
     }

@@ -13,7 +13,7 @@
 //! computes COS/SDM schedules offline with batch 128.
 
 use crate::diffusion::{Param, SigmaGrid};
-use crate::model::{eval_at, uncond_mask, DatasetInfo, Denoiser};
+use crate::model::{eval_at_into, uncond_mask_row, DatasetInfo, Denoiser, EvalScratch, MaskRef};
 use crate::schedule::baselines::edm_schedule;
 use crate::util::Rng;
 use crate::Result;
@@ -124,12 +124,16 @@ pub fn wasserstein_schedule(
             .collect(),
     };
 
-    let mask = uncond_mask(pilot_rows, k);
+    let mask_row = uncond_mask_row(k);
+    let mask = MaskRef::Row(&mask_row);
     let mut x = vec![0.0f32; pilot_rows * dim];
     rng.fill_normal_f32(&mut x, param.prior_std(t_max));
 
+    // arena: v_i lives in scr.cur, trial evals in scr.aux, the trial
+    // state x̃ in scr.euler_x — one allocation site for the whole pilot
+    let mut scr = EvalScratch::new();
     let mut t_i = t_max;
-    let mut v_i = eval_at(model, param, &x, t_i, &mask, pilot_rows)?;
+    eval_at_into(model, param, &x, t_i, mask, pilot_rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
     let mut pilot_nfe = 1usize;
 
     let mut sigmas = vec![ds.sigma_max];
@@ -159,14 +163,22 @@ pub fn wasserstein_schedule(
                 break;
             }
             // Euler trial step x̃ = x + (t̃ − t_i)·v_i, evaluate ṽ
-            let xt: Vec<f32> = x
-                .iter()
-                .zip(&v_i.v)
-                .map(|(xv, vv)| xv + (t_trial - t_i) as f32 * vv)
-                .collect();
-            let vt = eval_at(model, param, &xt, t_trial, &mask, pilot_rows)?;
+            scr.euler_x.clear();
+            scr.euler_x
+                .extend(x.iter().zip(&scr.cur.v).map(|(xv, vv)| xv + (t_trial - t_i) as f32 * vv));
+            eval_at_into(
+                model,
+                param,
+                &scr.euler_x,
+                t_trial,
+                mask,
+                pilot_rows,
+                &mut scr.xhat,
+                &mut scr.kernel,
+                &mut scr.aux,
+            )?;
             pilot_nfe += 1;
-            s_hat = mean_dv_norm(&v_i.v, &vt.v, pilot_rows, dim) / dt_trial;
+            s_hat = mean_dv_norm(&scr.cur.v, &scr.aux.v, pilot_rows, dim) / dt_trial;
             if s_hat <= 0.0 {
                 // flat field: take the largest allowed step
                 dt_max = t_i - t_min;
@@ -193,7 +205,7 @@ pub fn wasserstein_schedule(
         // commit: Δt = min(Δt_max, distance to t_min)  (Theorem 3.2)
         let dt = dt_max.min(t_i - t_min).max(1e-12);
         let t_next = (t_i - dt).max(t_min);
-        for (xv, vv) in x.iter_mut().zip(&v_i.v) {
+        for (xv, vv) in x.iter_mut().zip(&scr.cur.v) {
             *xv += (t_next - t_i) as f32 * vv;
         }
         etas.push(0.5 * dt * dt * s_hat);
@@ -201,7 +213,18 @@ pub fn wasserstein_schedule(
         sigmas.push(param.sigma(t_next));
         t_i = t_next;
         if t_i > t_min {
-            v_i = eval_at(model, param, &x, t_i, &mask, pilot_rows)?;
+            // overwrite v_i in place for the next NEXTTIMESTEP round
+            eval_at_into(
+                model,
+                param,
+                &x,
+                t_i,
+                mask,
+                pilot_rows,
+                &mut scr.xhat,
+                &mut scr.kernel,
+                &mut scr.cur,
+            )?;
             pilot_nfe += 1;
         }
     }

@@ -50,7 +50,12 @@ impl Dpm2mState {
                 }
             }
         }
-        self.prev_d = Some(d.to_vec());
+        // carry D_i into the history without reallocating: the buffer is
+        // reused across every interval of a run (shape is fixed)
+        match &mut self.prev_d {
+            Some(pd) if pd.len() == d.len() => pd.copy_from_slice(d),
+            slot => *slot = Some(d.to_vec()),
+        }
         self.prev_h = if h.is_finite() { h } else { 0.0 };
     }
 }

@@ -1,0 +1,52 @@
+//! Allocation-counting global allocator shim for the perf harness.
+//!
+//! The library never registers this; binaries that want real
+//! allocations-per-eval numbers (the `bench_sampler` bench target) opt in
+//! at their crate root:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static COUNTING: sdm::util::alloc::CountingAlloc = sdm::util::alloc::CountingAlloc;
+//! ```
+//!
+//! The counter is a single relaxed atomic increment per `alloc`/`realloc`
+//! — cheap enough to leave on for a whole bench run. Binaries that do not
+//! register it still link fine; [`alloc_count`] simply never moves, which
+//! the harness detects and reports as "allocation counting unavailable".
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide allocation counter (only advanced when [`CountingAlloc`]
+/// is registered as the global allocator).
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of heap allocations observed so far (0 forever when the
+/// counting allocator is not registered).
+pub fn alloc_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// [`System`] allocator wrapper that counts `alloc`/`realloc` calls.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}

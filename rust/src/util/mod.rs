@@ -4,6 +4,7 @@
 //! neither `rand`, `serde`, `tokio`, `clap`, nor `criterion` (see
 //! DESIGN.md §2, "Offline-toolchain substitutions").
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod histogram;

@@ -1,0 +1,358 @@
+//! Bit-identity guards for the §Perf-iteration-3 kernel refactor.
+//!
+//! The uniform-σ into-kernel, the scratch-arena sampler loop, and the
+//! row-sharded path must all reproduce the *seed* implementation (per-row
+//! oracle behind broadcast vectors, freshly allocated buffers every eval)
+//! to the last bit. These tests reimplement the seed semantics verbatim
+//! on the legacy `denoise_v` entry point — which the refactor keeps as
+//! the reference path — and assert exact `f32::to_bits` equality against
+//! the new hot paths, on random models/inputs and on full sampler runs.
+
+use std::sync::Arc;
+
+use sdm::diffusion::Param;
+use sdm::linalg::Mat;
+use sdm::model::gmm::testmodel::toy;
+use sdm::model::{
+    class_mask, class_mask_row, eval_at, eval_at_into, uncond_mask, uncond_mask_row, DatasetInfo,
+    Denoiser, EvalOut, GmmModel, KernelScratch, MaskRef,
+};
+use sdm::sampler::{run_sampler, RunConfig};
+use sdm::schedule::baselines::edm_schedule;
+use sdm::solvers::{euler, heun, SolverSpec};
+use sdm::util::{Rng, ThreadPool};
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn assert_out_eq(a: &EvalOut, b: &EvalOut, what: &str) {
+    assert_bits_eq(&a.d, &b.d, &format!("{what}.d"));
+    assert_bits_eq(&a.v, &b.v, &format!("{what}.v"));
+    assert_bits_eq(&a.vnorm2, &b.vnorm2, &format!("{what}.vnorm2"));
+}
+
+/// A random small mixture (random dim/k/μ/w/τ²) for property coverage
+/// beyond the fixed toy model.
+fn random_info(rng: &mut Rng) -> DatasetInfo {
+    let dim = 1 + rng.below(5);
+    let k = 1 + rng.below(4);
+    let mut mus = vec![0.0f64; k * dim];
+    for v in &mut mus {
+        *v = rng.normal() * 2.0;
+    }
+    let mut logw = vec![0.0f64; k];
+    for v in &mut logw {
+        *v = rng.normal() * 0.5;
+    }
+    let mut tau2 = vec![0.0f64; k];
+    for v in &mut tau2 {
+        *v = 0.05 + rng.uniform() * 0.5;
+    }
+    let classes: Vec<usize> = (0..k).map(|i| i % 2).collect();
+    DatasetInfo {
+        name: "rand".into(),
+        paper_name: "Rand".into(),
+        dim,
+        k,
+        n_classes: 2,
+        sigma_min: 0.002,
+        sigma_max: 80.0,
+        rho: 7.0,
+        default_steps: 8,
+        mus,
+        logw,
+        tau2,
+        classes,
+        exact_mean: vec![0.0; dim],
+        exact_cov: Mat::zeros(dim),
+    }
+}
+
+#[test]
+fn uniform_fast_path_equals_generic_path_bitwise_on_random_models() {
+    // the satellite property test: for random models, inputs, σ, and
+    // both mask forms, scalar-σ kernel == broadcast-vector legacy path
+    // to the last bit
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..40 {
+        let info = random_info(&mut rng);
+        let (dim, k) = (info.dim, info.k);
+        let model = GmmModel::new(info);
+        let rows = 1 + rng.below(17);
+        let mut xhat = vec![0.0f32; rows * dim];
+        rng.fill_normal_f32(&mut xhat, 3.0);
+        // log-uniform σ over the full range, plus the exact endpoints
+        let sigma = match case % 3 {
+            0 => 0.002f32,
+            1 => 80.0f32,
+            _ => (0.002 * (80.0f64 / 0.002).powf(rng.uniform())) as f32,
+        };
+        let a = rng.normal() as f32;
+        let b = rng.normal() as f32;
+
+        let legacy = model
+            .denoise_v(
+                &xhat,
+                &vec![sigma; rows],
+                &vec![a; rows],
+                &vec![b; rows],
+                &uncond_mask(rows, k),
+            )
+            .unwrap();
+
+        let mut out = EvalOut::default();
+        let mut scratch = KernelScratch::new();
+        let row = uncond_mask_row(k);
+        model
+            .denoise_v_uniform_into(&xhat, rows, sigma, a, b, MaskRef::Row(&row), &mut out, &mut scratch)
+            .unwrap();
+        assert_out_eq(&legacy, &out, &format!("case{case}/row-mask"));
+
+        // full-matrix mask form (class-conditional where possible)
+        let full = class_mask(rows, &model.info.classes, 0);
+        let legacy_c = model
+            .denoise_v(&xhat, &vec![sigma; rows], &vec![a; rows], &vec![b; rows], &full)
+            .unwrap();
+        let mut out_c = EvalOut::default();
+        model
+            .denoise_v_uniform_into(
+                &xhat,
+                rows,
+                sigma,
+                a,
+                b,
+                MaskRef::Full(&full),
+                &mut out_c,
+                &mut scratch,
+            )
+            .unwrap();
+        assert_out_eq(&legacy_c, &out_c, &format!("case{case}/full-mask"));
+    }
+}
+
+#[test]
+fn generic_into_path_equals_legacy_bitwise_with_per_row_sigmas() {
+    // denoise_v_into is the allocation-free generic (per-row-σ) entry
+    // point: exercise it with genuinely varying σ/a/b per row against
+    // the legacy allocating loop
+    let mut rng = Rng::new(0xD15C);
+    for _ in 0..20 {
+        let info = random_info(&mut rng);
+        let (dim, k) = (info.dim, info.k);
+        let model = GmmModel::new(info);
+        let rows = 1 + rng.below(13);
+        let mut xhat = vec![0.0f32; rows * dim];
+        rng.fill_normal_f32(&mut xhat, 2.5);
+        let sigma: Vec<f32> = (0..rows)
+            .map(|_| (0.002 * (80.0f64 / 0.002).powf(rng.uniform())) as f32)
+            .collect();
+        let a: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        let mask = uncond_mask(rows, k);
+        let legacy = model.denoise_v(&xhat, &sigma, &a, &b, &mask).unwrap();
+        let mut out = EvalOut::default();
+        let mut scratch = KernelScratch::new();
+        model.denoise_v_into(&xhat, &sigma, &a, &b, &mask, &mut out, &mut scratch).unwrap();
+        assert_out_eq(&legacy, &out, "generic-into");
+    }
+}
+
+#[test]
+fn scratch_reuse_across_shapes_is_clean() {
+    // a scratch used for a big batch then a small one (and a different
+    // model) must not leak stale state into either output
+    let mut rng = Rng::new(7);
+    let m1 = GmmModel::new(random_info(&mut rng));
+    let m2 = GmmModel::new(random_info(&mut rng));
+    let mut scratch = KernelScratch::new();
+    for model in [&m1, &m2, &m1] {
+        let (dim, k) = (model.info.dim, model.info.k);
+        for rows in [16usize, 3, 11] {
+            let mut xhat = vec![0.0f32; rows * dim];
+            rng.fill_normal_f32(&mut xhat, 2.0);
+            let legacy = model
+                .denoise_v(
+                    &xhat,
+                    &vec![1.7; rows],
+                    &vec![0.2; rows],
+                    &vec![-0.9; rows],
+                    &uncond_mask(rows, k),
+                )
+                .unwrap();
+            let mut out = EvalOut::default();
+            let row = uncond_mask_row(k);
+            model
+                .denoise_v_uniform_into(
+                    &xhat,
+                    rows,
+                    1.7,
+                    0.2,
+                    -0.9,
+                    MaskRef::Row(&row),
+                    &mut out,
+                    &mut scratch,
+                )
+                .unwrap();
+            assert_out_eq(&legacy, &out, "scratch-reuse");
+        }
+    }
+}
+
+#[test]
+fn eval_at_into_matches_legacy_eval_at_semantics() {
+    // eval_at staging (incl. the VP x̂ = x/s scale-copy) must be
+    // bit-identical between the allocating wrapper and the arena path
+    let m = toy();
+    let mut rng = Rng::new(99);
+    let rows = 9;
+    let mut x = vec![0.0f32; rows * 3];
+    rng.fill_normal_f32(&mut x, 5.0);
+    let mask = uncond_mask(rows, 2);
+    let row = uncond_mask_row(2);
+    for p in [Param::Edm, Param::vp(), Param::Ve] {
+        for sigma in [0.01, 1.0, 40.0] {
+            let t = p.t_of_sigma(sigma);
+            let legacy = legacy_eval(&m, p, &x, t, &mask, rows);
+            let via_wrapper = eval_at(&m, p, &x, t, &mask, rows).unwrap();
+            let mut out = EvalOut::default();
+            let mut xhat = Vec::new();
+            let mut kernel = KernelScratch::new();
+            eval_at_into(&m, p, &x, t, MaskRef::Row(&row), rows, &mut xhat, &mut kernel, &mut out)
+                .unwrap();
+            assert_out_eq(&legacy, &via_wrapper, &format!("{}/σ{sigma}/wrapper", p.name()));
+            assert_out_eq(&legacy, &out, &format!("{}/σ{sigma}/into", p.name()));
+        }
+    }
+}
+
+/// The seed implementation of `eval_at`, verbatim: broadcast vectors,
+/// fresh allocations, legacy `denoise_v` entry point.
+fn legacy_eval(
+    model: &GmmModel,
+    p: Param,
+    x: &[f32],
+    t: f64,
+    mask: &[f32],
+    rows: usize,
+) -> EvalOut {
+    let sigma = p.sigma(t);
+    let s = p.s(t);
+    let (a, b) = p.vel_coeffs(t);
+    let sig_v = vec![sigma as f32; rows];
+    let a_v = vec![a as f32; rows];
+    let b_v = vec![b as f32; rows];
+    if s == 1.0 {
+        model.denoise_v(x, &sig_v, &a_v, &b_v, mask).unwrap()
+    } else {
+        let inv_s = (1.0 / s) as f32;
+        let xhat: Vec<f32> = x.iter().map(|v| v * inv_s).collect();
+        model.denoise_v(&xhat, &sig_v, &a_v, &b_v, mask).unwrap()
+    }
+}
+
+/// The seed `run_sampler` loop for the history-free solvers, verbatim:
+/// legacy eval, freshly allocated predictor buffers, full-matrix mask.
+/// Pins the golden samples the refactored engine must keep producing.
+fn seed_sampler(
+    model: &GmmModel,
+    param: Param,
+    grid: &sdm::diffusion::SigmaGrid,
+    solver: &SolverSpec,
+    class: Option<usize>,
+    rows: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let dim = model.dim();
+    let times = grid.times(param);
+    let sigmas = &grid.sigmas;
+    let n_int = grid.intervals();
+    let mask = match class {
+        Some(c) => class_mask(rows, &model.info.classes, c),
+        None => uncond_mask(rows, model.k()),
+    };
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; rows * dim];
+    rng.fill_normal_f32(&mut x, param.prior_std(times[0]));
+    let mut dpm = sdm::solvers::dpm2m::Dpm2mState::new();
+    let mut euler_x: Vec<f32> = Vec::new();
+    for i in 0..n_int {
+        let (t_i, t_next) = (times[i], times[i + 1]);
+        let (sigma_i, sigma_next) = (sigmas[i], sigmas[i + 1]);
+        let out = legacy_eval(model, param, &x, t_i, &mask, rows);
+        let dt = t_next - t_i;
+        match solver {
+            SolverSpec::Euler => euler::euler_step(&mut x, &out.v, dt),
+            SolverSpec::Dpm2m => dpm.step(&mut x, &out.d, sigma_i, sigma_next),
+            SolverSpec::Heun => {
+                euler::euler_step_to(&x, &out.v, dt, &mut euler_x);
+                if sigma_next > 0.0 {
+                    let out2 = legacy_eval(model, param, &euler_x, t_next, &mask, rows);
+                    heun::heun_correct(&mut x, &out.v, &out2.v, dt);
+                } else {
+                    x.copy_from_slice(&euler_x);
+                }
+            }
+            other => panic!("seed_sampler does not cover {other:?}"),
+        }
+    }
+    x
+}
+
+#[test]
+fn golden_run_sampler_samples_match_seed_implementation_bitwise() {
+    let m = toy();
+    let ds = m.info.clone();
+    let grid = edm_schedule(14, ds.sigma_min, ds.sigma_max, ds.rho).unwrap();
+    for param in [Param::Edm, Param::vp(), Param::Ve] {
+        for solver in [SolverSpec::Euler, SolverSpec::Heun, SolverSpec::Dpm2m] {
+            if matches!(solver, SolverSpec::Dpm2m) && param.s(grid.times(param)[0]) != 1.0 {
+                continue; // dpm2m rejects VP by contract
+            }
+            for class in [None, Some(0)] {
+                let cfg = RunConfig { rows: 12, seed: 4242, class, trace: false };
+                let got = run_sampler(&m, param, &grid, &solver, &ds, &cfg).unwrap();
+                let want = seed_sampler(&m, param, &grid, &solver, class, 12, 4242);
+                assert_bits_eq(
+                    &want,
+                    &got.samples,
+                    &format!("{}/{}/class{class:?}", param.name(), solver.tag()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_model_produces_bit_identical_sampler_runs() {
+    let plain = toy();
+    let pool = Arc::new(ThreadPool::new(3));
+    let sharded = toy().with_shard_pool(pool, 2); // force sharding at any batch
+    let ds = plain.info.clone();
+    let grid = edm_schedule(10, ds.sigma_min, ds.sigma_max, ds.rho).unwrap();
+    for solver in [SolverSpec::Euler, SolverSpec::Heun] {
+        let cfg = RunConfig { rows: 13, seed: 31, class: None, trace: true };
+        let a = run_sampler(&plain, Param::Edm, &grid, &solver, &ds, &cfg).unwrap();
+        let b = run_sampler(&sharded, Param::Edm, &grid, &solver, &ds, &cfg).unwrap();
+        assert_bits_eq(&a.samples, &b.samples, "sharded samples");
+        assert_eq!(a.nfe, b.nfe);
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.kappa_hat, sb.kappa_hat, "κ̂ trace must match");
+            assert_eq!(sa.eta_hat, sb.eta_hat, "η̂ trace must match");
+        }
+    }
+}
+
+#[test]
+fn class_mask_row_agrees_with_full_mask() {
+    let info = toy().info;
+    let row = class_mask_row(&info.classes, 1);
+    let full = class_mask(5, &info.classes, 1);
+    for r in 0..5 {
+        assert_eq!(&full[r * info.k..(r + 1) * info.k], &row[..]);
+    }
+}
