@@ -1,28 +1,36 @@
 //! Dynamic batcher: one grouping thread per dataset route, integration on
-//! the coordinator's shared worker pool.
+//! the coordinator's shared worker pool under QoS control.
 //!
 //! Compatible requests (same parameterization, solver, schedule, steps,
-//! class) are merged into a single integration batch up to `max_batch`
-//! rows, or flushed after `max_wait` — the standard latency/throughput
-//! dial of serving systems. The batcher thread itself only *groups*:
-//! ready groups are chunked at `max_batch` rows and submitted to the
-//! shared [`ThreadPool`], bounded by `max_inflight` concurrently
-//! integrating groups per dataset, with results routed back through each
+//! conditioning class, QoS class) are merged into a single integration
+//! batch up to `max_batch` rows, or flushed after `max_wait` — the
+//! standard latency/throughput dial of serving systems. The batcher
+//! thread itself only *groups*: ready groups are chunked (aligned to the
+//! artifact's static batch shapes when the route has them, raw `max_batch`
+//! otherwise) and handed to the coordinator's [`DrrScheduler`], which
+//! dispatches them onto the shared [`ThreadPool`] in deficit-round-robin
+//! order across routes — bounded by `max_inflight` concurrently
+//! integrating chunks per dataset, with results routed back through each
 //! [`Pending::reply`]. One slow group therefore no longer head-of-line
-//! blocks unrelated groups or new arrivals (`max_inflight: 0` restores
-//! the old inline behavior for comparison benches).
+//! blocks unrelated groups or new arrivals, and one hot dataset cannot
+//! monopolize flush slots (`max_inflight: 0` restores the old inline
+//! behavior for comparison benches).
 //!
-//! Padding to the AOT artifact's static batch shapes happens one level
-//! down (the PJRT executor); the batcher's job is to fill those shapes as
-//! much as possible.
+//! QoS semantics owned here (`coordinator::qos` holds the mechanisms):
+//! ready chunks flush in priority order (interactive > batch >
+//! background, FIFO within a class), and requests whose `deadline_ms`
+//! passed while queueing are shed *pre-flush* with a structured
+//! [`Response::DeadlineExceeded`] — counted in the route metrics, never
+//! silently dropped, never integrated late.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Response, SampleRequest};
+use crate::coordinator::qos::{AdmitGuard, DrrScheduler, Inbox, QosClass, RecvError, ShedCause};
 use crate::metrics::sample_mean_cov;
 use crate::sampler::{generate, generate_pooled, run_sampler, RunConfig};
 use crate::util::{ThreadPool, Timer};
@@ -34,6 +42,24 @@ pub struct Pending {
     pub reply: mpsc::Sender<Response>,
     pub enqueued: Instant,
     pub timer: Timer,
+    /// absolute shed deadline, derived from `req.deadline_ms` at admission.
+    pub deadline: Option<Instant>,
+    /// admission slot, released when this request's lifetime ends
+    /// (installed by [`Inbox::try_push`]; `None` for direct test harness
+    /// submissions).
+    pub admit: Option<AdmitGuard>,
+}
+
+impl Pending {
+    /// Stamp a request at admission time: arrival clock, latency timer,
+    /// and the absolute deadline its `deadline_ms` budget implies.
+    pub fn new(req: SampleRequest, reply: mpsc::Sender<Response>) -> Pending {
+        let enqueued = Instant::now();
+        let deadline = req
+            .deadline_ms
+            .map(|ms| enqueued + Duration::from_secs_f64(ms / 1e3));
+        Pending { req, reply, enqueued, timer: Timer::start(), deadline, admit: None }
+    }
 }
 
 /// Batching policy knobs.
@@ -43,7 +69,7 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// flush age for a non-full group.
     pub max_wait: Duration,
-    /// max groups of one dataset integrating concurrently on the worker
+    /// max chunks of one dataset integrating concurrently on the worker
     /// pool; `0` integrates inline on the batcher thread (the pre-pool
     /// behavior, kept for regression benches).
     pub max_inflight: usize,
@@ -60,19 +86,52 @@ impl Default for BatchPolicy {
 }
 
 /// Group key: everything that must match for two requests to share one
-/// integration batch.
+/// integration batch. Includes the QoS class so priorities stay crisp: a
+/// background request can never ride (or delay) an interactive batch.
 fn group_key(r: &SampleRequest) -> String {
     format!(
-        "{}|{}|{}|{}|{:?}",
+        "{}|{}|{}|{}|{:?}|{}",
         r.param.name(),
         r.solver.tag(),
         r.schedule.tag(),
         r.steps,
-        r.class
+        r.class,
+        r.qos.name()
     )
 }
 
-/// Count of groups a dataset currently has integrating on the pool.
+/// A chunk ready to flush, ordered for the backlog heap: higher QoS class
+/// first, then FIFO by chunk sequence number within a class.
+struct PrioChunk {
+    class: QosClass,
+    seq: u64,
+    chunk: Vec<Pending>,
+}
+
+impl PartialEq for PrioChunk {
+    fn eq(&self, other: &Self) -> bool {
+        self.class == other.class && self.seq == other.seq
+    }
+}
+
+impl Eq for PrioChunk {}
+
+impl PartialOrd for PrioChunk {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PrioChunk {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: greatest = highest class, lowest seq
+        self.class
+            .cmp(&other.class)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Count of chunks a dataset currently has integrating on the pool.
 struct Inflight {
     count: Mutex<usize>,
     cv: Condvar,
@@ -99,7 +158,7 @@ impl Inflight {
         self.cv.notify_all();
     }
 
-    /// Block until fewer than `limit` groups are in flight.
+    /// Block until fewer than `limit` chunks are in flight.
     fn wait_below(&self, limit: usize) {
         let mut c = self.count.lock().expect("inflight poisoned");
         while *c >= limit {
@@ -107,7 +166,7 @@ impl Inflight {
         }
     }
 
-    /// Block until every submitted group has finished.
+    /// Block until every submitted chunk has finished.
     fn wait_zero(&self) {
         self.wait_below(1);
     }
@@ -123,73 +182,69 @@ impl Drop for InflightGuard {
 }
 
 /// Run the batcher loop for one dataset until the inbox closes or `stop`
-/// is raised (the router's shutdown signal — the inbox senders stay alive
-/// inside the lock-free route table, so disconnect alone cannot end the
-/// loop anymore).
+/// is raised (the router's shutdown signal).
 ///
-/// The loop never blocks on the worker pool: ready groups are chunked at
-/// `max_batch` rows, chunks that fit under the `max_inflight` bound are
-/// submitted immediately, and the rest queue in a FIFO backlog that is
-/// drained as integrations finish — so a many-chunk burst in one group
-/// can neither stall the inbox nor burst past the bound when slots free.
+/// The loop never blocks on the worker pool: ready groups are chunked
+/// (shape-aligned when the artifact publishes static batch shapes),
+/// pushed into a priority backlog, and — under the per-route
+/// `max_inflight` bound — handed to the shared [`DrrScheduler`], which
+/// owns cross-route dispatch order. Expired requests are shed as each
+/// chunk leaves the backlog, so a deadline is honored no matter how long
+/// the chunk queued.
 pub fn batcher_loop(
     dataset: String,
     hub: Arc<EngineHub>,
     metrics: Arc<ServerMetrics>,
-    rx: mpsc::Receiver<Pending>,
+    inbox: Arc<Inbox>,
     policy: BatchPolicy,
-    pool: Arc<ThreadPool>,
+    sched: Arc<DrrScheduler>,
     stop: Arc<std::sync::atomic::AtomicBool>,
 ) {
     use std::sync::atomic::Ordering;
 
     let inflight = Arc::new(Inflight::new());
+    let shapes: Option<Vec<usize>> = hub.batch_shapes(&dataset);
     let mut groups: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
-    let mut backlog: VecDeque<Vec<Pending>> = VecDeque::new();
+    let mut backlog: BinaryHeap<PrioChunk> = BinaryHeap::new();
+    let mut seq = 0u64;
     loop {
         // wait for work, with a timeout so aged groups still flush
         let mut closing = false;
-        match rx.recv_timeout(policy.max_wait) {
+        match inbox.recv_timeout(policy.max_wait) {
             Ok(p) => {
                 groups.entry(group_key(&p.req)).or_default().push(p);
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => closing = true,
+            Err(RecvError::Timeout) => {}
+            Err(RecvError::Closed) => closing = true,
         }
+        metrics.record_queue_depth(&dataset, inbox.outstanding());
         if closing || stop.load(Ordering::SeqCst) {
             // drain everything already accepted (including requests still
             // queued in the inbox); with no more arrivals, blocking on
             // the in-flight bound is fine. wait_zero() then makes
             // joining the batcher thread imply every reply was sent
-            while let Ok(p) = rx.try_recv() {
+            while let Some(p) = inbox.try_recv() {
                 groups.entry(group_key(&p.req)).or_default().push(p);
             }
             for (_, g) in std::mem::take(&mut groups) {
-                backlog.extend(chunk_ready(&dataset, &metrics, g, &policy));
+                enqueue_chunks(&dataset, &metrics, g, &policy, shapes.as_deref(), &mut backlog, &mut seq);
             }
-            for chunk in backlog.drain(..) {
+            while let Some(pc) = backlog.pop() {
+                let chunk = shed_expired(&dataset, &metrics, pc.chunk);
+                if chunk.is_empty() {
+                    continue;
+                }
                 if policy.max_inflight == 0 {
                     flush(&dataset, &hub, &metrics, chunk, &policy, None);
                 } else {
                     inflight.wait_below(policy.max_inflight);
-                    submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
+                    submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &sched, &inflight);
                 }
             }
             inflight.wait_zero();
             return;
         }
-        // 1) drain backlogged chunks into freed integration slots
-        while !backlog.is_empty()
-            && (policy.max_inflight == 0 || inflight.current() < policy.max_inflight)
-        {
-            let chunk = backlog.pop_front().unwrap();
-            if policy.max_inflight == 0 {
-                flush(&dataset, &hub, &metrics, chunk, &policy, None);
-            } else {
-                submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
-            }
-        }
-        // 2) chunk full or aged groups; submit what fits, backlog the rest
+        // 1) chunk full or aged groups into the priority backlog
         let now = Instant::now();
         let keys: Vec<String> = groups.keys().cloned().collect();
         for key in keys {
@@ -200,73 +255,153 @@ pub fn batcher_loop(
                 .max()
                 .unwrap_or_default();
             if rows >= policy.max_batch || age >= policy.max_wait {
-                let g = groups.remove(&key).unwrap();
-                for chunk in chunk_ready(&dataset, &metrics, g, &policy) {
-                    if policy.max_inflight == 0 {
-                        flush(&dataset, &hub, &metrics, chunk, &policy, None);
-                    } else if inflight.current() < policy.max_inflight {
-                        submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &pool, &inflight);
-                    } else {
-                        backlog.push_back(chunk);
-                    }
-                }
+                let g = groups.remove(&key).expect("key from snapshot");
+                enqueue_chunks(&dataset, &metrics, g, &policy, shapes.as_deref(), &mut backlog, &mut seq);
+            }
+        }
+        // 2) drain the backlog — highest class first, FIFO within — into
+        //    free integration slots, shedding expired requests pre-flush
+        while !backlog.is_empty()
+            && (policy.max_inflight == 0 || inflight.current() < policy.max_inflight)
+        {
+            let pc = backlog.pop().expect("backlog non-empty");
+            let chunk = shed_expired(&dataset, &metrics, pc.chunk);
+            if chunk.is_empty() {
+                continue;
+            }
+            if policy.max_inflight == 0 {
+                flush(&dataset, &hub, &metrics, chunk, &policy, None);
+            } else {
+                submit_chunk(&dataset, &hub, &metrics, chunk, &policy, &sched, &inflight);
             }
         }
     }
 }
 
-/// Chunk a ready group at `max_batch` rows, recording the split metric.
-fn chunk_ready(
+/// Chunk a ready group and push the chunks into the priority backlog,
+/// recording the split metric.
+fn enqueue_chunks(
     dataset: &str,
     metrics: &ServerMetrics,
     group: Vec<Pending>,
     policy: &BatchPolicy,
-) -> Vec<Vec<Pending>> {
+    shapes: Option<&[usize]>,
+    backlog: &mut BinaryHeap<PrioChunk>,
+    seq: &mut u64,
+) {
     if group.is_empty() {
-        return Vec::new();
+        return;
     }
-    let chunks = chunk_group(group, policy.max_batch.max(1));
+    let class = group[0].req.qos;
+    let chunks = chunk_group(group, policy.max_batch.max(1), shapes);
     if chunks.len() > 1 {
         metrics.record_split(dataset, chunks.len());
     }
-    chunks
+    for chunk in chunks {
+        backlog.push(PrioChunk { class, seq: *seq, chunk });
+        *seq += 1;
+    }
 }
 
-/// Hand one chunk to the worker pool (caller has checked/awaited the
-/// in-flight bound).
+/// Shed every expired request from a chunk with a structured
+/// [`Response::DeadlineExceeded`], returning the survivors. Counted per
+/// route; never silent.
+fn shed_expired(dataset: &str, metrics: &ServerMetrics, chunk: Vec<Pending>) -> Vec<Pending> {
+    let now = Instant::now();
+    let mut keep = Vec::with_capacity(chunk.len());
+    for p in chunk {
+        match p.deadline {
+            Some(d) if now > d => {
+                metrics.record_shed(dataset, ShedCause::Deadline);
+                let waited_ms = now.duration_since(p.enqueued).as_secs_f64() * 1e3;
+                let _ = p.reply.send(Response::DeadlineExceeded {
+                    route: dataset.to_string(),
+                    deadline_ms: p.req.deadline_ms.unwrap_or(0.0),
+                    waited_ms,
+                });
+                // p drops here: its AdmitGuard frees the admission slot
+            }
+            _ => keep.push(p),
+        }
+    }
+    keep
+}
+
+/// Hand one chunk to the DRR scheduler (caller has checked/awaited the
+/// per-route in-flight bound; the scheduler owns cross-route order).
 fn submit_chunk(
     dataset: &str,
     hub: &Arc<EngineHub>,
     metrics: &Arc<ServerMetrics>,
     chunk: Vec<Pending>,
     policy: &BatchPolicy,
-    pool: &Arc<ThreadPool>,
+    sched: &Arc<DrrScheduler>,
     inflight: &Arc<Inflight>,
 ) {
     metrics.record_inflight(dataset, inflight.inc());
     let guard = InflightGuard(Arc::clone(inflight));
+    let rows: usize = chunk.iter().map(|p| p.req.n).sum();
     let d = dataset.to_string();
     let h = Arc::clone(hub);
     let m = Arc::clone(metrics);
-    let p = Arc::clone(pool);
+    let p = Arc::clone(sched.pool());
     let pol = *policy;
-    pool.execute(move || {
-        let _dec = guard;
-        flush(&d, &h, &m, chunk, &pol, Some(&p));
-    });
+    sched.submit(
+        dataset,
+        rows,
+        Box::new(move || {
+            let _dec = guard;
+            // re-check deadlines at the last moment: the chunk may have
+            // waited in the DRR queue behind other routes' flushes since
+            // the backlog shed
+            let chunk = shed_expired(&d, &m, chunk);
+            flush(&d, &h, &m, chunk, &pol, Some(&p));
+        }),
+    );
 }
 
 /// Split one compatible group into chunks of at most `max_batch` total
 /// rows, at request boundaries (a request is never split across chunks;
 /// a single request larger than `max_batch` forms its own chunk and is
 /// row-sharded by [`generate_pooled`] during integration instead).
-fn chunk_group(group: Vec<Pending>, max_batch: usize) -> Vec<Vec<Pending>> {
+///
+/// With `shapes` — the artifact's static batch sizes, ascending — the cut
+/// points align to those shapes: the effective cap is the largest shape
+/// (never build a chunk no variant can hold), and a chunk is closed early
+/// when keeping the next request would waste more padded rows than
+/// splitting, comparing `pad(cur + n)` against `pad(cur) + pad(n)` where
+/// `pad(r)` is the fill of the smallest shape ≥ r. Without shapes
+/// (native backend, no manifest) the raw `max_batch` path is unchanged.
+fn chunk_group(group: Vec<Pending>, max_batch: usize, shapes: Option<&[usize]>) -> Vec<Vec<Pending>> {
+    // effective cap: the largest usable shape, else raw max_batch
+    let shapes: Option<Vec<usize>> = shapes.and_then(|s| {
+        let mut s: Vec<usize> = s.iter().copied().filter(|&b| b > 0 && b <= max_batch).collect();
+        s.sort_unstable();
+        s.dedup();
+        (!s.is_empty()).then_some(s)
+    });
+    let cap = shapes.as_ref().map(|s| *s.last().expect("non-empty")).unwrap_or(max_batch);
+    // padded rows wasted if `r` rows run as one chunk
+    let pad = |r: usize| -> usize {
+        match &shapes {
+            Some(s) => s
+                .iter()
+                .find(|&&b| b >= r)
+                .map(|&b| b - r)
+                // oversized single requests are row-sharded at cap later;
+                // the final partial shard pads to the smallest shape ≥ it
+                .unwrap_or_else(|| (cap - r % cap) % cap),
+            None => 0,
+        }
+    };
     let mut chunks: Vec<Vec<Pending>> = Vec::new();
     let mut cur: Vec<Pending> = Vec::new();
     let mut cur_rows = 0usize;
     for p in group {
         let n = p.req.n;
-        if !cur.is_empty() && cur_rows + n > max_batch {
+        let over_cap = cur_rows + n > cap;
+        let worse_padding = shapes.is_some() && n <= cap && pad(cur_rows + n) > pad(cur_rows) + pad(n);
+        if !cur.is_empty() && (over_cap || worse_padding) {
             chunks.push(std::mem::take(&mut cur));
             cur_rows = 0;
         }
@@ -414,30 +549,31 @@ mod tests {
 
     fn mk_pending(req: SampleRequest) -> (Pending, mpsc::Receiver<Response>) {
         let (rtx, rrx) = mpsc::channel();
-        (
-            Pending { req, reply: rtx, enqueued: Instant::now(), timer: Timer::start() },
-            rrx,
-        )
+        (Pending::new(req, rtx), rrx)
     }
 
-    fn spawn_batcher_with(policy: BatchPolicy) -> (mpsc::Sender<Pending>, Arc<ServerMetrics>) {
+    fn spawn_batcher_with(policy: BatchPolicy) -> (Arc<Inbox>, Arc<ServerMetrics>) {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
         let pool = Arc::new(ThreadPool::new(4));
-        let (tx, rx) = mpsc::channel();
+        let sched = DrrScheduler::new(pool, 0, policy.max_batch);
+        let inbox = Arc::new(Inbox::new(0));
         let m2 = metrics.clone();
+        let inbox2 = inbox.clone();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        std::thread::spawn(move || batcher_loop("toy".into(), hub, m2, rx, policy, pool, stop));
-        (tx, metrics)
+        std::thread::spawn(move || {
+            batcher_loop("toy".into(), hub, m2, inbox2, policy, sched, stop)
+        });
+        (inbox, metrics)
     }
 
-    fn spawn_batcher() -> (mpsc::Sender<Pending>, Arc<ServerMetrics>) {
+    fn spawn_batcher() -> (Arc<Inbox>, Arc<ServerMetrics>) {
         spawn_batcher_with(BatchPolicy::default())
     }
 
-    fn submit(tx: &mpsc::Sender<Pending>, req: SampleRequest) -> mpsc::Receiver<Response> {
+    fn submit(inbox: &Inbox, req: SampleRequest) -> mpsc::Receiver<Response> {
         let (p, rrx) = mk_pending(req);
-        tx.send(p).unwrap();
+        inbox.try_push(p).map_err(|_| "push rejected").unwrap();
         rrx
     }
 
@@ -467,6 +603,23 @@ mod tests {
         let (tx, _m) = spawn_batcher();
         let rx1 = submit(&tx, mk_request(4, "euler"));
         let rx2 = submit(&tx, mk_request(4, "heun"));
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 1),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn different_qos_classes_never_share_a_batch() {
+        let (tx, _m) = spawn_batcher();
+        let mut hi = mk_request(4, "euler");
+        hi.qos = QosClass::Interactive;
+        let lo = mk_request(4, "euler");
+        assert_ne!(group_key(&hi), group_key(&lo));
+        let rx1 = submit(&tx, hi);
+        let rx2 = submit(&tx, lo);
         for rx in [rx1, rx2] {
             match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
                 Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 1),
@@ -513,16 +666,18 @@ mod tests {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
         let pool = Arc::new(ThreadPool::new(2));
-        let (tx, rx) = mpsc::channel();
+        let sched = DrrScheduler::new(pool, 0, 256);
+        let inbox = Arc::new(Inbox::new(0));
         let m2 = metrics.clone();
+        let inbox2 = inbox.clone();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         std::thread::spawn(move || {
-            batcher_loop("ghost".into(), hub, m2, rx, BatchPolicy::default(), pool, stop)
+            batcher_loop("ghost".into(), hub, m2, inbox2, BatchPolicy::default(), sched, stop)
         });
         let mut req = mk_request(2, "euler");
         req.dataset = "ghost".into();
         let (p, rrx) = mk_pending(req);
-        tx.send(p).unwrap();
+        inbox.try_push(p).map_err(|_| "push rejected").unwrap();
         match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {
             Response::Err(e) => assert!(e.contains("unknown dataset")),
             other => panic!("{other:?}"),
@@ -536,7 +691,7 @@ mod tests {
             .iter()
             .map(|&n| mk_pending(mk_request(n, "euler")).0)
             .collect();
-        let chunks = chunk_group(group, 8);
+        let chunks = chunk_group(group, 8, None);
         assert_eq!(chunks.len(), 3);
         let rows: Vec<usize> = chunks
             .iter()
@@ -551,10 +706,88 @@ mod tests {
             .iter()
             .map(|&n| mk_pending(mk_request(n, "euler")).0)
             .collect();
-        let chunks = chunk_group(group, 8);
+        let chunks = chunk_group(group, 8, None);
         assert_eq!(chunks.len(), 3);
         assert_eq!(chunks[1].len(), 1);
         assert_eq!(chunks[1][0].req.n, 50);
+    }
+
+    #[test]
+    fn shape_aligned_chunking_cuts_at_variant_boundaries() {
+        // artifact shapes 64/256: a 64-row fill plus an 8-row tail must
+        // split 64|8 (padded 64 + 64 = 128 rows) instead of riding one
+        // 72-row chunk padded to 256
+        let group: Vec<Pending> = [32usize, 32, 8]
+            .iter()
+            .map(|&n| mk_pending(mk_request(n, "euler")).0)
+            .collect();
+        let chunks = chunk_group(group, 256, Some(&[64, 256]));
+        let rows: Vec<usize> = chunks
+            .iter()
+            .map(|c| c.iter().map(|p| p.req.n).sum())
+            .collect();
+        assert_eq!(rows, vec![64, 8]);
+
+        // ...but when combining wastes less than splitting, combine:
+        // 60 + 30 on shapes 64/96 pads 6 combined vs 4 + 34 split
+        let group: Vec<Pending> = [60usize, 30]
+            .iter()
+            .map(|&n| mk_pending(mk_request(n, "euler")).0)
+            .collect();
+        let chunks = chunk_group(group, 256, Some(&[64, 96]));
+        let rows: Vec<usize> = chunks
+            .iter()
+            .map(|c| c.iter().map(|p| p.req.n).sum())
+            .collect();
+        assert_eq!(rows, vec![90]);
+    }
+
+    #[test]
+    fn shape_aligned_chunking_caps_at_largest_shape() {
+        // max_batch larger than any shape: the largest shape must cap the
+        // chunk anyway, or the executor would have no variant to run it
+        let group: Vec<Pending> = [48usize, 48, 48]
+            .iter()
+            .map(|&n| mk_pending(mk_request(n, "euler")).0)
+            .collect();
+        let chunks = chunk_group(group, 1024, Some(&[64]));
+        let rows: Vec<usize> = chunks
+            .iter()
+            .map(|c| c.iter().map(|p| p.req.n).sum())
+            .collect();
+        assert_eq!(rows, vec![48, 48, 48]);
+
+        // shapes above max_batch are unusable and ignored (raw path)
+        let group: Vec<Pending> = [4usize, 4]
+            .iter()
+            .map(|&n| mk_pending(mk_request(n, "euler")).0)
+            .collect();
+        let chunks = chunk_group(group, 8, Some(&[512]));
+        assert_eq!(chunks.len(), 1);
+    }
+
+    #[test]
+    fn backlog_orders_by_class_then_fifo() {
+        let mk = |class: QosClass, seq: u64| PrioChunk { class, seq, chunk: Vec::new() };
+        let mut heap = BinaryHeap::new();
+        heap.push(mk(QosClass::Batch, 0));
+        heap.push(mk(QosClass::Background, 1));
+        heap.push(mk(QosClass::Interactive, 2));
+        heap.push(mk(QosClass::Interactive, 3));
+        heap.push(mk(QosClass::Batch, 4));
+        let order: Vec<(QosClass, u64)> = std::iter::from_fn(|| heap.pop())
+            .map(|c| (c.class, c.seq))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (QosClass::Interactive, 2),
+                (QosClass::Interactive, 3),
+                (QosClass::Batch, 0),
+                (QosClass::Batch, 4),
+                (QosClass::Background, 1),
+            ]
+        );
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Blocking JSON-lines client for the coordinator (examples, benches,
-//! load generators).
+//! load generators), with typed surfacing of QoS refusals.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -8,6 +8,65 @@ use anyhow::Context;
 
 use crate::util::Json;
 use crate::Result;
+
+/// A structured QoS refusal decoded from a response line's `code` field.
+/// Implements `Error`, so [`Client::send_checked`] can return it as a
+/// typed `Err` that callers `downcast_ref::<Rejection>()` to branch on —
+/// backpressure is data, not prose.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rejection {
+    /// the route is at its admission bound; back off `retry_after_ms`
+    QueueFull { route: String, depth: usize, retry_after_ms: f64 },
+    /// the request queued past its `deadline_ms` and was shed pre-flush
+    DeadlineExceeded { route: String, waited_ms: f64 },
+    /// the coordinator is shutting down
+    ShuttingDown { route: String },
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejection::QueueFull { route, depth, retry_after_ms } => write!(
+                f,
+                "queue full on route {route:?} ({depth} outstanding); retry after {retry_after_ms:.0} ms"
+            ),
+            Rejection::DeadlineExceeded { route, waited_ms } => {
+                write!(f, "deadline exceeded on route {route:?} after {waited_ms:.1} ms")
+            }
+            Rejection::ShuttingDown { route } => {
+                write!(f, "coordinator shutting down (route {route:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+impl Rejection {
+    /// Decode a response object into a typed rejection, if it is one.
+    pub fn from_response(v: &Json) -> Option<Rejection> {
+        let code = v.get("code").ok()?.as_str().ok()?;
+        let route = v
+            .get("route")
+            .ok()
+            .and_then(|r| r.as_str().ok())
+            .unwrap_or_default()
+            .to_string();
+        match code {
+            "queue_full" => Some(Rejection::QueueFull {
+                route,
+                depth: v.get("depth").ok()?.as_usize().ok()?,
+                retry_after_ms: v.get("retry_after_ms").ok()?.as_f64().ok()?,
+            }),
+            "deadline_exceeded" => Some(Rejection::DeadlineExceeded {
+                route,
+                waited_ms: v.get("waited_ms").ok()?.as_f64().ok()?,
+            }),
+            "shutting_down" => Some(Rejection::ShuttingDown { route }),
+            _ => None,
+        }
+    }
+}
 
 pub struct Client {
     writer: TcpStream,
@@ -29,6 +88,20 @@ impl Client {
         let n = self.reader.read_line(&mut resp)?;
         anyhow::ensure!(n > 0, "server closed connection");
         Json::parse(resp.trim())
+    }
+
+    /// [`Client::send`], surfacing QoS refusals as typed errors: a
+    /// response carrying a `queue_full` / `deadline_exceeded` /
+    /// `shutting_down` code returns `Err` wrapping a [`Rejection`]
+    /// (recover it with `err.downcast_ref::<Rejection>()`). Other
+    /// responses — including plain `"ok":false` errors — pass through as
+    /// `Ok(json)` for the caller to interpret.
+    pub fn send_checked(&mut self, line: &str) -> Result<Json> {
+        let v = self.send(line)?;
+        match Rejection::from_response(&v) {
+            Some(r) => Err(anyhow::Error::new(r)),
+            None => Ok(v),
+        }
     }
 
     pub fn ping(&mut self) -> Result<bool> {
@@ -56,5 +129,54 @@ impl Client {
     pub fn shutdown_server(&mut self) -> Result<()> {
         let _ = self.send(r#"{"op":"shutdown"}"#)?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Response;
+
+    #[test]
+    fn rejections_decode_from_response_lines() {
+        let qf = Response::QueueFull { route: "a".into(), depth: 8, retry_after_ms: 25.0 };
+        let v = Json::parse(&qf.to_line()).unwrap();
+        assert_eq!(
+            Rejection::from_response(&v),
+            Some(Rejection::QueueFull {
+                route: "a".into(),
+                depth: 8,
+                retry_after_ms: 25.0
+            })
+        );
+        let de = Response::DeadlineExceeded {
+            route: "b".into(),
+            deadline_ms: 10.0,
+            waited_ms: 12.5,
+        };
+        let v = Json::parse(&de.to_line()).unwrap();
+        assert_eq!(
+            Rejection::from_response(&v),
+            Some(Rejection::DeadlineExceeded { route: "b".into(), waited_ms: 12.5 })
+        );
+        let sd = Response::ShuttingDown { route: "c".into() };
+        let v = Json::parse(&sd.to_line()).unwrap();
+        assert_eq!(
+            Rejection::from_response(&v),
+            Some(Rejection::ShuttingDown { route: "c".into() })
+        );
+        // ordinary errors and successes are not rejections
+        let v = Json::parse(&Response::Err("boom".into()).to_line()).unwrap();
+        assert_eq!(Rejection::from_response(&v), None);
+        let v = Json::parse(&Response::Pong.to_line()).unwrap();
+        assert_eq!(Rejection::from_response(&v), None);
+    }
+
+    #[test]
+    fn rejection_is_a_typed_error() {
+        let r = Rejection::QueueFull { route: "x".into(), depth: 1, retry_after_ms: 5.0 };
+        let err = anyhow::Error::new(r.clone());
+        assert_eq!(err.downcast_ref::<Rejection>(), Some(&r));
+        assert!(format!("{err}").contains("queue full"));
     }
 }

@@ -67,6 +67,10 @@ struct DatasetEntry {
     oracle: Arc<GmmModel>,
     /// fingerprint of the sidecar parameters, cached for cache keys
     fp: u64,
+    /// the artifact's static batch sizes, ascending (PJRT backends; the
+    /// batcher aligns chunk cuts to them — `None` keeps raw `max_batch`
+    /// chunking).
+    batch_shapes: Option<Vec<usize>>,
 }
 
 /// Fingerprint of everything that defines a dataset's model: mixture
@@ -146,7 +150,14 @@ impl EngineHub {
                 _ => oracle.clone(),
             };
             let fp = dataset_fingerprint(info);
-            datasets.insert(name.clone(), DatasetEntry { info: info.clone(), model, oracle, fp });
+            let batch_shapes = runtime.as_ref().and_then(|rt| {
+                let b = rt.manifest.batches_for(name);
+                (!b.is_empty()).then_some(b)
+            });
+            datasets.insert(
+                name.clone(),
+                DatasetEntry { info: info.clone(), model, oracle, fp, batch_shapes },
+            );
         }
         let schedule_cache = Self::restore_cache(cache, &datasets);
         Ok(EngineHub {
@@ -189,7 +200,7 @@ impl EngineHub {
             let fp = dataset_fingerprint(&info);
             datasets.insert(
                 info.name.clone(),
-                DatasetEntry { info, model: oracle.clone(), oracle, fp },
+                DatasetEntry { info, model: oracle.clone(), oracle, fp, batch_shapes: None },
             );
         }
         let schedule_cache = Self::restore_cache(CacheConfig::default(), &datasets);
@@ -220,7 +231,10 @@ impl EngineHub {
         for (info, model) in models {
             let oracle = Arc::new(GmmModel::new(info.clone()));
             let fp = dataset_fingerprint(&info);
-            datasets.insert(info.name.clone(), DatasetEntry { info, model, oracle, fp });
+            datasets.insert(
+                info.name.clone(),
+                DatasetEntry { info, model, oracle, fp, batch_shapes: None },
+            );
         }
         let schedule_cache = Self::restore_cache(cache, &datasets);
         EngineHub {
@@ -257,6 +271,26 @@ impl EngineHub {
 
     pub fn dataset_names(&self) -> Vec<String> {
         self.datasets.keys().cloned().collect()
+    }
+
+    /// The artifact's static batch sizes for one dataset (ascending), if
+    /// the serving backend has them — `None` for native oracles and
+    /// unknown datasets, which keeps the batcher on raw `max_batch`
+    /// chunking.
+    pub fn batch_shapes(&self, dataset: &str) -> Option<Vec<usize>> {
+        self.datasets.get(dataset).and_then(|e| e.batch_shapes.clone())
+    }
+
+    /// Override a dataset's static batch shapes (tests and benches drive
+    /// the batcher's shape-aligned chunking without a PJRT manifest).
+    /// Call before wrapping the hub in an `Arc`, like
+    /// [`EngineHub::attach_shard_pool`].
+    pub fn set_batch_shapes(&mut self, dataset: &str, mut shapes: Vec<usize>) {
+        if let Some(e) = self.datasets.get_mut(dataset) {
+            shapes.sort_unstable();
+            shapes.dedup();
+            e.batch_shapes = (!shapes.is_empty()).then_some(shapes);
+        }
     }
 
     pub fn info(&self, dataset: &str) -> Result<&DatasetInfo> {
@@ -391,6 +425,16 @@ mod tests {
         let gb = h.schedule("toy", Param::Edm, &b, 10).unwrap();
         assert_eq!(h.cached_schedules(), 2, "distinct pilot configs must not alias");
         assert_eq!(ga.sigmas.len(), gb.sigmas.len());
+    }
+
+    #[test]
+    fn batch_shapes_default_none_and_settable() {
+        let mut h = hub();
+        assert_eq!(h.batch_shapes("toy"), None, "native hubs have no artifact shapes");
+        h.set_batch_shapes("toy", vec![256, 64, 64]);
+        assert_eq!(h.batch_shapes("toy"), Some(vec![64, 256]), "sorted + deduped");
+        h.set_batch_shapes("nope", vec![8]); // unknown dataset: no-op
+        assert_eq!(h.batch_shapes("nope"), None);
     }
 
     #[test]

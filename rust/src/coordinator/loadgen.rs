@@ -2,14 +2,30 @@
 //! for driving the coordinator — the serving-paper standard for measuring
 //! latency under offered load rather than best-case round-trips.
 //!
-//! Deterministic given a seed; used by `sdm bench-client --open-loop` and
-//! the coordinator benches.
+//! Two drivers, two questions:
+//!
+//! - [`open_loop`] fires at a fixed offered rate regardless of completion
+//!   times: the honest way to observe queueing (and, with bounded
+//!   inboxes, shedding) under a load the system did not choose.
+//! - [`closed_loop`] keeps N workers each with one request in flight plus
+//!   optional think-time: the honest way to measure latency at a
+//!   sustainable concurrency, and the probe [`find_max_rps`] binary
+//!   searches to find the highest load whose p99 still meets an SLO.
+//!
+//! Deterministic given a seed — [`LoadReport::trace_hash`] fingerprints
+//! the drawn request sequence so reruns can prove it. Both drivers count
+//! QoS refusals (`queue_full` sheds, `deadline_exceeded` expiries)
+//! separately from hard errors. Used by `sdm loadgen` /
+//! `sdm bench-client --open-loop-rps` and the coordinator benches;
+//! SLO-search results append to `BENCH_qos.json`
+//! ([`append_qos_record`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::coordinator::client::Client;
-use crate::util::{Histogram, Rng, Timer};
+use crate::coordinator::client::{Client, Rejection};
+use crate::util::{Histogram, Json, Rng, Timer};
 use crate::Result;
 
 /// One request template drawn by the generator.
@@ -21,6 +37,27 @@ pub struct RequestTemplate {
     pub solver: String,
     pub schedule: String,
     pub steps: usize,
+    /// QoS class (wire field `priority`); `None` = server default (batch).
+    pub priority: Option<String>,
+    /// per-request deadline budget in milliseconds.
+    pub deadline_ms: Option<f64>,
+}
+
+impl RequestTemplate {
+    /// Serialize as one request line with the given seed.
+    pub fn line(&self, seed: u64) -> String {
+        let mut extra = String::new();
+        if let Some(p) = &self.priority {
+            extra.push_str(&format!(r#","priority":"{p}""#));
+        }
+        if let Some(d) = self.deadline_ms {
+            extra.push_str(&format!(r#","deadline_ms":{d}"#));
+        }
+        format!(
+            r#"{{"op":"sample","dataset":"{}","n":{},"param":"{}","solver":"{}","schedule":"{}","steps":{},"seed":{}{}}}"#,
+            self.dataset, self.n, self.param, self.solver, self.schedule, self.steps, seed, extra
+        )
+    }
 }
 
 /// Mixture of request templates with weights (a "trace profile").
@@ -41,6 +78,8 @@ impl TraceProfile {
             solver: solver.into(),
             schedule: "edm".into(),
             steps,
+            priority: None,
+            deadline_ms: None,
         };
         TraceProfile {
             templates: vec![
@@ -49,6 +88,11 @@ impl TraceProfile {
                 (0.25, t("afhqg", 16, "sdm", 40)),
             ],
         }
+    }
+
+    /// Single-template profile (the `sdm loadgen --dataset ...` shape).
+    pub fn single(tpl: RequestTemplate) -> TraceProfile {
+        TraceProfile { templates: vec![(1.0, tpl)] }
     }
 
     /// Four mutually incompatible request groups (distinct solver /
@@ -65,6 +109,8 @@ impl TraceProfile {
             solver: solver.into(),
             schedule: schedule.into(),
             steps,
+            priority: None,
+            deadline_ms: None,
         };
         TraceProfile {
             templates: vec![
@@ -76,9 +122,14 @@ impl TraceProfile {
         }
     }
 
-    pub fn draw(&self, rng: &mut Rng) -> &RequestTemplate {
+    /// Draw a template index (the trace-hash unit).
+    pub fn draw_index(&self, rng: &mut Rng) -> usize {
         let weights: Vec<f64> = self.templates.iter().map(|(w, _)| *w).collect();
-        &self.templates[rng.weighted_choice(&weights)].1
+        rng.weighted_choice(&weights)
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> &RequestTemplate {
+        &self.templates[self.draw_index(rng)].1
     }
 }
 
@@ -87,14 +138,63 @@ impl TraceProfile {
 pub struct LoadReport {
     pub latency: Histogram,
     pub sent: u64,
+    /// hard failures (transport errors, server `Err` replies)
     pub errors: u64,
+    /// admission-control rejections (`queue_full`)
+    pub sheds: u64,
+    /// deadline expiries (`deadline_exceeded`)
+    pub expiries: u64,
     pub wall_s: f64,
+    /// order-insensitive fingerprint of the drawn request sequence:
+    /// per-worker FNV folds XOR-combined, so the same seed reproduces the
+    /// same hash regardless of thread interleaving.
+    pub trace_hash: u64,
 }
 
 impl LoadReport {
     pub fn throughput_rps(&self) -> f64 {
         self.sent as f64 / self.wall_s.max(1e-9)
     }
+
+    /// Completed-request rate (excludes sheds/expiries/errors).
+    pub fn goodput_rps(&self) -> f64 {
+        self.latency.count() as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Per-request outcome classification shared by both drivers.
+fn classify(
+    result: &Result<Json>,
+    hist: &mut Histogram,
+    latency_us: f64,
+    errors: &AtomicU64,
+    sheds: &AtomicU64,
+    expiries: &AtomicU64,
+) {
+    match result {
+        Ok(v) if v.get("ok").map(|b| b == &Json::Bool(true)).unwrap_or(false) => {
+            hist.record(latency_us);
+        }
+        Ok(v) => match Rejection::from_response(v) {
+            Some(Rejection::QueueFull { .. }) => {
+                sheds.fetch_add(1, Ordering::SeqCst);
+            }
+            Some(Rejection::DeadlineExceeded { .. }) => {
+                expiries.fetch_add(1, Ordering::SeqCst);
+            }
+            _ => {
+                errors.fetch_add(1, Ordering::SeqCst);
+            }
+        },
+        Err(_) => {
+            errors.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// FNV-fold one drawn template index into a worker's trace hash.
+fn fold_trace(h: u64, template_idx: usize) -> u64 {
+    (h ^ (template_idx as u64 + 1)).wrapping_mul(0x100_0000_01B3)
 }
 
 /// Open-loop Poisson load: `workers` connections fire requests at combined
@@ -110,6 +210,8 @@ pub fn open_loop(
 ) -> Result<LoadReport> {
     anyhow::ensure!(rps > 0.0 && workers > 0, "bad load parameters");
     let errors = Arc::new(AtomicU64::new(0));
+    let sheds = Arc::new(AtomicU64::new(0));
+    let expiries = Arc::new(AtomicU64::new(0));
     let timer = Timer::start();
     let per_worker = total / workers as u64;
     let mut handles = Vec::new();
@@ -117,11 +219,14 @@ pub fn open_loop(
         let addr = addr.to_string();
         let profile = profile.clone();
         let errors = Arc::clone(&errors);
+        let sheds = Arc::clone(&sheds);
+        let expiries = Arc::clone(&expiries);
         let worker_rate = rps / workers as f64;
-        handles.push(std::thread::spawn(move || -> Result<Histogram> {
+        handles.push(std::thread::spawn(move || -> Result<(Histogram, u64)> {
             let mut rng = Rng::new(seed ^ (w as u64 * 0x9E37));
             let mut client = Client::connect(&addr)?;
             let mut hist = Histogram::new();
+            let mut trace = 0xcbf2_9ce4_8422_2325u64 ^ (w as u64);
             let start = Timer::start();
             let mut next_fire_us = 0.0f64;
             for i in 0..per_worker {
@@ -133,35 +238,236 @@ pub fn open_loop(
                         (next_fire_us - now) as u64,
                     ));
                 }
-                let tpl = profile.draw(&mut rng).clone();
+                let idx = profile.draw_index(&mut rng);
+                trace = fold_trace(trace, idx);
+                let line = profile.templates[idx].1.line(seed ^ i);
                 let t = Timer::start();
-                let line = format!(
-                    r#"{{"op":"sample","dataset":"{}","n":{},"param":"{}","solver":"{}","schedule":"{}","steps":{},"seed":{}}}"#,
-                    tpl.dataset, tpl.n, tpl.param, tpl.solver, tpl.schedule, tpl.steps,
-                    seed ^ i
-                );
-                match client.send(&line) {
-                    Ok(v) if v.get("ok").map(|b| b == &crate::util::Json::Bool(true)).unwrap_or(false) => {
-                        hist.record(t.elapsed_us());
-                    }
-                    _ => {
-                        errors.fetch_add(1, Ordering::SeqCst);
-                    }
-                }
+                let resp = client.send(&line);
+                classify(&resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries);
             }
-            Ok(hist)
+            Ok((hist, trace))
         }));
     }
     let mut latency = Histogram::new();
+    let mut trace_hash = 0u64;
     for h in handles {
-        latency.merge(&h.join().unwrap()?);
+        let (hist, trace) = h.join().unwrap()?;
+        latency.merge(&hist);
+        trace_hash ^= trace;
     }
     Ok(LoadReport {
         latency,
         sent: per_worker * workers as u64,
         errors: errors.load(Ordering::SeqCst),
+        sheds: sheds.load(Ordering::SeqCst),
+        expiries: expiries.load(Ordering::SeqCst),
         wall_s: timer.elapsed_us() / 1e6,
+        trace_hash,
     })
+}
+
+/// Closed-loop load: `workers` connections each keep exactly one request
+/// in flight, waiting `think` between a reply and the next request —
+/// offered load self-regulates to what the server sustains, which is
+/// what an SLO probe needs.
+pub fn closed_loop(
+    addr: &str,
+    profile: &TraceProfile,
+    workers: usize,
+    per_worker: u64,
+    think: Duration,
+    seed: u64,
+) -> Result<LoadReport> {
+    anyhow::ensure!(workers > 0 && per_worker > 0, "bad load parameters");
+    let errors = Arc::new(AtomicU64::new(0));
+    let sheds = Arc::new(AtomicU64::new(0));
+    let expiries = Arc::new(AtomicU64::new(0));
+    let timer = Timer::start();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let addr = addr.to_string();
+        let profile = profile.clone();
+        let errors = Arc::clone(&errors);
+        let sheds = Arc::clone(&sheds);
+        let expiries = Arc::clone(&expiries);
+        handles.push(std::thread::spawn(move || -> Result<(Histogram, u64)> {
+            let mut rng = Rng::new(seed ^ (w as u64 * 0x9E37));
+            let mut client = Client::connect(&addr)?;
+            let mut hist = Histogram::new();
+            let mut trace = 0xcbf2_9ce4_8422_2325u64 ^ (w as u64);
+            for i in 0..per_worker {
+                let idx = profile.draw_index(&mut rng);
+                trace = fold_trace(trace, idx);
+                let line = profile.templates[idx].1.line(seed ^ ((w as u64) << 32) ^ i);
+                let t = Timer::start();
+                let resp = client.send(&line);
+                classify(&resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries);
+                if !think.is_zero() {
+                    std::thread::sleep(think);
+                }
+            }
+            Ok((hist, trace))
+        }));
+    }
+    let mut latency = Histogram::new();
+    let mut trace_hash = 0u64;
+    for h in handles {
+        let (hist, trace) = h.join().unwrap()?;
+        latency.merge(&hist);
+        trace_hash ^= trace;
+    }
+    Ok(LoadReport {
+        latency,
+        sent: per_worker * workers as u64,
+        errors: errors.load(Ordering::SeqCst),
+        sheds: sheds.load(Ordering::SeqCst),
+        expiries: expiries.load(Ordering::SeqCst),
+        wall_s: timer.elapsed_us() / 1e6,
+        trace_hash,
+    })
+}
+
+/// SLO-search configuration for [`find_max_rps`].
+#[derive(Clone, Debug)]
+pub struct SloSearch {
+    /// the target: p99 latency must stay under this many milliseconds
+    pub slo_p99_ms: f64,
+    /// concurrency search range upper bound
+    pub max_workers: usize,
+    /// probe length per concurrency level
+    pub per_worker: u64,
+    /// think-time between a worker's requests
+    pub think: Duration,
+    pub seed: u64,
+}
+
+impl Default for SloSearch {
+    fn default() -> Self {
+        SloSearch {
+            slo_p99_ms: 100.0,
+            max_workers: 64,
+            per_worker: 32,
+            think: Duration::ZERO,
+            seed: 42,
+        }
+    }
+}
+
+/// One probe of the SLO search.
+#[derive(Clone, Debug)]
+pub struct SloProbe {
+    pub workers: usize,
+    pub rps: f64,
+    pub p99_us: f64,
+    pub met: bool,
+}
+
+/// Result of [`find_max_rps`].
+#[derive(Debug)]
+pub struct SloReport {
+    /// highest observed load meeting the SLO (0 if even 1 worker missed)
+    pub max_rps: f64,
+    /// concurrency that achieved it
+    pub workers: usize,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub sheds: u64,
+    pub expiries: u64,
+    pub probes: Vec<SloProbe>,
+}
+
+/// Binary-search the closed-loop concurrency for the highest offered
+/// load whose p99 stays under the SLO. Closed-loop concurrency is the
+/// search axis because it is monotone in offered load but cannot
+/// overrun the server into a divergent queue the way raw open-loop rps
+/// can — each probe is a stable operating point.
+pub fn find_max_rps(addr: &str, profile: &TraceProfile, cfg: &SloSearch) -> Result<SloReport> {
+    anyhow::ensure!(cfg.slo_p99_ms > 0.0 && cfg.max_workers > 0, "bad SLO search parameters");
+    let slo_us = cfg.slo_p99_ms * 1e3;
+    let mut probes = Vec::new();
+    let mut best: Option<(usize, LoadReport)> = None;
+    let (mut lo, mut hi) = (1usize, cfg.max_workers);
+    while lo <= hi {
+        let mid = lo + (hi - lo) / 2;
+        let report = closed_loop(addr, profile, mid, cfg.per_worker, cfg.think, cfg.seed)?;
+        let p99 = report.latency.quantile(0.99);
+        // an SLO probe only passes when every request completed in time:
+        // shed or errored traffic is not "served under the SLO"
+        let met = p99 <= slo_us && report.errors == 0 && report.sheds == 0 && report.expiries == 0;
+        probes.push(SloProbe { workers: mid, rps: report.throughput_rps(), p99_us: p99, met });
+        if met {
+            best = Some((mid, report));
+            lo = mid + 1;
+        } else if mid == 1 {
+            break; // even one worker misses the SLO: infeasible
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Ok(match best {
+        Some((workers, report)) => SloReport {
+            max_rps: report.throughput_rps(),
+            workers,
+            p50_us: report.latency.quantile(0.5),
+            p99_us: report.latency.quantile(0.99),
+            sheds: report.sheds,
+            expiries: report.expiries,
+            probes,
+        },
+        None => SloReport {
+            max_rps: 0.0,
+            workers: 0,
+            p50_us: 0.0,
+            p99_us: 0.0,
+            sheds: 0,
+            expiries: 0,
+            probes,
+        },
+    })
+}
+
+/// Append one SLO-search record to `BENCH_qos.json` (object with a
+/// `runs` array, created on first use, prior runs preserved — same shape
+/// as `BENCH_sampler.json`).
+pub fn append_qos_record(
+    path: &std::path::Path,
+    label: &str,
+    slo_p99_ms: f64,
+    report: &SloReport,
+) -> Result<()> {
+    use std::collections::BTreeMap;
+    let mut run = BTreeMap::new();
+    run.insert("label".to_string(), Json::Str(label.to_string()));
+    run.insert("slo_p99_ms".to_string(), Json::Num(slo_p99_ms));
+    run.insert("max_rps".to_string(), Json::Num(report.max_rps));
+    run.insert("workers".to_string(), Json::Num(report.workers as f64));
+    run.insert("p50".to_string(), Json::Num(report.p50_us));
+    run.insert("p99".to_string(), Json::Num(report.p99_us));
+    run.insert("sheds".to_string(), Json::Num(report.sheds as f64));
+    run.insert("expiries".to_string(), Json::Num(report.expiries as f64));
+    run.insert(
+        "probes".to_string(),
+        Json::Arr(
+            report
+                .probes
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("workers".to_string(), Json::Num(p.workers as f64));
+                    o.insert("rps".to_string(), Json::Num(p.rps));
+                    o.insert("p99_us".to_string(), Json::Num(p.p99_us));
+                    o.insert("met".to_string(), Json::Bool(p.met));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    crate::util::json::append_bench_run(
+        path,
+        "loadgen_slo_search",
+        "max_rps; latency us; shed/expiry counts",
+        Json::Obj(run),
+    )
 }
 
 #[cfg(test)]
@@ -170,6 +476,19 @@ mod tests {
     use crate::coordinator::{EngineHub, Server, ServerConfig};
     use crate::model::gmm::testmodel::toy;
     use std::sync::Arc as StdArc;
+
+    fn toy_template(n: usize, steps: usize) -> RequestTemplate {
+        RequestTemplate {
+            dataset: "toy".into(),
+            n,
+            param: "edm".into(),
+            solver: "euler".into(),
+            schedule: "edm".into(),
+            steps,
+            priority: None,
+            deadline_ms: None,
+        }
+    }
 
     #[test]
     fn profile_draw_respects_weights() {
@@ -186,6 +505,25 @@ mod tests {
     }
 
     #[test]
+    fn template_line_carries_qos_fields() {
+        let mut t = toy_template(4, 6);
+        t.priority = Some("interactive".into());
+        t.deadline_ms = Some(250.0);
+        let line = t.line(9);
+        assert!(line.contains(r#""priority":"interactive""#), "{line}");
+        assert!(line.contains(r#""deadline_ms":250"#), "{line}");
+        // and parses as a valid request
+        let parsed = crate::coordinator::protocol::Request::parse(&line).unwrap();
+        match parsed {
+            crate::coordinator::protocol::Request::Sample(s) => {
+                assert_eq!(s.qos, crate::coordinator::qos::QosClass::Interactive);
+                assert_eq!(s.deadline_ms, Some(250.0));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
     fn mixed_profile_serves_all_four_groups() {
         let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
         let server = Server::start(hub, ServerConfig::default()).unwrap();
@@ -195,6 +533,7 @@ mod tests {
         let report = open_loop(&addr, &profile, 400.0, 32, 4, 11).unwrap();
         assert_eq!(report.sent, 32);
         assert_eq!(report.errors, 0, "mixed-solver traffic must all succeed");
+        assert_eq!(report.sheds + report.expiries, 0);
         server.shutdown();
     }
 
@@ -203,24 +542,84 @@ mod tests {
         let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
         let server = Server::start(hub, ServerConfig::default()).unwrap();
         let addr = server.local_addr.to_string();
-        let profile = TraceProfile {
-            templates: vec![(
-                1.0,
-                RequestTemplate {
-                    dataset: "toy".into(),
-                    n: 4,
-                    param: "edm".into(),
-                    solver: "euler".into(),
-                    schedule: "edm".into(),
-                    steps: 6,
-                },
-            )],
-        };
+        let profile = TraceProfile::single(toy_template(4, 6));
         let report = open_loop(&addr, &profile, 200.0, 40, 2, 7).unwrap();
         assert_eq!(report.sent, 40);
         assert_eq!(report.errors, 0);
         assert_eq!(report.latency.count(), 40);
         assert!(report.throughput_rps() > 10.0);
         server.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_serves_and_reports() {
+        let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        let profile = TraceProfile::single(toy_template(2, 5));
+        let report =
+            closed_loop(&addr, &profile, 3, 8, Duration::from_millis(1), 13).unwrap();
+        assert_eq!(report.sent, 24);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.latency.count(), 24);
+        assert!(report.goodput_rps() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn slo_search_converges_on_toy_server() {
+        let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        let profile = TraceProfile::single(toy_template(2, 5));
+        // generous SLO: the toy workload easily meets it, so the search
+        // must walk up to max_workers
+        let cfg = SloSearch {
+            slo_p99_ms: 5_000.0,
+            max_workers: 4,
+            per_worker: 4,
+            ..SloSearch::default()
+        };
+        let report = find_max_rps(&addr, &profile, &cfg).unwrap();
+        assert!(report.workers >= 1, "search found no feasible point: {report:?}");
+        assert!(report.max_rps > 0.0);
+        assert!(!report.probes.is_empty() && report.probes.len() <= 3);
+        // impossible SLO: nothing is feasible, search reports 0
+        let cfg = SloSearch { slo_p99_ms: 1e-6, max_workers: 2, per_worker: 2, ..cfg };
+        let report = find_max_rps(&addr, &profile, &cfg).unwrap();
+        assert_eq!(report.workers, 0);
+        assert_eq!(report.max_rps, 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn qos_record_appends_without_truncating() {
+        let dir = std::env::temp_dir().join(format!(
+            "sdm_qos_bench_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_qos.json");
+        let _ = std::fs::remove_file(&path);
+        let report = SloReport {
+            max_rps: 123.0,
+            workers: 4,
+            p50_us: 800.0,
+            p99_us: 2500.0,
+            sheds: 1,
+            expiries: 2,
+            probes: vec![SloProbe { workers: 4, rps: 123.0, p99_us: 2500.0, met: true }],
+        };
+        append_qos_record(&path, "t1", 10.0, &report).unwrap();
+        append_qos_record(&path, "t2", 10.0, &report).unwrap();
+        let doc = crate::util::json::read_json_file(&path).unwrap();
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("label").unwrap().as_str().unwrap(), "t1");
+        assert_eq!(runs[1].get("max_rps").unwrap().as_f64().unwrap(), 123.0);
+        assert_eq!(runs[0].get("sheds").unwrap().as_f64().unwrap(), 1.0);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+use crate::coordinator::qos::ShedCause;
 use crate::util::{Histogram, Json};
 
 #[derive(Default)]
@@ -23,6 +24,16 @@ struct RouteMetrics {
     /// pool and not yet finished — includes chunks queued behind busy
     /// workers, so it can read above the worker count)
     inflight_hwm: u64,
+    /// outstanding requests observed at the batcher's last tick
+    queue_depth: u64,
+    /// high-water mark of `queue_depth`
+    queue_depth_hwm: u64,
+    /// admission-control rejections (`QueueFull` replies)
+    sheds_queue_full: u64,
+    /// deadline expiries shed pre-flush (`DeadlineExceeded` replies)
+    sheds_deadline: u64,
+    /// requests refused or drained by shutdown (`ShuttingDown` replies)
+    sheds_shutdown: u64,
 }
 
 /// Thread-safe metrics sink shared across batchers and connections.
@@ -79,6 +90,25 @@ impl ServerMetrics {
         r.inflight_hwm = r.inflight_hwm.max(current as u64);
     }
 
+    /// Observe the route's outstanding-request gauge (batcher tick).
+    pub fn record_queue_depth(&self, dataset: &str, depth: usize) {
+        let mut routes = self.routes.lock().unwrap();
+        let r = routes.entry(dataset.to_string()).or_default();
+        r.queue_depth = depth as u64;
+        r.queue_depth_hwm = r.queue_depth_hwm.max(depth as u64);
+    }
+
+    /// A request was refused without integration (QoS shed taxonomy).
+    pub fn record_shed(&self, dataset: &str, cause: ShedCause) {
+        let mut routes = self.routes.lock().unwrap();
+        let r = routes.entry(dataset.to_string()).or_default();
+        match cause {
+            ShedCause::QueueFull => r.sheds_queue_full += 1,
+            ShedCause::Deadline => r.sheds_deadline += 1,
+            ShedCause::Shutdown => r.sheds_shutdown += 1,
+        }
+    }
+
     /// [`ServerMetrics::snapshot`] with extra top-level sections merged in
     /// beside the per-route entries — the server uses this to expose the
     /// hub's schedule-cache counters (`schedule_cache` key) on the same
@@ -114,6 +144,11 @@ impl ServerMetrics {
             m.insert("splits".into(), Json::Num(r.splits as f64));
             m.insert("split_chunks".into(), Json::Num(r.split_chunks as f64));
             m.insert("inflight_hwm".into(), Json::Num(r.inflight_hwm as f64));
+            m.insert("queue_depth".into(), Json::Num(r.queue_depth as f64));
+            m.insert("queue_depth_hwm".into(), Json::Num(r.queue_depth_hwm as f64));
+            m.insert("sheds_queue_full".into(), Json::Num(r.sheds_queue_full as f64));
+            m.insert("sheds_deadline".into(), Json::Num(r.sheds_deadline as f64));
+            m.insert("sheds_shutdown".into(), Json::Num(r.sheds_shutdown as f64));
             let avg_nfe = if r.samples > 0 { r.nfe_total / r.samples as f64 } else { 0.0 };
             m.insert("avg_nfe".into(), Json::Num(avg_nfe));
             m.insert("latency_p50_us".into(), Json::Num(r.latency_us.quantile(0.5)));
@@ -164,6 +199,25 @@ mod tests {
         );
         // route sections are untouched
         assert_eq!(snap.get("a").unwrap().get("requests").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn qos_gauges_and_shed_counters() {
+        let m = ServerMetrics::new();
+        m.record_queue_depth("a", 3);
+        m.record_queue_depth("a", 9);
+        m.record_queue_depth("a", 1);
+        m.record_shed("a", ShedCause::QueueFull);
+        m.record_shed("a", ShedCause::QueueFull);
+        m.record_shed("a", ShedCause::Deadline);
+        m.record_shed("a", ShedCause::Shutdown);
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        assert_eq!(a.get("queue_depth").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("queue_depth_hwm").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(a.get("sheds_queue_full").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(a.get("sheds_deadline").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("sheds_shutdown").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

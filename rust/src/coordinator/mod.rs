@@ -21,9 +21,14 @@
 //!   owns the shared integration pool.
 //! - [`server`]: TCP accept loop + connection threads.
 //! - [`client`]: blocking client used by examples and benches.
-//! - [`loadgen`]: open-loop Poisson workload generator and trace profiles.
+//! - [`loadgen`]: open-loop Poisson + closed-loop workload generators,
+//!   trace profiles, and the SLO-searching `find_max_rps` harness.
 //! - [`metrics`]: per-route latency histograms and counters (including
-//!   split/in-flight gauges of the pooled batcher).
+//!   split/in-flight gauges of the pooled batcher and the QoS shed
+//!   taxonomy).
+//! - [`qos`]: admission control (bounded outstanding requests per route),
+//!   priority classes + deadlines, and the deficit-round-robin flush
+//!   scheduler that divides the pool fairly across datasets.
 
 pub mod batcher;
 pub mod client;
@@ -31,10 +36,12 @@ pub mod hub;
 pub mod loadgen;
 pub mod metrics;
 pub mod protocol;
+pub mod qos;
 pub mod router;
 pub mod server;
 
-pub use client::Client;
+pub use client::{Client, Rejection};
 pub use hub::{EngineHub, ModelBackend};
 pub use protocol::{Request, Response};
+pub use qos::{DrrScheduler, Inbox, QosClass, QosPolicy};
 pub use server::{Server, ServerConfig};

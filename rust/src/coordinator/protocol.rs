@@ -5,11 +5,26 @@
 //! {"op":"sample","dataset":"cifar10g","n":64,"param":"edm",
 //!  "solver":"sdm","schedule":"sdm","steps":18,"seed":7,
 //!  "class":3,"return_samples":false,"tau_k":2e-4,
-//!  "eta_min":0.01,"eta_max":0.4,"p":1.0,"q":0.25,"lambda":"step"}
+//!  "eta_min":0.01,"eta_max":0.4,"p":1.0,"q":0.25,"lambda":"step",
+//!  "priority":"interactive","deadline_ms":250}
 //! {"op":"ping"}   {"op":"stats"}   {"op":"shutdown"}
 //! ```
 //! Sample responses carry the Gaussian summary of the generated rows, the
 //! NFE spent, and optionally the raw samples.
+//!
+//! QoS fields (`coordinator::qos`): `priority` is an optional class
+//! (`interactive` > `batch` (default) > `background`) ordering flushes
+//! under contention; `deadline_ms` is an optional wall-clock budget from
+//! admission — requests still queued past it are shed with a
+//! `deadline_exceeded` error instead of being integrated late. (`class`
+//! remains the *conditioning* class label; the priority field is
+//! deliberately named differently.)
+//!
+//! Structured refusals carry `"ok":false` plus a machine-readable
+//! `"code"` — `queue_full` (with `depth`, `retry_after_ms`),
+//! `deadline_exceeded` (with `deadline_ms`, `waited_ms`), or
+//! `shutting_down` — so clients can branch without parsing prose
+//! (`client::Rejection` does exactly that).
 //!
 //! The `stats` response's `stats` object holds one section per dataset
 //! route (requests, latency quantiles, batch/split gauges — see
@@ -22,6 +37,7 @@ use std::collections::BTreeMap;
 
 use anyhow::bail;
 
+use crate::coordinator::qos::QosClass;
 use crate::diffusion::{CurvatureClock, Param};
 use crate::schedule::ScheduleSpec;
 use crate::solvers::{ChurnParams, LambdaKind, SolverSpec};
@@ -49,6 +65,11 @@ pub struct SampleRequest {
     pub seed: u64,
     pub class: Option<usize>,
     pub return_samples: bool,
+    /// QoS priority class (wire field `priority`; default batch).
+    pub qos: QosClass,
+    /// wall-clock budget from admission, in milliseconds; expired
+    /// requests are shed pre-flush with a `deadline_exceeded` reply.
+    pub deadline_ms: Option<f64>,
 }
 
 impl Request {
@@ -93,6 +114,18 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
         Ok(c) => Some(c.as_usize()?),
     };
     let return_samples = matches!(v.get("return_samples"), Ok(Json::Bool(true)));
+    let qos = match v.get("priority") {
+        Ok(Json::Null) | Err(_) => QosClass::default(),
+        Ok(p) => QosClass::from_name(p.as_str()?)?,
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        Ok(Json::Null) | Err(_) => None,
+        Ok(d) => {
+            let ms = d.as_f64()?;
+            anyhow::ensure!(ms > 0.0 && ms.is_finite(), "deadline_ms out of range");
+            Some(ms)
+        }
+    };
 
     // solver
     let solver_name = match v.get("solver") {
@@ -157,6 +190,8 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
         seed,
         class,
         return_samples,
+        qos,
+        deadline_ms,
     })
 }
 
@@ -166,6 +201,26 @@ pub enum Response {
     Pong,
     Err(String),
     Stats(Json),
+    /// admission control refused the request: the route already holds
+    /// `depth` outstanding requests. Structured (code `queue_full`) so
+    /// clients can back off `retry_after_ms` instead of parsing prose.
+    QueueFull {
+        route: String,
+        depth: usize,
+        retry_after_ms: f64,
+    },
+    /// the request's `deadline_ms` passed while it queued; it was shed
+    /// pre-flush (code `deadline_exceeded`).
+    DeadlineExceeded {
+        route: String,
+        deadline_ms: f64,
+        waited_ms: f64,
+    },
+    /// the coordinator is shutting down; the request was not integrated
+    /// (code `shutting_down`).
+    ShuttingDown {
+        route: String,
+    },
     SampleOk {
         n: usize,
         nfe: f64,
@@ -189,6 +244,45 @@ impl Response {
             Response::Err(e) => {
                 m.insert("ok".into(), Json::Bool(false));
                 m.insert("error".into(), Json::Str(e.clone()));
+            }
+            Response::QueueFull { route, depth, retry_after_ms } => {
+                m.insert("ok".into(), Json::Bool(false));
+                m.insert("code".into(), Json::Str("queue_full".into()));
+                m.insert(
+                    "error".into(),
+                    Json::Str(format!(
+                        "route {route:?} is at its admission bound ({depth} outstanding); \
+                         retry after {retry_after_ms:.0} ms"
+                    )),
+                );
+                m.insert("route".into(), Json::Str(route.clone()));
+                m.insert("depth".into(), Json::Num(*depth as f64));
+                m.insert("retry_after_ms".into(), Json::Num(*retry_after_ms));
+            }
+            Response::DeadlineExceeded { route, deadline_ms, waited_ms } => {
+                m.insert("ok".into(), Json::Bool(false));
+                m.insert("code".into(), Json::Str("deadline_exceeded".into()));
+                m.insert(
+                    "error".into(),
+                    Json::Str(format!(
+                        "request shed on route {route:?}: queued {waited_ms:.1} ms \
+                         past its {deadline_ms:.1} ms deadline"
+                    )),
+                );
+                m.insert("route".into(), Json::Str(route.clone()));
+                m.insert("deadline_ms".into(), Json::Num(*deadline_ms));
+                m.insert("waited_ms".into(), Json::Num(*waited_ms));
+            }
+            Response::ShuttingDown { route } => {
+                m.insert("ok".into(), Json::Bool(false));
+                m.insert("code".into(), Json::Str("shutting_down".into()));
+                m.insert(
+                    "error".into(),
+                    Json::Str(format!(
+                        "coordinator shutting down; request on route {route:?} was not served"
+                    )),
+                );
+                m.insert("route".into(), Json::Str(route.clone()));
             }
             Response::Stats(s) => {
                 m.insert("ok".into(), Json::Bool(true));
@@ -301,6 +395,77 @@ mod tests {
         assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
         assert_eq!(v.get("nfe").unwrap().as_f64().unwrap(), 35.0);
         assert_eq!(v.get("mean").unwrap().as_vec_f64().unwrap(), vec![0.5, -0.25]);
+    }
+
+    #[test]
+    fn parses_qos_fields_with_defaults() {
+        let r = Request::parse(r#"{"op":"sample","dataset":"x","n":4}"#).unwrap();
+        match r {
+            Request::Sample(s) => {
+                assert_eq!(s.qos, QosClass::Batch);
+                assert_eq!(s.deadline_ms, None);
+            }
+            _ => panic!(),
+        }
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"priority":"interactive","deadline_ms":250}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => {
+                assert_eq!(s.qos, QosClass::Interactive);
+                assert_eq!(s.deadline_ms, Some(250.0));
+            }
+            _ => panic!(),
+        }
+        // priority must not collide with the conditioning class field
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"class":3,"priority":"background"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => {
+                assert_eq!(s.class, Some(3));
+                assert_eq!(s.qos, QosClass::Background);
+            }
+            _ => panic!(),
+        }
+        assert!(Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"priority":"turbo"}"#
+        )
+        .is_err());
+        assert!(Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"deadline_ms":0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn qos_rejections_serialize_with_codes() {
+        let qf = Response::QueueFull {
+            route: "cifar10g".into(),
+            depth: 64,
+            retry_after_ms: 25.0,
+        };
+        let v = Response::parse(&qf.to_line()).unwrap();
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "queue_full");
+        assert_eq!(v.get("depth").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(v.get("retry_after_ms").unwrap().as_f64().unwrap(), 25.0);
+
+        let de = Response::DeadlineExceeded {
+            route: "afhqg".into(),
+            deadline_ms: 100.0,
+            waited_ms: 140.5,
+        };
+        let v = Response::parse(&de.to_line()).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "deadline_exceeded");
+        assert_eq!(v.get("waited_ms").unwrap().as_f64().unwrap(), 140.5);
+
+        let sd = Response::ShuttingDown { route: "toy".into() };
+        let v = Response::parse(&sd.to_line()).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "shutting_down");
+        assert_eq!(v.get("route").unwrap().as_str().unwrap(), "toy");
     }
 
     #[test]

@@ -1,80 +1,115 @@
-//! Request router: one batcher queue per dataset route, one shared worker
-//! pool for integration.
+//! Request router: one bounded batcher inbox per dataset route, one
+//! shared worker pool for integration, QoS-scheduled.
 //!
 //! Routes are created eagerly for every dataset the hub loaded, each with
 //! its own batcher thread — requests for different workloads never block
 //! each other, while requests for the same workload flow into one batcher
-//! where they can be merged. All batchers submit their ready groups to
-//! the same [`ThreadPool`], so integration capacity is a property of the
-//! coordinator, not of any single route.
+//! where they can be merged. All batchers hand their ready chunks to one
+//! shared [`DrrScheduler`] over the coordinator's [`ThreadPool`], so
+//! integration capacity is a property of the coordinator and is divided
+//! fairly across routes by deficit round robin (`--qos-weight`).
 //!
-//! The route table is immutable after start and submit sends directly on
-//! the route's shared `mpsc::Sender` (`Sender` is `Sync` since the std
-//! channel rewrite, so `send(&self)` is safe from many threads) — no
-//! mutex on the hot path, so concurrent connection threads never
-//! serialize on a lock to enqueue. Shutdown is a
-//! stop flag: [`Router::shutdown`] takes `&self`, raises the flag every
-//! batcher polls, and joins the batcher threads, so the server can stop
-//! the router even while connection handlers still hold `Arc<Router>`
-//! clones ([`Router::drop`] does the same as a backstop, which also ends
-//! the pool's job senders and lets [`ThreadPool`]'s own `Drop` join the
-//! workers).
+//! The route table is immutable after start and submit pushes directly
+//! into the route's [`Inbox`] — no mutex on the hot path beyond the
+//! inbox's own short critical section. Admission control happens here:
+//! a route at its outstanding bound rejects at enqueue with a structured
+//! [`Response::QueueFull`] delivered on the reply channel, so callers
+//! observe backpressure as data, never as an unbounded buffer or a hang.
+//!
+//! Shutdown closes every inbox *first* (new pushes are refused with
+//! [`Response::ShuttingDown`]), then raises the stop flag and joins the
+//! batchers (each drains the requests it already accepted, serves them,
+//! and waits for its in-flight integrations), and finally drains any
+//! request that slipped into an inbox between the batcher's last pop and
+//! the close — with an explicit `ShuttingDown` reply, so in-flight
+//! clients always unblock instead of seeing a dead socket. Idempotent and
+//! callable through `&self`; [`Router::drop`] is the backstop.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
 
 use crate::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Response, SampleRequest};
-use crate::util::{ThreadPool, Timer};
+use crate::coordinator::qos::{DrrScheduler, Inbox, PushRejected, QosPolicy, ShedCause};
+use crate::util::{Json, ThreadPool};
 use crate::Result;
 
 pub struct Router {
-    routes: BTreeMap<String, mpsc::Sender<Pending>>,
+    routes: BTreeMap<String, Arc<Inbox>>,
+    qos: QosPolicy,
+    sched: Arc<DrrScheduler>,
+    metrics: Arc<ServerMetrics>,
     /// raised by [`Router::shutdown`]; every batcher polls it.
     stop: Arc<AtomicBool>,
     /// batcher thread handles (cold path only: drained by shutdown).
     joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
-    /// the shared integration pool, kept alive for the router's lifetime
-    pool: Arc<ThreadPool>,
 }
 
 impl Router {
+    /// [`Router::start_with_qos`] under the default [`QosPolicy`]
+    /// (bounded inboxes at the default depth, weight-1 fairness).
     pub fn start(
         hub: Arc<EngineHub>,
         metrics: Arc<ServerMetrics>,
         policy: BatchPolicy,
         pool: Arc<ThreadPool>,
     ) -> Router {
+        Router::start_with_qos(hub, metrics, policy, QosPolicy::default(), pool)
+    }
+
+    pub fn start_with_qos(
+        hub: Arc<EngineHub>,
+        metrics: Arc<ServerMetrics>,
+        policy: BatchPolicy,
+        qos: QosPolicy,
+        pool: Arc<ThreadPool>,
+    ) -> Router {
+        let quantum = if qos.quantum_rows > 0 { qos.quantum_rows } else { policy.max_batch };
+        let sched = DrrScheduler::new(pool, qos.flush_slots, quantum);
         let stop = Arc::new(AtomicBool::new(false));
         let mut routes = BTreeMap::new();
         let mut joins = Vec::new();
         for name in hub.dataset_names() {
-            let (tx, rx) = mpsc::channel::<Pending>();
+            sched.register_route(&name, qos.weight_for(&name));
+            let inbox = Arc::new(Inbox::new(qos.inbox_depth));
             let hub2 = hub.clone();
             let metrics2 = metrics.clone();
             let name2 = name.clone();
-            let pool2 = pool.clone();
+            let inbox2 = inbox.clone();
+            let sched2 = sched.clone();
             let stop2 = stop.clone();
             let join = std::thread::Builder::new()
                 .name(format!("sdm-batcher-{name}"))
-                .spawn(move || batcher_loop(name2, hub2, metrics2, rx, policy, pool2, stop2))
+                .spawn(move || {
+                    batcher_loop(name2, hub2, metrics2, inbox2, policy, sched2, stop2)
+                })
                 .expect("spawning batcher");
-            routes.insert(name, tx);
+            routes.insert(name, inbox);
             joins.push(join);
         }
-        Router { routes, stop, joins: Mutex::new(joins), pool }
+        Router { routes, qos, sched, metrics, stop, joins: Mutex::new(joins) }
     }
 
     /// Worker threads available for integration.
     pub fn pool_threads(&self) -> usize {
-        self.pool.threads()
+        self.sched.pool().threads()
+    }
+
+    /// The shared DRR flush scheduler (stats, tests).
+    pub fn scheduler(&self) -> &Arc<DrrScheduler> {
+        &self.sched
     }
 
     /// Submit a request; returns the channel the response arrives on.
+    ///
+    /// Admission control resolves *here*: a route at its outstanding
+    /// bound gets an immediate structured [`Response::QueueFull`] on the
+    /// reply channel (an `Ok` return therefore means "you will receive
+    /// exactly one response", not "the request was accepted"); an unknown
+    /// dataset or a stopped router are hard `Err`s.
     pub fn submit(&self, req: SampleRequest) -> Result<mpsc::Receiver<Response>> {
         anyhow::ensure!(!self.stop.load(Ordering::SeqCst), "router stopped");
         let route = self.routes.get(&req.dataset).ok_or_else(|| {
@@ -85,14 +120,25 @@ impl Router {
             )
         })?;
         let (rtx, rrx) = mpsc::channel();
-        route
-            .send(Pending {
-                req,
-                reply: rtx,
-                enqueued: Instant::now(),
-                timer: Timer::start(),
-            })
-            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        match route.try_push(Pending::new(req, rtx)) {
+            Ok(()) => {}
+            Err(PushRejected::Full { pending, outstanding, .. }) => {
+                self.metrics.record_shed(&pending.req.dataset, ShedCause::QueueFull);
+                let _ = pending.reply.send(Response::QueueFull {
+                    route: pending.req.dataset.clone(),
+                    depth: outstanding,
+                    retry_after_ms: self.qos.retry_after_ms,
+                });
+            }
+            Err(PushRejected::Closed { pending }) => {
+                // raced a shutdown between the stop-flag check and the
+                // push: still answer, never strand the client
+                self.metrics.record_shed(&pending.req.dataset, ShedCause::Shutdown);
+                let _ = pending.reply.send(Response::ShuttingDown {
+                    route: pending.req.dataset.clone(),
+                });
+            }
+        }
         Ok(rrx)
     }
 
@@ -102,12 +148,38 @@ impl Router {
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))
     }
 
-    /// Stop every batcher (each drains accepted requests, waits for its
-    /// in-flight integrations, then exits) and join the threads.
-    /// Idempotent, and callable through `&self` so the server can shut
-    /// the router down while connection threads still hold clones; their
-    /// subsequent submits fail with "router stopped".
+    /// Per-route QoS observables for the `stats` op: admission bound,
+    /// outstanding gauge + high-water mark, and DRR served rows.
+    pub fn qos_stats(&self) -> Json {
+        let served = self.sched.served_rows();
+        let mut out = BTreeMap::new();
+        for (name, inbox) in &self.routes {
+            let mut m = BTreeMap::new();
+            m.insert("inbox_depth".into(), Json::Num(inbox.depth() as f64));
+            m.insert("outstanding".into(), Json::Num(inbox.outstanding() as f64));
+            m.insert(
+                "outstanding_hwm".into(),
+                Json::Num(inbox.outstanding_hwm() as f64),
+            );
+            m.insert(
+                "drr_served_rows".into(),
+                Json::Num(served.get(name).copied().unwrap_or(0) as f64),
+            );
+            m.insert("drr_weight".into(), Json::Num(self.qos.weight_for(name)));
+            out.insert(name.clone(), Json::Obj(m));
+        }
+        out.insert("flush_slots".into(), Json::Num(self.sched.slots() as f64));
+        Json::Obj(out)
+    }
+
+    /// Stop every batcher and join the threads (see the module docs for
+    /// the close → stop → join → drain order and why each step exists).
     pub fn shutdown(&self) {
+        // close first: a submit racing this call is refused with a
+        // ShuttingDown reply instead of landing in a dead queue
+        for inbox in self.routes.values() {
+            inbox.close();
+        }
         self.stop.store(true, Ordering::SeqCst);
         let joins: Vec<_> = {
             let mut guard = self.joins.lock().expect("router joins poisoned");
@@ -115,6 +187,15 @@ impl Router {
         };
         for j in joins {
             let _ = j.join();
+        }
+        // backstop: anything that slipped in after the batcher's final
+        // drain still gets an explicit reply (idempotent: the queue is
+        // empty on the second pass)
+        for (name, inbox) in &self.routes {
+            for p in inbox.drain_remaining() {
+                self.metrics.record_shed(name, ShedCause::Shutdown);
+                let _ = p.reply.send(Response::ShuttingDown { route: name.clone() });
+            }
         }
     }
 }
@@ -131,6 +212,7 @@ mod tests {
     use super::*;
     use crate::coordinator::protocol::Request;
     use crate::model::gmm::testmodel::toy;
+    use std::time::Instant;
 
     fn mk(n: usize, dataset: &str) -> SampleRequest {
         let line = format!(
@@ -183,6 +265,27 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn qos_stats_expose_route_observables() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let qos = QosPolicy { inbox_depth: 7, ..QosPolicy::default() };
+        let router =
+            Router::start_with_qos(hub, metrics, BatchPolicy::default(), qos, test_pool());
+        match router.call(mk(4, "toy")).unwrap() {
+            Response::SampleOk { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let stats = router.qos_stats();
+        let toy_stats = stats.get("toy").unwrap();
+        assert_eq!(toy_stats.get("inbox_depth").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(toy_stats.get("outstanding").unwrap().as_f64().unwrap(), 0.0);
+        assert!(toy_stats.get("outstanding_hwm").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(toy_stats.get("drr_served_rows").unwrap().as_f64().unwrap() >= 4.0);
+        assert!(stats.get("flush_slots").unwrap().as_f64().unwrap() >= 1.0);
+        router.shutdown();
     }
 
     #[test]

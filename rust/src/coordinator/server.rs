@@ -17,6 +17,7 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::qos::QosPolicy;
 use crate::coordinator::router::Router;
 use crate::util::ThreadPool;
 use crate::Result;
@@ -26,6 +27,10 @@ pub struct ServerConfig {
     /// bind address, e.g. "127.0.0.1:7433" (port 0 = ephemeral).
     pub addr: String,
     pub policy: BatchPolicy,
+    /// QoS policy: admission bound (`--inbox-depth`), DRR weights
+    /// (`--qos-weight`), flush slots/quantum (`--qos-slots`,
+    /// `--qos-quantum`).
+    pub qos: QosPolicy,
     /// integration worker threads shared by every dataset route
     /// (0 = derive from available parallelism).
     pub pool_threads: usize,
@@ -36,6 +41,7 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             policy: BatchPolicy::default(),
+            qos: QosPolicy::default(),
             pool_threads: 0,
         }
     }
@@ -89,7 +95,13 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(ServerMetrics::new());
-        let router = Arc::new(Router::start(hub.clone(), metrics.clone(), cfg.policy, pool));
+        let router = Arc::new(Router::start_with_qos(
+            hub.clone(),
+            metrics.clone(),
+            cfg.policy,
+            cfg.qos.clone(),
+            pool,
+        ));
         let stop = Arc::new(AtomicBool::new(false));
 
         let stop2 = stop.clone();
@@ -170,9 +182,10 @@ fn handle_conn(
         let response = match Request::parse(&line) {
             Err(e) => Response::Err(format!("bad request: {e:#}")),
             Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Stats) => Response::Stats(
-                metrics.snapshot_with(vec![("schedule_cache".into(), hub.cache_stats())]),
-            ),
+            Ok(Request::Stats) => Response::Stats(metrics.snapshot_with(vec![
+                ("schedule_cache".into(), hub.cache_stats()),
+                ("qos".into(), router.qos_stats()),
+            ])),
             Ok(Request::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
                 // the accept loop blocks in `listener.incoming()` and only
@@ -293,6 +306,27 @@ mod tests {
         assert!(cache.get("persisted_loads").is_ok());
         // per-route sections still sit beside it, unchanged
         assert!(stats.get("stats").unwrap().get("toy").is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_include_qos_section() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let r = client
+            .send(r#"{"op":"sample","dataset":"toy","n":4,"solver":"euler","schedule":"edm","steps":6}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap(), &crate::util::Json::Bool(true));
+        let stats = client.send(r#"{"op":"stats"}"#).unwrap();
+        let qos = stats.get("stats").unwrap().get("qos").unwrap();
+        let toy_q = qos.get("toy").unwrap();
+        assert!(toy_q.get("inbox_depth").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(toy_q.get("drr_served_rows").unwrap().as_f64().unwrap() >= 4.0);
+        assert!(toy_q.get("drr_weight").is_ok());
+        // per-route batching sections now carry the shed taxonomy
+        let toy_m = stats.get("stats").unwrap().get("toy").unwrap();
+        assert_eq!(toy_m.get("sheds_queue_full").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(toy_m.get("sheds_deadline").unwrap().as_f64().unwrap(), 0.0);
         server.shutdown();
     }
 

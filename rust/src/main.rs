@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! sdm serve      --addr 127.0.0.1:7433 [--backend pjrt|native]
+//!                [--inbox-depth N --qos-weight ds=w,... --qos-slots N]
 //! sdm sample     --dataset cifar10g --n 64 --solver sdm --schedule sdm ...
 //! sdm schedule   --dataset cifar10g --schedule sdm --steps 18
 //! sdm table1|table4|table5|grid-tau|grid-eta|fig2|fig3|fig4|pareto|qualitative
 //! sdm bench-client --addr ... --requests 256 --concurrency 8
+//! sdm loadgen    --closed-loop --slo-p99-ms 100 [--addr ... | --in-process]
 //! ```
 //!
 //! Experiments default to the PJRT backend (`--backend pjrt`) so the AOT
@@ -177,6 +179,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "bench-client" => bench_client(&args),
+        "loadgen" => loadgen(&args),
         "bench-sampler" => {
             // same harness as `cargo bench --bench bench_sampler`; the CLI
             // binary has no counting allocator, so allocs/call is omitted
@@ -198,6 +201,23 @@ fn run() -> Result<()> {
     }
 }
 
+/// QoS flags shared by `serve`: `--inbox-depth N` (0 = unbounded),
+/// `--qos-weight ds=w,...` (DRR fairness weights), `--qos-slots N`
+/// (global concurrent flushes; 0 = pool threads), `--qos-quantum ROWS`
+/// (DRR row credit per round; 0 = max_batch), `--qos-retry-ms MS`
+/// (back-off hint in QueueFull replies).
+fn qos_policy(args: &Args) -> Result<sdm::coordinator::QosPolicy> {
+    let mut qos = sdm::coordinator::QosPolicy::default();
+    qos.inbox_depth = args.get_usize("inbox-depth", qos.inbox_depth)?;
+    if let Some(spec) = args.opt("qos-weight") {
+        qos.weights = sdm::coordinator::QosPolicy::parse_weights(&spec)?;
+    }
+    qos.flush_slots = args.get_usize("qos-slots", qos.flush_slots)?;
+    qos.quantum_rows = args.get_usize("qos-quantum", qos.quantum_rows)?;
+    qos.retry_after_ms = args.get_f64("qos-retry-ms", qos.retry_after_ms)?;
+    Ok(qos)
+}
+
 fn serve(args: &Args) -> Result<()> {
     let dir = artifact_dir(args.opt("artifacts"));
     let backend = ModelBackend::from_name(&args.get("backend", "pjrt"))?;
@@ -208,8 +228,9 @@ fn serve(args: &Args) -> Result<()> {
     // this batch size up (0 disables sharding entirely)
     let shard_min_rows = args.get_usize("shard-min-rows", 512)?;
     let cache = cache_config(args, &dir, backend, true)?;
+    let qos = qos_policy(args)?;
     args.finish()?;
-    let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, ..Default::default() };
+    let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, qos, ..Default::default() };
     cfg.policy.max_inflight = max_inflight;
     let pool = Arc::new(sdm::util::ThreadPool::new(cfg.resolved_pool_threads()));
     let mut hub = EngineHub::load_with(&dir, backend, cache)?;
@@ -327,6 +348,127 @@ fn schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sdm loadgen`: drive a coordinator with open-loop, closed-loop, or
+/// SLO-searching load. `--in-process` spins up a native toy-workload
+/// server inside this process (no artifacts needed — CI smoke and quick
+/// local experiments); otherwise `--addr` names a running server.
+fn loadgen(args: &Args) -> Result<()> {
+    use sdm::coordinator::loadgen::{
+        append_qos_record, closed_loop, find_max_rps, open_loop, RequestTemplate, SloSearch,
+        TraceProfile,
+    };
+
+    let in_process = args.has("in-process");
+    let addr_flag = args.get("addr", "127.0.0.1:7433");
+    let closed = args.has("closed-loop");
+    let workers = args.get_usize("workers", 4)?;
+    let per_worker = args.get_u64("requests-per-worker", 32)?;
+    let requests = args.get_u64("requests", 256)?;
+    let think_ms = args.get_f64("think-ms", 0.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let slo_p99_ms = args.opt("slo-p99-ms").map(|v| v.parse::<f64>()).transpose()?;
+    let max_workers = args.get_usize("max-workers", 32)?;
+    let open_rps = args.get_f64("open-rps", 200.0)?;
+    let out = args.get("out", "BENCH_qos.json");
+    let label = args.get("label", "loadgen");
+    // single-template profile flags (default profile: standard mix, or
+    // the toy workload when in-process)
+    let dataset = args.opt("dataset");
+    let n = args.get_usize("n", 8)?;
+    let param = args.get("param", "edm");
+    let solver = args.get("solver", "euler");
+    let schedule_name = args.get("schedule", "edm");
+    let steps = args.get_usize("steps", 8)?;
+    let priority = args.opt("priority");
+    let deadline_ms = args.opt("deadline-ms").map(|v| v.parse::<f64>()).transpose()?;
+    args.finish()?;
+
+    let think = std::time::Duration::from_secs_f64(think_ms.max(0.0) / 1e3);
+    let template = |ds: String| RequestTemplate {
+        dataset: ds,
+        n,
+        param: param.clone(),
+        solver: solver.clone(),
+        schedule: schedule_name.clone(),
+        steps,
+        priority: priority.clone(),
+        deadline_ms,
+    };
+    let profile = match (&dataset, in_process) {
+        (Some(ds), _) => TraceProfile::single(template(ds.clone())),
+        (None, true) => TraceProfile::single(template("toy".to_string())),
+        (None, false) => TraceProfile::standard(),
+    };
+
+    // in-process server over the native toy workload
+    let server = if in_process {
+        let hub = Arc::new(EngineHub::from_infos(vec![
+            sdm::model::gmm::testmodel::toy().info,
+        ]));
+        Some(Server::start(hub, ServerConfig::default())?)
+    } else {
+        None
+    };
+    let addr = server
+        .as_ref()
+        .map(|s| s.local_addr.to_string())
+        .unwrap_or(addr_flag);
+
+    let result = (|| -> Result<()> {
+        if let Some(slo) = slo_p99_ms {
+            let cfg = SloSearch {
+                slo_p99_ms: slo,
+                max_workers,
+                per_worker,
+                think,
+                seed,
+            };
+            let report = find_max_rps(&addr, &profile, &cfg)?;
+            for p in &report.probes {
+                println!(
+                    "  probe workers={:<3} -> {:.1} req/s, p99 {:.0} us ({})",
+                    p.workers,
+                    p.rps,
+                    p.p99_us,
+                    if p.met { "meets SLO" } else { "misses SLO" }
+                );
+            }
+            println!(
+                "slo-search: p99 < {slo} ms holds up to {} workers -> max {:.1} req/s \
+                 (p50 {:.0} us, p99 {:.0} us, {} sheds, {} expiries)",
+                report.workers, report.max_rps, report.p50_us, report.p99_us,
+                report.sheds, report.expiries
+            );
+            let out_path = std::path::PathBuf::from(&out);
+            append_qos_record(&out_path, &label, slo, &report)?;
+            println!("loadgen: appended run {label:?} to {}", out_path.display());
+        } else if closed {
+            let report = closed_loop(&addr, &profile, workers, per_worker, think, seed)?;
+            println!(
+                "closed-loop: {} workers x {} reqs (think {:.1} ms) -> {:.1} req/s goodput, \
+                 {} errors, {} sheds, {} expiries  [trace {:016x}]",
+                workers, per_worker, think_ms, report.goodput_rps(),
+                report.errors, report.sheds, report.expiries, report.trace_hash
+            );
+            println!("  latency: {}", report.latency.summary("us"));
+        } else {
+            let report = open_loop(&addr, &profile, open_rps, requests, workers, seed)?;
+            println!(
+                "open-loop: offered {open_rps} req/s, sent {} ({} errors, {} sheds, \
+                 {} expiries) in {:.1}s -> {:.1} req/s achieved",
+                report.sent, report.errors, report.sheds, report.expiries,
+                report.wall_s, report.throughput_rps()
+            );
+            println!("  latency: {}", report.latency.summary("us"));
+        }
+        Ok(())
+    })();
+    if let Some(s) = server {
+        s.shutdown();
+    }
+    result
+}
+
 fn bench_client(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7433");
     let requests = args.get_usize("requests", 256)?;
@@ -411,6 +553,16 @@ fn print_help() {
          \x20               both ON; experiment subcommands default OFF for\n\
          \x20               reproducibility — opt in with --cache-persist,\n\
          \x20               --warm-start)\n\
+         \x20               QoS: --inbox-depth N (max outstanding requests per\n\
+         \x20               route; 0=unbounded, overflow gets queue_full),\n\
+         \x20               --qos-weight ds=w,... (DRR fairness weights,\n\
+         \x20               default 1), --qos-slots N (global concurrent\n\
+         \x20               flushes; 0=pool threads), --qos-quantum ROWS\n\
+         \x20               (DRR credit/round; 0=max_batch), --qos-retry-ms MS\n\
+         \x20               (back-off hint in queue_full replies); requests may\n\
+         \x20               carry \"priority\":interactive|batch|background and\n\
+         \x20               \"deadline_ms\" (late requests shed, never served\n\
+         \x20               stale)\n\
          \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...)\n\
          \x20 schedule      print a built sigma grid (--dataset --schedule --steps)\n\
          \x20 table1        Table 1  (unconditional FD/NFE grid)\n\
@@ -424,6 +576,15 @@ fn print_help() {
          \x20 qualitative   sample dumps (Figs. 5-9 analogue)\n\
          \x20 bench-client  drive a running server (--addr --requests --concurrency\n\
          \x20               [--open-loop-rps R  Poisson offered-load mode])\n\
+         \x20 loadgen       workload generator (--addr A | --in-process):\n\
+         \x20               --closed-loop --workers N --requests-per-worker R\n\
+         \x20               --think-ms T [--slo-p99-ms MS  binary-search the\n\
+         \x20               highest load meeting the SLO; appends\n\
+         \x20               {{max_rps,p50,p99,sheds,expiries}} to --out\n\
+         \x20               BENCH_qos.json, --max-workers W, --label L]; default\n\
+         \x20               mode is open-loop at --open-rps R for --requests N;\n\
+         \x20               profile: --dataset D --n N --param P --solver S\n\
+         \x20               --schedule C --steps K --priority CLS --deadline-ms MS\n\
          \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
          \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\
          \x20 ablate-clock  curvature-clock ablation; ablate-refgrid: Alg.1 warm-start\n\n\

@@ -280,15 +280,6 @@ fn counting_allocator_active() -> bool {
 /// Append one labeled run to the trajectory file (object with a `runs`
 /// array; created on first use, prior runs preserved).
 fn append_run(path: &PathBuf, opts: &BenchOptions, entries: &[BenchEntry]) -> Result<()> {
-    let mut doc = match crate::util::json::read_json_file(path) {
-        Ok(Json::Obj(m)) => m,
-        _ => BTreeMap::new(),
-    };
-    doc.entry("benchmark".to_string())
-        .or_insert_with(|| Json::Str("bench_sampler".to_string()));
-    doc.entry("units".to_string())
-        .or_insert_with(|| Json::Str("ns_per_row (median); allocs_per_call; nfe".to_string()));
-
     let mut run = BTreeMap::new();
     run.insert("label".to_string(), Json::Str(opts.label.clone()));
     run.insert("smoke".to_string(), Json::Bool(opts.smoke));
@@ -313,13 +304,12 @@ fn append_run(path: &PathBuf, opts: &BenchOptions, entries: &[BenchEntry]) -> Re
         ),
     );
 
-    let runs = doc.entry("runs".to_string()).or_insert_with(|| Json::Arr(Vec::new()));
-    if let Json::Arr(rs) = runs {
-        rs.push(Json::Obj(run));
-    }
-    std::fs::write(path, Json::Obj(doc).to_string())
-        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
-    Ok(())
+    crate::util::json::append_bench_run(
+        path,
+        "bench_sampler",
+        "ns_per_row (median); allocs_per_call; nfe",
+        Json::Obj(run),
+    )
 }
 
 #[cfg(test)]

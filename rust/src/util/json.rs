@@ -156,6 +156,34 @@ pub fn num_arr(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
+/// Append one labeled run to a benchmark trajectory file: a JSON object
+/// `{benchmark, units, ..., runs: [...]}` created on first use, prior
+/// content (including hand-written `note` fields) preserved. Shared by
+/// `BENCH_sampler.json` (`perf::run_sampler_bench`) and `BENCH_qos.json`
+/// (`loadgen::append_qos_record`) so the read/seed/push/write skeleton
+/// lives in one place.
+pub fn append_bench_run(
+    path: &std::path::Path,
+    benchmark: &str,
+    units: &str,
+    run: Json,
+) -> Result<()> {
+    let mut doc = match read_json_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    doc.entry("benchmark".to_string())
+        .or_insert_with(|| Json::Str(benchmark.to_string()));
+    doc.entry("units".to_string())
+        .or_insert_with(|| Json::Str(units.to_string()));
+    let runs = doc.entry("runs".to_string()).or_insert_with(|| Json::Arr(Vec::new()));
+    if let Json::Arr(rs) = runs {
+        rs.push(run);
+    }
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 /// Append one value as a line to a JSON-lines file, creating the file (and
 /// any parent directory) on first use. The write is a single `writeln!`,
 /// so concurrent appenders should serialize externally.

@@ -13,9 +13,10 @@ use sdm::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
 use sdm::coordinator::hub::EngineHub;
 use sdm::coordinator::metrics::ServerMetrics;
 use sdm::coordinator::protocol::{Request, Response, SampleRequest};
+use sdm::coordinator::qos::{DrrScheduler, Inbox};
 use sdm::model::gmm::testmodel::toy;
 use sdm::model::{Denoiser, EvalOut, GmmModel};
-use sdm::util::{Rng, ThreadPool, Timer};
+use sdm::util::{Rng, ThreadPool};
 
 /// Wraps the toy oracle with concurrency/shape gauges and an optional
 /// per-eval hold (to make "slow" requests deterministically slow).
@@ -83,7 +84,7 @@ fn mk_request(n: usize, solver: &str, steps: usize, seed: u64) -> SampleRequest 
 }
 
 struct TestBatcher {
-    tx: Option<mpsc::Sender<Pending>>,
+    inbox: Arc<Inbox>,
     metrics: Arc<ServerMetrics>,
     join: Option<std::thread::JoinHandle<()>>,
 }
@@ -92,36 +93,37 @@ impl TestBatcher {
     fn start(hub: EngineHub, policy: BatchPolicy, threads: usize) -> TestBatcher {
         let metrics = Arc::new(ServerMetrics::new());
         let pool = Arc::new(ThreadPool::new(threads));
-        let (tx, rx) = mpsc::channel();
+        let sched = DrrScheduler::new(pool, 0, policy.max_batch.max(1));
+        let inbox = Arc::new(Inbox::new(0));
         let m2 = metrics.clone();
+        let inbox2 = inbox.clone();
         let hub = Arc::new(hub);
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let join = std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, rx, policy, pool, stop)
+            batcher_loop("toy".into(), hub, m2, inbox2, policy, sched, stop)
         });
-        TestBatcher { tx: Some(tx), metrics, join: Some(join) }
+        TestBatcher { inbox, metrics, join: Some(join) }
     }
 
     fn submit(&self, req: SampleRequest) -> mpsc::Receiver<Response> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .unwrap()
-            .send(Pending { req, reply: rtx, enqueued: Instant::now(), timer: Timer::start() })
+        self.inbox
+            .try_push(Pending::new(req, rtx))
+            .map_err(|_| "push rejected")
             .unwrap();
         rrx
     }
 
     /// Close the inbox and join — proves every reply was flushed.
     fn finish(mut self) {
-        drop(self.tx.take());
+        self.inbox.close();
         self.join.take().unwrap().join().unwrap();
     }
 }
 
 impl Drop for TestBatcher {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.inbox.close();
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }

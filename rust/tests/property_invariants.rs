@@ -2,19 +2,20 @@
 //! NFE accounting, schedule/resampling invariants, batcher conservation.
 
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use sdm::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
 use sdm::coordinator::hub::EngineHub;
 use sdm::coordinator::metrics::ServerMetrics;
 use sdm::coordinator::protocol::{Request, Response, SampleRequest};
+use sdm::coordinator::qos::{DrrScheduler, Inbox};
 use sdm::diffusion::{CurvatureClock, Param};
 use sdm::model::gmm::testmodel::toy;
 use sdm::sampler::{run_sampler, RunConfig};
 use sdm::schedule::baselines::edm_schedule;
 use sdm::solvers::{LambdaKind, SolverSpec};
 use sdm::testutil::prop::{forall_cfg, Gen, Pair, PropConfig, UsizeIn};
-use sdm::util::{Rng, ThreadPool, Timer};
+use sdm::util::{Rng, ThreadPool};
 
 struct ParamGen;
 
@@ -115,11 +116,13 @@ fn batcher_conserves_requests_under_random_load() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let metrics = Arc::new(ServerMetrics::new());
         let pool = Arc::new(ThreadPool::new(4));
-        let (tx, rx) = mpsc::channel();
+        let sched = DrrScheduler::new(pool, 0, 256);
+        let inbox = Arc::new(Inbox::new(0));
+        let inbox2 = inbox.clone();
         let m2 = metrics.clone();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let handle = std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, rx, BatchPolicy::default(), pool, stop)
+            batcher_loop("toy".into(), hub, m2, inbox2, BatchPolicy::default(), sched, stop)
         });
         let mut rng = Rng::new(n_requests as u64);
         let mut expected = Vec::new();
@@ -128,16 +131,13 @@ fn batcher_conserves_requests_under_random_load() {
             let rows = 1 + rng.below(9);
             expected.push(rows);
             let (rtx, rrx) = mpsc::channel();
-            tx.send(Pending {
-                req: mk_request(rows, i as u64),
-                reply: rtx,
-                enqueued: Instant::now(),
-                timer: Timer::start(),
-            })
-            .unwrap();
+            inbox
+                .try_push(Pending::new(mk_request(rows, i as u64), rtx))
+                .map_err(|_| "push rejected")
+                .unwrap();
             receivers.push(rrx);
         }
-        drop(tx);
+        inbox.close();
         for (rrx, rows) in receivers.iter().zip(&expected) {
             match rrx.recv_timeout(Duration::from_secs(30)) {
                 Ok(Response::SampleOk { n, samples, dim, .. }) => {

@@ -13,6 +13,10 @@
 //! - [`Context`]: `.context(..)` / `.with_context(..)` on both `Result`
 //!   (any `E: Into<Error>`, which covers every `std::error::Error`) and
 //!   `Option`.
+//! - [`Error::new`] + [`Error::downcast_ref`]: typed errors survive the
+//!   conversion (the original value rides along as a `dyn Any` payload),
+//!   so callers can branch on a concrete error type — the coordinator's
+//!   client surfaces QoS rejections this way.
 //!
 //! Like upstream, `Error` deliberately does **not** implement
 //! `std::error::Error`, which is what makes the blanket `From` impl
@@ -27,12 +31,37 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 pub struct Error {
     /// `chain[0]` is the outermost message; later entries are causes.
     chain: Vec<String>,
+    /// the original typed error, when one exists (upstream keeps the
+    /// value for `downcast_ref`; context wrapping preserves it)
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a printable message (what [`anyhow!`] expands to).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
+    }
+
+    /// Build an error from a typed `std::error::Error`, keeping the value
+    /// so [`Error::downcast_ref`] can recover it (upstream `Error::new`).
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain, payload: Some(Box::new(e)) }
+    }
+
+    /// Borrow the original typed error, if this `Error` was built from
+    /// one of type `T` (upstream `Error::downcast_ref`). Context wraps
+    /// do not hide the payload.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 
     /// Wrap with an outer context message (upstream `Error::context`).
@@ -81,13 +110,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        let mut chain = vec![e.to_string()];
-        let mut src = e.source();
-        while let Some(s) = src {
-            chain.push(s.to_string());
-            src = s.source();
-        }
-        Error { chain }
+        Error::new(e)
     }
 }
 
@@ -195,6 +218,25 @@ mod tests {
             Ok(())
         };
         assert!(format!("{}", bare(false).unwrap_err()).contains("condition failed"));
+    }
+
+    #[test]
+    fn typed_errors_downcast_through_context() {
+        let e = Error::new(io_err());
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // context wrapping keeps the payload reachable
+        let wrapped = e.context("while frobnicating");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        assert_eq!(format!("{wrapped:#}"), "while frobnicating: disk on fire");
+        // `?`-converted errors carry their payload too
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        let e = parse("nope").unwrap_err();
+        assert!(e.downcast_ref::<std::num::ParseIntError>().is_some());
+        // message-built errors have no payload
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
