@@ -29,10 +29,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::protocol::{Response, SampleRequest};
+use crate::coordinator::protocol::{PlanRequest, Response, SampleRequest};
 use crate::coordinator::qos::{AdmitGuard, DrrScheduler, Inbox, QosClass, RecvError, ShedCause};
 use crate::metrics::sample_mean_cov;
-use crate::sampler::{generate, generate_pooled, run_sampler, RunConfig};
+use crate::sampler::{generate_plan, generate_pooled_plan, run_plan, RunConfig, SamplingPlan};
 use crate::util::{ThreadPool, Timer};
 use crate::Result;
 
@@ -88,11 +88,15 @@ impl Default for BatchPolicy {
 /// Group key: everything that must match for two requests to share one
 /// integration batch. Includes the QoS class so priorities stay crisp: a
 /// background request can never ride (or delay) an interactive batch.
+/// The plan tag covers both the segmented plan string and the legacy
+/// single-solver tag (identical strings, so old clients group as before);
+/// `auto` requests group together per (param, class) and resolve to one
+/// instance-aware plan at flush.
 fn group_key(r: &SampleRequest) -> String {
     format!(
         "{}|{}|{}|{}|{:?}|{}",
         r.param.name(),
-        r.solver.tag(),
+        r.plan.tag(),
         r.schedule.tag(),
         r.steps,
         r.class,
@@ -496,28 +500,41 @@ fn run_group(
     let total: usize = group.iter().map(|p| p.req.n).sum();
     let info = hub.info(dataset)?;
     let model = hub.model(dataset)?;
-    let grid = hub.schedule(dataset, head.param, &head.schedule, head.steps)?;
+    // resolve the plan: explicit plans run as requested; `auto` asks the
+    // hub's instance-aware bucket (dataset, param, conditioning class).
+    // all group members share the key fields, so the head decides.
+    let plan: SamplingPlan = match &head.plan {
+        PlanRequest::Explicit(p) => p.clone(),
+        PlanRequest::Auto => hub.instance_plan(dataset, head.param, head.class)?,
+    };
+    let grid = hub.schedule_for_plan(
+        dataset,
+        head.param,
+        &head.schedule,
+        head.steps,
+        &plan.cache_tag(),
+    )?;
     let seed = mix_group_seed(group);
     let max_batch = policy.max_batch.max(1);
     if total > max_batch {
         // only reachable for a chunk holding one oversized request
         let cfg = RunConfig { rows: max_batch, seed, class: head.class, trace: false };
-        let (samples, nfe, _) = match pool {
-            Some(p) => generate_pooled(
+        let (samples, nfe, _, _) = match pool {
+            Some(p) => generate_pooled_plan(
                 &model,
                 head.param,
                 &grid,
-                &head.solver,
+                &plan,
                 info,
                 &cfg,
                 total,
                 p,
             )?,
-            None => generate(
+            None => generate_plan(
                 model.as_ref(),
                 head.param,
                 &grid,
-                &head.solver,
+                &plan,
                 info,
                 &cfg,
                 total,
@@ -526,7 +543,7 @@ fn run_group(
         Ok((samples, nfe, info.dim))
     } else {
         let cfg = RunConfig { rows: total, seed, class: head.class, trace: false };
-        let out = run_sampler(model.as_ref(), head.param, &grid, &head.solver, info, &cfg)?;
+        let out = run_plan(model.as_ref(), head.param, &grid, &plan, info, &cfg)?;
         Ok((out.samples, out.nfe as f64, info.dim))
     }
 }
@@ -625,6 +642,68 @@ mod tests {
                 Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 1),
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    fn mk_plan_request(n: usize, plan: &str) -> SampleRequest {
+        let line = format!(
+            r#"{{"op":"sample","dataset":"toy","n":{n},"plan":"{plan}","steps":8}}"#
+        );
+        match Request::parse(&line).unwrap() {
+            Request::Sample(s) => s,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn single_segment_plan_requests_batch_with_legacy_solver_requests() {
+        // "euler@max..0" tags as plain "euler", so old and new clients
+        // asking for the same thing share one integration batch
+        let legacy = mk_request(4, "euler");
+        let planned = mk_plan_request(4, "euler@max..0");
+        assert_eq!(group_key(&legacy), group_key(&planned));
+        let (tx, _m) = spawn_batcher();
+        let rx1 = submit(&tx, legacy);
+        let rx2 = submit(&tx, planned);
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 2),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_plan_requests_are_served_and_not_merged_with_solver_groups() {
+        let seg = mk_plan_request(4, "euler@max..1,heun@1..0");
+        let solo = mk_request(4, "euler");
+        assert_ne!(group_key(&seg), group_key(&solo));
+        let (tx, _m) = spawn_batcher();
+        let rx1 = submit(&tx, seg);
+        let rx2 = submit(&tx, solo);
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Response::SampleOk { batched_with, n, .. } => {
+                    assert_eq!(batched_with, 1);
+                    assert_eq!(n, 4);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn auto_plan_requests_resolve_and_serve() {
+        let auto = mk_plan_request(4, "auto");
+        assert_eq!(group_key(&auto), group_key(&mk_plan_request(4, "auto")));
+        let (tx, _m) = spawn_batcher();
+        let rx = submit(&tx, auto);
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Response::SampleOk { n, nfe, .. } => {
+                assert_eq!(n, 4);
+                assert!(nfe > 0.0);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

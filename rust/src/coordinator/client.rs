@@ -126,6 +126,25 @@ impl Client {
         self.send(&line)
     }
 
+    /// Like [`Client::sample`], but with an explicit plan string
+    /// (DESIGN.md §9 grammar, or `"auto"` for the hub's instance-aware
+    /// bucket) in place of a single solver.
+    pub fn sample_plan(
+        &mut self,
+        dataset: &str,
+        n: usize,
+        param: &str,
+        plan: &str,
+        schedule: &str,
+        steps: usize,
+        seed: u64,
+    ) -> Result<Json> {
+        let line = format!(
+            r#"{{"op":"sample","dataset":"{dataset}","n":{n},"param":"{param}","plan":"{plan}","schedule":"{schedule}","steps":{steps},"seed":{seed}}}"#
+        );
+        self.send(&line)
+    }
+
     pub fn shutdown_server(&mut self) -> Result<()> {
         let _ = self.send(r#"{"op":"shutdown"}"#)?;
         Ok(())

@@ -340,6 +340,23 @@ impl EngineHub {
         spec: &ScheduleSpec,
         steps: usize,
     ) -> Result<SigmaGrid> {
+        self.schedule_for_plan(dataset, param, spec, steps, "")
+    }
+
+    /// [`EngineHub::schedule`] keyed on a plan discriminator
+    /// (`SamplingPlan::cache_tag()`): `""` for single-segment plans —
+    /// byte-identical keys and pilot seeds to the pre-plan hub, so all
+    /// classic solver choices keep sharing one grid — and the full plan
+    /// tag for segmented plans, which therefore never alias a
+    /// single-solver grid or each other (DESIGN.md §9).
+    pub fn schedule_for_plan(
+        &self,
+        dataset: &str,
+        param: Param,
+        spec: &ScheduleSpec,
+        steps: usize,
+        plan_tag: &str,
+    ) -> Result<SigmaGrid> {
         let steps = self.resolve_steps(dataset, steps)?;
         let entry = self.entry(dataset)?;
         let key = CacheKey {
@@ -348,6 +365,7 @@ impl EngineHub {
             tag: spec.tag(),
             steps,
             model_fp: entry.fp,
+            plan: plan_tag.to_string(),
         };
         let built = self.schedule_cache.get_or_build(&key, |warm| {
             // deterministic pilot seed per key so cached schedules reproduce
@@ -362,6 +380,36 @@ impl EngineHub {
 
     pub fn cached_schedules(&self) -> usize {
         self.schedule_cache.len()
+    }
+
+    /// Instance-aware plan bucket: a cheap deterministic map from the
+    /// request's (dataset, param, conditioning) to a [`SamplingPlan`],
+    /// used when a request asks for `"plan":"auto"`. Boundaries scale
+    /// with the dataset's σ_max (σ_max = 80 → the canonical 2.0 / 0.5
+    /// split); conditional requests get the three-segment plan with an
+    /// adaptive tail — their sharper class-conditional trajectories bend
+    /// earlier — while unconditional requests keep a cheaper two-segment
+    /// assignment. Dpm2m appears as the mid-segment only where the s(t)
+    /// ≡ 1 contract holds. The resulting plan's grids land in the
+    /// schedule cache keyed by the plan tag, so every bucket builds its
+    /// schedule once and all later requests in the bucket hit.
+    pub fn instance_plan(
+        &self,
+        dataset: &str,
+        param: Param,
+        class: Option<usize>,
+    ) -> Result<crate::sampler::SamplingPlan> {
+        let info = self.info(dataset)?;
+        let b1 = info.sigma_max * 0.025;
+        let b2 = info.sigma_max * 0.00625;
+        let sigma_domain = param.s(param.t_of_sigma(info.sigma_max)) == 1.0;
+        let mid = if sigma_domain { "dpm2m" } else { "heun" };
+        let spec = if class.is_some() {
+            format!("euler@max..{b1},{mid}@{b1}..{b2},sdm@{b2}..0")
+        } else {
+            format!("euler@max..{b1},{mid}@{b1}..0")
+        };
+        crate::sampler::SamplingPlan::parse(&spec)
     }
 
     /// The schedule cache (stats, test instrumentation).
@@ -435,6 +483,48 @@ mod tests {
         assert_eq!(h.batch_shapes("toy"), Some(vec![64, 256]), "sorted + deduped");
         h.set_batch_shapes("nope", vec![8]); // unknown dataset: no-op
         assert_eq!(h.batch_shapes("nope"), None);
+    }
+
+    #[test]
+    fn plan_keyed_schedules_do_not_alias() {
+        let h = hub();
+        let spec = ScheduleSpec::Edm { rho: 7.0 };
+        let g0 = h.schedule("toy", Param::Edm, &spec, 12).unwrap();
+        assert_eq!(h.cached_schedules(), 1);
+        // single-segment plan tag "" shares the same entry
+        let g1 = h.schedule_for_plan("toy", Param::Edm, &spec, 12, "").unwrap();
+        assert_eq!(h.cached_schedules(), 1);
+        assert_eq!(g0, g1);
+        // a segmented plan gets its own entry
+        let g2 = h
+            .schedule_for_plan("toy", Param::Edm, &spec, 12, "euler@max..2,heun@2..0")
+            .unwrap();
+        assert_eq!(h.cached_schedules(), 2, "segmented plan must not alias the shared grid");
+        assert_eq!(g0, g2, "same spec builds the same knots either way");
+        // and two segmented plans don't alias each other
+        let _ = h
+            .schedule_for_plan("toy", Param::Edm, &spec, 12, "euler@max..0.5,sdm@0.5..0")
+            .unwrap();
+        assert_eq!(h.cached_schedules(), 3);
+    }
+
+    #[test]
+    fn instance_plan_buckets_by_conditioning_and_param() {
+        let h = hub();
+        let uncond = h.instance_plan("toy", Param::Edm, None).unwrap();
+        let cond = h.instance_plan("toy", Param::Edm, Some(0)).unwrap();
+        assert_eq!(uncond.segments.len(), 2);
+        assert_eq!(cond.segments.len(), 3);
+        assert_ne!(uncond.tag(), cond.tag());
+        // deterministic: the same request maps to the same bucket
+        assert_eq!(uncond, h.instance_plan("toy", Param::Edm, None).unwrap());
+        // classes share a bucket (the bucket is conditioning, not class id)
+        assert_eq!(cond, h.instance_plan("toy", Param::Edm, Some(1)).unwrap());
+        // VP must not be offered dpm2m (s(t) != 1)
+        let vp = h.instance_plan("toy", Param::vp(), None).unwrap();
+        assert!(!vp.segments.iter().any(|s| matches!(s.solver, crate::solvers::SolverSpec::Dpm2m)));
+        // the plan validates and round-trips its tag
+        assert_eq!(crate::sampler::SamplingPlan::parse(&cond.tag()).unwrap(), cond);
     }
 
     #[test]

@@ -37,6 +37,9 @@ pub struct RequestTemplate {
     pub solver: String,
     pub schedule: String,
     pub steps: usize,
+    /// segmented plan string (DESIGN.md §9 grammar, or `"auto"`); when
+    /// set it rides the wire as `"plan"` and wins over `solver`.
+    pub plan: Option<String>,
     /// QoS class (wire field `priority`); `None` = server default (batch).
     pub priority: Option<String>,
     /// per-request deadline budget in milliseconds.
@@ -47,6 +50,9 @@ impl RequestTemplate {
     /// Serialize as one request line with the given seed.
     pub fn line(&self, seed: u64) -> String {
         let mut extra = String::new();
+        if let Some(p) = &self.plan {
+            extra.push_str(&format!(r#","plan":"{p}""#));
+        }
         if let Some(p) = &self.priority {
             extra.push_str(&format!(r#","priority":"{p}""#));
         }
@@ -78,6 +84,7 @@ impl TraceProfile {
             solver: solver.into(),
             schedule: "edm".into(),
             steps,
+            plan: None,
             priority: None,
             deadline_ms: None,
         };
@@ -109,6 +116,7 @@ impl TraceProfile {
             solver: solver.into(),
             schedule: schedule.into(),
             steps,
+            plan: None,
             priority: None,
             deadline_ms: None,
         };
@@ -485,6 +493,7 @@ mod tests {
             solver: "euler".into(),
             schedule: "edm".into(),
             steps,
+            plan: None,
             priority: None,
             deadline_ms: None,
         }
@@ -519,6 +528,24 @@ mod tests {
                 assert_eq!(s.qos, crate::coordinator::qos::QosClass::Interactive);
                 assert_eq!(s.deadline_ms, Some(250.0));
             }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn template_line_carries_plan_field() {
+        let mut t = toy_template(4, 6);
+        t.plan = Some("euler@max..1,heun@1..0".into());
+        let line = t.line(3);
+        assert!(line.contains(r#""plan":"euler@max..1,heun@1..0""#), "{line}");
+        let parsed = crate::coordinator::protocol::Request::parse(&line).unwrap();
+        match parsed {
+            crate::coordinator::protocol::Request::Sample(s) => match s.plan {
+                crate::coordinator::protocol::PlanRequest::Explicit(p) => {
+                    assert_eq!(p.segments.len(), 2)
+                }
+                _ => panic!("expected explicit plan"),
+            },
             _ => panic!(),
         }
     }

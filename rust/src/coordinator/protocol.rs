@@ -9,6 +9,13 @@
 //!  "priority":"interactive","deadline_ms":250}
 //! {"op":"ping"}   {"op":"stats"}   {"op":"shutdown"}
 //! ```
+//! A request may also carry `"plan"`: either a segmented plan string in
+//! the DESIGN.md §9 grammar (`"euler@max..2,dpm2m@2..0.5,sdm@0.5..0"`)
+//! or `"auto"`, which asks the hub to pick an instance-aware plan from
+//! the request's (dataset, param, class) bucket. When `plan` is present
+//! it wins over the legacy `solver` fields; when absent, the legacy
+//! solver parse produces an equivalent single-segment plan, so old
+//! clients keep their exact behavior (and batcher group keys).
 //! Sample responses carry the Gaussian summary of the generated rows, the
 //! NFE spent, and optionally the raw samples.
 //!
@@ -39,6 +46,7 @@ use anyhow::bail;
 
 use crate::coordinator::qos::QosClass;
 use crate::diffusion::{CurvatureClock, Param};
+use crate::sampler::SamplingPlan;
 use crate::schedule::ScheduleSpec;
 use crate::solvers::{ChurnParams, LambdaKind, SolverSpec};
 use crate::util::Json;
@@ -53,13 +61,35 @@ pub enum Request {
     Sample(SampleRequest),
 }
 
+/// How the request wants its sampling plan resolved.
+#[derive(Clone, Debug)]
+pub enum PlanRequest {
+    /// `"plan":"auto"` — the hub picks an instance-aware plan from the
+    /// (dataset, param, class) bucket at flush time.
+    Auto,
+    /// A fully specified plan. Legacy `solver` requests land here as a
+    /// single-segment plan, so their group keys and traces are unchanged.
+    Explicit(SamplingPlan),
+}
+
+impl PlanRequest {
+    /// Tag used in batcher group keys: `auto` requests are grouped
+    /// per-route until resolution; explicit plans group by plan tag.
+    pub fn tag(&self) -> String {
+        match self {
+            PlanRequest::Auto => "auto".into(),
+            PlanRequest::Explicit(p) => p.tag(),
+        }
+    }
+}
+
 /// Parameters of a `sample` request.
 #[derive(Clone, Debug)]
 pub struct SampleRequest {
     pub dataset: String,
     pub n: usize,
     pub param: Param,
-    pub solver: SolverSpec,
+    pub plan: PlanRequest,
     pub schedule: ScheduleSpec,
     pub steps: usize,
     pub seed: u64,
@@ -127,33 +157,43 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
         }
     };
 
-    // solver
-    let solver_name = match v.get("solver") {
-        Ok(s) => s.as_str()?.to_string(),
-        Err(_) => "heun".to_string(),
-    };
-    let solver = match solver_name.as_str() {
-        "euler" => SolverSpec::Euler,
-        "heun" => SolverSpec::Heun,
-        "dpm2m" => SolverSpec::Dpm2m,
-        "heun-churn" => SolverSpec::StochasticHeun(ChurnParams {
-            s_churn: opt_f64(v, "s_churn", 40.0)?,
-            s_min: opt_f64(v, "s_min", 0.05)?,
-            s_max: opt_f64(v, "s_max", 50.0)?,
-            s_noise: opt_f64(v, "s_noise", 1.003)?,
-        }),
-        "sdm" => {
-            let lambda = LambdaKind::from_name(match v.get("lambda") {
-                Ok(l) => l.as_str()?,
-                Err(_) => "step",
-            })?;
-            SolverSpec::Adaptive {
-                lambda,
-                tau_k: opt_f64(v, "tau_k", 2e-4)?,
-                clock: CurvatureClock::Sigma,
-            }
+    // plan / solver. `plan` wins when both are present; the legacy
+    // solver fields fold into an equivalent single-segment plan.
+    let plan = match v.get("plan") {
+        Ok(Json::Null) | Err(_) => {
+            let solver_name = match v.get("solver") {
+                Ok(s) => s.as_str()?.to_string(),
+                Err(_) => "heun".to_string(),
+            };
+            let solver = match solver_name.as_str() {
+                "euler" => SolverSpec::Euler,
+                "heun" => SolverSpec::Heun,
+                "dpm2m" => SolverSpec::Dpm2m,
+                "heun-churn" => SolverSpec::StochasticHeun(ChurnParams {
+                    s_churn: opt_f64(v, "s_churn", 40.0)?,
+                    s_min: opt_f64(v, "s_min", 0.05)?,
+                    s_max: opt_f64(v, "s_max", 50.0)?,
+                    s_noise: opt_f64(v, "s_noise", 1.003)?,
+                }),
+                "sdm" => {
+                    let lambda = LambdaKind::from_name(match v.get("lambda") {
+                        Ok(l) => l.as_str()?,
+                        Err(_) => "step",
+                    })?;
+                    SolverSpec::Adaptive {
+                        lambda,
+                        tau_k: opt_f64(v, "tau_k", 2e-4)?,
+                        clock: CurvatureClock::Sigma,
+                    }
+                }
+                other => bail!("unknown solver {other:?}"),
+            };
+            PlanRequest::Explicit(SamplingPlan::single(solver))
         }
-        other => bail!("unknown solver {other:?}"),
+        Ok(p) => match p.as_str()? {
+            "auto" => PlanRequest::Auto,
+            s => PlanRequest::Explicit(SamplingPlan::parse(s)?),
+        },
     };
 
     // schedule
@@ -184,7 +224,7 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
         dataset,
         n,
         param,
-        solver,
+        plan,
         schedule,
         steps,
         seed,
@@ -337,7 +377,12 @@ mod tests {
                 assert_eq!(s.dataset, "cifar10g");
                 assert_eq!(s.n, 16);
                 assert_eq!(s.param, Param::Edm);
-                assert_eq!(s.solver, SolverSpec::Heun);
+                match &s.plan {
+                    PlanRequest::Explicit(p) => {
+                        assert_eq!(p.solo(), Some(&SolverSpec::Heun))
+                    }
+                    _ => panic!("legacy default should be an explicit single-segment plan"),
+                }
                 assert!(matches!(s.schedule, ScheduleSpec::Edm { .. }));
                 assert!(!s.return_samples);
             }
@@ -356,10 +401,13 @@ mod tests {
         match r {
             Request::Sample(s) => {
                 assert_eq!(s.param, Param::Ve);
-                assert!(matches!(
-                    s.solver,
-                    SolverSpec::Adaptive { lambda: LambdaKind::Step, .. }
-                ));
+                match &s.plan {
+                    PlanRequest::Explicit(p) => assert!(matches!(
+                        p.solo(),
+                        Some(SolverSpec::Adaptive { lambda: LambdaKind::Step, .. })
+                    )),
+                    _ => panic!("expected explicit plan"),
+                }
                 assert!(matches!(s.schedule, ScheduleSpec::Sdm { .. }));
                 assert!(s.return_samples);
                 assert_eq!(s.steps, 40);
@@ -376,6 +424,55 @@ mod tests {
         assert!(
             Request::parse(r#"{"op":"sample","dataset":"x","n":4,"solver":"rk45"}"#).is_err()
         );
+        // malformed plan strings fail at parse, not at flush
+        assert!(Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"plan":"euler@max..2"}"#
+        )
+        .is_err());
+        assert!(Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"plan":"rk45@max..0"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_plan_field() {
+        // segmented plan string round-trips through the request
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"plan":"euler@max..2,dpm2m@2..0"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => match &s.plan {
+                PlanRequest::Explicit(p) => {
+                    assert_eq!(p.segments.len(), 2);
+                    assert_eq!(p.tag(), "euler@max..2,dpm2m@2..0");
+                }
+                _ => panic!("expected explicit plan"),
+            },
+            _ => panic!(),
+        }
+        // "auto" defers plan choice to the hub's instance bucket
+        let r = Request::parse(r#"{"op":"sample","dataset":"x","n":4,"plan":"auto"}"#).unwrap();
+        match r {
+            Request::Sample(s) => {
+                assert!(matches!(s.plan, PlanRequest::Auto));
+                assert_eq!(s.plan.tag(), "auto");
+            }
+            _ => panic!(),
+        }
+        // plan wins over a legacy solver field when both are present
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"solver":"heun","plan":"euler@max..0"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => match &s.plan {
+                PlanRequest::Explicit(p) => assert_eq!(p.solo(), Some(&SolverSpec::Euler)),
+                _ => panic!(),
+            },
+            _ => panic!(),
+        }
     }
 
     #[test]

@@ -34,11 +34,12 @@ pub fn run_clock_ablation(ctx: &ExpContext, dataset: &str) -> Result<Vec<(String
                 let cfg = SamplerConfig {
                     dataset: dataset.to_string(),
                     param,
-                    solver: SolverSpec::Adaptive {
+                    plan: SolverSpec::Adaptive {
                         lambda: LambdaKind::Step,
                         tau_k: tau,
                         clock,
-                    },
+                    }
+                    .into(),
                     schedule: ScheduleSpec::Edm { rho: 7.0 },
                     steps,
                     class: None,

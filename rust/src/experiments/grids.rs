@@ -35,11 +35,12 @@ pub fn run_tau_sweep(
                 cfgs.push(SamplerConfig {
                     dataset: ds.to_string(),
                     param,
-                    solver: SolverSpec::Adaptive {
+                    plan: SolverSpec::Adaptive {
                         lambda: LambdaKind::Step,
                         tau_k: tau,
                         clock: CurvatureClock::Sigma,
-                    },
+                    }
+                    .into(),
                     schedule,
                     steps,
                     class,
@@ -87,7 +88,7 @@ pub fn run_eta_grid(ctx: &ExpContext) -> Result<Vec<(String, RowResult)>> {
         cfgs.push(SamplerConfig {
             dataset: ds.to_string(),
             param: Param::vp(),
-            solver: SolverSpec::Euler,
+            plan: SolverSpec::Euler.into(),
             schedule: ScheduleSpec::Sdm {
                 eta_min: *em,
                 eta_max: *ex,

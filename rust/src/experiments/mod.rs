@@ -60,6 +60,9 @@ pub struct RowResult {
     pub fd: f64,
     pub sliced: f64,
     pub nfe: f64,
+    /// mean NFE attributed to each plan segment (one entry per segment;
+    /// a single-segment plan has one entry equal to `nfe` minus nothing).
+    pub seg_nfe: Vec<f64>,
 }
 
 /// Evaluate a sampler configuration: generate samples, compare against the
@@ -68,7 +71,13 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
     let info = ctx.hub.info(&cfg.dataset)?.clone();
     let model = ctx.hub.model(&cfg.dataset)?;
     let oracle = ctx.hub.oracle(&cfg.dataset)?;
-    let grid = ctx.hub.schedule(&cfg.dataset, cfg.param, &cfg.schedule, cfg.steps)?;
+    let grid = ctx.hub.schedule_for_plan(
+        &cfg.dataset,
+        cfg.param,
+        &cfg.schedule,
+        cfg.steps,
+        &cfg.plan.cache_tag(),
+    )?;
 
     let run_cfg = RunConfig {
         rows: ctx.rows,
@@ -76,22 +85,22 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
         class: cfg.class,
         trace: false,
     };
-    let (samples, nfe, _) = match &ctx.pool {
-        Some(pool) => engine::generate_pooled(
+    let (samples, nfe, _, seg_nfe) = match &ctx.pool {
+        Some(pool) => engine::generate_pooled_plan(
             &model,
             cfg.param,
             &grid,
-            &cfg.solver,
+            &cfg.plan,
             &info,
             &run_cfg,
             ctx.samples,
             pool,
         )?,
-        None => engine::generate(
+        None => engine::generate_plan(
             model.as_ref(),
             cfg.param,
             &grid,
-            &cfg.solver,
+            &cfg.plan,
             &info,
             &run_cfg,
             ctx.samples,
@@ -112,7 +121,51 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
     let gen_sub = &samples[..ctx.samples.min(4096) * info.dim];
     let sl = sliced_w2(gen_sub, &truth, info.dim, 48, run_cfg.seed ^ 0x51ED);
 
-    Ok(RowResult { label: cfg.label(), fd, sliced: sl, nfe })
+    Ok(RowResult { label: cfg.label(), fd, sliced: sl, nfe, seg_nfe })
+}
+
+/// Plan search (DESIGN.md §9): enumerate [`candidate_plans`] for one
+/// (dataset, param, budget) and evaluate each over the pilot-sized
+/// harness, returning (plan, row) pairs sorted by the search's preference
+/// — lowest NFE among plans whose FD is within 5% of the best FD, then by
+/// FD. The first entry is the chosen plan.
+pub fn plan_search(
+    ctx: &ExpContext,
+    dataset: &str,
+    param: Param,
+    steps: usize,
+) -> Result<Vec<(crate::sampler::SamplingPlan, RowResult)>> {
+    let info = ctx.hub.info(dataset)?;
+    let sigma_domain = param.s(param.t_of_sigma(info.sigma_max)) == 1.0;
+    let plans = crate::sampler::candidate_plans(info.sigma_max, sigma_domain);
+    let cfgs: Vec<SamplerConfig> = plans
+        .iter()
+        .map(|p| SamplerConfig {
+            dataset: dataset.to_string(),
+            param,
+            plan: p.clone(),
+            schedule: crate::schedule::ScheduleSpec::Edm { rho: 7.0 },
+            steps,
+            class: None,
+        })
+        .collect();
+    let rows = evaluate_all(ctx, cfgs);
+    let mut out: Vec<(crate::sampler::SamplingPlan, RowResult)> = plans
+        .into_iter()
+        .zip(rows)
+        .filter_map(|(p, r)| r.ok().map(|r| (p, r)))
+        .collect();
+    anyhow::ensure!(!out.is_empty(), "no candidate plan evaluated successfully");
+    let best_fd = out.iter().map(|(_, r)| r.fd).fold(f64::INFINITY, f64::min);
+    let cutoff = best_fd * 1.05;
+    out.sort_by(|(_, a), (_, b)| {
+        let a_ok = a.fd <= cutoff;
+        let b_ok = b.fd <= cutoff;
+        b_ok.cmp(&a_ok)
+            .then(a.nfe.total_cmp(&b.nfe))
+            .then(a.fd.total_cmp(&b.fd))
+    });
+    Ok(out)
 }
 
 /// Evaluate a list of configs, parallel over the shared worker pool.
@@ -173,6 +226,42 @@ mod tests {
         assert!(row.fd.is_finite() && row.fd >= 0.0 && row.fd < 1.0, "{row:?}");
         assert!(row.sliced.is_finite() && row.sliced < 1.0, "{row:?}");
         assert_eq!(row.nfe, 31.0); // 2*16-1
+        assert_eq!(row.seg_nfe, vec![31.0]); // single segment owns every eval
+    }
+
+    #[test]
+    fn evaluate_attributes_nfe_to_segments() {
+        let ctx = ctx();
+        let info = ctx.hub.info("toy").unwrap();
+        let mid = info.sigma_max * 0.1;
+        let mut cfg = SamplerConfig::edm_baseline("toy", Param::Edm, 8);
+        cfg.plan =
+            crate::sampler::SamplingPlan::parse(&format!("euler@max..{mid},heun@{mid}..0"))
+                .unwrap();
+        let row = evaluate(&ctx, &cfg).unwrap();
+        assert_eq!(row.seg_nfe.len(), 2, "{row:?}");
+        assert!(row.seg_nfe.iter().all(|&n| n > 0.0), "{row:?}");
+        assert_eq!(row.seg_nfe.iter().sum::<f64>(), row.nfe, "{row:?}");
+    }
+
+    #[test]
+    fn plan_search_prefers_cheap_plans_within_fd_tolerance() {
+        let mut ctx = ctx();
+        ctx.samples = 1024;
+        let ranked = plan_search(&ctx, "toy", Param::Edm, 8).unwrap();
+        assert!(ranked.len() >= 5, "expected static + segmented + pid arms");
+        let (best_plan, best_row) = &ranked[0];
+        assert!(best_row.fd.is_finite());
+        assert!(best_plan.validate().is_ok());
+        // the winner must be within the FD tolerance band of the minimum
+        let best_fd = ranked.iter().map(|(_, r)| r.fd).fold(f64::INFINITY, f64::min);
+        assert!(best_row.fd <= best_fd * 1.05, "{best_row:?} vs best {best_fd}");
+        // and no plan in the band is strictly cheaper than the winner
+        for (_, r) in &ranked {
+            if r.fd <= best_fd * 1.05 {
+                assert!(r.nfe >= best_row.nfe, "{r:?} beats winner {best_row:?}");
+            }
+        }
     }
 
     #[test]
@@ -190,7 +279,7 @@ mod tests {
         let cfgs = vec![
             SamplerConfig::edm_baseline("toy", Param::Edm, 8),
             SamplerConfig {
-                solver: SolverSpec::Euler,
+                plan: SolverSpec::Euler.into(),
                 ..SamplerConfig::edm_baseline("toy", Param::Edm, 8)
             },
             SamplerConfig {

@@ -1,23 +1,78 @@
 //! Quality-vs-NFE Pareto frontier (the paper's §1 claim: SDM improves the
 //! Pareto frontier of quality versus efficiency for pre-trained models).
 //!
-//! Sweeps the step budget for each (solver, schedule) family and reports
+//! Sweeps the step budget for each (plan, schedule) family and reports
 //! (NFE, FD) series; "who dominates where" is the reproduction target.
+//! Beyond the classic single-solver arms, the table carries two segmented
+//! plans (cheap solver at high σ, accurate solver through the mid band,
+//! adaptive tail) and a PID-controlled adaptive arm, with per-segment NFE
+//! attribution so the cost split across σ bands is visible per row.
 
 use crate::diffusion::{CurvatureClock, Param};
 use crate::experiments::{evaluate_all, ExpContext};
-use crate::sampler::SamplerConfig;
+use crate::sampler::{SamplerConfig, SamplingPlan};
 use crate::schedule::ScheduleSpec;
-use crate::solvers::{LambdaKind, SolverSpec};
+use crate::solvers::{LambdaKind, PidParams, SolverSpec};
 use crate::Result;
 
 /// One frontier point.
 #[derive(Clone, Debug)]
 pub struct ParetoPoint {
     pub family: String,
+    /// full plan tag of the family's sampling plan.
+    pub plan: String,
     pub steps: usize,
     pub nfe: f64,
     pub fd: f64,
+    /// mean NFE attributed to each plan segment.
+    pub seg_nfe: Vec<f64>,
+}
+
+/// The frontier's competing families for one (dataset, param): static
+/// single-solver arms, segmented plans, and the PID-adaptive arm.
+fn families(
+    ctx: &ExpContext,
+    dataset: &str,
+    param: Param,
+) -> Result<Vec<(String, SamplingPlan, ScheduleSpec)>> {
+    let info = ctx.hub.info(dataset)?;
+    let tau_k = match SolverSpec::sdm_default(dataset, matches!(param, Param::Vp { .. })) {
+        SolverSpec::Adaptive { tau_k, .. } => tau_k,
+        _ => unreachable!(),
+    };
+    let sdm = SolverSpec::Adaptive {
+        lambda: LambdaKind::Step,
+        tau_k,
+        clock: CurvatureClock::Sigma,
+    };
+    // segment boundaries scale with the dataset's σ range (σ_max 80 puts
+    // them at the canonical 2.0 / 0.5); the mid-band solver degrades from
+    // dpm2m to heun off the σ domain, where dpm2m's contract fails
+    let b1 = info.sigma_max * 0.025;
+    let b2 = info.sigma_max * 0.00625;
+    let sigma_domain = param.s(param.t_of_sigma(info.sigma_max)) == 1.0;
+    let mid = if sigma_domain { "dpm2m" } else { "heun" };
+    let seg_eh = SamplingPlan::parse(&format!("euler@max..{b1},{mid}@{b1}..0"))?;
+    let seg_3 =
+        SamplingPlan::parse(&format!("euler@max..{b1},{mid}@{b1}..{b2},sdm(tau={tau_k})@{b2}..0"))?;
+    Ok(vec![
+        ("euler+edm".into(), SolverSpec::Euler.into(), ScheduleSpec::Edm { rho: 7.0 }),
+        ("heun+edm".into(), SolverSpec::Heun.into(), ScheduleSpec::Edm { rho: 7.0 }),
+        (
+            "heun+cos".into(),
+            SolverSpec::Heun.into(),
+            ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 },
+        ),
+        ("sdm+edm".into(), sdm.into(), ScheduleSpec::Edm { rho: 7.0 }),
+        ("sdm+sdm".into(), sdm.into(), ScheduleSpec::sdm_defaults(dataset, param)),
+        ("seg-eh".into(), seg_eh, ScheduleSpec::Edm { rho: 7.0 }),
+        ("seg-3".into(), seg_3, ScheduleSpec::Edm { rho: 7.0 }),
+        (
+            "pid+edm".into(),
+            SolverSpec::Pid(PidParams::default()).into(),
+            ScheduleSpec::Edm { rho: 7.0 },
+        ),
+    ])
 }
 
 pub fn run(
@@ -26,51 +81,63 @@ pub fn run(
     param: Param,
     budgets: &[usize],
 ) -> Result<Vec<ParetoPoint>> {
-    let tau_k = match SolverSpec::sdm_default(dataset, false, matches!(param, Param::Vp { .. })) {
-        SolverSpec::Adaptive { tau_k, .. } => tau_k,
-        _ => unreachable!(),
-    };
-    let families: Vec<(&str, SolverSpec, ScheduleSpec)> = vec![
-        ("euler+edm", SolverSpec::Euler, ScheduleSpec::Edm { rho: 7.0 }),
-        ("heun+edm", SolverSpec::Heun, ScheduleSpec::Edm { rho: 7.0 }),
-        ("heun+cos", SolverSpec::Heun, ScheduleSpec::Cos { pilot_mult: 4, pilot_rows: 128 }),
-        (
-            "sdm+edm",
-            SolverSpec::Adaptive { lambda: LambdaKind::Step, tau_k, clock: CurvatureClock::Sigma },
-            ScheduleSpec::Edm { rho: 7.0 },
-        ),
-        (
-            "sdm+sdm",
-            SolverSpec::Adaptive { lambda: LambdaKind::Step, tau_k, clock: CurvatureClock::Sigma },
-            ScheduleSpec::sdm_defaults(dataset, param),
-        ),
-    ];
-
+    let families = families(ctx, dataset, param)?;
     let mut cfgs = Vec::new();
     let mut meta = Vec::new();
-    for (name, solver, schedule) in &families {
+    for (name, plan, schedule) in &families {
         for &steps in budgets {
             cfgs.push(SamplerConfig {
                 dataset: dataset.to_string(),
                 param,
-                solver: *solver,
+                plan: plan.clone(),
                 schedule: schedule.clone(),
                 steps,
                 class: None,
             });
-            meta.push((name.to_string(), steps));
+            meta.push((name.clone(), plan.tag(), steps));
         }
     }
     let results = evaluate_all(ctx, cfgs);
     println!("Pareto frontier — {dataset} ({})", param.name());
-    println!("{:<12} {:>6} {:>8} {:>10}", "family", "steps", "NFE", "FD");
+    println!(
+        "{:<12} {:>6} {:>8} {:>10}  {}",
+        "family", "steps", "NFE", "FD", "NFE/segment"
+    );
     let mut out = Vec::new();
-    for ((family, steps), r) in meta.into_iter().zip(results) {
+    for ((family, plan, steps), r) in meta.into_iter().zip(results) {
         let r = r?;
-        println!("{:<12} {:>6} {:>8.1} {:>10.4}", family, steps, r.nfe, r.fd);
-        out.push(ParetoPoint { family, steps, nfe: r.nfe, fd: r.fd });
+        let seg_col = r
+            .seg_nfe
+            .iter()
+            .map(|n| format!("{n:.1}"))
+            .collect::<Vec<_>>()
+            .join("/");
+        println!("{:<12} {:>6} {:>8.1} {:>10.4}  {}", family, steps, r.nfe, r.fd, seg_col);
+        out.push(ParetoPoint { family, plan, steps, nfe: r.nfe, fd: r.fd, seg_nfe: r.seg_nfe });
     }
     Ok(out)
+}
+
+/// Artifact-free CI smoke: one budget on the built-in toy dataset, small
+/// sample count, every family (including both segmented plans and the
+/// PID arm) must produce a finite frontier point. Exercised by
+/// `sdm pareto --smoke` so the plan machinery stays wired end to end.
+pub fn smoke() -> Result<()> {
+    use crate::coordinator::EngineHub;
+    use crate::model::gmm::testmodel::toy;
+    use std::sync::Arc;
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let ctx = ExpContext { samples: 512, rows: 256, seed: 11, threads: 4, hub, pool: None };
+    let pts = run(&ctx, "toy", Param::Edm, &[8])?;
+    anyhow::ensure!(pts.len() >= 8, "smoke expected every family to report");
+    for p in &pts {
+        anyhow::ensure!(p.fd.is_finite() && p.nfe > 0.0, "degenerate point {p:?}");
+        anyhow::ensure!(!p.seg_nfe.is_empty(), "missing segment attribution {p:?}");
+    }
+    let seg = pts.iter().find(|p| p.family == "seg-3").expect("seg-3 family present");
+    anyhow::ensure!(seg.seg_nfe.len() == 3, "seg-3 must attribute NFE to 3 segments");
+    println!("pareto smoke ok: {} points", pts.len());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -85,7 +152,7 @@ mod tests {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
         let ctx = ExpContext { samples: 2048, rows: 256, seed: 5, threads: 4, hub, pool: None };
         let pts = run(&ctx, "toy", Param::Edm, &[8, 16]).unwrap();
-        assert_eq!(pts.len(), 10);
+        assert_eq!(pts.len(), 16); // 8 families x 2 budgets
         // more steps should not hurt quality within a family (weak check:
         // euler family strictly improves from 8 to 16 steps)
         let e8 = pts.iter().find(|p| p.family == "euler+edm" && p.steps == 8).unwrap();
@@ -94,5 +161,19 @@ mod tests {
         // heun at equal steps costs more NFE than euler
         let h8 = pts.iter().find(|p| p.family == "heun+edm" && p.steps == 8).unwrap();
         assert!(h8.nfe > e8.nfe);
+        // segmented families carry per-segment attribution that sums to
+        // the row's total NFE
+        let seg = pts.iter().find(|p| p.family == "seg-eh" && p.steps == 8).unwrap();
+        assert_eq!(seg.seg_nfe.len(), 2, "{seg:?}");
+        assert_eq!(seg.seg_nfe.iter().sum::<f64>(), seg.nfe, "{seg:?}");
+        assert!(seg.plan.contains("euler@max.."), "{seg:?}");
+        // the PID arm reports an adaptive (non-grid) NFE
+        let pid = pts.iter().find(|p| p.family == "pid+edm" && p.steps == 8).unwrap();
+        assert!(pid.nfe > 0.0 && pid.fd.is_finite(), "{pid:?}");
+    }
+
+    #[test]
+    fn smoke_runs_clean() {
+        smoke().unwrap();
     }
 }

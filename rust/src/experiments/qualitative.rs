@@ -23,7 +23,7 @@ pub fn panels(dataset: &str, param: Param, steps: usize) -> Vec<(String, Sampler
     let base = SamplerConfig {
         dataset: dataset.to_string(),
         param,
-        solver: SolverSpec::Heun,
+        plan: SolverSpec::Heun.into(),
         schedule: ScheduleSpec::Edm { rho: 7.0 },
         steps,
         class: None,
@@ -33,7 +33,7 @@ pub fn panels(dataset: &str, param: Param, steps: usize) -> Vec<(String, Sampler
         (
             "sdm_solver".into(),
             SamplerConfig {
-                solver: SolverSpec::sdm_default(dataset, false, is_vp),
+                plan: SolverSpec::sdm_default(dataset, is_vp).into(),
                 ..base.clone()
             },
         ),
@@ -44,7 +44,7 @@ pub fn panels(dataset: &str, param: Param, steps: usize) -> Vec<(String, Sampler
         (
             "sdm_both".into(),
             SamplerConfig {
-                solver: SolverSpec::sdm_default(dataset, true, is_vp),
+                plan: SolverSpec::sdm_default(dataset, is_vp).into(),
                 schedule: ScheduleSpec::sdm_defaults(dataset, param),
                 ..base
             },
@@ -74,18 +74,24 @@ pub fn run(ctx: &ExpContext, dataset: &str, param: Param, out_dir: &Path) -> Res
         let row = evaluate(&small_ctx, &cfg)?;
         // regenerate the exact samples for the dump (same seed path)
         let model = ctx.hub.model(dataset)?;
-        let grid = ctx.hub.schedule(dataset, cfg.param, &cfg.schedule, cfg.steps)?;
+        let grid = ctx.hub.schedule_for_plan(
+            dataset,
+            cfg.param,
+            &cfg.schedule,
+            cfg.steps,
+            &cfg.plan.cache_tag(),
+        )?;
         let run_cfg = crate::sampler::RunConfig {
             rows: 256,
             seed: ctx.seed ^ crate::experiments::fxhash(&cfg.label()),
             class: None,
             trace: false,
         };
-        let (samples, _, _) = crate::sampler::engine::generate(
+        let (samples, _, _, _) = crate::sampler::engine::generate_plan(
             model.as_ref(),
             cfg.param,
             &grid,
-            &cfg.solver,
+            &cfg.plan,
             &info,
             &run_cfg,
             512,
@@ -117,8 +123,8 @@ mod tests {
     fn four_panels_match_paper_layout() {
         let p = panels("toy", Param::Edm, 12);
         assert_eq!(p.len(), 4);
-        assert!(matches!(p[0].1.solver, SolverSpec::Heun));
-        assert!(matches!(p[3].1.solver, SolverSpec::Adaptive { .. }));
+        assert!(matches!(p[0].1.plan.solo(), Some(SolverSpec::Heun)));
+        assert!(matches!(p[3].1.plan.solo(), Some(SolverSpec::Adaptive { .. })));
         assert!(matches!(p[3].1.schedule, ScheduleSpec::Sdm { .. }));
     }
 

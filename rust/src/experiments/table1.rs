@@ -19,12 +19,11 @@ pub fn datasets() -> Vec<(&'static str, usize)> {
 }
 
 /// Solver blocks of the table: (block label, solver constructor).
-/// `sdm_sched` tells the adaptive solver which Table-2 τ_k applies.
-fn solver_for(block: &str, dataset: &str, sdm_sched: bool, param: Param) -> SolverSpec {
+fn solver_for(block: &str, dataset: &str, param: Param) -> SolverSpec {
     match block {
         "euler" => SolverSpec::Euler,
         "heun" => SolverSpec::Heun,
-        "sdm" => SolverSpec::sdm_default(dataset, sdm_sched, matches!(param, Param::Vp { .. })),
+        "sdm" => SolverSpec::sdm_default(dataset, matches!(param, Param::Vp { .. })),
         _ => unreachable!(),
     }
 }
@@ -52,7 +51,7 @@ pub fn configs() -> Vec<SamplerConfig> {
                     out.push(SamplerConfig {
                         dataset: ds.to_string(),
                         param,
-                        solver: solver_for(block, ds, sched == "sdm", param),
+                        plan: solver_for(block, ds, param).into(),
                         schedule: schedule_for(sched, ds, param),
                         steps,
                         class: None,
@@ -126,16 +125,17 @@ mod tests {
         let sdm_afhq: Vec<_> = cfgs
             .iter()
             .filter(|c| {
-                c.dataset == "afhqg" && matches!(c.solver, SolverSpec::Adaptive { .. })
+                c.dataset == "afhqg"
+                    && matches!(c.plan.solo(), Some(SolverSpec::Adaptive { .. }))
             })
             .collect();
         assert!(!sdm_afhq.is_empty());
         for c in sdm_afhq {
-            if let SolverSpec::Adaptive { tau_k, .. } = c.solver {
+            if let Some(SolverSpec::Adaptive { tau_k, .. }) = c.plan.solo() {
                 // calibrated Table-2 structure: VP gets the tighter gate
                 // (SDM-schedule exception), VE the loose AFHQ gate
                 let _ = matches!(c.schedule, ScheduleSpec::Sdm { .. });
-                assert_eq!(tau_k, 2e-2, "{}", c.label());
+                assert_eq!(*tau_k, 2e-2, "{}", c.label());
             }
         }
     }

@@ -39,18 +39,26 @@ fn eval_classes(ctx: &ExpContext, base: &SamplerConfig, n_classes: usize) -> Res
     let mut fds = Vec::new();
     let mut sls = Vec::new();
     let mut nfes = Vec::new();
+    let mut seg_acc: Vec<Vec<f64>> = Vec::new();
     for c in 0..n_classes {
         let cfg = SamplerConfig { class: Some(c), ..base.clone() };
         let r = evaluate(ctx, &cfg)?;
         fds.push(r.fd);
         sls.push(r.sliced);
         nfes.push(r.nfe);
+        for (i, s) in r.seg_nfe.iter().enumerate() {
+            if seg_acc.len() <= i {
+                seg_acc.push(Vec::new());
+            }
+            seg_acc[i].push(*s);
+        }
     }
     Ok(RowResult {
         label: base.label(),
         fd: mean(&fds),
         sliced: mean(&sls),
         nfe: mean(&nfes),
+        seg_nfe: seg_acc.iter().map(|v| mean(v)).collect(),
     })
 }
 
@@ -88,17 +96,15 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<RowResult>> {
                         SolverSpec::StochasticHeun(ChurnParams::imagenet())
                     }
                     "heun" => SolverSpec::Heun,
-                    "sdm" => SolverSpec::sdm_default(
-                        ds,
-                        sched == "sdm",
-                        matches!(param, Param::Vp { .. }),
-                    ),
+                    "sdm" => {
+                        SolverSpec::sdm_default(ds, matches!(param, Param::Vp { .. }))
+                    }
                     _ => unreachable!(),
                 };
                 let base = SamplerConfig {
                     dataset: ds.to_string(),
                     param,
-                    solver,
+                    plan: solver.into(),
                     schedule: schedule_for(sched, ds, param),
                     steps,
                     class: None,

@@ -29,8 +29,7 @@ pub fn configs(ctx: &ExpContext) -> Result<Vec<(LambdaKind, SamplerConfig)>> {
     for lambda in [LambdaKind::Step, LambdaKind::Linear, LambdaKind::Cosine] {
         for (ds, param, steps, class) in columns() {
             let steps = ctx.hub.resolve_steps(ds, steps)?;
-            let tau_k = match SolverSpec::sdm_default(ds, false, matches!(param, Param::Vp { .. }))
-            {
+            let tau_k = match SolverSpec::sdm_default(ds, matches!(param, Param::Vp { .. })) {
                 SolverSpec::Adaptive { tau_k, .. } => tau_k,
                 _ => unreachable!(),
             };
@@ -39,11 +38,12 @@ pub fn configs(ctx: &ExpContext) -> Result<Vec<(LambdaKind, SamplerConfig)>> {
                 SamplerConfig {
                     dataset: ds.to_string(),
                     param,
-                    solver: SolverSpec::Adaptive {
+                    plan: SolverSpec::Adaptive {
                         lambda,
                         tau_k,
                         clock: CurvatureClock::Sigma,
-                    },
+                    }
+                    .into(),
                     schedule: ScheduleSpec::Edm { rho: 7.0 },
                     steps,
                     class,
@@ -111,6 +111,6 @@ mod tests {
         // all adaptive
         assert!(cfgs
             .iter()
-            .all(|(_, c)| matches!(c.solver, SolverSpec::Adaptive { .. })));
+            .all(|(_, c)| matches!(c.plan.solo(), Some(SolverSpec::Adaptive { .. }))));
     }
 }

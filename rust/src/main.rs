@@ -144,6 +144,14 @@ fn run() -> Result<()> {
             Ok(())
         }
         "pareto" => {
+            // artifact-free CI smoke: toy dataset, one budget, every
+            // family (static, segmented, PID) — checked before loading
+            // any hub so it runs in bare containers
+            if args.has("smoke") {
+                args.finish()?;
+                experiments::pareto::smoke()?;
+                return Ok(());
+            }
             let ctx = exp_context(&args)?;
             let ds = args.get("dataset", "cifar10g");
             let param = Param::from_name(&args.get("param", "vp"))?;
@@ -264,18 +272,46 @@ fn sample(args: &Args) -> Result<()> {
     let eta_max = args.opt("eta-max").map(|v| v.parse::<f64>()).transpose()?;
     let eta_p = args.get_f64("p", 1.0)?;
     let eta_q = args.get_f64("q", 0.25)?;
+    let plan_str = args.opt("plan");
+    let do_plan_search = args.has("plan-search");
     args.finish()?;
+
+    // --plan-search: enumerate candidate plans for this (dataset, param,
+    // budget) and report them ranked (lowest NFE within 5% of best FD)
+    if do_plan_search {
+        let steps = ctx.hub.resolve_steps(&dataset, steps)?;
+        let ranked = experiments::plan_search(&ctx, &dataset, param, steps)?;
+        println!("plan search — {dataset} ({}) @ {steps} steps", param.name());
+        println!("{:<44} {:>10} {:>8}  {}", "plan", "FD", "NFE", "NFE/segment");
+        for (plan, row) in &ranked {
+            let seg = row
+                .seg_nfe
+                .iter()
+                .map(|n| format!("{n:.1}"))
+                .collect::<Vec<_>>()
+                .join("/");
+            println!("{:<44} {:>10.4} {:>8.1}  {}", plan.tag(), row.fd, row.nfe, seg);
+        }
+        println!("selected : {}", ranked[0].0.tag());
+        return Ok(());
+    }
 
     let solver = match solver_name.as_str() {
         "euler" => sdm::solvers::SolverSpec::Euler,
         "heun" => sdm::solvers::SolverSpec::Heun,
         "dpm2m" => sdm::solvers::SolverSpec::Dpm2m,
+        "pid" => sdm::solvers::SolverSpec::Pid(sdm::solvers::PidParams::default()),
         "sdm" => sdm::solvers::SolverSpec::Adaptive {
             lambda: sdm::solvers::LambdaKind::Step,
             tau_k,
             clock: sdm::diffusion::CurvatureClock::Sigma,
         },
         other => anyhow::bail!("unknown solver {other}"),
+    };
+    // an explicit --plan (segmented, DESIGN.md §9 grammar) wins over --solver
+    let plan = match &plan_str {
+        Some(p) => sdm::sampler::SamplingPlan::parse(p)?,
+        None => solver.into(),
     };
     let schedule = match sched_name.as_str() {
         "edm" => sdm::schedule::ScheduleSpec::Edm { rho: 7.0 },
@@ -304,7 +340,7 @@ fn sample(args: &Args) -> Result<()> {
     let cfg = sdm::sampler::SamplerConfig {
         dataset: dataset.clone(),
         param,
-        solver,
+        plan,
         schedule,
         steps: ctx.hub.resolve_steps(&dataset, steps)?,
         class,
@@ -317,6 +353,15 @@ fn sample(args: &Args) -> Result<()> {
     println!("FD       : {:.4}   (paper metric: FID)", row.fd);
     println!("slicedW2 : {:.4}", row.sliced);
     println!("NFE      : {:.1}", row.nfe);
+    if cfg.plan.segments.len() > 1 {
+        let seg = row
+            .seg_nfe
+            .iter()
+            .map(|n| format!("{n:.1}"))
+            .collect::<Vec<_>>()
+            .join("/");
+        println!("NFE/seg  : {seg}");
+    }
     println!("wallclock: {:.1} ms", timer.elapsed_ms());
     Ok(())
 }
@@ -377,6 +422,7 @@ fn loadgen(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 8)?;
     let param = args.get("param", "edm");
     let solver = args.get("solver", "euler");
+    let plan = args.opt("plan");
     let schedule_name = args.get("schedule", "edm");
     let steps = args.get_usize("steps", 8)?;
     let priority = args.opt("priority");
@@ -389,6 +435,7 @@ fn loadgen(args: &Args) -> Result<()> {
         n,
         param: param.clone(),
         solver: solver.clone(),
+        plan: plan.clone(),
         schedule: schedule_name.clone(),
         steps,
         priority: priority.clone(),
@@ -563,7 +610,11 @@ fn print_help() {
          \x20               carry \"priority\":interactive|batch|background and\n\
          \x20               \"deadline_ms\" (late requests shed, never served\n\
          \x20               stale)\n\
-         \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...)\n\
+         \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...;\n\
+         \x20               --plan \"euler@max..2,dpm2m@2..0\" runs a segmented\n\
+         \x20               SamplingPlan [DESIGN.md S9] and wins over --solver;\n\
+         \x20               --plan-search ranks candidate plans by NFE within\n\
+         \x20               5% of the best FD for this dataset/param/budget)\n\
          \x20 schedule      print a built sigma grid (--dataset --schedule --steps)\n\
          \x20 table1        Table 1  (unconditional FD/NFE grid)\n\
          \x20 table4        Table 4  (conditional)\n\
@@ -572,7 +623,9 @@ fn print_help() {
          \x20 grid-eta      Table 3  (eta/p/q grid)\n\
          \x20 fig2          curvature vs sigma\n\
          \x20 fig3          eta_t budget over steps\n\
-         \x20 pareto        quality-vs-NFE frontier\n\
+         \x20 pareto        quality-vs-NFE frontier: static solvers vs segmented\n\
+         \x20               plans vs PID, with per-segment NFE attribution\n\
+         \x20               (--smoke: artifact-free toy run for CI)\n\
          \x20 qualitative   sample dumps (Figs. 5-9 analogue)\n\
          \x20 bench-client  drive a running server (--addr --requests --concurrency\n\
          \x20               [--open-loop-rps R  Poisson offered-load mode])\n\
@@ -584,6 +637,7 @@ fn print_help() {
          \x20               BENCH_qos.json, --max-workers W, --label L]; default\n\
          \x20               mode is open-loop at --open-rps R for --requests N;\n\
          \x20               profile: --dataset D --n N --param P --solver S\n\
+         \x20               --plan \"euler@max..1,heun@1..0\" (wins over --solver)\n\
          \x20               --schedule C --steps K --priority CLS --deadline-ms MS\n\
          \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
          \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\

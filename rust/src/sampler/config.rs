@@ -2,6 +2,7 @@
 //! caches schedules for, and the experiment harness enumerates.
 
 use crate::diffusion::Param;
+use crate::sampler::plan::SamplingPlan;
 use crate::schedule::ScheduleSpec;
 use crate::solvers::SolverSpec;
 
@@ -10,7 +11,8 @@ use crate::solvers::SolverSpec;
 pub struct SamplerConfig {
     pub dataset: String,
     pub param: Param,
-    pub solver: SolverSpec,
+    /// segmented sampling plan (single-segment == classic solver choice).
+    pub plan: SamplingPlan,
     pub schedule: ScheduleSpec,
     /// schedule knots in [σ_max, σ_min] (final 0 appended by the builder).
     pub steps: usize,
@@ -23,7 +25,7 @@ impl SamplerConfig {
         SamplerConfig {
             dataset: dataset.to_string(),
             param,
-            solver: SolverSpec::Heun,
+            plan: SolverSpec::Heun.into(),
             schedule: ScheduleSpec::Edm { rho: 7.0 },
             steps,
             class: None,
@@ -31,14 +33,23 @@ impl SamplerConfig {
     }
 
     /// Cache key for schedule construction: everything that changes the
-    /// built σ grid (solver and class do not).
+    /// built σ grid. Single-segment plans do not discriminate (solver and
+    /// class never shaped the grid); segmented plans append their tag so
+    /// they never alias a single-solver grid (DESIGN.md §9).
     pub fn schedule_key(&self) -> String {
+        let plan_tag = self.plan.cache_tag();
+        let plan_suffix = if plan_tag.is_empty() {
+            String::new()
+        } else {
+            format!("|{plan_tag}")
+        };
         format!(
-            "{}|{}|{}|{}",
+            "{}|{}|{}|{}{}",
             self.dataset,
             self.param.name(),
             self.schedule.tag(),
-            self.steps
+            self.steps,
+            plan_suffix
         )
     }
 
@@ -52,7 +63,7 @@ impl SamplerConfig {
             "{}/{}/{}/{}steps{}",
             self.dataset,
             self.param.name(),
-            self.solver.tag(),
+            self.plan.tag(),
             self.steps,
             cls
         )
@@ -67,11 +78,23 @@ mod tests {
     fn schedule_key_ignores_solver_and_class() {
         let mut a = SamplerConfig::edm_baseline("cifar10g", Param::Edm, 18);
         let mut b = a.clone();
-        b.solver = SolverSpec::Euler;
+        b.plan = SolverSpec::Euler.into();
         b.class = Some(3);
         assert_eq!(a.schedule_key(), b.schedule_key());
         a.steps = 20;
         assert_ne!(a.schedule_key(), b.schedule_key());
+    }
+
+    #[test]
+    fn schedule_key_discriminates_segmented_plans() {
+        let a = SamplerConfig::edm_baseline("cifar10g", Param::Edm, 18);
+        let mut b = a.clone();
+        b.plan = SamplingPlan::parse("euler@max..2,heun@2..0").unwrap();
+        assert_ne!(a.schedule_key(), b.schedule_key());
+        // and two different segmented plans don't alias each other
+        let mut c = a.clone();
+        c.plan = SamplingPlan::parse("euler@max..0.5,heun@0.5..0").unwrap();
+        assert_ne!(b.schedule_key(), c.schedule_key());
     }
 
     #[test]

@@ -1,12 +1,23 @@
 //! The integration loop (EDM Algorithm-1 shaped, extended with the SDM
-//! adaptive solver gate and η̂/κ̂ tracing).
+//! adaptive solver gate, η̂/κ̂ tracing, and segmented sampling plans).
 //!
-//! One [`run_sampler`] call integrates a whole batch from the prior at
-//! σ_max down to σ = 0. The per-interval solver decision is batch-
-//! aggregate (the paper's curvature profile, Fig. 2, is tight across
-//! samples at a given σ, so gating per batch matches how the schedule-
-//! level decision is meant to work); NFE is therefore the number of model
-//! calls, identically the per-sample NFE.
+//! One [`run_plan`] call integrates a whole batch from the prior at σ_max
+//! down to σ = 0, dispatching each σ segment of a
+//! [`crate::sampler::SamplingPlan`] to its own solver. A single-segment
+//! plan is the classic single-solver loop — [`run_sampler`] wraps it and
+//! stays bit-identical to the pre-plan engine (pinned by
+//! rust/tests/kernel_parity.rs). The per-interval solver decision is
+//! batch-aggregate (the paper's curvature profile, Fig. 2, is tight
+//! across samples at a given σ, so gating per batch matches how the
+//! schedule-level decision is meant to work); NFE is therefore the number
+//! of model calls, identically the per-sample NFE.
+//!
+//! Segment-boundary semantics (DESIGN.md §9): multistep history
+//! (Dpm2m's cached data-prediction) is *reset* at every boundary — the
+//! incoming solver must not consume a D value produced under a different
+//! integration rule. The κ̂/η̂ diagnostics *carry* across fixed-solver
+//! boundaries (they describe the trajectory, not the solver), and are
+//! reset around a PID segment, which leaves the knot grid entirely.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -15,7 +26,10 @@ use crate::diffusion::{kappa_hat_rel, Param, SigmaGrid};
 use crate::model::{
     class_mask_row, eval_at_into, uncond_mask_row, DatasetInfo, Denoiser, EvalScratch, MaskRef,
 };
-use crate::solvers::{adaptive, dpm2m::Dpm2mState, euler, heun, LambdaKind, SolverSpec};
+use crate::sampler::plan::SamplingPlan;
+use crate::solvers::{
+    adaptive, dpm2m::Dpm2mState, euler, heun, LambdaKind, PidParams, PidStepController, SolverSpec,
+};
 use crate::util::{Rng, ThreadPool};
 use crate::Result;
 
@@ -37,7 +51,7 @@ impl Default for RunConfig {
     }
 }
 
-/// Trace entry for one integration interval.
+/// Trace entry for one integration interval (or one accepted PID step).
 #[derive(Clone, Debug)]
 pub struct StepRecord {
     pub sigma: f64,
@@ -45,12 +59,15 @@ pub struct StepRecord {
     /// cache-based curvature κ̂_rel at the interval start (None on i=0).
     pub kappa_hat: Option<f64>,
     /// measured local error proxy η̂ = Δt²/2·Ŝ (None on the final σ→0
-    /// interval, where no forward evaluation exists).
+    /// interval, where no forward evaluation exists). PID steps record
+    /// their normalized embedded-pair error here.
     pub eta_hat: Option<f64>,
     /// Heun contribution this interval (0 = pure Euler, 1 = full Heun).
     pub heun_weight: f64,
     /// model evaluations spent on this interval.
     pub evals: usize,
+    /// index of the plan segment that produced this step.
+    pub segment: usize,
 }
 
 /// Result of one batch integration.
@@ -60,6 +77,8 @@ pub struct RunResult {
     pub samples: Vec<f32>,
     /// model calls == per-sample NFE.
     pub nfe: usize,
+    /// NFE attributed to each plan segment (sums to `nfe`).
+    pub seg_nfe: Vec<usize>,
     /// per-interval trace (empty unless `cfg.trace`).
     pub steps: Vec<StepRecord>,
 }
@@ -76,7 +95,8 @@ pub fn mask_row_for(class: Option<usize>, ds: &DatasetInfo, k: usize) -> Result<
     }
 }
 
-/// Integrate one batch down the given σ grid.
+/// Integrate one batch down the given σ grid with a single solver (a
+/// one-segment plan).
 pub fn run_sampler(
     model: &dyn Denoiser,
     param: Param,
@@ -85,11 +105,35 @@ pub fn run_sampler(
     ds: &DatasetInfo,
     cfg: &RunConfig,
 ) -> Result<RunResult> {
-    let mask_row = mask_row_for(cfg.class, ds, model.k())?;
-    run_sampler_masked(model, param, grid, solver, cfg, &mask_row)
+    run_plan(model, param, grid, &SamplingPlan::single(*solver), ds, cfg)
 }
 
-/// [`run_sampler`] with a caller-built shared mask row — the batched
+/// [`run_sampler`] with a caller-built shared mask row.
+pub fn run_sampler_masked(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    solver: &SolverSpec,
+    cfg: &RunConfig,
+    mask_row: &[f32],
+) -> Result<RunResult> {
+    run_plan_masked(model, param, grid, &SamplingPlan::single(*solver), cfg, mask_row)
+}
+
+/// Integrate one batch down the given σ grid under a segmented plan.
+pub fn run_plan(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+) -> Result<RunResult> {
+    let mask_row = mask_row_for(cfg.class, ds, model.k())?;
+    run_plan_masked(model, param, grid, plan, cfg, &mask_row)
+}
+
+/// [`run_plan`] with a caller-built shared mask row — the batched
 /// generators build the row once per request and reuse it across every
 /// batch/shard instead of materializing a fresh `[rows·k]` mask per
 /// batch.
@@ -99,12 +143,13 @@ pub fn run_sampler(
 /// interval; the second in-interval eval lands in `aux`), so after the
 /// prior draw the whole integration performs no per-step heap
 /// allocation — and with a native-oracle model, none per eval either
-/// (§Perf iteration 3, DESIGN.md §7).
-pub fn run_sampler_masked(
+/// (§Perf iteration 3, DESIGN.md §7). The one exception is a PID
+/// segment, which clones `x` once at entry for its error reference.
+pub fn run_plan_masked(
     model: &dyn Denoiser,
     param: Param,
     grid: &SigmaGrid,
-    solver: &SolverSpec,
+    plan: &SamplingPlan,
     cfg: &RunConfig,
     mask_row: &[f32],
 ) -> Result<RunResult> {
@@ -117,23 +162,29 @@ pub fn run_sampler_masked(
         mask_row.len(),
         model.k()
     );
+    plan.validate()?;
     let times = grid.times(param);
     let sigmas = &grid.sigmas;
     let n_int = grid.intervals();
 
-    if matches!(solver, SolverSpec::StochasticHeun(_)) {
-        anyhow::ensure!(
-            param == Param::Edm,
-            "the stochastic churn sampler is defined for the EDM parameterization"
-        );
-    }
-    if matches!(solver, SolverSpec::Dpm2m) {
-        anyhow::ensure!(
-            param.s(times[0]) == 1.0,
-            "dpm2m operates in the sigma domain and requires s(t) ≡ 1 (EDM/VE)"
-        );
+    // solver contracts checked up front, before any RNG draw, so invalid
+    // configs fail identically whether or not they would ever be reached
+    for seg in &plan.segments {
+        if matches!(seg.solver, SolverSpec::StochasticHeun(_)) {
+            anyhow::ensure!(
+                param == Param::Edm,
+                "the stochastic churn sampler is defined for the EDM parameterization"
+            );
+        }
+        if matches!(seg.solver, SolverSpec::Dpm2m) {
+            anyhow::ensure!(
+                param.s(times[0]) == 1.0,
+                "dpm2m operates in the sigma domain and requires s(t) ≡ 1 (EDM/VE)"
+            );
+        }
     }
 
+    let ranges = plan.segment_ranges(sigmas);
     let mask = MaskRef::Row(mask_row);
 
     let mut rng = Rng::new(cfg.seed);
@@ -142,8 +193,8 @@ pub fn run_sampler_masked(
 
     let mut scr = EvalScratch::new();
     let mut nfe = 0usize;
+    let mut seg_nfe = vec![0usize; plan.segments.len()];
     let mut steps: Vec<StepRecord> = Vec::new();
-    let mut dpm_state = Dpm2mState::new();
     let mut have_prev = false;
     let mut prev_t = times[0];
     let mut prev_sigma = sigmas[0];
@@ -152,158 +203,318 @@ pub fn run_sampler_masked(
     // in `scr.prev` by the time it resolves — no clone needed.
     let mut pending_eta: Option<(usize, f64)> = None;
 
-    for i in 0..n_int {
-        let (mut t_i, t_next) = (times[i], times[i + 1]);
-        let (mut sigma_i, sigma_next) = (sigmas[i], sigmas[i + 1]);
+    for (seg_idx, (seg, &(lo_i, hi_i))) in plan.segments.iter().zip(&ranges).enumerate() {
+        if lo_i == hi_i {
+            continue;
+        }
+        let nfe_before = nfe;
 
-        // stochastic churn (EDM param: t == σ)
-        if let SolverSpec::StochasticHeun(churn) = solver {
-            let sigma_hat = churn.churn(&mut x, sigma_i, n_int, &mut rng);
-            sigma_i = sigma_hat;
-            t_i = sigma_hat;
+        if let SolverSpec::Pid(pid) = &seg.solver {
+            // the PID arm free-steps in λ = ln σ off the knot grid, so the
+            // knot-indexed κ̂/η̂ diagnostics are reset around it
+            pending_eta = None;
+            run_pid_segment(
+                model, param, pid, &times, sigmas, lo_i, hi_i, mask, rows, cfg.trace, seg_idx,
+                &mut x, &mut scr, &mut nfe, &mut steps,
+            )?;
+            have_prev = false;
+            prev_t = times[hi_i];
+            prev_sigma = sigmas[hi_i];
+            seg_nfe[seg_idx] = nfe - nfe_before;
+            continue;
         }
 
-        // v_i at the (possibly churned) interval start → scr.cur
-        // (scr.prev still holds the previous interval's eval)
-        eval_at_into(model, param, &x, t_i, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
-        nfe += 1;
+        let solver = &seg.solver;
+        // fresh multistep history per segment: the incoming solver must
+        // not consume a D value produced under a different rule
+        let mut dpm_state = Dpm2mState::new();
 
-        // resolve the η̂ of the previous interval with this fresh eval
-        if let Some((idx, dt_then)) = pending_eta.take() {
-            if cfg.trace {
-                let s_hat = mean_dv_norm(&scr.prev.v, &scr.cur.v, rows, dim) / dt_then.max(1e-30);
-                steps[idx].eta_hat = Some(0.5 * dt_then * dt_then * s_hat);
+        for i in lo_i..hi_i {
+            let (mut t_i, t_next) = (times[i], times[i + 1]);
+            let (mut sigma_i, sigma_next) = (sigmas[i], sigmas[i + 1]);
+
+            // stochastic churn (EDM param: t == σ)
+            if let SolverSpec::StochasticHeun(churn) = solver {
+                let sigma_hat = churn.churn(&mut x, sigma_i, n_int, &mut rng);
+                sigma_i = sigma_hat;
+                t_i = sigma_hat;
             }
-        }
 
-        // cache-based curvature κ̂ (eq. 8) from the previous interval's v
-        let kappa = if have_prev {
-            let clock = match solver {
-                SolverSpec::Adaptive { clock, .. } => *clock,
-                _ => crate::diffusion::CurvatureClock::Sigma,
-            };
-            let delta = clock.delta(prev_t, t_i, prev_sigma, sigma_i);
-            Some(kappa_hat_rel(&scr.prev.v, &scr.cur.v, rows, dim, delta))
-        } else {
-            None
-        };
+            // v_i at the (possibly churned) interval start → scr.cur
+            // (scr.prev still holds the previous interval's eval)
+            eval_at_into(model, param, &x, t_i, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
+            nfe += 1;
 
-        let dt = t_next - t_i;
-        let step_idx = steps.len();
-        let mut evals_this = 1usize;
-        let mut heun_weight = 0.0f64;
-        // η̂ measured directly when this interval spends a second eval
-        let mut eta_now: Option<f64> = None;
-        // measure η̂ = Δt²/2·Ŝ from the two velocities bracketing the step
-        let measure_eta = |v0: &[f32], v1: &[f32]| -> f64 {
-            let dt_abs = dt.abs().max(1e-30);
-            let s_hat = mean_dv_norm(v0, v1, rows, dim) / dt_abs;
-            0.5 * dt_abs * dt_abs * s_hat
-        };
-
-        match solver {
-            SolverSpec::Euler => {
-                euler::euler_step(&mut x, &scr.cur.v, dt);
-            }
-            SolverSpec::Dpm2m => {
-                dpm_state.step(&mut x, &scr.cur.d, sigma_i, sigma_next);
-            }
-            SolverSpec::Heun | SolverSpec::StochasticHeun(_) => {
-                euler::euler_step_to(&x, &scr.cur.v, dt, &mut scr.euler_x);
-                if sigma_next > 0.0 {
-                    eval_at_into(
-                        model,
-                        param,
-                        &scr.euler_x,
-                        t_next,
-                        mask,
-                        rows,
-                        &mut scr.xhat,
-                        &mut scr.kernel,
-                        &mut scr.aux,
-                    )?;
-                    nfe += 1;
-                    evals_this += 1;
-                    heun_weight = 1.0;
-                    heun::heun_correct(&mut x, &scr.cur.v, &scr.aux.v, dt);
-                    if cfg.trace {
-                        eta_now = Some(measure_eta(&scr.cur.v, &scr.aux.v));
-                    }
-                } else {
-                    x.copy_from_slice(&scr.euler_x);
+            // resolve the η̂ of the previous interval with this fresh eval
+            if let Some((idx, dt_then)) = pending_eta.take() {
+                if cfg.trace {
+                    let s_hat = mean_dv_norm(&scr.prev.v, &scr.cur.v, rows, dim) / dt_then.max(1e-30);
+                    steps[idx].eta_hat = Some(0.5 * dt_then * dt_then * s_hat);
                 }
             }
-            SolverSpec::Adaptive { lambda, tau_k, .. } => {
-                euler::euler_step_to(&x, &scr.cur.v, dt, &mut scr.euler_x);
-                let last = sigma_next <= 0.0;
-                let use_heun = match lambda {
-                    LambdaKind::Step => !last && adaptive::step_gate(kappa, *tau_k),
-                    _ => !last,
+
+            // cache-based curvature κ̂ (eq. 8) from the previous interval's v
+            let kappa = if have_prev {
+                let clock = match solver {
+                    SolverSpec::Adaptive { clock, .. } => *clock,
+                    _ => crate::diffusion::CurvatureClock::Sigma,
                 };
-                if use_heun {
-                    eval_at_into(
-                        model,
-                        param,
-                        &scr.euler_x,
-                        t_next,
-                        mask,
-                        rows,
-                        &mut scr.xhat,
-                        &mut scr.kernel,
-                        &mut scr.aux,
-                    )?;
-                    nfe += 1;
-                    evals_this += 1;
-                    let lam = match lambda {
-                        LambdaKind::Step => 0.0, // pure Heun once gated
-                        k => k.lambda(i, n_int),
-                    };
-                    heun_weight = 1.0 - lam;
-                    if lam == 0.0 {
-                        // step-Λ gated interval == pure Heun: correct in
-                        // place, no blend buffer (§Perf iteration 2)
+                let delta = clock.delta(prev_t, t_i, prev_sigma, sigma_i);
+                Some(kappa_hat_rel(&scr.prev.v, &scr.cur.v, rows, dim, delta))
+            } else {
+                None
+            };
+
+            let dt = t_next - t_i;
+            let step_idx = steps.len();
+            let mut evals_this = 1usize;
+            let mut heun_weight = 0.0f64;
+            // η̂ measured directly when this interval spends a second eval
+            let mut eta_now: Option<f64> = None;
+            // measure η̂ = Δt²/2·Ŝ from the two velocities bracketing the step
+            let measure_eta = |v0: &[f32], v1: &[f32]| -> f64 {
+                let dt_abs = dt.abs().max(1e-30);
+                let s_hat = mean_dv_norm(v0, v1, rows, dim) / dt_abs;
+                0.5 * dt_abs * dt_abs * s_hat
+            };
+
+            match solver {
+                SolverSpec::Pid(_) => unreachable!("pid segments are handled above"),
+                SolverSpec::Euler => {
+                    euler::euler_step(&mut x, &scr.cur.v, dt);
+                }
+                SolverSpec::Dpm2m => {
+                    dpm_state.step(&mut x, &scr.cur.d, sigma_i, sigma_next);
+                }
+                SolverSpec::Heun | SolverSpec::StochasticHeun(_) => {
+                    euler::euler_step_to(&x, &scr.cur.v, dt, &mut scr.euler_x);
+                    if sigma_next > 0.0 {
+                        eval_at_into(
+                            model,
+                            param,
+                            &scr.euler_x,
+                            t_next,
+                            mask,
+                            rows,
+                            &mut scr.xhat,
+                            &mut scr.kernel,
+                            &mut scr.aux,
+                        )?;
+                        nfe += 1;
+                        evals_this += 1;
+                        heun_weight = 1.0;
                         heun::heun_correct(&mut x, &scr.cur.v, &scr.aux.v, dt);
+                        if cfg.trace {
+                            eta_now = Some(measure_eta(&scr.cur.v, &scr.aux.v));
+                        }
                     } else {
-                        // x^H from the predictor pair staged in the arena
-                        // (no per-step x.clone()), then blend (eq. 9)
-                        scr.blend_x.clear();
-                        scr.blend_x.extend_from_slice(&x);
-                        heun::heun_correct(&mut scr.blend_x, &scr.cur.v, &scr.aux.v, dt);
-                        adaptive::blend(&scr.euler_x, &scr.blend_x, lam, &mut x);
+                        x.copy_from_slice(&scr.euler_x);
                     }
-                    if cfg.trace {
-                        eta_now = Some(measure_eta(&scr.cur.v, &scr.aux.v));
+                }
+                SolverSpec::Adaptive { lambda, tau_k, .. } => {
+                    euler::euler_step_to(&x, &scr.cur.v, dt, &mut scr.euler_x);
+                    let last = sigma_next <= 0.0;
+                    let use_heun = match lambda {
+                        LambdaKind::Step => !last && adaptive::step_gate(kappa, *tau_k),
+                        _ => !last,
+                    };
+                    if use_heun {
+                        eval_at_into(
+                            model,
+                            param,
+                            &scr.euler_x,
+                            t_next,
+                            mask,
+                            rows,
+                            &mut scr.xhat,
+                            &mut scr.kernel,
+                            &mut scr.aux,
+                        )?;
+                        nfe += 1;
+                        evals_this += 1;
+                        let lam = match lambda {
+                            LambdaKind::Step => 0.0, // pure Heun once gated
+                            k => k.lambda(i, n_int),
+                        };
+                        heun_weight = 1.0 - lam;
+                        if lam == 0.0 {
+                            // step-Λ gated interval == pure Heun: correct in
+                            // place, no blend buffer (§Perf iteration 2)
+                            heun::heun_correct(&mut x, &scr.cur.v, &scr.aux.v, dt);
+                        } else {
+                            // x^H from the predictor pair staged in the arena
+                            // (no per-step x.clone()), then blend (eq. 9)
+                            scr.blend_x.clear();
+                            scr.blend_x.extend_from_slice(&x);
+                            heun::heun_correct(&mut scr.blend_x, &scr.cur.v, &scr.aux.v, dt);
+                            adaptive::blend(&scr.euler_x, &scr.blend_x, lam, &mut x);
+                        }
+                        if cfg.trace {
+                            eta_now = Some(measure_eta(&scr.cur.v, &scr.aux.v));
+                        }
+                    } else {
+                        x.copy_from_slice(&scr.euler_x);
                     }
-                } else {
-                    x.copy_from_slice(&scr.euler_x);
                 }
             }
-        }
 
-        if cfg.trace {
-            steps.push(StepRecord {
-                sigma: sigma_i,
-                t: t_i,
-                kappa_hat: kappa,
-                eta_hat: eta_now,
-                heun_weight,
-                evals: evals_this,
-            });
-            if eta_now.is_none() && sigma_next > 0.0 {
-                // defer: resolved against scr.prev at the next interval
-                // start (this interval's only eval is about to become
-                // scr.prev in the swap below)
-                pending_eta = Some((step_idx, dt.abs()));
+            if cfg.trace {
+                steps.push(StepRecord {
+                    sigma: sigma_i,
+                    t: t_i,
+                    kappa_hat: kappa,
+                    eta_hat: eta_now,
+                    heun_weight,
+                    evals: evals_this,
+                    segment: seg_idx,
+                });
+                if eta_now.is_none() && sigma_next > 0.0 {
+                    // defer: resolved against scr.prev at the next interval
+                    // start (this interval's only eval is about to become
+                    // scr.prev in the swap below)
+                    pending_eta = Some((step_idx, dt.abs()));
+                }
             }
+
+            std::mem::swap(&mut scr.prev, &mut scr.cur);
+            have_prev = true;
+            prev_t = t_i;
+            prev_sigma = sigma_i;
         }
 
-        std::mem::swap(&mut scr.prev, &mut scr.cur);
-        have_prev = true;
-        prev_t = t_i;
-        prev_sigma = sigma_i;
+        seg_nfe[seg_idx] = nfe - nfe_before;
     }
 
-    Ok(RunResult { samples: x, nfe, steps })
+    Ok(RunResult { samples: x, nfe, seg_nfe, steps })
+}
+
+/// One PID-controlled segment: an embedded Euler/Heun pair stepped freely
+/// in λ = ln σ under accept/reject control (k-diffusion's
+/// `sample_dpm_adaptive` shape, ported to this engine's σ-domain arena).
+/// Adapts from `sigmas[lo_i]` down to the last *positive* knot of the
+/// segment; when the segment ends at σ = 0 a final uncontrolled Euler
+/// step closes the trajectory (the embedded pair needs a positive σ).
+#[allow(clippy::too_many_arguments)]
+fn run_pid_segment(
+    model: &dyn Denoiser,
+    param: Param,
+    pid: &PidParams,
+    times: &[f64],
+    sigmas: &[f64],
+    lo_i: usize,
+    hi_i: usize,
+    mask: MaskRef,
+    rows: usize,
+    trace: bool,
+    seg_idx: usize,
+    x: &mut Vec<f32>,
+    scr: &mut EvalScratch,
+    nfe: &mut usize,
+    steps: &mut Vec<StepRecord>,
+) -> Result<()> {
+    let ends_at_zero = sigmas[hi_i] <= 0.0;
+    let floor_idx = if ends_at_zero { hi_i - 1 } else { hi_i };
+
+    if floor_idx > lo_i {
+        let lam_end = sigmas[floor_idx].ln();
+        let mut lam = sigmas[lo_i].ln();
+        let mut ctrl = PidStepController::new(pid, 2);
+        // previous accepted low-order solution — the error reference
+        let mut x_prev = x.clone();
+        let mut rejects = 0usize;
+        let mut trials = 0usize;
+        while lam > lam_end + 1e-9 {
+            trials += 1;
+            anyhow::ensure!(
+                trials <= 100_000,
+                "pid controller failed to traverse its segment within 100k trials"
+            );
+            let h = ctrl.h.min(lam - lam_end);
+            let (sigma_cur, sigma_nxt) = (lam.exp(), (lam - h).exp());
+            let (t_cur, t_nxt) = (param.t_of_sigma(sigma_cur), param.t_of_sigma(sigma_nxt));
+            let dt = t_nxt - t_cur;
+            eval_at_into(model, param, x, t_cur, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
+            *nfe += 1;
+            // low-order (Euler) trial → scr.euler_x
+            euler::euler_step_to(x, &scr.cur.v, dt, &mut scr.euler_x);
+            eval_at_into(
+                model,
+                param,
+                &scr.euler_x,
+                t_nxt,
+                mask,
+                rows,
+                &mut scr.xhat,
+                &mut scr.kernel,
+                &mut scr.aux,
+            )?;
+            *nfe += 1;
+            // high-order (Heun) trial → scr.blend_x
+            scr.blend_x.clear();
+            scr.blend_x.extend_from_slice(x);
+            heun::heun_correct(&mut scr.blend_x, &scr.cur.v, &scr.aux.v, dt);
+            let error = pid_error(&scr.euler_x, &scr.blend_x, &x_prev, pid.atol, pid.rtol);
+            // force-accept after a run of rejects: by then the limiter has
+            // shrunk h to where the trial is effectively a no-op
+            let accept = ctrl.propose_step(error) || rejects >= 16;
+            if accept {
+                x_prev.copy_from_slice(&scr.euler_x);
+                x.copy_from_slice(&scr.blend_x);
+                lam -= h;
+                rejects = 0;
+                if trace {
+                    steps.push(StepRecord {
+                        sigma: sigma_cur,
+                        t: t_cur,
+                        kappa_hat: None,
+                        eta_hat: Some(error),
+                        heun_weight: 1.0,
+                        evals: 2,
+                        segment: seg_idx,
+                    });
+                }
+            } else {
+                rejects += 1;
+            }
+        }
+    }
+
+    if ends_at_zero {
+        let (t_floor, t_zero) = (times[hi_i - 1], times[hi_i]);
+        eval_at_into(model, param, x, t_floor, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
+        *nfe += 1;
+        euler::euler_step(x, &scr.cur.v, t_zero - t_floor);
+        if trace {
+            steps.push(StepRecord {
+                sigma: sigmas[hi_i - 1],
+                t: t_floor,
+                kappa_hat: None,
+                eta_hat: None,
+                heun_weight: 0.0,
+                evals: 1,
+                segment: seg_idx,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Normalized embedded-pair error (k-diffusion semantics): RMS over all
+/// coordinates of (x_low − x_high)/δ with δ = max(atol, rtol·max(|x_low|,
+/// |x_prev|)).
+fn pid_error(x_low: &[f32], x_high: &[f32], x_prev: &[f32], atol: f64, rtol: f64) -> f64 {
+    debug_assert_eq!(x_low.len(), x_high.len());
+    debug_assert_eq!(x_low.len(), x_prev.len());
+    let mut acc = 0.0f64;
+    for i in 0..x_low.len() {
+        let lo = x_low[i] as f64;
+        let hi = x_high[i] as f64;
+        let pv = x_prev[i] as f64;
+        let delta = atol.max(rtol * lo.abs().max(pv.abs()));
+        let e = (lo - hi) / delta.max(1e-30);
+        acc += e * e;
+    }
+    (acc / x_low.len().max(1) as f64).sqrt()
 }
 
 fn mean_dv_norm(v_prev: &[f32], v_cur: &[f32], rows: usize, dim: usize) -> f64 {
@@ -331,11 +542,28 @@ pub fn generate(
     cfg: &RunConfig,
     total: usize,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>)> {
+    let (samples, nfe, trace, _) =
+        generate_plan(model, param, grid, &SamplingPlan::single(*solver), ds, cfg, total)?;
+    Ok((samples, nfe, trace))
+}
+
+/// Plan-aware [`generate`]: additionally returns the mean per-segment NFE
+/// (one entry per plan segment, summing to the mean NFE).
+pub fn generate_plan(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
     let dim = model.dim();
     // one shared mask row for every batch of the request
     let mask_row = mask_row_for(cfg.class, ds, model.k())?;
     let mut samples = Vec::with_capacity(total * dim);
     let mut nfes = Vec::new();
+    let mut seg_acc = vec![0.0f64; plan.segments.len()];
     let mut first_trace = Vec::new();
     let mut remaining = total;
     let mut batch_idx = 0u64;
@@ -347,19 +575,26 @@ pub fn generate(
             class: cfg.class,
             trace: cfg.trace && batch_idx == 0,
         };
-        let out = run_sampler_masked(model, param, grid, solver, &bcfg, &mask_row)?;
+        let out = run_plan_masked(model, param, grid, plan, &bcfg, &mask_row)?;
         samples.extend_from_slice(&out.samples);
         nfes.push(out.nfe as f64);
+        for (a, s) in seg_acc.iter_mut().zip(&out.seg_nfe) {
+            *a += *s as f64;
+        }
         if batch_idx == 0 {
             first_trace = out.steps;
         }
         remaining -= rows;
         batch_idx += 1;
     }
-    Ok((samples, crate::util::mean(&nfes), first_trace))
+    let n_batches = nfes.len().max(1) as f64;
+    for a in &mut seg_acc {
+        *a /= n_batches;
+    }
+    Ok((samples, crate::util::mean(&nfes), first_trace, seg_acc))
 }
 
-/// Per-shard state of a pooled [`generate_pooled`] run.
+/// Per-shard state of a pooled [`generate_pooled_plan`] run.
 struct ShardState {
     done: usize,
     slots: Vec<Option<Result<RunResult>>>,
@@ -368,13 +603,6 @@ struct ShardState {
 /// Row-sharded [`generate`]: bit-identical output (same per-batch forked
 /// seeds, same assembly order, same mean-NFE arithmetic), but the batches
 /// execute concurrently on the shared worker pool.
-///
-/// Scheduling is **help-first**: the caller claims and integrates shards
-/// itself while offering the remainder to the pool, so calling this from
-/// *inside* a pool job (the batcher's flush path, a config-sweep worker)
-/// can never deadlock — even a fully saturated pool makes progress
-/// through the caller, and helper jobs that arrive late simply find the
-/// shard counter exhausted and exit.
 #[allow(clippy::too_many_arguments)]
 pub fn generate_pooled(
     model: &Arc<dyn Denoiser>,
@@ -386,9 +614,43 @@ pub fn generate_pooled(
     total: usize,
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>)> {
+    let (samples, nfe, trace, _) = generate_pooled_plan(
+        model,
+        param,
+        grid,
+        &SamplingPlan::single(*solver),
+        ds,
+        cfg,
+        total,
+        pool,
+    )?;
+    Ok((samples, nfe, trace))
+}
+
+/// Row-sharded [`generate_plan`]: bit-identical output (same per-batch
+/// forked seeds, same assembly order, same mean-NFE arithmetic), but the
+/// batches execute concurrently on the shared worker pool.
+///
+/// Scheduling is **help-first**: the caller claims and integrates shards
+/// itself while offering the remainder to the pool, so calling this from
+/// *inside* a pool job (the batcher's flush path, a config-sweep worker)
+/// can never deadlock — even a fully saturated pool makes progress
+/// through the caller, and helper jobs that arrive late simply find the
+/// shard counter exhausted and exit.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_pooled_plan(
+    model: &Arc<dyn Denoiser>,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+    pool: &ThreadPool,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
     anyhow::ensure!(cfg.rows > 0, "rows must be positive");
     if total == 0 {
-        return Ok((Vec::new(), 0.0, Vec::new()));
+        return Ok((Vec::new(), 0.0, Vec::new(), vec![0.0; plan.segments.len()]));
     }
     let batch_rows = cfg.rows;
     let n_batches = (total + batch_rows - 1) / batch_rows;
@@ -408,7 +670,7 @@ pub fn generate_pooled(
     let worker: Arc<dyn Fn() + Send + Sync> = {
         let model = Arc::clone(model);
         let grid = grid.clone();
-        let solver = *solver;
+        let plan = plan.clone();
         let cfg = cfg.clone();
         let mask_row = Arc::clone(&mask_row);
         let shared = Arc::clone(&shared);
@@ -426,7 +688,7 @@ pub fn generate_pooled(
                 trace: cfg.trace && i == 0,
             };
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_sampler_masked(model.as_ref(), param, &grid, &solver, &bcfg, &mask_row)
+                run_plan_masked(model.as_ref(), param, &grid, &plan, &bcfg, &mask_row)
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("generation batch {i} panicked")));
             let (lock, cv) = &*shared;
@@ -458,16 +720,23 @@ pub fn generate_pooled(
     let dim = model.dim();
     let mut samples = Vec::with_capacity(total * dim);
     let mut nfes = Vec::with_capacity(n_batches);
+    let mut seg_acc = vec![0.0f64; plan.segments.len()];
     let mut first_trace = Vec::new();
     for (i, slot) in slots.into_iter().enumerate() {
         let out = slot.expect("all shards accounted for")?;
         samples.extend_from_slice(&out.samples);
         nfes.push(out.nfe as f64);
+        for (a, s) in seg_acc.iter_mut().zip(&out.seg_nfe) {
+            *a += *s as f64;
+        }
         if i == 0 {
             first_trace = out.steps;
         }
     }
-    Ok((samples, crate::util::mean(&nfes), first_trace))
+    for a in &mut seg_acc {
+        *a /= n_batches as f64;
+    }
+    Ok((samples, crate::util::mean(&nfes), first_trace, seg_acc))
 }
 
 #[cfg(test)]
@@ -475,6 +744,7 @@ mod tests {
     use super::*;
     use crate::model::gmm::testmodel::toy;
     use crate::schedule::baselines::edm_schedule;
+    use crate::solvers::PidParams;
 
     fn setup() -> (crate::model::GmmModel, DatasetInfo, SigmaGrid) {
         let m = toy();
@@ -496,6 +766,8 @@ mod tests {
         assert_eq!(out.nfe, grid.intervals());
         assert_eq!(out.samples.len(), 32 * ds.dim);
         assert!(out.samples.iter().all(|v| v.is_finite()));
+        // single-segment attribution: all NFE on segment 0
+        assert_eq!(out.seg_nfe, vec![grid.intervals()]);
     }
 
     #[test]
@@ -720,5 +992,124 @@ mod tests {
         let a = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
         let b = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
         assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn single_segment_plan_is_bit_identical_to_run_sampler() {
+        let (m, ds, grid) = setup();
+        for solver in [SolverSpec::Euler, SolverSpec::Heun, SolverSpec::Dpm2m] {
+            let cfg = RunConfig { rows: 16, seed: 77, trace: true, ..Default::default() };
+            let a = run_sampler(&m, Param::Edm, &grid, &solver, &ds, &cfg).unwrap();
+            let b =
+                run_plan(&m, Param::Edm, &grid, &SamplingPlan::single(solver), &ds, &cfg).unwrap();
+            let ab: Vec<u32> = a.samples.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.samples.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "{solver:?}");
+            assert_eq!(a.nfe, b.nfe);
+            assert_eq!(a.steps.len(), b.steps.len());
+        }
+    }
+
+    #[test]
+    fn segmented_plan_attributes_nfe_per_segment() {
+        let (m, ds, grid) = setup();
+        // split at the middle knot so both segments are non-empty
+        let mid = grid.sigmas[grid.intervals() / 2];
+        let plan =
+            SamplingPlan::parse(&format!("euler@max..{mid},heun@{mid}..0")).unwrap();
+        let cfg = RunConfig { rows: 16, seed: 12, trace: true, ..Default::default() };
+        let out = run_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg).unwrap();
+        let n0 = grid.intervals() / 2;
+        let n1 = grid.intervals() - n0;
+        // euler: 1 eval/interval; heun: 2 per interval except the σ→0 one
+        assert_eq!(out.seg_nfe, vec![n0, 2 * n1 - 1]);
+        assert_eq!(out.nfe, out.seg_nfe.iter().sum::<usize>());
+        // trace records carry their segment index
+        assert!(out.steps[..n0].iter().all(|s| s.segment == 0));
+        assert!(out.steps[n0..].iter().all(|s| s.segment == 1));
+        assert!(out.samples.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn segmented_plan_quality_between_its_endpoints() {
+        let (m, ds, grid) = setup();
+        let mid = grid.sigmas[grid.intervals() / 2];
+        let plan =
+            SamplingPlan::parse(&format!("euler@max..{mid},heun@{mid}..0")).unwrap();
+        let cfg = RunConfig { rows: 256, seed: 13, ..Default::default() };
+        let (ss, _, _, _) = generate_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg, 4096).unwrap();
+        let (se, _, _) =
+            generate(&m, Param::Edm, &grid, &SolverSpec::Euler, &ds, &cfg, 4096).unwrap();
+        let fd_seg = fd_of(&ss, &ds);
+        let fd_e = fd_of(&se, &ds);
+        assert!(
+            fd_seg < fd_e,
+            "heun tail should lift the segmented plan over pure euler: {fd_seg} vs {fd_e}"
+        );
+    }
+
+    #[test]
+    fn pid_arm_runs_on_all_parameterizations() {
+        let (m, ds, grid) = setup();
+        let plan = SamplingPlan::single(SolverSpec::Pid(PidParams::default()));
+        for p in [Param::Edm, Param::vp(), Param::Ve] {
+            let cfg = RunConfig { rows: 32, seed: 14, trace: true, ..Default::default() };
+            let out = run_plan(&m, p, &grid, &plan, &ds, &cfg).unwrap();
+            assert!(
+                out.samples.iter().all(|v| v.is_finite()),
+                "{:?} produced non-finite samples",
+                p.name()
+            );
+            // 2 evals per accepted step + 1 closing euler step; accepted
+            // steps are recorded in the trace
+            assert!(out.nfe >= 3, "{:?} nfe {}", p.name(), out.nfe);
+            assert_eq!(out.nfe, out.seg_nfe[0]);
+            assert!(!out.steps.is_empty());
+            let fd = fd_of(&out.samples, &ds);
+            assert!(fd < 5.0, "{:?} pid fd={fd}", p.name());
+        }
+    }
+
+    #[test]
+    fn pid_arm_is_deterministic() {
+        let (m, ds, grid) = setup();
+        let plan = SamplingPlan::single(SolverSpec::Pid(PidParams::default()));
+        let cfg = RunConfig { rows: 8, seed: 15, ..Default::default() };
+        let a = run_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg).unwrap();
+        let b = run_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg).unwrap();
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.nfe, b.nfe);
+    }
+
+    #[test]
+    fn pid_tail_segment_composes_with_fixed_head() {
+        let (m, ds, grid) = setup();
+        let mid = grid.sigmas[grid.intervals() / 2];
+        let plan = SamplingPlan::parse(&format!("heun@max..{mid},pid@{mid}..0")).unwrap();
+        let cfg = RunConfig { rows: 32, seed: 16, trace: true, ..Default::default() };
+        let out = run_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg).unwrap();
+        assert!(out.samples.iter().all(|v| v.is_finite()));
+        assert_eq!(out.seg_nfe.len(), 2);
+        assert_eq!(out.nfe, out.seg_nfe.iter().sum::<usize>());
+        assert!(out.seg_nfe[1] >= 1, "pid tail must at least close σ→0");
+        let fd = fd_of(&out.samples, &ds);
+        assert!(fd < 5.0, "composed plan fd={fd}");
+    }
+
+    #[test]
+    fn generate_pooled_plan_matches_generate_plan_exactly() {
+        let (m, ds, grid) = setup();
+        let model: Arc<dyn Denoiser> = Arc::new(toy());
+        let pool = ThreadPool::new(4);
+        let mid = grid.sigmas[grid.intervals() / 2];
+        let plan = SamplingPlan::parse(&format!("euler@max..{mid},heun@{mid}..0")).unwrap();
+        let cfg = RunConfig { rows: 50, seed: 17, ..Default::default() };
+        let (s1, n1, _, g1) = generate_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg, 333).unwrap();
+        let (s2, n2, _, g2) =
+            generate_pooled_plan(&model, Param::Edm, &grid, &plan, &ds, &cfg, 333, &pool).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(n1, n2);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.len(), 2);
     }
 }

@@ -1,11 +1,13 @@
-//! The sampling engine: wires model × parameterization × schedule × solver
+//! The sampling engine: wires model × parameterization × schedule × plan
 //! into one integration loop with NFE accounting and per-step tracing.
 
 pub mod config;
 pub mod engine;
+pub mod plan;
 
 pub use config::SamplerConfig;
 pub use engine::{
-    generate, generate_pooled, mask_row_for, run_sampler, run_sampler_masked, RunConfig,
-    RunResult, StepRecord,
+    generate, generate_plan, generate_pooled, generate_pooled_plan, mask_row_for, run_plan,
+    run_plan_masked, run_sampler, run_sampler_masked, RunConfig, RunResult, StepRecord,
 };
+pub use plan::{candidate_plans, PlanSegment, SamplingPlan};

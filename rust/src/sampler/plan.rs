@@ -1,0 +1,492 @@
+//! Segmented sampling plans — the unit the whole stack configures, caches,
+//! groups, and benchmarks (DESIGN.md §9).
+//!
+//! The paper's §3.1 analysis says the right solver depends on *where you
+//! are* on the trajectory: low-order solvers suffice in the near-linear
+//! high-noise regime, higher-order solvers pay off as the ODE bends near
+//! the data. A [`SamplingPlan`] makes that first-class: an ordered list of
+//! σ-interval segments, each carrying its own [`SolverSpec`], e.g.
+//! `euler@[σ_max..2.0] → dpm2m@[2.0..0.5] → sdm@[0.5..0]` (the Sampler
+//! Scheduler construction, arXiv:2311.06845). A single-segment plan is
+//! exactly the classic (solver, schedule) pair and reproduces the old
+//! engine path bit for bit.
+//!
+//! ## Plan-string grammar
+//!
+//! ```text
+//! plan     := solver                      (single segment, whole trajectory)
+//!           | segment ("," segment)+
+//! segment  := solver "@" hi ".." lo
+//! hi       := "max" (first segment) | float  (must equal previous lo)
+//! lo       := float                          (last segment: 0)
+//! solver   := "euler" | "heun" | "dpm2m"
+//!           | "sdm" | "sdm(tau=F[,lambda=step|linear|cosine])"
+//!           | "pid" | "pid(rtol=F[,atol=F][,h=F])"
+//! ```
+//!
+//! Bounds are σ values; a segment covers σ ∈ (lo, hi]. Segments must be
+//! contiguous (each `hi` repeats the previous `lo`) and strictly
+//! decreasing, and the last segment must reach σ = 0. The stochastic
+//! churn sampler is whole-trajectory only (its churn budget is defined
+//! over the full grid) and cannot appear in a multi-segment plan.
+
+use crate::diffusion::CurvatureClock;
+use crate::solvers::{LambdaKind, PidParams, SolverSpec};
+use crate::Result;
+
+/// Default τ_k when a plan string says just `sdm` (matches the protocol
+/// default in `coordinator::protocol`).
+pub const PLAN_SDM_TAU: f64 = 2e-4;
+
+/// One σ-interval segment of a plan: `solver` integrates every grid
+/// interval whose endpoint lies at or above `sigma_lo` (and below the
+/// previous segment's bound).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanSegment {
+    pub solver: SolverSpec,
+    /// lower σ bound of this segment (0 for the final segment).
+    pub sigma_lo: f64,
+}
+
+/// An ordered, contiguous list of σ segments covering [σ_max, 0].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingPlan {
+    pub segments: Vec<PlanSegment>,
+}
+
+impl From<SolverSpec> for SamplingPlan {
+    fn from(solver: SolverSpec) -> SamplingPlan {
+        SamplingPlan::single(solver)
+    }
+}
+
+impl SamplingPlan {
+    /// The classic single-solver plan: one segment covering the whole
+    /// trajectory.
+    pub fn single(solver: SolverSpec) -> SamplingPlan {
+        SamplingPlan { segments: vec![PlanSegment { solver, sigma_lo: 0.0 }] }
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.segments.len() == 1
+    }
+
+    /// The sole solver of a single-segment plan (None when segmented).
+    pub fn solo(&self) -> Option<&SolverSpec> {
+        if self.segments.len() == 1 {
+            Some(&self.segments[0].solver)
+        } else {
+            None
+        }
+    }
+
+    /// Display/grouping tag. A single-segment plan reuses the bare solver
+    /// tag (labels, batch group keys, and label-derived seeds are
+    /// unchanged from the pre-plan stack); a segmented plan prints in the
+    /// plan-string grammar and [`SamplingPlan::parse`]s back to itself.
+    pub fn tag(&self) -> String {
+        if let Some(s) = self.solo() {
+            return s.tag();
+        }
+        let mut out = String::new();
+        for (j, seg) in self.segments.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            let hi = if j == 0 {
+                "max".to_string()
+            } else {
+                format!("{}", self.segments[j - 1].sigma_lo)
+            };
+            out.push_str(&format!("{}@{}..{}", solver_token(&seg.solver), hi, seg.sigma_lo));
+        }
+        out
+    }
+
+    /// Schedule-cache discriminator. Empty for single-segment plans, so
+    /// every classic (solver, schedule) pair keeps sharing one cached grid
+    /// per (dataset, param, schedule, steps) — encoded keys, persisted
+    /// JSONL rows, and pilot seeds are byte-identical to the pre-plan
+    /// stack. Segmented plans get their full tag, so they never alias a
+    /// single-solver grid (or each other).
+    pub fn cache_tag(&self) -> String {
+        if self.is_single() {
+            String::new()
+        } else {
+            self.tag()
+        }
+    }
+
+    /// Parse a plan string (grammar in the module docs).
+    pub fn parse(s: &str) -> Result<SamplingPlan> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty plan string");
+        let toks = split_top(s, ',');
+        if toks.len() == 1 && !toks[0].contains('@') {
+            let plan = SamplingPlan::single(parse_solver_token(toks[0])?);
+            plan.validate()?;
+            return Ok(plan);
+        }
+        let mut segments = Vec::with_capacity(toks.len());
+        let mut prev_lo: Option<f64> = None;
+        for tok in &toks {
+            let (solver_s, range_s) = tok.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("plan segment {tok:?} is missing its @hi..lo range")
+            })?;
+            let solver = parse_solver_token(solver_s)?;
+            let (hi_s, lo_s) = range_s.split_once("..").ok_or_else(|| {
+                anyhow::anyhow!("segment range {range_s:?} must look like hi..lo")
+            })?;
+            let lo: f64 = lo_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad segment bound {lo_s:?}"))?;
+            match (prev_lo, hi_s.trim()) {
+                (None, "max") => {}
+                (None, other) => {
+                    anyhow::bail!("the first segment must start at \"max\", got {other:?}")
+                }
+                (Some(prev), other) => {
+                    let hi: f64 = other
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad segment bound {other:?}"))?;
+                    anyhow::ensure!(
+                        hi == prev,
+                        "segments must be contiguous: {hi} follows a segment ending at {prev}"
+                    );
+                }
+            }
+            prev_lo = Some(lo);
+            segments.push(PlanSegment { solver, sigma_lo: lo });
+        }
+        let plan = SamplingPlan { segments };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Structural invariants: non-empty, strictly decreasing bounds,
+    /// final segment reaching σ = 0, no churn sampler inside a segment.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.segments.is_empty(), "a plan needs at least one segment");
+        let last = self.segments.len() - 1;
+        for (j, seg) in self.segments.iter().enumerate() {
+            anyhow::ensure!(
+                seg.sigma_lo.is_finite() && seg.sigma_lo >= 0.0,
+                "segment bound must be a finite σ >= 0"
+            );
+            if j > 0 {
+                anyhow::ensure!(
+                    seg.sigma_lo < self.segments[j - 1].sigma_lo,
+                    "segment bounds must strictly decrease"
+                );
+            }
+            if j == last {
+                anyhow::ensure!(seg.sigma_lo == 0.0, "the final segment must reach σ = 0");
+            }
+            if self.segments.len() > 1 {
+                anyhow::ensure!(
+                    !matches!(seg.solver, SolverSpec::StochasticHeun(_)),
+                    "the stochastic churn sampler is whole-trajectory only"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Assign grid intervals to segments: returns one `[start, end)`
+    /// interval range per segment (possibly empty). Interval `i` spans
+    /// `sigmas[i] → sigmas[i+1]`; a non-final segment keeps every
+    /// interval whose endpoint stays at or above its `sigma_lo` (a
+    /// boundary landing exactly on a knot belongs to the upper segment),
+    /// and the final segment takes the rest down to σ = 0.
+    pub fn segment_ranges(&self, sigmas: &[f64]) -> Vec<(usize, usize)> {
+        let n_int = sigmas.len().saturating_sub(1);
+        let mut out = Vec::with_capacity(self.segments.len());
+        let mut start = 0usize;
+        for (j, seg) in self.segments.iter().enumerate() {
+            let end = if j + 1 == self.segments.len() {
+                n_int
+            } else {
+                let mut e = start;
+                while e < n_int && sigmas[e + 1] >= seg.sigma_lo {
+                    e += 1;
+                }
+                e
+            };
+            out.push((start, end));
+            start = end;
+        }
+        out
+    }
+}
+
+/// Grammar token for a solver (multi-segment tags). Inverse of
+/// [`parse_solver_token`] for every segment-eligible solver; the churn
+/// sampler falls back to its display tag (not parseable, and rejected in
+/// multi-segment plans by `validate`).
+fn solver_token(s: &SolverSpec) -> String {
+    match s {
+        SolverSpec::Euler => "euler".into(),
+        SolverSpec::Heun => "heun".into(),
+        SolverSpec::Dpm2m => "dpm2m".into(),
+        SolverSpec::StochasticHeun(_) => s.tag(),
+        SolverSpec::Adaptive { lambda, tau_k, .. } => {
+            if *lambda == LambdaKind::Step && *tau_k == PLAN_SDM_TAU {
+                "sdm".into()
+            } else {
+                format!("sdm(tau={tau_k},lambda={})", lambda.tag())
+            }
+        }
+        SolverSpec::Pid(p) => p.tag(),
+    }
+}
+
+fn parse_solver_token(tok: &str) -> Result<SolverSpec> {
+    let tok = tok.trim();
+    if let Some(args) = tok.strip_prefix("sdm(").and_then(|r| r.strip_suffix(')')) {
+        let mut tau_k = PLAN_SDM_TAU;
+        let mut lambda = LambdaKind::Step;
+        for (k, v) in parse_kv(args)? {
+            match k {
+                "tau" | "tau_k" => tau_k = parse_f64(v)?,
+                "lambda" => lambda = LambdaKind::from_name(v)?,
+                other => anyhow::bail!("unknown sdm parameter {other:?}"),
+            }
+        }
+        return Ok(SolverSpec::Adaptive { lambda, tau_k, clock: CurvatureClock::Sigma });
+    }
+    if let Some(args) = tok.strip_prefix("pid(").and_then(|r| r.strip_suffix(')')) {
+        let mut p = PidParams::default();
+        for (k, v) in parse_kv(args)? {
+            match k {
+                "rtol" => p.rtol = parse_f64(v)?,
+                "atol" => p.atol = parse_f64(v)?,
+                "h" | "h_init" => p.h_init = parse_f64(v)?,
+                other => anyhow::bail!("unknown pid parameter {other:?}"),
+            }
+        }
+        return Ok(SolverSpec::Pid(p));
+    }
+    match tok {
+        "euler" => Ok(SolverSpec::Euler),
+        "heun" => Ok(SolverSpec::Heun),
+        "dpm2m" => Ok(SolverSpec::Dpm2m),
+        "sdm" => Ok(SolverSpec::Adaptive {
+            lambda: LambdaKind::Step,
+            tau_k: PLAN_SDM_TAU,
+            clock: CurvatureClock::Sigma,
+        }),
+        "pid" => Ok(SolverSpec::Pid(PidParams::default())),
+        other => anyhow::bail!("unknown solver {other:?} in plan string"),
+    }
+}
+
+fn parse_f64(v: &str) -> Result<f64> {
+    v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad numeric value {v:?} in plan string"))
+}
+
+fn parse_kv(args: &str) -> Result<Vec<(&str, &str)>> {
+    let mut out = Vec::new();
+    for kv in args.split(',') {
+        let kv = kv.trim();
+        if kv.is_empty() {
+            continue;
+        }
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("expected key=value, got {kv:?}"))?;
+        out.push((k.trim(), v.trim()));
+    }
+    Ok(out)
+}
+
+/// Split on `sep` at parenthesis depth 0 (so `sdm(tau=1e-3,lambda=step)`
+/// survives a comma split).
+fn split_top(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            c2 if c2 == sep && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Candidate plans for the plan search (`sdm sample --plan-search`) and
+/// the pareto segmented arms: the static solvers plus segmented
+/// assignments over the paper's low-order-early / high-order-late
+/// boundary heuristic, with boundaries scaled to the dataset's σ_max
+/// (σ_max = 80 gives the canonical 2.0 / 0.5 split). `sigma_domain`
+/// gates the Dpm2m arms on the s(t) ≡ 1 contract (EDM/VE).
+pub fn candidate_plans(sigma_max: f64, sigma_domain: bool) -> Vec<SamplingPlan> {
+    let b1 = sigma_max * 0.025;
+    let b2 = sigma_max * 0.00625;
+    let mid = if sigma_domain { "dpm2m" } else { "heun" };
+    let mut specs = vec![
+        "euler".to_string(),
+        "heun".to_string(),
+        "sdm".to_string(),
+        "pid".to_string(),
+        format!("euler@max..{b1},heun@{b1}..0"),
+        format!("euler@max..{b1},{mid}@{b1}..{b2},sdm@{b2}..0"),
+        format!("heun@max..{b2},sdm@{b2}..0"),
+    ];
+    if sigma_domain {
+        specs.push("dpm2m".to_string());
+    }
+    specs
+        .iter()
+        .map(|s| SamplingPlan::parse(s).expect("candidate plans are grammatical"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_plan_tag_is_the_solver_tag() {
+        for s in [SolverSpec::Euler, SolverSpec::Heun, SolverSpec::Dpm2m] {
+            let p = SamplingPlan::single(s);
+            assert_eq!(p.tag(), s.tag());
+            assert_eq!(p.cache_tag(), "");
+            assert_eq!(p.solo(), Some(&s));
+        }
+    }
+
+    #[test]
+    fn bare_solver_strings_parse_as_single_segment() {
+        for (s, want) in [
+            ("euler", SolverSpec::Euler),
+            ("heun", SolverSpec::Heun),
+            ("dpm2m", SolverSpec::Dpm2m),
+            ("pid", SolverSpec::Pid(PidParams::default())),
+        ] {
+            let p = SamplingPlan::parse(s).unwrap();
+            assert_eq!(p, SamplingPlan::single(want), "{s}");
+        }
+        match *SamplingPlan::parse("sdm").unwrap().solo().unwrap() {
+            SolverSpec::Adaptive { lambda, tau_k, .. } => {
+                assert_eq!(lambda, LambdaKind::Step);
+                assert_eq!(tau_k, PLAN_SDM_TAU);
+            }
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn segmented_tag_round_trips_through_parse() {
+        for s in [
+            "euler@max..2,heun@2..0",
+            "euler@max..2,dpm2m@2..0.5,sdm@0.5..0",
+            "heun@max..0.5,sdm(tau=0.001,lambda=step)@0.5..0",
+            "euler@max..1,pid(rtol=0.1,atol=0.01,h=0.5)@1..0",
+        ] {
+            let p = SamplingPlan::parse(s).unwrap();
+            assert!(!p.is_single(), "{s}");
+            let again = SamplingPlan::parse(&p.tag()).unwrap();
+            assert_eq!(p, again, "tag {:?} did not round-trip", p.tag());
+            assert_eq!(p.cache_tag(), p.tag());
+        }
+    }
+
+    #[test]
+    fn parameterized_solver_tokens_parse() {
+        let p = SamplingPlan::parse("sdm(tau=5e-2,lambda=cosine)").unwrap();
+        match *p.solo().unwrap() {
+            SolverSpec::Adaptive { lambda, tau_k, .. } => {
+                assert_eq!(lambda, LambdaKind::Cosine);
+                assert_eq!(tau_k, 5e-2);
+            }
+            ref other => panic!("{other:?}"),
+        }
+        let p = SamplingPlan::parse("pid(rtol=0.1,h=0.2)").unwrap();
+        match *p.solo().unwrap() {
+            SolverSpec::Pid(pp) => {
+                assert_eq!(pp.rtol, 0.1);
+                assert_eq!(pp.h_init, 0.2);
+                assert_eq!(pp.atol, PidParams::default().atol);
+            }
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            "",
+            "rk45",
+            "euler@max..2",                  // does not reach 0
+            "euler@max..2,heun@1..0",        // not contiguous
+            "euler@80..2,heun@2..0",         // first bound must be "max"
+            "euler@max..2,heun@2..3",        // bounds not decreasing
+            "euler@max..2,heun",             // segment missing range
+            "sdm(gamma=1)",                  // unknown parameter
+            "pid(rtol=abc)",                 // bad number
+        ] {
+            assert!(SamplingPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn churn_is_whole_trajectory_only() {
+        let churn = SolverSpec::StochasticHeun(crate::solvers::ChurnParams::imagenet());
+        assert!(SamplingPlan::single(churn).validate().is_ok());
+        let plan = SamplingPlan {
+            segments: vec![
+                PlanSegment { solver: churn, sigma_lo: 2.0 },
+                PlanSegment { solver: SolverSpec::Heun, sigma_lo: 0.0 },
+            ],
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn segment_ranges_split_on_knots_and_straddles() {
+        let plan = SamplingPlan::parse("euler@max..2,heun@2..0").unwrap();
+        // boundary exactly on a knot: the interval ending at 2 stays in
+        // the euler segment
+        assert_eq!(plan.segment_ranges(&[80.0, 8.0, 2.0, 0.5, 0.0]), vec![(0, 2), (2, 4)]);
+        // boundary inside interval [8, 1]: the straddling interval falls
+        // to the lower segment
+        assert_eq!(plan.segment_ranges(&[80.0, 8.0, 1.0, 0.0]), vec![(0, 1), (1, 3)]);
+        // boundary below the whole grid: later segment is empty
+        let low = SamplingPlan::parse("euler@max..0.001,heun@0.001..0").unwrap();
+        assert_eq!(low.segment_ranges(&[80.0, 8.0, 2.0, 0.0]), vec![(0, 2), (2, 3)]);
+        // single segment takes everything
+        let single = SamplingPlan::single(SolverSpec::Euler);
+        assert_eq!(single.segment_ranges(&[80.0, 1.0, 0.0]), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn candidate_plans_cover_static_segmented_and_pid() {
+        let cands = candidate_plans(80.0, true);
+        assert!(cands.iter().any(|p| !p.is_single()));
+        assert!(cands
+            .iter()
+            .any(|p| matches!(p.solo(), Some(SolverSpec::Pid(_)))));
+        assert!(cands
+            .iter()
+            .any(|p| matches!(p.solo(), Some(SolverSpec::Dpm2m))));
+        for p in &cands {
+            p.validate().unwrap();
+        }
+        // canonical σ_max=80 boundaries from the issue: 2.0 and 0.5
+        let seg = cands.iter().find(|p| p.segments.len() == 3).unwrap();
+        assert_eq!(seg.segments[0].sigma_lo, 2.0);
+        assert_eq!(seg.segments[1].sigma_lo, 0.5);
+        // VP (s != 1) candidates must not contain dpm2m anywhere
+        for p in candidate_plans(80.0, false) {
+            assert!(!p.segments.iter().any(|s| matches!(s.solver, SolverSpec::Dpm2m)));
+        }
+    }
+}

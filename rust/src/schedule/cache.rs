@@ -52,14 +52,23 @@ pub struct CacheKey {
     /// A regenerated artifact changes the fingerprint, so its stale
     /// persisted pilots can neither be looked up nor seed warm starts.
     pub model_fp: u64,
+    /// `SamplingPlan::cache_tag()` — empty for single-segment plans (all
+    /// classic solver choices share one grid per schedule, exactly as
+    /// before plans existed), the full plan tag for segmented plans so
+    /// they never alias a single-solver grid (DESIGN.md §9).
+    pub plan: String,
 }
 
 impl CacheKey {
     /// Canonical string form (map key, metrics label, persisted identity).
+    /// Single-segment plans add nothing, so pre-plan persisted keys and
+    /// the pilot seeds derived from the encoding stay byte-identical.
     pub fn encode(&self) -> String {
+        let plan_suffix =
+            if self.plan.is_empty() { String::new() } else { format!("|{}", self.plan) };
         format!(
-            "{}|{}|{}|{}|{:x}",
-            self.dataset, self.param, self.tag, self.steps, self.model_fp
+            "{}|{}|{}|{}|{:x}{}",
+            self.dataset, self.param, self.tag, self.steps, self.model_fp, plan_suffix
         )
     }
 }
@@ -281,6 +290,7 @@ impl ScheduleCache {
                 && e.key.param == key.param
                 && e.key.tag == key.tag
                 && e.key.model_fp == key.model_fp
+                && e.key.plan == key.plan
                 && e.key.steps != key.steps
             {
                 let d = key.steps.abs_diff(e.key.steps);
@@ -484,6 +494,9 @@ fn entry_to_json(key: &CacheKey, built: &BuiltSchedule, built_at_unix: f64) -> J
     m.insert("tag".into(), Json::Str(key.tag.clone()));
     m.insert("steps".into(), Json::Num(key.steps as f64));
     m.insert("model_fp".into(), Json::Num(key.model_fp as f64));
+    if !key.plan.is_empty() {
+        m.insert("plan".into(), Json::Str(key.plan.clone()));
+    }
     m.insert("built_at_unix".into(), Json::Num(built_at_unix));
     m.insert("pilot_nfe".into(), Json::Num(built.pilot_nfe as f64));
     m.insert("sigmas".into(), num_arr(&built.grid.sigmas));
@@ -500,6 +513,12 @@ fn entry_from_json(v: &Json) -> Result<(CacheKey, BuiltSchedule, f64)> {
         tag: v.get("tag")?.as_str()?.to_string(),
         steps: v.get("steps")?.as_usize()?,
         model_fp: v.get("model_fp")?.as_f64()? as u64,
+        // absent in files written before segmented plans existed (and for
+        // every single-segment build) — both decode to the shared grid
+        plan: match v.get("plan") {
+            Ok(p) => p.as_str().unwrap_or("").to_string(),
+            Err(_) => String::new(),
+        },
     };
     let grid = SigmaGrid::new(v.get("sigmas")?.as_vec_f64()?)?;
     // absent in files written before raw knots were persisted; entries
@@ -532,6 +551,7 @@ mod tests {
             tag: "sdm(test)".into(),
             steps,
             model_fp: 7,
+            plan: String::new(),
         }
     }
 

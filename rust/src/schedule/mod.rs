@@ -85,10 +85,12 @@ impl ScheduleSpec {
     /// and uniform geodesic weighting (q = 0).
     pub fn sdm_defaults(dataset: &str, param: crate::diffusion::Param) -> ScheduleSpec {
         use crate::diffusion::Param;
+        // the calibration split is purely by parameterization — every
+        // dataset shares the VP/EDM operating point (the old per-dataset
+        // arms were duplicates)
         let (eta_min, eta_max, p, q) = match (param, dataset) {
             (Param::Ve, _) => (0.01, 0.40, 1.0, 0.25),
-            (_, "imagenetg") => (0.0005, 0.02, 1.0, 0.0),
-            _ => (0.0005, 0.02, 1.0, 0.0),
+            (_, _) => (0.0005, 0.02, 1.0, 0.0),
         };
         ScheduleSpec::Sdm { eta_min, eta_max, p, q, pilot_rows: 128 }
     }

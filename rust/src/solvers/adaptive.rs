@@ -70,6 +70,107 @@ pub fn step_gate(kappa_hat: Option<f64>, tau_k: f64) -> bool {
     }
 }
 
+/// Tunables of the PID accept/reject arm (`SolverSpec::Pid`). Defaults
+/// mirror k-diffusion's `sample_dpm_adaptive`: a PI controller
+/// (pcoeff=0, icoeff=1, dcoeff=0) over an order-2 embedded Euler/Heun
+/// pair, tolerances rtol=0.05 / atol=0.0078, initial λ-step h=0.35.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PidParams {
+    pub rtol: f64,
+    pub atol: f64,
+    pub pcoeff: f64,
+    pub icoeff: f64,
+    pub dcoeff: f64,
+    pub accept_safety: f64,
+    pub h_init: f64,
+}
+
+impl Default for PidParams {
+    fn default() -> PidParams {
+        PidParams {
+            rtol: 0.05,
+            atol: 0.0078,
+            pcoeff: 0.0,
+            icoeff: 1.0,
+            dcoeff: 0.0,
+            accept_safety: 0.81,
+            h_init: 0.35,
+        }
+    }
+}
+
+impl PidParams {
+    /// Display tag; non-default tunables print in the plan-string grammar
+    /// (`pid(rtol=..,atol=..,h=..)`) so plan tags round-trip.
+    pub fn tag(&self) -> String {
+        if *self == PidParams::default() {
+            "pid".into()
+        } else {
+            format!("pid(rtol={},atol={},h={})", self.rtol, self.atol, self.h_init)
+        }
+    }
+}
+
+/// PID step-size controller over the λ = ln σ clock: accepts or rejects a
+/// trial step from the normalized embedded-pair error and rescales the
+/// next step size. Semantics follow k-diffusion's `PIDStepSizeController`
+/// exactly: inverse errors feed a three-term (P/I/D) product, the raw
+/// factor gates acceptance against `accept_safety`, and an
+/// `1 + atan(x − 1)` limiter tempers the step-size update (applied on
+/// accept *and* reject).
+#[derive(Clone, Debug)]
+pub struct PidStepController {
+    /// current λ-step size (positive; the engine clamps it to the segment).
+    pub h: f64,
+    b1: f64,
+    b2: f64,
+    b3: f64,
+    accept_safety: f64,
+    eps: f64,
+    errs: [f64; 3],
+    primed: bool,
+}
+
+impl PidStepController {
+    pub fn new(p: &PidParams, order: usize) -> PidStepController {
+        let order = order as f64;
+        PidStepController {
+            h: p.h_init.abs(),
+            b1: (p.pcoeff + p.icoeff + p.dcoeff) / order,
+            b2: -(p.pcoeff + 2.0 * p.dcoeff) / order,
+            b3: p.dcoeff / order,
+            accept_safety: p.accept_safety,
+            eps: 1e-8,
+            errs: [0.0; 3],
+            primed: false,
+        }
+    }
+
+    fn limiter(x: f64) -> f64 {
+        1.0 + (x - 1.0).atan()
+    }
+
+    /// Feed the normalized error of a trial step; returns whether the step
+    /// is accepted. Updates `h` for the next trial either way.
+    pub fn propose_step(&mut self, error: f64) -> bool {
+        let inv_error = 1.0 / (error + self.eps);
+        if !self.primed {
+            self.errs = [inv_error; 3];
+            self.primed = true;
+        }
+        self.errs[0] = inv_error;
+        let factor =
+            self.errs[0].powf(self.b1) * self.errs[1].powf(self.b2) * self.errs[2].powf(self.b3);
+        let accept = factor >= self.accept_safety;
+        if accept {
+            self.errs[2] = self.errs[1];
+            self.errs[1] = self.errs[0];
+        }
+        self.h *= Self::limiter(factor);
+        accept
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +214,44 @@ mod tests {
             assert_eq!(LambdaKind::from_name(k.tag()).unwrap(), k);
         }
         assert!(LambdaKind::from_name("sigmoid").is_err());
+    }
+
+    #[test]
+    fn pid_accepts_small_errors_and_rejects_large() {
+        let mut c = PidStepController::new(&PidParams::default(), 2);
+        let h0 = c.h;
+        // tiny error → accept, step size grows
+        assert!(c.propose_step(1e-6));
+        assert!(c.h > h0, "h should grow after a clean accept: {} vs {h0}", c.h);
+        // huge error → reject, step size shrinks
+        let h1 = c.h;
+        assert!(!c.propose_step(50.0));
+        assert!(c.h < h1, "h should shrink after a reject: {} vs {h1}", c.h);
+    }
+
+    #[test]
+    fn pid_first_step_accept_matches_kdiffusion_priming() {
+        // with PI defaults and order 2: b1 = 0.5, b2 = b3 = 0; the primed
+        // first factor is inv_error^0.5, so error = 1 → factor 1 ≥ 0.81.
+        let mut c = PidStepController::new(&PidParams::default(), 2);
+        assert!(c.propose_step(1.0));
+        // and the limiter leaves h unchanged at factor exactly 1
+        assert!((c.h - PidParams::default().h_init).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pid_limiter_bounds_growth() {
+        // limiter(x) = 1 + atan(x-1) caps the multiplier below 1 + π/2
+        let mut c = PidStepController::new(&PidParams::default(), 2);
+        let h0 = c.h;
+        assert!(c.propose_step(1e-30));
+        assert!(c.h < h0 * (1.0 + std::f64::consts::FRAC_PI_2) + 1e-12);
+    }
+
+    #[test]
+    fn pid_tag_round_trip_defaults() {
+        assert_eq!(PidParams::default().tag(), "pid");
+        let p = PidParams { rtol: 0.1, ..PidParams::default() };
+        assert_eq!(p.tag(), "pid(rtol=0.1,atol=0.0078,h=0.35)");
     }
 }

@@ -10,7 +10,7 @@ pub mod euler;
 pub mod heun;
 pub mod stochastic;
 
-pub use adaptive::LambdaKind;
+pub use adaptive::{LambdaKind, PidParams, PidStepController};
 pub use stochastic::ChurnParams;
 
 use crate::diffusion::CurvatureClock;
@@ -31,6 +31,10 @@ pub enum SolverSpec {
     /// controlled by Λ(t); for `LambdaKind::Step` the Heun correction is
     /// *skipped* whenever κ̂_rel < τ_k, giving NFE < 2 per interval.
     Adaptive { lambda: LambdaKind, tau_k: f64, clock: CurvatureClock },
+    /// PID accept/reject arm: an embedded Euler/Heun pair stepped freely
+    /// in λ = ln σ under a [`PidParams`] controller — ignores the interior
+    /// schedule knots of its segment and spends NFE where the error says.
+    Pid(PidParams),
 }
 
 impl SolverSpec {
@@ -43,18 +47,17 @@ impl SolverSpec {
             SolverSpec::Adaptive { lambda, tau_k, .. } => {
                 format!("sdm-{}(tau={tau_k:.0e})", lambda.tag())
             }
+            SolverSpec::Pid(p) => p.tag(),
         }
     }
 
-    /// Default adaptive solver for a dataset/schedule combination. The
+    /// Default adaptive solver for a dataset/param combination. The
     /// thresholds mirror the paper's Table 2 structure (AFHQ wants a
-    /// looser gate than CIFAR/FFHQ; the VP exception under SDM schedules)
-    /// but are calibrated on our workloads via the same grid search
-    /// (`sdm grid-tau`; τ scales ~250x vs the paper because the σ-clock
-    /// curvature of the analytic GMM denoiser is correspondingly larger —
-    /// EXPERIMENTS.md §Calibration).
-    pub fn sdm_default(dataset: &str, sdm_schedule: bool, param_is_vp: bool) -> SolverSpec {
-        let _ = sdm_schedule;
+    /// looser gate than CIFAR/FFHQ) but are calibrated on our workloads
+    /// via the same grid search (`sdm grid-tau`; τ scales ~250x vs the
+    /// paper because the σ-clock curvature of the analytic GMM denoiser
+    /// is correspondingly larger — EXPERIMENTS.md §Calibration).
+    pub fn sdm_default(dataset: &str, param_is_vp: bool) -> SolverSpec {
         let tau_k = match (dataset, param_is_vp) {
             ("cifar10g", _) => 5e-2,
             ("ffhqg", _) => 5e-2,
@@ -78,23 +81,23 @@ mod tests {
     fn tags() {
         assert_eq!(SolverSpec::Euler.tag(), "euler");
         assert_eq!(SolverSpec::Heun.tag(), "heun");
-        let a = SolverSpec::sdm_default("cifar10g", false, false);
+        assert_eq!(SolverSpec::Pid(PidParams::default()).tag(), "pid");
+        let a = SolverSpec::sdm_default("cifar10g", false);
         assert_eq!(a.tag(), "sdm-step(tau=5e-2)");
     }
 
     #[test]
     fn table2_thresholds() {
-        for (ds, sdm, vp, want) in [
-            ("cifar10g", false, false, 5e-2),
-            ("ffhqg", false, false, 5e-2),
-            ("imagenetg", true, false, 2.5e-2),
-            ("afhqg", false, false, 2e-2),
-            ("afhqg", true, true, 2e-2),
-            ("afhqg", true, false, 2e-2),
+        for (ds, vp, want) in [
+            ("cifar10g", false, 5e-2),
+            ("ffhqg", false, 5e-2),
+            ("imagenetg", false, 2.5e-2),
+            ("afhqg", false, 2e-2),
+            ("afhqg", true, 2e-2),
         ] {
-            match SolverSpec::sdm_default(ds, sdm, vp) {
+            match SolverSpec::sdm_default(ds, vp) {
                 SolverSpec::Adaptive { tau_k, .. } => {
-                    assert_eq!(tau_k, want, "{ds} sdm={sdm} vp={vp}")
+                    assert_eq!(tau_k, want, "{ds} vp={vp}")
                 }
                 _ => unreachable!(),
             }

@@ -17,7 +17,7 @@ use sdm::model::{
     class_mask, class_mask_row, eval_at, eval_at_into, uncond_mask, uncond_mask_row, DatasetInfo,
     Denoiser, EvalOut, GmmModel, KernelScratch, MaskRef,
 };
-use sdm::sampler::{run_sampler, RunConfig};
+use sdm::sampler::{run_plan, run_sampler, RunConfig, SamplingPlan};
 use sdm::schedule::baselines::edm_schedule;
 use sdm::solvers::{euler, heun, SolverSpec};
 use sdm::util::{Rng, ThreadPool};
@@ -324,6 +324,71 @@ fn golden_run_sampler_samples_match_seed_implementation_bitwise() {
             }
         }
     }
+}
+
+#[test]
+fn single_segment_plan_matches_seed_implementation_bitwise() {
+    // the SamplingPlan refactor's contract: a one-segment plan — whether
+    // built via `single()` or parsed from the whole-range plan string —
+    // is the pre-plan engine, to the last bit, against the seed loop
+    let m = toy();
+    let ds = m.info.clone();
+    let grid = edm_schedule(14, ds.sigma_min, ds.sigma_max, ds.rho).unwrap();
+    for (tag, solver) in
+        [("euler", SolverSpec::Euler), ("heun", SolverSpec::Heun), ("dpm2m", SolverSpec::Dpm2m)]
+    {
+        let cfg = RunConfig { rows: 12, seed: 4242, class: None, trace: false };
+        let want = seed_sampler(&m, Param::Edm, &grid, &solver, None, 12, 4242);
+        let via_single =
+            run_plan(&m, Param::Edm, &grid, &SamplingPlan::single(solver), &ds, &cfg).unwrap();
+        assert_bits_eq(&want, &via_single.samples, &format!("{tag}/single()"));
+        let parsed = SamplingPlan::parse(&format!("{tag}@max..0")).unwrap();
+        let via_parsed = run_plan(&m, Param::Edm, &grid, &parsed, &ds, &cfg).unwrap();
+        assert_bits_eq(&want, &via_parsed.samples, &format!("{tag}/parsed"));
+        assert_eq!(via_single.nfe, via_parsed.nfe);
+    }
+}
+
+#[test]
+fn segmented_plan_boundary_resets_multistep_history() {
+    // two dpm2m segments split at a knot: the second segment's first step
+    // must run with *fresh* multistep history (first-order), not consume
+    // the D cached by the last step of the first segment
+    let m = toy();
+    let ds = m.info.clone();
+    let grid = edm_schedule(14, ds.sigma_min, ds.sigma_max, ds.rho).unwrap();
+    let split = 7usize;
+    let b = grid.sigmas[split];
+    let plan = SamplingPlan::parse(&format!("dpm2m@max..{b},dpm2m@{b}..0")).unwrap();
+    assert_eq!(plan.segments.len(), 2, "split must not collapse to one segment");
+    let cfg = RunConfig { rows: 12, seed: 99, class: None, trace: false };
+    let got = run_plan(&m, Param::Edm, &grid, &plan, &ds, &cfg).unwrap();
+
+    // reference: the seed loop with the history reset applied by hand
+    let times = grid.times(Param::Edm);
+    let sigmas = &grid.sigmas;
+    let mask = uncond_mask(12, m.k());
+    let mut rng = Rng::new(99);
+    let mut x = vec![0.0f32; 12 * m.dim()];
+    rng.fill_normal_f32(&mut x, Param::Edm.prior_std(times[0]));
+    let mut dpm = sdm::solvers::dpm2m::Dpm2mState::new();
+    for i in 0..grid.intervals() {
+        if i == split {
+            dpm = sdm::solvers::dpm2m::Dpm2mState::new(); // boundary reset
+        }
+        let out = legacy_eval(&m, Param::Edm, &x, times[i], &mask, 12);
+        dpm.step(&mut x, &out.d, sigmas[i], sigmas[i + 1]);
+    }
+    assert_bits_eq(&x, &got.samples, "dpm2m boundary reset");
+    assert_eq!(got.seg_nfe, vec![split, grid.intervals() - split]);
+
+    // and the reset is observable: a whole-trajectory dpm2m run (history
+    // carried across the same knot) must differ
+    let solo = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Dpm2m, &ds, &cfg).unwrap();
+    assert!(
+        solo.samples.iter().zip(&got.samples).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "segmented run should not be identical to the history-carrying run"
+    );
 }
 
 #[test]

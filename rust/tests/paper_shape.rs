@@ -30,7 +30,7 @@ fn ctx() -> Option<ExpContext> {
 fn eval(ctx: &ExpContext, ds: &str, param: Param, solver: SolverSpec,
         schedule: ScheduleSpec, steps: usize) -> (f64, f64) {
     let cfg = SamplerConfig {
-        dataset: ds.into(), param, solver, schedule, steps, class: None,
+        dataset: ds.into(), param, plan: solver.into(), schedule, steps, class: None,
     };
     let r = evaluate(ctx, &cfg).unwrap();
     (r.fd, r.nfe)
@@ -57,7 +57,7 @@ fn adaptive_solver_matches_heun_quality_with_fewer_nfe() {
     let (fh, nh) = eval(&ctx, "cifar10g", Param::vp(), SolverSpec::Heun,
         ScheduleSpec::Edm { rho: 7.0 }, 18);
     let (fa, na) = eval(&ctx, "cifar10g", Param::vp(),
-        SolverSpec::sdm_default("cifar10g", false, true),
+        SolverSpec::sdm_default("cifar10g", false),
         ScheduleSpec::Edm { rho: 7.0 }, 18);
     assert!(na < nh, "adaptive NFE {na} must undercut heun {nh}");
     assert!(na <= nh * 0.95, "expect >=5% NFE saving, got {na} vs {nh}");

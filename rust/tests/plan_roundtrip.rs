@@ -1,0 +1,136 @@
+//! SamplingPlan round-trip and cache-identity guards (DESIGN.md §9).
+//!
+//! A plan string travels CLI → wire protocol → batch group → schedule
+//! cache key. These tests pin each hop: parse/tag round-trips, the
+//! protocol's `"plan"` field resolves to the same plan, and — the
+//! regression the refactor must never lose — segmented plans get their
+//! own schedule-cache entries while single-segment plans keep the exact
+//! pre-plan keys (no aliasing in either direction).
+
+use std::sync::Arc;
+
+use sdm::coordinator::protocol::{PlanRequest, Request};
+use sdm::coordinator::EngineHub;
+use sdm::diffusion::Param;
+use sdm::model::gmm::testmodel::toy;
+use sdm::sampler::SamplingPlan;
+use sdm::schedule::cache::CacheKey;
+use sdm::schedule::ScheduleSpec;
+use sdm::solvers::SolverSpec;
+
+#[test]
+fn plan_strings_round_trip_through_parse_and_tag() {
+    // segmented plan tags are in the plan grammar: parse(tag(p)) == p
+    for s in [
+        "euler@max..2,dpm2m@2..0",
+        "euler@max..2,heun@2..0.5,sdm@0.5..0",
+        "heun@max..0.5,sdm(tau=0.0002)@0.5..0",
+        "euler@max..1.25,pid(rtol=0.01)@1.25..0",
+    ] {
+        let p = SamplingPlan::parse(s).unwrap();
+        let p2 = SamplingPlan::parse(&p.tag()).unwrap();
+        assert_eq!(p.tag(), p2.tag(), "tag must be a fixed point for {s:?}");
+        assert_eq!(p.cache_tag(), p.tag(), "segmented plans carry their full tag");
+    }
+    // bare solver names parse to single-segment plans whose tag is the
+    // legacy solver tag (labels/group keys unchanged)
+    for s in ["euler", "heun", "dpm2m", "sdm", "pid"] {
+        let p = SamplingPlan::parse(s).unwrap();
+        assert!(p.is_single(), "{s:?} should be single-segment");
+        assert_eq!(p.cache_tag(), "", "single-segment plans add no cache discriminator");
+        let p2 = SamplingPlan::parse(&p.tag()).unwrap();
+        assert_eq!(p.tag(), p2.tag());
+    }
+    // whole-range explicit form collapses to the bare solver
+    let p = SamplingPlan::parse("euler@max..0").unwrap();
+    assert!(matches!(p.solo(), Some(SolverSpec::Euler)));
+    assert_eq!(p.tag(), "euler");
+}
+
+#[test]
+fn protocol_plan_field_resolves_to_the_parsed_plan() {
+    let line = r#"{"op":"sample","dataset":"toy","n":2,"plan":"euler@max..2,dpm2m@2..0","steps":8}"#;
+    let Request::Sample(req) = Request::parse(line).unwrap() else {
+        panic!("expected a sample request");
+    };
+    let PlanRequest::Explicit(plan) = &req.plan else {
+        panic!("explicit plan string must parse to Explicit");
+    };
+    assert_eq!(plan.tag(), "euler@max..2,dpm2m@2..0");
+    assert_eq!(plan.tag(), SamplingPlan::parse("euler@max..2,dpm2m@2..0").unwrap().tag());
+
+    // "auto" defers to the hub's instance bucket
+    let line = r#"{"op":"sample","dataset":"toy","n":2,"plan":"auto","steps":8}"#;
+    let Request::Sample(req) = Request::parse(line).unwrap() else {
+        panic!("expected a sample request");
+    };
+    assert!(matches!(req.plan, PlanRequest::Auto));
+
+    // legacy requests (no "plan") keep resolving through "solver"
+    let line = r#"{"op":"sample","dataset":"toy","n":2,"solver":"heun","steps":8}"#;
+    let Request::Sample(req) = Request::parse(line).unwrap() else {
+        panic!("expected a sample request");
+    };
+    let PlanRequest::Explicit(plan) = &req.plan else {
+        panic!("legacy solver must resolve to an explicit single-segment plan");
+    };
+    assert!(matches!(plan.solo(), Some(SolverSpec::Heun)));
+}
+
+#[test]
+fn cache_keys_never_alias_across_plans() {
+    let base = CacheKey {
+        dataset: "toy".into(),
+        param: "edm".into(),
+        tag: "edm(7)".into(),
+        steps: 8,
+        model_fp: 0xABCD,
+        plan: String::new(),
+    };
+    let seg1 = CacheKey { plan: "euler@max..2,dpm2m@2..0".into(), ..base.clone() };
+    let seg2 = CacheKey { plan: "euler@max..2,heun@2..0".into(), ..base.clone() };
+
+    // single-segment keys are byte-identical to the pre-plan encoding
+    assert_eq!(base.encode(), "toy|edm|edm(7)|8|abcd");
+    // segmented keys are distinct from the plain key and from each other
+    let enc: Vec<String> = vec![base.encode(), seg1.encode(), seg2.encode()];
+    for i in 0..enc.len() {
+        for j in 0..enc.len() {
+            if i != j {
+                assert_ne!(enc[i], enc[j], "cache keys alias: {:?}", enc[i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn hub_builds_separate_grids_per_plan_and_shares_the_single_segment_one() {
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let spec = ScheduleSpec::Edm { rho: 7.0 };
+    assert_eq!(hub.cached_schedules(), 0);
+
+    // two single-segment plans (and the legacy entry point) share a grid
+    let g_legacy = hub.schedule("toy", Param::Edm, &spec, 8).unwrap();
+    let g_euler = hub
+        .schedule_for_plan("toy", Param::Edm, &spec, 8, &SamplingPlan::parse("euler").unwrap().cache_tag())
+        .unwrap();
+    let g_heun = hub
+        .schedule_for_plan("toy", Param::Edm, &spec, 8, &SamplingPlan::parse("heun").unwrap().cache_tag())
+        .unwrap();
+    assert_eq!(hub.cached_schedules(), 1, "single-segment plans must share one cached grid");
+    assert_eq!(g_legacy.sigmas, g_euler.sigmas);
+    assert_eq!(g_legacy.sigmas, g_heun.sigmas);
+
+    // a segmented plan adds its own entry; a different segmented plan adds
+    // another (no aliasing), and repeating either is a cache hit
+    let info = hub.info("toy").unwrap();
+    let b = info.sigma_max * 0.025;
+    let p1 = SamplingPlan::parse(&format!("euler@max..{b},dpm2m@{b}..0")).unwrap();
+    let p2 = SamplingPlan::parse(&format!("euler@max..{b},heun@{b}..0")).unwrap();
+    hub.schedule_for_plan("toy", Param::Edm, &spec, 8, &p1.cache_tag()).unwrap();
+    assert_eq!(hub.cached_schedules(), 2);
+    hub.schedule_for_plan("toy", Param::Edm, &spec, 8, &p2.cache_tag()).unwrap();
+    assert_eq!(hub.cached_schedules(), 3);
+    hub.schedule_for_plan("toy", Param::Edm, &spec, 8, &p1.cache_tag()).unwrap();
+    assert_eq!(hub.cached_schedules(), 3, "repeat plan lookups must hit, not rebuild");
+}

@@ -551,6 +551,7 @@ fn closed_loop_loadgen_is_deterministic_given_a_seed() {
         n: 2,
         param: "edm".into(),
         solver: "euler".into(),
+        plan: None,
         schedule: "edm".into(),
         steps,
         priority: None,
