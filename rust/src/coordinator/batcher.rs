@@ -2,7 +2,8 @@
 //! the coordinator's shared worker pool under QoS control.
 //!
 //! Compatible requests (same parameterization, solver, schedule, steps,
-//! conditioning class, QoS class) are merged into a single integration
+//! conditioning class, QoS class, kernel precision tier) are merged into
+//! a single integration
 //! batch up to `max_batch` rows, or flushed after `max_wait` — the
 //! standard latency/throughput dial of serving systems. The batcher
 //! thread itself only *groups*: ready groups are chunked (aligned to the
@@ -32,7 +33,9 @@ use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{PlanRequest, Response, SampleRequest};
 use crate::coordinator::qos::{AdmitGuard, DrrScheduler, Inbox, QosClass, RecvError, ShedCause};
 use crate::metrics::sample_mean_cov;
-use crate::sampler::{generate_plan, generate_pooled_plan, run_plan, RunConfig, SamplingPlan};
+use crate::sampler::{
+    generate_plan_prec, generate_pooled_plan_prec, run_plan_prec, RunConfig, SamplingPlan,
+};
 use crate::util::{ThreadPool, Timer};
 use crate::Result;
 
@@ -91,16 +94,19 @@ impl Default for BatchPolicy {
 /// The plan tag covers both the segmented plan string and the legacy
 /// single-solver tag (identical strings, so old clients group as before);
 /// `auto` requests group together per (param, class) and resolve to one
-/// instance-aware plan at flush.
+/// instance-aware plan at flush. The kernel precision tier is part of
+/// the key: a whole batch integrates at one tier, so mixed-precision
+/// requests must never share a flush (DESIGN.md §10).
 fn group_key(r: &SampleRequest) -> String {
     format!(
-        "{}|{}|{}|{}|{:?}|{}",
+        "{}|{}|{}|{}|{:?}|{}|{}",
         r.param.name(),
         r.plan.tag(),
         r.schedule.tag(),
         r.steps,
         r.class,
-        r.qos.name()
+        r.qos.name(),
+        r.precision.name()
     )
 }
 
@@ -520,7 +526,7 @@ fn run_group(
         // only reachable for a chunk holding one oversized request
         let cfg = RunConfig { rows: max_batch, seed, class: head.class, trace: false };
         let (samples, nfe, _, _) = match pool {
-            Some(p) => generate_pooled_plan(
+            Some(p) => generate_pooled_plan_prec(
                 &model,
                 head.param,
                 &grid,
@@ -529,8 +535,9 @@ fn run_group(
                 &cfg,
                 total,
                 p,
+                head.precision,
             )?,
-            None => generate_plan(
+            None => generate_plan_prec(
                 model.as_ref(),
                 head.param,
                 &grid,
@@ -538,12 +545,14 @@ fn run_group(
                 info,
                 &cfg,
                 total,
+                head.precision,
             )?,
         };
         Ok((samples, nfe, info.dim))
     } else {
         let cfg = RunConfig { rows: total, seed, class: head.class, trace: false };
-        let out = run_plan(model.as_ref(), head.param, &grid, &plan, info, &cfg)?;
+        let out =
+            run_plan_prec(model.as_ref(), head.param, &grid, &plan, info, &cfg, head.precision)?;
         Ok((out.samples, out.nfe as f64, info.dim))
     }
 }
@@ -637,6 +646,26 @@ mod tests {
         assert_ne!(group_key(&hi), group_key(&lo));
         let rx1 = submit(&tx, hi);
         let rx2 = submit(&tx, lo);
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 1),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn different_kernel_precisions_never_share_a_batch() {
+        // a flush integrates at one precision tier, so an exact and a
+        // fast-f32 request must land in separate batches even when every
+        // other key component matches
+        let (tx, _m) = spawn_batcher();
+        let mut fast = mk_request(4, "euler");
+        fast.precision = crate::model::KernelPrecision::FastF32;
+        let exact = mk_request(4, "euler");
+        assert_ne!(group_key(&fast), group_key(&exact));
+        let rx1 = submit(&tx, fast);
+        let rx2 = submit(&tx, exact);
         for rx in [rx1, rx2] {
             match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
                 Response::SampleOk { batched_with, .. } => assert_eq!(batched_with, 1),

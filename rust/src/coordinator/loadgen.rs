@@ -44,6 +44,10 @@ pub struct RequestTemplate {
     pub priority: Option<String>,
     /// per-request deadline budget in milliseconds.
     pub deadline_ms: Option<f64>,
+    /// kernel precision tier (wire field `kernel_precision`:
+    /// `"exact"` / `"fast-f64"` / `"fast-f32"`); `None` = server default
+    /// (exact).
+    pub kernel_precision: Option<String>,
 }
 
 impl RequestTemplate {
@@ -58,6 +62,9 @@ impl RequestTemplate {
         }
         if let Some(d) = self.deadline_ms {
             extra.push_str(&format!(r#","deadline_ms":{d}"#));
+        }
+        if let Some(p) = &self.kernel_precision {
+            extra.push_str(&format!(r#","kernel_precision":"{p}""#));
         }
         format!(
             r#"{{"op":"sample","dataset":"{}","n":{},"param":"{}","solver":"{}","schedule":"{}","steps":{},"seed":{}{}}}"#,
@@ -87,6 +94,7 @@ impl TraceProfile {
             plan: None,
             priority: None,
             deadline_ms: None,
+            kernel_precision: None,
         };
         TraceProfile {
             templates: vec![
@@ -119,6 +127,7 @@ impl TraceProfile {
             plan: None,
             priority: None,
             deadline_ms: None,
+            kernel_precision: None,
         };
         TraceProfile {
             templates: vec![
@@ -496,6 +505,7 @@ mod tests {
             plan: None,
             priority: None,
             deadline_ms: None,
+            kernel_precision: None,
         }
     }
 
@@ -527,6 +537,21 @@ mod tests {
             crate::coordinator::protocol::Request::Sample(s) => {
                 assert_eq!(s.qos, crate::coordinator::qos::QosClass::Interactive);
                 assert_eq!(s.deadline_ms, Some(250.0));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn template_line_carries_kernel_precision_field() {
+        let mut t = toy_template(4, 6);
+        t.kernel_precision = Some("fast-f32".into());
+        let line = t.line(5);
+        assert!(line.contains(r#""kernel_precision":"fast-f32""#), "{line}");
+        let parsed = crate::coordinator::protocol::Request::parse(&line).unwrap();
+        match parsed {
+            crate::coordinator::protocol::Request::Sample(s) => {
+                assert_eq!(s.precision, crate::model::KernelPrecision::FastF32);
             }
             _ => panic!(),
         }

@@ -19,6 +19,12 @@
 //! Sample responses carry the Gaussian summary of the generated rows, the
 //! NFE spent, and optionally the raw samples.
 //!
+//! A request may also carry `"kernel_precision"`: `"exact"` (default),
+//! `"fast-f64"`, or `"fast-f32"`, selecting the kernel precision tier
+//! ([`crate::model::KernelPrecision`]) the batch is integrated at.
+//! Precision joins the batcher group key, so mixed-precision requests
+//! never share a flush (DESIGN.md §10).
+//!
 //! QoS fields (`coordinator::qos`): `priority` is an optional class
 //! (`interactive` > `batch` (default) > `background`) ordering flushes
 //! under contention; `deadline_ms` is an optional wall-clock budget from
@@ -46,6 +52,7 @@ use anyhow::bail;
 
 use crate::coordinator::qos::QosClass;
 use crate::diffusion::{CurvatureClock, Param};
+use crate::model::KernelPrecision;
 use crate::sampler::SamplingPlan;
 use crate::schedule::ScheduleSpec;
 use crate::solvers::{ChurnParams, LambdaKind, SolverSpec};
@@ -100,6 +107,9 @@ pub struct SampleRequest {
     /// wall-clock budget from admission, in milliseconds; expired
     /// requests are shed pre-flush with a `deadline_exceeded` reply.
     pub deadline_ms: Option<f64>,
+    /// kernel precision tier (wire field `kernel_precision`; default
+    /// exact). Part of the batch group key — see DESIGN.md §10.
+    pub precision: KernelPrecision,
 }
 
 impl Request {
@@ -155,6 +165,10 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
             anyhow::ensure!(ms > 0.0 && ms.is_finite(), "deadline_ms out of range");
             Some(ms)
         }
+    };
+    let precision = match v.get("kernel_precision") {
+        Ok(Json::Null) | Err(_) => KernelPrecision::Exact,
+        Ok(p) => KernelPrecision::from_name(p.as_str()?)?,
     };
 
     // plan / solver. `plan` wins when both are present; the legacy
@@ -232,6 +246,7 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
         return_samples,
         qos,
         deadline_ms,
+        precision,
     })
 }
 
@@ -533,6 +548,27 @@ mod tests {
         .is_err());
         assert!(Request::parse(
             r#"{"op":"sample","dataset":"x","n":4,"deadline_ms":0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_kernel_precision_with_default() {
+        let r = Request::parse(r#"{"op":"sample","dataset":"x","n":4}"#).unwrap();
+        match r {
+            Request::Sample(s) => assert_eq!(s.precision, KernelPrecision::Exact),
+            _ => panic!(),
+        }
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"kernel_precision":"fast-f32"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => assert_eq!(s.precision, KernelPrecision::FastF32),
+            _ => panic!(),
+        }
+        assert!(Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"kernel_precision":"double"}"#
         )
         .is_err());
     }

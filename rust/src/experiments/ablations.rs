@@ -85,7 +85,15 @@ mod tests {
     #[test]
     fn clock_ablation_runs_on_toy() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        let ctx = ExpContext { samples: 512, rows: 256, seed: 3, threads: 2, hub, pool: None };
+        let ctx = ExpContext {
+            samples: 512,
+            rows: 256,
+            seed: 3,
+            threads: 2,
+            hub,
+            pool: None,
+            precision: Default::default(),
+        };
         let rows = run_clock_ablation(&ctx, "toy").unwrap();
         assert_eq!(rows.len(), 2 * 9);
         // under EDM-native vs sigma clock the gate coincides for EDM param;

@@ -12,6 +12,7 @@ use std::io::Write;
 
 use crate::diffusion::Param;
 use crate::experiments::ExpContext;
+use crate::model::gmm::XddotScratch;
 use crate::model::uncond_mask;
 use crate::sampler::{run_sampler, RunConfig};
 use crate::schedule::{pilot_measure, ScheduleSpec};
@@ -42,9 +43,12 @@ pub fn fig2(ctx: &ExpContext, steps: usize) -> Result<Vec<(String, f64, f64, f64
             x32.iter().map(|&v| v as f64).collect()
         };
         let mut xddot_at: Vec<f64> = Vec::new();
+        // ẍ intermediates hoisted out of the per-interval loop
+        let mut ws = XddotScratch::default();
+        let mut acc = vec![0.0f64; info.dim];
         for i in 0..grid.intervals() {
             let (t_i, t_next) = (grid.sigmas[i], grid.sigmas[i + 1]);
-            let acc = oracle.xddot(Param::Edm, t_i, &x, &mask);
+            oracle.xddot_into(Param::Edm, t_i, &x, &mask, &mut ws, &mut acc);
             xddot_at.push(acc.iter().map(|v| v * v).sum::<f64>().sqrt());
             let d = oracle.denoise_row(&x, t_i, &mask);
             for j in 0..info.dim {

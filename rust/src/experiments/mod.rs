@@ -39,11 +39,25 @@ pub struct ExpContext {
     /// via [`engine::generate_pooled`] (identical output, concurrent
     /// execution), and [`evaluate_all`] reuses it for config parallelism.
     pub pool: Option<Arc<crate::util::ThreadPool>>,
+    /// kernel precision tier every evaluation runs at (CLI
+    /// `--kernel-precision`; `Exact` default is bit-identical to the
+    /// pre-tier harness). Deliberately not part of
+    /// [`SamplerConfig`]/`label()` so seeds and cache keys stay
+    /// byte-identical across tiers — see DESIGN.md §10.
+    pub precision: crate::model::KernelPrecision,
 }
 
 impl ExpContext {
     pub fn new(hub: Arc<EngineHub>) -> ExpContext {
-        ExpContext { hub, samples: 8192, rows: 256, seed: 2026, threads: 8, pool: None }
+        ExpContext {
+            hub,
+            samples: 8192,
+            rows: 256,
+            seed: 2026,
+            threads: 8,
+            pool: None,
+            precision: Default::default(),
+        }
     }
 
     /// Attach a freshly built pool sized to `self.threads`.
@@ -86,7 +100,7 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
         trace: false,
     };
     let (samples, nfe, _, seg_nfe) = match &ctx.pool {
-        Some(pool) => engine::generate_pooled_plan(
+        Some(pool) => engine::generate_pooled_plan_prec(
             &model,
             cfg.param,
             &grid,
@@ -95,8 +109,9 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
             &run_cfg,
             ctx.samples,
             pool,
+            ctx.precision,
         )?,
-        None => engine::generate_plan(
+        None => engine::generate_plan_prec(
             model.as_ref(),
             cfg.param,
             &grid,
@@ -104,6 +119,7 @@ pub fn evaluate(ctx: &ExpContext, cfg: &SamplerConfig) -> Result<RowResult> {
             &info,
             &run_cfg,
             ctx.samples,
+            ctx.precision,
         )?,
     };
 
@@ -215,7 +231,15 @@ mod tests {
 
     fn ctx() -> ExpContext {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        ExpContext { hub, samples: 2048, rows: 256, seed: 7, threads: 4, pool: None }
+        ExpContext {
+            hub,
+            samples: 2048,
+            rows: 256,
+            seed: 7,
+            threads: 4,
+            pool: None,
+            precision: Default::default(),
+        }
     }
 
     #[test]

@@ -118,16 +118,36 @@ pub fn run(
     Ok(out)
 }
 
-/// Artifact-free CI smoke: one budget on the built-in toy dataset, small
+/// Artifact-free CI smoke: one budget on the built-in toy dataset (plus
+/// a SIMD-eligible synthetic when a fast tier is requested), small
 /// sample count, every family (including both segmented plans and the
 /// PID arm) must produce a finite frontier point. Exercised by
-/// `sdm pareto --smoke` so the plan machinery stays wired end to end.
-pub fn smoke() -> Result<()> {
+/// `sdm pareto --smoke [--kernel-precision <tier>]` so the plan
+/// machinery — and, at a fast tier, the SIMD dispatch under it — stays
+/// wired end to end.
+pub fn smoke(precision: crate::model::KernelPrecision) -> Result<()> {
     use crate::coordinator::EngineHub;
-    use crate::model::gmm::testmodel::toy;
+    use crate::model::gmm::testmodel::{synthetic, toy};
+    use crate::model::KernelPrecision;
     use std::sync::Arc;
-    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-    let ctx = ExpContext { samples: 512, rows: 256, seed: 11, threads: 4, hub, pool: None };
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info, synthetic(16, 64).info]));
+    let ctx = ExpContext {
+        samples: 512,
+        rows: 256,
+        seed: 11,
+        threads: 4,
+        hub,
+        pool: None,
+        precision,
+    };
+    if precision != KernelPrecision::Exact {
+        // the toy model is below the SIMD eligibility floor; run one
+        // budget on an eligible synthetic so the fast path actually fires
+        let pts = run(&ctx, "synth16x64", Param::Edm, &[8])?;
+        for p in &pts {
+            anyhow::ensure!(p.fd.is_finite() && p.nfe > 0.0, "degenerate fast point {p:?}");
+        }
+    }
     let pts = run(&ctx, "toy", Param::Edm, &[8])?;
     anyhow::ensure!(pts.len() >= 8, "smoke expected every family to report");
     for p in &pts {
@@ -150,7 +170,15 @@ mod tests {
     #[test]
     fn frontier_shapes() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        let ctx = ExpContext { samples: 2048, rows: 256, seed: 5, threads: 4, hub, pool: None };
+        let ctx = ExpContext {
+            samples: 2048,
+            rows: 256,
+            seed: 5,
+            threads: 4,
+            hub,
+            pool: None,
+            precision: Default::default(),
+        };
         let pts = run(&ctx, "toy", Param::Edm, &[8, 16]).unwrap();
         assert_eq!(pts.len(), 16); // 8 families x 2 budgets
         // more steps should not hurt quality within a family (weak check:
@@ -174,6 +202,11 @@ mod tests {
 
     #[test]
     fn smoke_runs_clean() {
-        smoke().unwrap();
+        smoke(Default::default()).unwrap();
+    }
+
+    #[test]
+    fn smoke_runs_clean_at_fast_f32() {
+        smoke(crate::model::KernelPrecision::FastF32).unwrap();
     }
 }

@@ -131,7 +131,15 @@ mod tests {
     #[test]
     fn run_writes_tsvs() {
         let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
-        let ctx = ExpContext { samples: 512, rows: 256, seed: 3, threads: 2, hub, pool: None };
+        let ctx = ExpContext {
+            samples: 512,
+            rows: 256,
+            seed: 3,
+            threads: 2,
+            hub,
+            pool: None,
+            precision: Default::default(),
+        };
         let dir = std::env::temp_dir().join("sdm_qualitative_test");
         run(&ctx, "toy", Param::Edm, &dir).unwrap();
         assert!(dir.join("toy_edm_truth.tsv").exists());

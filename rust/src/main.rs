@@ -74,12 +74,26 @@ fn load_hub(args: &Args) -> Result<Arc<EngineHub>> {
 }
 
 fn exp_context(args: &Args) -> Result<ExpContext> {
-    let hub = load_hub(args)?;
+    // --toy: artifact-free hub over the built-in toy + synth16x64
+    // workloads (smoke runs in bare containers, e.g. the CI fast-kernel
+    // leg); checked before load_hub so no artifact dir is required
+    let hub = if args.has("toy") {
+        Arc::new(EngineHub::from_infos(vec![
+            sdm::model::gmm::testmodel::toy().info,
+            sdm::model::gmm::testmodel::synthetic(16, 64).info,
+        ]))
+    } else {
+        load_hub(args)?
+    };
     let mut ctx = ExpContext::new(hub);
     ctx.samples = args.get_usize("samples", 8192)?;
     ctx.rows = args.get_usize("rows", 256)?;
     ctx.seed = args.get_u64("seed", 2026)?;
     ctx.threads = args.get_usize("threads", 8)?;
+    // opt-in fast kernel tier (DESIGN.md §10); exact is the default and
+    // stays bit-identical to the seed kernel
+    ctx.precision =
+        sdm::model::KernelPrecision::from_name(&args.get("kernel-precision", "exact"))?;
     // shared worker pool: config sweeps and row-sharded generation both
     // draw from it (identical numerics to the serial path)
     Ok(ctx.with_pool())
@@ -148,8 +162,11 @@ fn run() -> Result<()> {
             // family (static, segmented, PID) — checked before loading
             // any hub so it runs in bare containers
             if args.has("smoke") {
+                let precision = sdm::model::KernelPrecision::from_name(
+                    &args.get("kernel-precision", "exact"),
+                )?;
                 args.finish()?;
-                experiments::pareto::smoke()?;
+                experiments::pareto::smoke(precision)?;
                 return Ok(());
             }
             let ctx = exp_context(&args)?;
@@ -427,6 +444,7 @@ fn loadgen(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 8)?;
     let priority = args.opt("priority");
     let deadline_ms = args.opt("deadline-ms").map(|v| v.parse::<f64>()).transpose()?;
+    let kernel_precision = args.opt("kernel-precision");
     args.finish()?;
 
     let think = std::time::Duration::from_secs_f64(think_ms.max(0.0) / 1e3);
@@ -440,6 +458,7 @@ fn loadgen(args: &Args) -> Result<()> {
         steps,
         priority: priority.clone(),
         deadline_ms,
+        kernel_precision: kernel_precision.clone(),
     };
     let profile = match (&dataset, in_process) {
         (Some(ds), _) => TraceProfile::single(template(ds.clone())),
@@ -447,10 +466,12 @@ fn loadgen(args: &Args) -> Result<()> {
         (None, false) => TraceProfile::standard(),
     };
 
-    // in-process server over the native toy workload
+    // in-process server over the native toy workloads (synth16x64 is the
+    // SIMD-eligible one, for --kernel-precision smoke runs)
     let server = if in_process {
         let hub = Arc::new(EngineHub::from_infos(vec![
             sdm::model::gmm::testmodel::toy().info,
+            sdm::model::gmm::testmodel::synthetic(16, 64).info,
         ]));
         Some(Server::start(hub, ServerConfig::default())?)
     } else {
@@ -614,7 +635,12 @@ fn print_help() {
          \x20               --plan \"euler@max..2,dpm2m@2..0\" runs a segmented\n\
          \x20               SamplingPlan [DESIGN.md S9] and wins over --solver;\n\
          \x20               --plan-search ranks candidate plans by NFE within\n\
-         \x20               5% of the best FD for this dataset/param/budget)\n\
+         \x20               5% of the best FD for this dataset/param/budget;\n\
+         \x20               --kernel-precision exact|fast-f64|fast-f32 selects\n\
+         \x20               the denoiser tier [DESIGN.md S10]: exact is\n\
+         \x20               bit-identical, fast tiers take the SIMD/tiled\n\
+         \x20               kernel on eligible models; --toy runs on the\n\
+         \x20               built-in toy+synth16x64 hub, no artifacts needed)\n\
          \x20 schedule      print a built sigma grid (--dataset --schedule --steps)\n\
          \x20 table1        Table 1  (unconditional FD/NFE grid)\n\
          \x20 table4        Table 4  (conditional)\n\
@@ -625,7 +651,9 @@ fn print_help() {
          \x20 fig3          eta_t budget over steps\n\
          \x20 pareto        quality-vs-NFE frontier: static solvers vs segmented\n\
          \x20               plans vs PID, with per-segment NFE attribution\n\
-         \x20               (--smoke: artifact-free toy run for CI)\n\
+         \x20               (--smoke: artifact-free toy run for CI;\n\
+         \x20               --smoke --kernel-precision fast-f32 also drives\n\
+         \x20               the SIMD kernel on an eligible synthetic)\n\
          \x20 qualitative   sample dumps (Figs. 5-9 analogue)\n\
          \x20 bench-client  drive a running server (--addr --requests --concurrency\n\
          \x20               [--open-loop-rps R  Poisson offered-load mode])\n\
@@ -639,9 +667,11 @@ fn print_help() {
          \x20               profile: --dataset D --n N --param P --solver S\n\
          \x20               --plan \"euler@max..1,heun@1..0\" (wins over --solver)\n\
          \x20               --schedule C --steps K --priority CLS --deadline-ms MS\n\
+         \x20               --kernel-precision exact|fast-f64|fast-f32\n\
          \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
          \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\
          \x20 ablate-clock  curvature-clock ablation; ablate-refgrid: Alg.1 warm-start\n\n\
-         common flags: --artifacts DIR --backend pjrt|native --samples N --seed S"
+         common flags: --artifacts DIR --backend pjrt|native --samples N --seed S\n\
+         \x20             --kernel-precision exact|fast-f64|fast-f32 --toy"
     );
 }

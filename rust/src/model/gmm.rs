@@ -16,7 +16,7 @@ use std::sync::{mpsc, Arc};
 
 use crate::diffusion::Param;
 use crate::linalg::Mat;
-use crate::model::kernel::{KernelScratch, MaskRef};
+use crate::model::kernel::{simd, KernelPrecision, KernelScratch, MaskRef};
 use crate::model::{DatasetInfo, Denoiser, EvalOut};
 use crate::util::{Rng, ThreadPool};
 use crate::Result;
@@ -208,6 +208,25 @@ impl GmmModel {
     /// the test suite verifies this form against finite differences of
     /// the true flow for all three parameterizations.
     pub fn xddot(&self, p: Param, t: f64, x: &[f64], mask: &[f32]) -> Vec<f64> {
+        let mut ws = XddotScratch::default();
+        let mut out = vec![0.0f64; self.info.dim];
+        self.xddot_into(p, t, x, mask, &mut ws, &mut out);
+        out
+    }
+
+    /// [`GmmModel::xddot`] into caller buffers: `ws` carries the
+    /// dim-length intermediates (x̂, ẋ, the Jacobian matvec product) so
+    /// per-interval loops — fig. 2 evaluates ẍ once per schedule
+    /// interval — hoist them instead of re-allocating every call.
+    pub fn xddot_into(
+        &self,
+        p: Param,
+        t: f64,
+        x: &[f64],
+        mask: &[f32],
+        ws: &mut XddotScratch,
+        out: &mut [f64],
+    ) {
         let dim = self.info.dim;
         let sigma = p.sigma(t);
         let s = p.s(t);
@@ -216,28 +235,29 @@ impl GmmModel {
         let sigdot = p.sigma_dot(t);
         let sigddot = p.sigma_ddot(t);
 
-        let xhat: Vec<f64> = x.iter().map(|v| v / s).collect();
-        let d = self.denoise_row(&xhat, sigma, mask);
-        let jd = self.jacobian(&xhat, sigma, mask);
-        let dsig = self.d_sigma(&xhat, sigma, mask);
+        ws.ensure(dim);
+        for j in 0..dim {
+            ws.xhat[j] = x[j] / s;
+        }
+        let d = self.denoise_row(&ws.xhat, sigma, mask);
+        let jd = self.jacobian(&ws.xhat, sigma, mask);
+        let dsig = self.d_sigma(&ws.xhat, sigma, mask);
 
         let c1 = sdot / s;
         let c2 = sigdot / sigma;
         let c1dot = sddot / s - c1 * c1;
         let c2dot = sigddot / sigma - c2 * c2;
 
-        let xdot: Vec<f64> =
-            (0..dim).map(|j| c1 * x[j] + c2 * (x[j] - s * d[j])).collect();
-        let xhat_dot: Vec<f64> =
-            (0..dim).map(|j| xdot[j] / s - x[j] * sdot / (s * s)).collect();
-        let jd_xhd = matvec(&jd, &xhat_dot);
-        (0..dim)
-            .map(|j| {
-                let ddot = jd_xhd[j] + dsig[j] * sigdot;
-                c1dot * x[j] + c1 * xdot[j] + c2dot * (x[j] - s * d[j])
-                    + c2 * (xdot[j] - sdot * d[j] - s * ddot)
-            })
-            .collect()
+        for j in 0..dim {
+            ws.xdot[j] = c1 * x[j] + c2 * (x[j] - s * d[j]);
+            ws.xhat_dot[j] = ws.xdot[j] / s - x[j] * sdot / (s * s);
+        }
+        matvec_into(&jd, &ws.xhat_dot, &mut ws.jd_xhd);
+        for j in 0..dim {
+            let ddot = ws.jd_xhd[j] + dsig[j] * sigdot;
+            out[j] = c1dot * x[j] + c1 * ws.xdot[j] + c2dot * (x[j] - s * d[j])
+                + c2 * (ws.xdot[j] - sdot * d[j] - s * ddot);
+        }
     }
 
     /// Draw `n` samples from the data distribution (optionally restricted
@@ -308,9 +328,33 @@ impl GmmModel {
     }
 }
 
-fn matvec(m: &Mat, v: &[f64]) -> Vec<f64> {
+/// Reusable intermediates for [`GmmModel::xddot_into`], hoistable out of
+/// per-interval figure loops.
+#[derive(Clone, Debug, Default)]
+pub struct XddotScratch {
+    xhat: Vec<f64>,
+    xdot: Vec<f64>,
+    xhat_dot: Vec<f64>,
+    jd_xhd: Vec<f64>,
+}
+
+impl XddotScratch {
+    fn ensure(&mut self, dim: usize) {
+        self.xhat.resize(dim, 0.0);
+        self.xdot.resize(dim, 0.0);
+        self.xhat_dot.resize(dim, 0.0);
+        self.jd_xhd.resize(dim, 0.0);
+    }
+}
+
+/// `out = M·v`, accumulating into the caller's buffer: the Jacobian
+/// matvec sits on the ẍ path, which figure loops evaluate once per
+/// schedule interval — no per-call `Vec`.
+fn matvec_into(m: &Mat, v: &[f64], out: &mut [f64]) {
     let n = m.n;
-    (0..n).map(|i| (0..n).map(|j| m.at(i, j) * v[j]).sum()).collect()
+    for i in 0..n {
+        out[i] = (0..n).map(|j| m.at(i, j) * v[j]).sum();
+    }
 }
 
 /// Hoist the σ-only per-component terms of the posterior into `sc`:
@@ -555,6 +599,18 @@ impl Denoiser for GmmModel {
         let s2 = (sigma as f64) * (sigma as f64);
         precompute_sigma_terms(&self.info, s2, scratch);
         let (ar, br) = (a as f64, b as f64);
+        // Opt-in fast tiers take the SIMD tile kernel (reusing the σ-term
+        // precompute above) and bypass row-sharding — eligibility
+        // guarantees enough per-row work for the serial tile loop to
+        // amortize, and sharded fast tiles remain future work
+        // (DESIGN.md §10). Ineligible (tiny) models silently stay on the
+        // exact path regardless of the requested tier.
+        let precision = scratch.precision();
+        if precision != KernelPrecision::Exact && simd::eligible(dim, k) {
+            return simd::denoise_uniform_simd(
+                &self.info, xhat, rows, s2, ar, br, mask, precision, scratch, out,
+            );
+        }
         if let Some(cfg) = &self.shard {
             // Sharding is bit-identical to the serial loop, so choosing
             // between them per call is free of numeric consequences.
@@ -760,6 +816,63 @@ pub mod testmodel {
             logw,
             tau2,
             classes: vec![0, 1],
+            exact_mean: mean,
+            exact_cov: cov,
+        })
+    }
+
+    /// Deterministic synthetic model of arbitrary shape — the workload
+    /// generator for the fast-tier parity harness, the bench dim×K
+    /// sweep, and artifact-free CI smokes (`--toy` hubs). `k` components
+    /// with seeded-random means/weights/widths over 4 class labels, and
+    /// exact moments from the mixture formula; the same `(dim, k)`
+    /// always builds the identical model (name `synth{dim}x{k}`).
+    pub fn synthetic(dim: usize, k: usize) -> GmmModel {
+        assert!(dim > 0 && k > 0, "synthetic model needs dim, k >= 1");
+        let mut rng = Rng::new(0xC0FFEE ^ ((dim as u64) << 16) ^ k as u64);
+        let mut mus = vec![0.0f64; k * dim];
+        for v in &mut mus {
+            *v = rng.uniform_range(-3.0, 3.0);
+        }
+        let mut w: Vec<f64> = (0..k).map(|_| rng.uniform_range(0.2, 1.0)).collect();
+        let z: f64 = w.iter().sum();
+        for v in &mut w {
+            *v /= z;
+        }
+        let logw: Vec<f64> = w.iter().map(|v| v.ln()).collect();
+        let tau2: Vec<f64> = (0..k).map(|_| rng.uniform_range(0.05, 0.3)).collect();
+        let n_classes = 4.min(k);
+        let classes: Vec<usize> = (0..k).map(|c| c % n_classes).collect();
+        let mut mean = vec![0.0f64; dim];
+        for c in 0..k {
+            for j in 0..dim {
+                mean[j] += w[c] * mus[c * dim + j];
+            }
+        }
+        let mut cov = Mat::zeros(dim);
+        for c in 0..k {
+            for i in 0..dim {
+                cov[(i, i)] += w[c] * tau2[c];
+                for j in 0..dim {
+                    cov[(i, j)] +=
+                        w[c] * (mus[c * dim + i] - mean[i]) * (mus[c * dim + j] - mean[j]);
+                }
+            }
+        }
+        GmmModel::new(DatasetInfo {
+            name: format!("synth{dim}x{k}"),
+            paper_name: format!("Synthetic {dim}x{k}"),
+            dim,
+            k,
+            n_classes,
+            sigma_min: 0.002,
+            sigma_max: 80.0,
+            rho: 7.0,
+            default_steps: 12,
+            mus,
+            logw,
+            tau2,
+            classes,
             exact_mean: mean,
             exact_cov: cov,
         })
@@ -1030,6 +1143,45 @@ mod tests {
         for (i, (x, y)) in a.iter().zip(b).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn synthetic_model_is_deterministic_and_well_formed() {
+        let a = testmodel::synthetic(16, 64);
+        let b = testmodel::synthetic(16, 64);
+        assert_eq!(a.info.name, "synth16x64");
+        assert_eq!(a.info.mus, b.info.mus);
+        assert_eq!(a.info.logw, b.info.logw);
+        assert_eq!(a.info.tau2, b.info.tau2);
+        let wsum: f64 = a.info.weights().iter().sum();
+        assert!((wsum - 1.0).abs() < 1e-9, "weights sum {wsum}");
+        assert_eq!(a.info.classes.len(), 64);
+        assert_eq!(a.info.exact_mean.len(), 16);
+        // a different shape is a different model
+        assert_ne!(testmodel::synthetic(2, 64).info.mus, testmodel::synthetic(2, 8).info.mus);
+    }
+
+    #[test]
+    fn fast_tier_on_ineligible_model_stays_bit_exact() {
+        // toy (dim 3, k 2) sits below the SIMD eligibility floor: a
+        // fast-tier request must silently run the exact kernel
+        let m = toy();
+        let rows = 9;
+        let mut rng = Rng::new(31);
+        let mut xhat = vec![0.0f32; rows * 3];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let row = uncond_mask_row(2);
+        let mut exact = EvalOut::default();
+        let mut fast = EvalOut::default();
+        let mut sc = KernelScratch::new();
+        m.denoise_v_uniform_into(&xhat, rows, 0.8, 0.5, -0.6, MaskRef::Row(&row), &mut exact, &mut sc)
+            .unwrap();
+        sc.set_precision(KernelPrecision::FastF32);
+        m.denoise_v_uniform_into(&xhat, rows, 0.8, 0.5, -0.6, MaskRef::Row(&row), &mut fast, &mut sc)
+            .unwrap();
+        assert_bits_eq(&exact.d, &fast.d, "d");
+        assert_bits_eq(&exact.v, &fast.v, "v");
+        assert_bits_eq(&exact.vnorm2, &fast.vnorm2, "vnorm2");
     }
 
     #[test]

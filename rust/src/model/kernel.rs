@@ -23,8 +23,65 @@
 //! determinism tests, the schedule cache, and pooled-vs-serial equality
 //! all rely on it. Only row-independent quantities whose computation is
 //! *unchanged* (merely hoisted) may be precomputed. See DESIGN.md §7.
+//!
+//! **Precision tiers.** [`KernelPrecision`] relaxes that contract on an
+//! explicit opt-in basis: `Exact` (the default) routes through the
+//! bit-exact row kernel above; `FastF64` and `FastF32` dispatch to the
+//! SIMD-lane, cache-blocked tile kernel in [`simd`], which re-associates
+//! accumulation (and, for `FastF32`, demotes row arithmetic to f32) in
+//! exchange for throughput. Fast tiers are verified against the exact
+//! kernel by tolerance bounds, not bit equality
+//! (rust/tests/kernel_precision.rs; DESIGN.md §10).
+
+pub mod simd;
 
 use crate::model::EvalOut;
+
+/// Accumulation/vectorization tier of the uniform-σ denoise kernel.
+///
+/// - `Exact` — the bit-identity path: scalar f64 rows, fixed accumulation
+///   order. The only tier the determinism contract (schedule cache,
+///   pooled-vs-serial equality, golden runs) applies to.
+/// - `FastF64` — SIMD-lane/tiled kernel, f64 arithmetic: may re-associate
+///   sums (lane-parallel distance and accumulate folds, hoisted
+///   `0.5/v_k` reciprocals) but keeps every operand in f64. Per-element
+///   relative error vs `Exact` is bounded at 1e-6 by the parity harness.
+/// - `FastF32` — same kernel shape with f32 operands and accumulators
+///   (model constants demoted once per call). Bounded at 5e-2.
+///
+/// Tiny models (below [`simd::eligible`]) always run the exact kernel —
+/// requesting a fast tier is a hint, not a guarantee. Only the native
+/// GMM oracle honors the tier; the PJRT artifact computes in whatever
+/// precision it was compiled with and ignores it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelPrecision {
+    #[default]
+    Exact,
+    FastF64,
+    FastF32,
+}
+
+impl KernelPrecision {
+    /// Wire/CLI name (`exact` | `fast-f64` | `fast-f32`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPrecision::Exact => "exact",
+            KernelPrecision::FastF64 => "fast-f64",
+            KernelPrecision::FastF32 => "fast-f32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> crate::Result<KernelPrecision> {
+        match s {
+            "exact" => Ok(KernelPrecision::Exact),
+            "fast-f64" | "fast_f64" => Ok(KernelPrecision::FastF64),
+            "fast-f32" | "fast_f32" => Ok(KernelPrecision::FastF32),
+            other => anyhow::bail!(
+                "unknown kernel precision {other:?} (expected exact|fast-f64|fast-f32)"
+            ),
+        }
+    }
+}
 
 /// Component-logit mask argument for the fast eval entry points.
 ///
@@ -94,11 +151,28 @@ pub struct KernelScratch {
     pub(crate) b_v: Vec<f32>,
     /// shared mask row tiled to `[rows·k]`.
     pub(crate) mask_full: Vec<f32>,
+    // --- precision tier -------------------------------------------------
+    /// requested kernel tier for uniform-σ evals (default `Exact`); the
+    /// native oracle dispatches to the SIMD tile kernel when a fast tier
+    /// is requested and the model clears [`simd::eligible`].
+    precision: KernelPrecision,
+    /// tile-kernel workspaces (empty until a fast tier actually runs).
+    pub(crate) simd: simd::SimdScratch,
 }
 
 impl KernelScratch {
     pub fn new() -> KernelScratch {
         KernelScratch::default()
+    }
+
+    /// Select the kernel tier used by subsequent uniform-σ evals through
+    /// this scratch. Callers that never touch this get `Exact`.
+    pub fn set_precision(&mut self, p: KernelPrecision) {
+        self.precision = p;
+    }
+
+    pub fn precision(&self) -> KernelPrecision {
+        self.precision
     }
 
     /// Size the f64 workspace and precompute buffers for a `[dim, k]`
@@ -213,5 +287,23 @@ mod tests {
         // shrinking rows shrinks the staged broadcasts too
         sc.fill_broadcast(2, 2, 9.0, 0.0, 0.0, MaskRef::Row(&row));
         assert_eq!(sc.sig_v.len(), 2);
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [
+            KernelPrecision::Exact,
+            KernelPrecision::FastF64,
+            KernelPrecision::FastF32,
+        ] {
+            assert_eq!(KernelPrecision::from_name(p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            KernelPrecision::from_name("fast_f32").unwrap(),
+            KernelPrecision::FastF32
+        );
+        assert!(KernelPrecision::from_name("double").is_err());
+        // a fresh scratch defaults to the bit-exact tier
+        assert_eq!(KernelScratch::new().precision(), KernelPrecision::Exact);
     }
 }

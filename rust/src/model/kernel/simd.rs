@@ -1,0 +1,682 @@
+//! SIMD-lane, cache-blocked tile kernel for the uniform-σ denoise +
+//! velocity eval (the opt-in fast tiers of [`KernelPrecision`]).
+//!
+//! The exact row kernel (`gmm::row_kernel`) is pinned bit-for-bit and so
+//! cannot re-associate a single sum. This module is the explicitly
+//! *unpinned* sibling: the same math — posterior logits, max-subtracted
+//! softmax responsibilities, μ-weighted accumulate, fused velocity fold —
+//! restructured for throughput:
+//!
+//! - **Portable lanes.** Fixed-width lane structs ([`F64x4`]/[`F32x8`])
+//!   over array chunks, plain stable Rust (no nightly `std::simd`, no
+//!   new deps — consistent with the vendoring policy). The compiler maps
+//!   the fixed-length lane loops onto whatever vector ISA the target has;
+//!   the structs exist to make the re-association explicit and testable.
+//!   `exp` stays scalar per component (there is no vendored vector exp,
+//!   and the softmax loop is O(k) against the O(k·dim) distance and
+//!   accumulate loops the lanes target).
+//! - **R×C tiling.** Rows are processed in tiles of [`ROW_TILE`] against
+//!   component blocks of [`COMP_TILE`], with the component loop outside
+//!   the row loop in both the distance and accumulate passes — each μ
+//!   block is loaded once per row tile and stays in L1 while all
+//!   `ROW_TILE` rows stream against it (≤ 16 KiB per f64 block at
+//!   dim 64). Each x-row is staged once per tile.
+//! - **Precision tiers.** `FastF64` keeps every operand f64 and only
+//!   re-associates (lane-parallel folds, a hoisted `0.5/v_k` reciprocal
+//!   so the logit's division becomes a multiply). `FastF32` additionally
+//!   demotes the per-component constants and row arithmetic to f32.
+//!   Bounds asserted by rust/tests/kernel_precision.rs: per-element
+//!   relative error vs the exact kernel ≤ 1e-6 (`FastF64`) / ≤ 5e-2
+//!   (`FastF32`), with `‖v‖²` bounds scaled for the extra reduction.
+//!
+//! Rows are independent — a tile never reads another tile's (or row's)
+//! state — so splitting a batch across calls, shards, or tile boundaries
+//! reproduces identical bits *within* a tier (the tile-order-independence
+//! property test relies on this).
+//!
+//! Dispatch lives in `GmmModel::denoise_v_uniform_into`: a fast tier must
+//! be requested on the scratch *and* the model must clear [`eligible`];
+//! tiny models always take the exact path, and the fast path bypasses
+//! row-sharding (the serial tile kernel already amortizes; sharded fast
+//! tiles are future work, DESIGN.md §10).
+
+use super::{KernelPrecision, KernelScratch, MaskRef};
+use crate::model::{DatasetInfo, EvalOut};
+use crate::Result;
+
+/// f64 lane width (chunk size of the f64-tier inner loops).
+pub const F64_LANES: usize = 4;
+/// f32 lane width.
+pub const F32_LANES: usize = 8;
+/// Rows per tile: one tile's logits/resp workspace is `ROW_TILE·k`.
+pub const ROW_TILE: usize = 8;
+/// Components per block: an f64 μ block is `COMP_TILE·dim·8` bytes
+/// (16 KiB at dim 64 — inside a typical 32 KiB L1d).
+pub const COMP_TILE: usize = 32;
+
+/// Minimum mixture size for the tile kernel to pay for itself.
+const MIN_K: usize = 8;
+/// Minimum per-row work (k·dim) for the tile kernel to pay for itself.
+const MIN_WORK: usize = 64;
+
+/// Is the tile kernel worth dispatching for a `[dim, k]` model? Below
+/// this, per-tile staging overhead beats the lane/tiling win and the
+/// exact kernel runs regardless of the requested tier.
+pub fn eligible(dim: usize, k: usize) -> bool {
+    k >= MIN_K && dim * k >= MIN_WORK
+}
+
+// --- portable lane structs ---------------------------------------------
+
+/// Four f64 lanes over an array chunk. Every op is a fixed-length loop
+/// the compiler unrolls and vectorizes; `hsum`'s pairwise fold is the
+/// one deliberate re-association the fast tiers are allowed.
+#[derive(Clone, Copy, Debug)]
+struct F64x4([f64; F64_LANES]);
+
+impl F64x4 {
+    #[inline(always)]
+    fn splat(v: f64) -> F64x4 {
+        F64x4([v; F64_LANES])
+    }
+
+    #[inline(always)]
+    fn load(s: &[f64]) -> F64x4 {
+        F64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    #[inline(always)]
+    fn add(self, o: F64x4) -> F64x4 {
+        let mut r = self.0;
+        for i in 0..F64_LANES {
+            r[i] += o.0[i];
+        }
+        F64x4(r)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: F64x4) -> F64x4 {
+        let mut r = self.0;
+        for i in 0..F64_LANES {
+            r[i] -= o.0[i];
+        }
+        F64x4(r)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: F64x4) -> F64x4 {
+        let mut r = self.0;
+        for i in 0..F64_LANES {
+            r[i] *= o.0[i];
+        }
+        F64x4(r)
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f64 {
+        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
+    }
+
+    #[inline(always)]
+    fn store(self, out: &mut [f64]) {
+        out[..F64_LANES].copy_from_slice(&self.0);
+    }
+}
+
+/// Eight f32 lanes over an array chunk.
+#[derive(Clone, Copy, Debug)]
+struct F32x8([f32; F32_LANES]);
+
+impl F32x8 {
+    #[inline(always)]
+    fn splat(v: f32) -> F32x8 {
+        F32x8([v; F32_LANES])
+    }
+
+    #[inline(always)]
+    fn load(s: &[f32]) -> F32x8 {
+        F32x8([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+    }
+
+    #[inline(always)]
+    fn add(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for i in 0..F32_LANES {
+            r[i] += o.0[i];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for i in 0..F32_LANES {
+            r[i] -= o.0[i];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for i in 0..F32_LANES {
+            r[i] *= o.0[i];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        ((self.0[0] + self.0[1]) + (self.0[2] + self.0[3]))
+            + ((self.0[4] + self.0[5]) + (self.0[6] + self.0[7]))
+    }
+
+    #[inline(always)]
+    fn store(self, out: &mut [f32]) {
+        out[..F32_LANES].copy_from_slice(&self.0);
+    }
+}
+
+// --- lane kernels over one row-slice -----------------------------------
+
+/// ‖x − μ‖² with 4-wide lane accumulation + scalar remainder.
+#[inline]
+fn dist2_f64(x: &[f64], mu: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / F64_LANES;
+    let mut acc = F64x4::splat(0.0);
+    for i in 0..chunks {
+        let o = i * F64_LANES;
+        let d = F64x4::load(&x[o..]).sub(F64x4::load(&mu[o..]));
+        acc = acc.add(d.mul(d));
+    }
+    let mut s = acc.hsum();
+    for j in chunks * F64_LANES..n {
+        let d = x[j] - mu[j];
+        s += d * d;
+    }
+    s
+}
+
+#[inline]
+fn dist2_f32(x: &[f32], mu: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / F32_LANES;
+    let mut acc = F32x8::splat(0.0);
+    for i in 0..chunks {
+        let o = i * F32_LANES;
+        let d = F32x8::load(&x[o..]).sub(F32x8::load(&mu[o..]));
+        acc = acc.add(d.mul(d));
+    }
+    let mut s = acc.hsum();
+    for j in chunks * F32_LANES..n {
+        let d = x[j] - mu[j];
+        s += d * d;
+    }
+    s
+}
+
+/// `dst += coef · src`, lane-chunked.
+#[inline]
+fn axpy_f64(dst: &mut [f64], src: &[f64], coef: f64) {
+    let n = dst.len();
+    let chunks = n / F64_LANES;
+    let c = F64x4::splat(coef);
+    for i in 0..chunks {
+        let o = i * F64_LANES;
+        F64x4::load(&dst[o..]).add(c.mul(F64x4::load(&src[o..]))).store(&mut dst[o..]);
+    }
+    for j in chunks * F64_LANES..n {
+        dst[j] += coef * src[j];
+    }
+}
+
+#[inline]
+fn axpy_f32(dst: &mut [f32], src: &[f32], coef: f32) {
+    let n = dst.len();
+    let chunks = n / F32_LANES;
+    let c = F32x8::splat(coef);
+    for i in 0..chunks {
+        let o = i * F32_LANES;
+        F32x8::load(&dst[o..]).add(c.mul(F32x8::load(&src[o..]))).store(&mut dst[o..]);
+    }
+    for j in chunks * F32_LANES..n {
+        dst[j] += coef * src[j];
+    }
+}
+
+/// Max fold over a logit row (softmax stabilizer), lane-chunked.
+#[inline]
+fn max_f64(v: &[f64]) -> f64 {
+    let n = v.len();
+    let chunks = n / F64_LANES;
+    let mut acc = F64x4::splat(f64::NEG_INFINITY);
+    for i in 0..chunks {
+        let l = F64x4::load(&v[i * F64_LANES..]);
+        for j in 0..F64_LANES {
+            if l.0[j] > acc.0[j] {
+                acc.0[j] = l.0[j];
+            }
+        }
+    }
+    let mut m = acc.0.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    for &x in &v[chunks * F64_LANES..] {
+        m = m.max(x);
+    }
+    m
+}
+
+#[inline]
+fn max_f32(v: &[f32]) -> f32 {
+    let n = v.len();
+    let chunks = n / F32_LANES;
+    let mut acc = F32x8::splat(f32::NEG_INFINITY);
+    for i in 0..chunks {
+        let l = F32x8::load(&v[i * F32_LANES..]);
+        for j in 0..F32_LANES {
+            if l.0[j] > acc.0[j] {
+                acc.0[j] = l.0[j];
+            }
+        }
+    }
+    let mut m = acc.0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    for &x in &v[chunks * F32_LANES..] {
+        m = m.max(x);
+    }
+    m
+}
+
+/// `v *= c` in place, lane-chunked (softmax normalize).
+#[inline]
+fn scale_f64(v: &mut [f64], c: f64) {
+    let n = v.len();
+    let chunks = n / F64_LANES;
+    let cc = F64x4::splat(c);
+    for i in 0..chunks {
+        let o = i * F64_LANES;
+        F64x4::load(&v[o..]).mul(cc).store(&mut v[o..]);
+    }
+    for x in &mut v[chunks * F64_LANES..] {
+        *x *= c;
+    }
+}
+
+#[inline]
+fn scale_f32(v: &mut [f32], c: f32) {
+    let n = v.len();
+    let chunks = n / F32_LANES;
+    let cc = F32x8::splat(c);
+    for i in 0..chunks {
+        let o = i * F32_LANES;
+        F32x8::load(&v[o..]).mul(cc).store(&mut v[o..]);
+    }
+    for x in &mut v[chunks * F32_LANES..] {
+        *x *= c;
+    }
+}
+
+// --- workspaces ---------------------------------------------------------
+
+/// Tile-kernel workspaces, owned by [`KernelScratch`] so a fast-tier run
+/// stays allocation-free after the first eval. All buffers grow on
+/// demand; empty until a fast tier actually dispatches.
+#[derive(Clone, Debug, Default)]
+pub struct SimdScratch {
+    // per-call σ/model precompute (f64 tier)
+    /// log w_k − 0.5·dim·ln v_k (the row-independent logit terms).
+    c0: Vec<f64>,
+    /// 0.5 / v_k (the hoisted reciprocal — logit division as multiply).
+    half_inv_var: Vec<f64>,
+    /// σ² / v_k (μ-accumulate coefficient base).
+    coef_base: Vec<f64>,
+    // f32 mirrors (demoted once per call)
+    c0_32: Vec<f32>,
+    half_inv_var_32: Vec<f32>,
+    coef_base_32: Vec<f32>,
+    alpha_32: Vec<f32>,
+    /// model means demoted to f32, `[k·dim]` row-major.
+    mus_32: Vec<f32>,
+    // row-tile workspaces
+    /// logits then (in place) responsibilities, `[ROW_TILE·k]`.
+    logits: Vec<f64>,
+    /// x rows staged in f64, `[ROW_TILE·dim]`.
+    xrows: Vec<f64>,
+    /// denoised-row accumulators, `[ROW_TILE·dim]`.
+    drows: Vec<f64>,
+    /// per-row Σ r_k α_k, `[ROW_TILE]`.
+    c1: Vec<f64>,
+    logits_32: Vec<f32>,
+    drows_32: Vec<f32>,
+    c1_32: Vec<f32>,
+}
+
+impl SimdScratch {
+    fn ensure_f64(&mut self, dim: usize, k: usize) {
+        self.c0.resize(k, 0.0);
+        self.half_inv_var.resize(k, 0.0);
+        self.coef_base.resize(k, 0.0);
+        self.logits.resize(ROW_TILE * k, 0.0);
+        self.xrows.resize(ROW_TILE * dim, 0.0);
+        self.drows.resize(ROW_TILE * dim, 0.0);
+        self.c1.resize(ROW_TILE, 0.0);
+    }
+
+    fn ensure_f32(&mut self, dim: usize, k: usize) {
+        self.c0_32.resize(k, 0.0);
+        self.half_inv_var_32.resize(k, 0.0);
+        self.coef_base_32.resize(k, 0.0);
+        self.alpha_32.resize(k, 0.0);
+        self.mus_32.resize(k * dim, 0.0);
+        self.logits_32.resize(ROW_TILE * k, 0.0);
+        self.drows_32.resize(ROW_TILE * dim, 0.0);
+        self.c1_32.resize(ROW_TILE, 0.0);
+    }
+}
+
+// --- entry point --------------------------------------------------------
+
+/// Tile-kernel evaluation of one uniform-σ batch at a fast tier.
+///
+/// Preconditions (the dispatcher's responsibility): shapes validated,
+/// `out.ensure_shape` and `scratch.ensure_dims` done, and the σ-term
+/// precompute (`var`/`half_dim_ln_var`/`alpha`) already hoisted into
+/// `scratch` — this reuses it rather than recomputing.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn denoise_uniform_simd(
+    info: &DatasetInfo,
+    xhat: &[f32],
+    rows: usize,
+    s2: f64,
+    ar: f64,
+    br: f64,
+    mask: MaskRef<'_>,
+    precision: KernelPrecision,
+    scratch: &mut KernelScratch,
+    out: &mut EvalOut,
+) -> Result<()> {
+    let (dim, k) = (info.dim, info.k);
+    debug_assert!(eligible(dim, k));
+    // disjoint field borrows: σ-precompute read-only, tile workspaces mut
+    let KernelScratch { var, half_dim_ln_var, alpha, simd, .. } = scratch;
+    let (var, hdl, alpha) = (&var[..k], &half_dim_ln_var[..k], &alpha[..k]);
+    match precision {
+        KernelPrecision::FastF64 => {
+            simd.ensure_f64(dim, k);
+            for c in 0..k {
+                simd.c0[c] = info.logw[c] - hdl[c];
+                simd.half_inv_var[c] = 0.5 / var[c];
+                simd.coef_base[c] = s2 / var[c];
+            }
+            run_f64(info, xhat, rows, ar, br, mask, alpha, simd, out);
+            Ok(())
+        }
+        KernelPrecision::FastF32 => {
+            simd.ensure_f32(dim, k);
+            for c in 0..k {
+                simd.c0_32[c] = (info.logw[c] - hdl[c]) as f32;
+                simd.half_inv_var_32[c] = (0.5 / var[c]) as f32;
+                simd.coef_base_32[c] = (s2 / var[c]) as f32;
+                simd.alpha_32[c] = alpha[c] as f32;
+            }
+            for (dst, &src) in simd.mus_32[..k * dim].iter_mut().zip(&info.mus) {
+                *dst = src as f32;
+            }
+            run_f32(info, xhat, rows, ar as f32, br as f32, mask, simd, out);
+            Ok(())
+        }
+        KernelPrecision::Exact => {
+            anyhow::bail!("exact tier must not reach the simd kernel")
+        }
+    }
+}
+
+/// f64 tile loop: lanes + tiling, all operands f64.
+#[allow(clippy::too_many_arguments)]
+fn run_f64(
+    info: &DatasetInfo,
+    xhat: &[f32],
+    rows: usize,
+    ar: f64,
+    br: f64,
+    mask: MaskRef<'_>,
+    alpha: &[f64],
+    ws: &mut SimdScratch,
+    out: &mut EvalOut,
+) {
+    let (dim, k) = (info.dim, info.k);
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rt = (rows - r0).min(ROW_TILE);
+        // stage x rows once per tile (each row read once per comp block
+        // thereafter, always from this hot staging buffer)
+        for r in 0..rt {
+            let src = &xhat[(r0 + r) * dim..(r0 + r + 1) * dim];
+            for (dst, &s) in ws.xrows[r * dim..r * dim + dim].iter_mut().zip(src) {
+                *dst = s as f64;
+            }
+        }
+        // pass 1 — distances + logits, component blocks outside the row
+        // loop so each μ block streams against all rt rows from L1
+        let mut cb = 0usize;
+        while cb < k {
+            let ce = (cb + COMP_TILE).min(k);
+            for c in cb..ce {
+                let mu = info.mu(c);
+                let (c0c, hivc) = (ws.c0[c], ws.half_inv_var[c]);
+                for r in 0..rt {
+                    let x = &ws.xrows[r * dim..r * dim + dim];
+                    let d2 = dist2_f64(x, mu);
+                    ws.logits[r * k + c] =
+                        c0c - d2 * hivc + mask.row(r0 + r, k)[c] as f64;
+                }
+            }
+            cb = ce;
+        }
+        // pass 2 — softmax per row, responsibilities in place
+        for r in 0..rt {
+            let lg = &mut ws.logits[r * k..r * k + k];
+            let m = max_f64(lg);
+            let mut z = 0.0f64;
+            for l in lg.iter_mut() {
+                let e = (*l - m).exp();
+                *l = e;
+                z += e;
+            }
+            scale_f64(lg, 1.0 / z);
+        }
+        // pass 3 — μ-weighted accumulate, same block order as pass 1
+        ws.drows[..rt * dim].fill(0.0);
+        ws.c1[..rt].fill(0.0);
+        let mut cb = 0usize;
+        while cb < k {
+            let ce = (cb + COMP_TILE).min(k);
+            for c in cb..ce {
+                let mu = info.mu(c);
+                let (alpha_c, base_c) = (alpha[c], ws.coef_base[c]);
+                for r in 0..rt {
+                    let resp = ws.logits[r * k + c];
+                    if resp == 0.0 {
+                        continue; // masked / fully underflowed component
+                    }
+                    ws.c1[r] += resp * alpha_c;
+                    axpy_f64(&mut ws.drows[r * dim..r * dim + dim], mu, resp * base_c);
+                }
+            }
+            cb = ce;
+        }
+        // pass 4 — close each row: + c1·x, fused velocity, ‖v‖²
+        for r in 0..rt {
+            let x = &ws.xrows[r * dim..r * dim + dim];
+            let drow = &mut ws.drows[r * dim..r * dim + dim];
+            let c1r = ws.c1[r];
+            let d_out = &mut out.d[(r0 + r) * dim..(r0 + r + 1) * dim];
+            let v_out = &mut out.v[(r0 + r) * dim..(r0 + r + 1) * dim];
+            let chunks = dim / F64_LANES;
+            let mut vn_acc = F64x4::splat(0.0);
+            let (c1v, arv, brv) = (F64x4::splat(c1r), F64x4::splat(ar), F64x4::splat(br));
+            for i in 0..chunks {
+                let o = i * F64_LANES;
+                let xv = F64x4::load(&x[o..]);
+                let dv = F64x4::load(&drow[o..]).add(c1v.mul(xv));
+                let vv = arv.mul(xv).add(brv.mul(xv.sub(dv)));
+                vn_acc = vn_acc.add(vv.mul(vv));
+                for j in 0..F64_LANES {
+                    d_out[o + j] = dv.0[j] as f32;
+                    v_out[o + j] = vv.0[j] as f32;
+                }
+            }
+            let mut vn = vn_acc.hsum();
+            for j in chunks * F64_LANES..dim {
+                let dj = drow[j] + c1r * x[j];
+                let vv = ar * x[j] + br * (x[j] - dj);
+                d_out[j] = dj as f32;
+                v_out[j] = vv as f32;
+                vn += vv * vv;
+            }
+            out.vnorm2[r0 + r] = vn as f32;
+        }
+        r0 += rt;
+    }
+}
+
+/// f32 tile loop: same shape, operands and accumulators in f32 (x rows
+/// are already f32 and are read in place — no staging copy).
+#[allow(clippy::too_many_arguments)]
+fn run_f32(
+    info: &DatasetInfo,
+    xhat: &[f32],
+    rows: usize,
+    ar: f32,
+    br: f32,
+    mask: MaskRef<'_>,
+    ws: &mut SimdScratch,
+    out: &mut EvalOut,
+) {
+    let (dim, k) = (info.dim, info.k);
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rt = (rows - r0).min(ROW_TILE);
+        // pass 1 — distances + logits
+        let mut cb = 0usize;
+        while cb < k {
+            let ce = (cb + COMP_TILE).min(k);
+            for c in cb..ce {
+                let mu = &ws.mus_32[c * dim..(c + 1) * dim];
+                let (c0c, hivc) = (ws.c0_32[c], ws.half_inv_var_32[c]);
+                for r in 0..rt {
+                    let x = &xhat[(r0 + r) * dim..(r0 + r + 1) * dim];
+                    let d2 = dist2_f32(x, mu);
+                    ws.logits_32[r * k + c] = c0c - d2 * hivc + mask.row(r0 + r, k)[c];
+                }
+            }
+            cb = ce;
+        }
+        // pass 2 — softmax per row
+        for r in 0..rt {
+            let lg = &mut ws.logits_32[r * k..r * k + k];
+            let m = max_f32(lg);
+            let mut z = 0.0f32;
+            for l in lg.iter_mut() {
+                let e = (*l - m).exp();
+                *l = e;
+                z += e;
+            }
+            scale_f32(lg, 1.0 / z);
+        }
+        // pass 3 — μ-weighted accumulate
+        ws.drows_32[..rt * dim].fill(0.0);
+        ws.c1_32[..rt].fill(0.0);
+        let mut cb = 0usize;
+        while cb < k {
+            let ce = (cb + COMP_TILE).min(k);
+            for c in cb..ce {
+                let mu = &ws.mus_32[c * dim..(c + 1) * dim];
+                let (alpha_c, base_c) = (ws.alpha_32[c], ws.coef_base_32[c]);
+                for r in 0..rt {
+                    let resp = ws.logits_32[r * k + c];
+                    if resp == 0.0 {
+                        continue;
+                    }
+                    ws.c1_32[r] += resp * alpha_c;
+                    axpy_f32(&mut ws.drows_32[r * dim..r * dim + dim], mu, resp * base_c);
+                }
+            }
+            cb = ce;
+        }
+        // pass 4 — close each row
+        for r in 0..rt {
+            let x = &xhat[(r0 + r) * dim..(r0 + r + 1) * dim];
+            let drow = &mut ws.drows_32[r * dim..r * dim + dim];
+            let c1r = ws.c1_32[r];
+            let d_out = &mut out.d[(r0 + r) * dim..(r0 + r + 1) * dim];
+            let v_out = &mut out.v[(r0 + r) * dim..(r0 + r + 1) * dim];
+            let chunks = dim / F32_LANES;
+            let mut vn_acc = F32x8::splat(0.0);
+            let (c1v, arv, brv) = (F32x8::splat(c1r), F32x8::splat(ar), F32x8::splat(br));
+            for i in 0..chunks {
+                let o = i * F32_LANES;
+                let xv = F32x8::load(&x[o..]);
+                let dv = F32x8::load(&drow[o..]).add(c1v.mul(xv));
+                let vv = arv.mul(xv).add(brv.mul(xv.sub(dv)));
+                vn_acc = vn_acc.add(vv.mul(vv));
+                dv.store(&mut d_out[o..]);
+                vv.store(&mut v_out[o..]);
+            }
+            let mut vn = vn_acc.hsum();
+            for j in chunks * F32_LANES..dim {
+                let dj = drow[j] + c1r * x[j];
+                let vv = ar * x[j] + br * (x[j] - dj);
+                d_out[j] = dj;
+                v_out[j] = vv;
+                vn += vv * vv;
+            }
+            out.vnorm2[r0 + r] = vn;
+        }
+        r0 += rt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_helpers_match_scalar_on_odd_lengths() {
+        // lengths straddling every remainder case of both lane widths
+        for n in [1usize, 3, 4, 5, 7, 8, 9, 13, 16, 17] {
+            let a64: Vec<f64> = (0..n).map(|i| (i as f64) * 0.7 - 1.3).collect();
+            let b64: Vec<f64> = (0..n).map(|i| (i as f64) * -0.4 + 0.9).collect();
+            let want: f64 = a64.iter().zip(&b64).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((dist2_f64(&a64, &b64) - want).abs() <= 1e-12 * (1.0 + want.abs()));
+            assert!((max_f64(&a64) - a64.iter().cloned().fold(f64::NEG_INFINITY, f64::max)).abs() == 0.0);
+
+            let a32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            let want32: f32 = a32.iter().zip(&b32).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((dist2_f32(&a32, &b32) - want32).abs() <= 1e-4 * (1.0 + want32.abs()));
+
+            let mut dst = vec![0.5f64; n];
+            axpy_f64(&mut dst, &a64, 2.0);
+            for (i, &d) in dst.iter().enumerate() {
+                let want = 0.5 + 2.0 * a64[i];
+                assert!((d - want).abs() <= 1e-12 * (1.0 + want.abs()));
+            }
+            let mut dst32 = vec![0.5f32; n];
+            axpy_f32(&mut dst32, &a32, 2.0);
+            for (i, &d) in dst32.iter().enumerate() {
+                let want = 0.5 + 2.0 * a32[i];
+                assert!((d - want).abs() <= 1e-4 * (1.0 + want.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn eligibility_thresholds() {
+        assert!(!eligible(3, 2)); // the toy model stays exact
+        assert!(!eligible(64, 4)); // k below MIN_K
+        assert!(!eligible(2, 8)); // work below MIN_WORK
+        assert!(eligible(16, 64));
+        assert!(eligible(2, 64));
+        assert!(eligible(64, 256));
+    }
+}

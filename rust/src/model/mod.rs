@@ -11,7 +11,7 @@ pub mod pjrt;
 
 pub use datasets::{DatasetInfo, DatasetRegistry};
 pub use gmm::GmmModel;
-pub use kernel::{EvalScratch, KernelScratch, MaskRef};
+pub use kernel::{EvalScratch, KernelPrecision, KernelScratch, MaskRef};
 
 use crate::Result;
 

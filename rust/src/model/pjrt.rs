@@ -3,6 +3,11 @@
 //! A thin, thread-safe facade over [`crate::runtime::RuntimeHandle`]; the
 //! heavy lifting (variant selection, padding, execution) happens on the
 //! executor thread.
+//!
+//! [`crate::model::KernelPrecision`] does not reach this backend: the
+//! artifact's numerics are fixed at compile time, so a fast-tier request
+//! served by PJRT simply runs the artifact as-is (the scratch's precision
+//! field is ignored here — only the native oracle dispatches on it).
 
 use crate::model::kernel::{KernelScratch, MaskRef};
 use crate::model::{Denoiser, EvalOut};

@@ -15,6 +15,10 @@
 //!   help-first row-sharded variant on a 4-thread pool.
 //! - `run_sampler/*` — end-to-end integration per solver through the
 //!   arena-owning engine.
+//! - `denoise_v/{exact,simd-f64,simd-f32}/*` — the precision tiers of
+//!   DESIGN.md §10 on a SIMD-eligible synthetic model (toy sits below
+//!   the dispatch floor), plus a `kernel_sweep/*` dim×K grid mapping
+//!   where the tiled kernel pays off across model shapes.
 //!
 //! Results append to `BENCH_sampler.json` as one labeled run, so future
 //! PRs diff their numbers against this one (`smoke` runs are marked and
@@ -26,8 +30,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::diffusion::Param;
-use crate::model::gmm::testmodel::toy;
-use crate::model::{uncond_mask, uncond_mask_row, Denoiser, EvalOut, KernelScratch, MaskRef};
+use crate::model::gmm::testmodel::{synthetic, toy};
+use crate::model::{
+    uncond_mask, uncond_mask_row, Denoiser, EvalOut, KernelPrecision, KernelScratch, MaskRef,
+};
 use crate::sampler::{run_sampler, RunConfig};
 use crate::schedule::baselines::edm_schedule;
 use crate::solvers::SolverSpec;
@@ -154,6 +160,93 @@ pub fn run_sampler_bench(opts: &BenchOptions) -> Result<Vec<BenchEntry>> {
         }
     }
 
+    // --- precision tiers: exact vs SIMD/tiled fast kernels --------------
+    // toy sits below the SIMD dispatch floor, so the tier comparison and
+    // the dim×K sweep run on synthetic models (DESIGN.md §10)
+    let tier_rows = 256usize;
+    let tiers: [(&str, KernelPrecision); 3] = [
+        ("exact", KernelPrecision::Exact),
+        ("simd-f64", KernelPrecision::FastF64),
+        ("simd-f32", KernelPrecision::FastF32),
+    ];
+    {
+        let synth = synthetic(16, 64);
+        let (sdim, sk) = (synth.info.dim, synth.info.k);
+        let mut rng = Rng::new(0xFA57);
+        let mut xhat = vec![0.0f32; tier_rows * sdim];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let mask_row = uncond_mask_row(sk);
+        for (tag, precision) in tiers {
+            let mut out = EvalOut::default();
+            let mut scratch = KernelScratch::new();
+            scratch.set_precision(precision);
+            entries.push(measure(
+                opts,
+                &format!("denoise_v/{tag}/dim{sdim}k{sk}/rows{tier_rows}"),
+                tier_rows,
+                1.0,
+                counting,
+                || {
+                    synth
+                        .denoise_v_uniform_into(
+                            &xhat,
+                            tier_rows,
+                            0.8,
+                            0.3,
+                            -0.7,
+                            MaskRef::Row(&mask_row),
+                            &mut out,
+                            &mut scratch,
+                        )
+                        .unwrap();
+                    std::hint::black_box(out.vnorm2[0]);
+                },
+            ));
+        }
+    }
+
+    // dim×K sweep: exact vs fast-f32 ns/row per model shape (shapes
+    // below the eligibility floor fall back to the exact kernel, so
+    // their two entries should read ~equal — the dispatch threshold
+    // made visible)
+    for &d in &[2usize, 16, 64] {
+        for &kk in &[8usize, 64, 256] {
+            let m = synthetic(d, kk);
+            let mut rng = Rng::new(0x5EED ^ ((d as u64) << 20) ^ kk as u64);
+            let mut xhat = vec![0.0f32; tier_rows * d];
+            rng.fill_normal_f32(&mut xhat, 2.0);
+            let mask_row = uncond_mask_row(kk);
+            for (tag, precision) in
+                [("exact", KernelPrecision::Exact), ("simd-f32", KernelPrecision::FastF32)]
+            {
+                let mut out = EvalOut::default();
+                let mut scratch = KernelScratch::new();
+                scratch.set_precision(precision);
+                entries.push(measure(
+                    opts,
+                    &format!("kernel_sweep/{tag}/dim{d}k{kk}"),
+                    tier_rows,
+                    1.0,
+                    counting,
+                    || {
+                        m.denoise_v_uniform_into(
+                            &xhat,
+                            tier_rows,
+                            0.8,
+                            0.3,
+                            -0.7,
+                            MaskRef::Row(&mask_row),
+                            &mut out,
+                            &mut scratch,
+                        )
+                        .unwrap();
+                        std::hint::black_box(out.vnorm2[0]);
+                    },
+                ));
+            }
+        }
+    }
+
     // --- end-to-end: run_sampler per solver -----------------------------
     let grid = edm_schedule(18, ds.sigma_min, ds.sigma_max, ds.rho)?;
     let solvers: Vec<(&str, SolverSpec)> = vec![
@@ -266,6 +359,24 @@ fn print_speedups(entries: &[BenchEntry]) {
             }
         }
     }
+    // precision-tier speedups on the sweep shapes (exact vs fast-f32)
+    for e in entries {
+        if let Some(shape) = e.name.strip_prefix("kernel_sweep/exact/") {
+            let fast = entries
+                .iter()
+                .find(|f| f.name == format!("kernel_sweep/simd-f32/{shape}"))
+                .map(|f| f.ns_per_row);
+            if let Some(fast) = fast {
+                if fast > 0.0 {
+                    println!(
+                        "speedup {shape:<10} exact {:.1} ns/row -> simd-f32 {fast:.1} ns/row  ({:.2}x)",
+                        e.ns_per_row,
+                        e.ns_per_row / fast
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// Detect whether this binary registered [`crate::util::alloc::CountingAlloc`].
@@ -331,6 +442,18 @@ mod tests {
         assert!(entries.iter().any(|e| e.name == "denoise_v/legacy/rows32"));
         assert!(entries.iter().any(|e| e.name == "denoise_v/kernel/rows256"));
         assert!(entries.iter().any(|e| e.name == "run_sampler/heun/rows256"));
+        // precision tiers + dim×K sweep cover every shape and tier
+        assert!(entries.iter().any(|e| e.name == "denoise_v/exact/dim16k64/rows256"));
+        assert!(entries.iter().any(|e| e.name == "denoise_v/simd-f64/dim16k64/rows256"));
+        assert!(entries.iter().any(|e| e.name == "denoise_v/simd-f32/dim16k64/rows256"));
+        for d in [2usize, 16, 64] {
+            for k in [8usize, 64, 256] {
+                for tag in ["exact", "simd-f32"] {
+                    let name = format!("kernel_sweep/{tag}/dim{d}k{k}");
+                    assert!(entries.iter().any(|e| e.name == name), "{name} missing");
+                }
+            }
+        }
         assert!(entries.iter().all(|e| e.ns_per_row >= 0.0 && e.nfe >= 1.0));
         // a second run appends, never truncates
         run_sampler_bench(&opts).unwrap();

@@ -7,6 +7,15 @@ use crate::schedule::ScheduleSpec;
 use crate::solvers::SolverSpec;
 
 /// Full sampling configuration for one workload.
+///
+/// Deliberately does *not* carry a [`crate::model::KernelPrecision`]:
+/// the precision tier changes how a config is evaluated, never which
+/// config it is — `label()` seeds experiment RNGs and `schedule_key()`
+/// keys the schedule cache, and both must stay byte-identical whether a
+/// run is exact or fast so fast-tier results are comparable (and grids
+/// shareable) against exact ones. Precision rides alongside: on
+/// [`crate::experiments::ExpContext`] for experiments and on the wire
+/// request for serving (DESIGN.md §10).
 #[derive(Clone, Debug)]
 pub struct SamplerConfig {
     pub dataset: String,

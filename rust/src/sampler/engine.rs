@@ -24,7 +24,8 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::diffusion::{kappa_hat_rel, Param, SigmaGrid};
 use crate::model::{
-    class_mask_row, eval_at_into, uncond_mask_row, DatasetInfo, Denoiser, EvalScratch, MaskRef,
+    class_mask_row, eval_at_into, uncond_mask_row, DatasetInfo, Denoiser, EvalScratch,
+    KernelPrecision, MaskRef,
 };
 use crate::sampler::plan::SamplingPlan;
 use crate::solvers::{
@@ -129,8 +130,25 @@ pub fn run_plan(
     ds: &DatasetInfo,
     cfg: &RunConfig,
 ) -> Result<RunResult> {
+    run_plan_prec(model, param, grid, plan, ds, cfg, KernelPrecision::Exact)
+}
+
+/// [`run_plan`] at an explicit kernel precision tier. `Exact` is
+/// bit-identical to [`run_plan`]; the fast tiers route eligible native
+/// models through the SIMD tile kernel (DESIGN.md §10) — the serving
+/// batcher threads each request's wire-selected tier through here.
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_prec(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    precision: KernelPrecision,
+) -> Result<RunResult> {
     let mask_row = mask_row_for(cfg.class, ds, model.k())?;
-    run_plan_masked(model, param, grid, plan, cfg, &mask_row)
+    run_plan_masked_prec(model, param, grid, plan, cfg, &mask_row, precision)
 }
 
 /// [`run_plan`] with a caller-built shared mask row — the batched
@@ -152,6 +170,22 @@ pub fn run_plan_masked(
     plan: &SamplingPlan,
     cfg: &RunConfig,
     mask_row: &[f32],
+) -> Result<RunResult> {
+    run_plan_masked_prec(model, param, grid, plan, cfg, mask_row, KernelPrecision::Exact)
+}
+
+/// [`run_plan_masked`] at an explicit kernel precision tier: the tier is
+/// stamped on the run's own [`EvalScratch`] before the first eval, so it
+/// applies to every model call of this batch and nothing outside it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_masked_prec(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    cfg: &RunConfig,
+    mask_row: &[f32],
+    precision: KernelPrecision,
 ) -> Result<RunResult> {
     let dim = model.dim();
     let rows = cfg.rows;
@@ -192,6 +226,7 @@ pub fn run_plan_masked(
     rng.fill_normal_f32(&mut x, param.prior_std(times[0]));
 
     let mut scr = EvalScratch::new();
+    scr.kernel.set_precision(precision);
     let mut nfe = 0usize;
     let mut seg_nfe = vec![0usize; plan.segments.len()];
     let mut steps: Vec<StepRecord> = Vec::new();
@@ -558,6 +593,22 @@ pub fn generate_plan(
     cfg: &RunConfig,
     total: usize,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
+    generate_plan_prec(model, param, grid, plan, ds, cfg, total, KernelPrecision::Exact)
+}
+
+/// [`generate_plan`] at an explicit kernel precision tier (every batch of
+/// the request runs at the same tier).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_plan_prec(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+    precision: KernelPrecision,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
     let dim = model.dim();
     // one shared mask row for every batch of the request
     let mask_row = mask_row_for(cfg.class, ds, model.k())?;
@@ -575,7 +626,7 @@ pub fn generate_plan(
             class: cfg.class,
             trace: cfg.trace && batch_idx == 0,
         };
-        let out = run_plan_masked(model, param, grid, plan, &bcfg, &mask_row)?;
+        let out = run_plan_masked_prec(model, param, grid, plan, &bcfg, &mask_row, precision)?;
         samples.extend_from_slice(&out.samples);
         nfes.push(out.nfe as f64);
         for (a, s) in seg_acc.iter_mut().zip(&out.seg_nfe) {
@@ -648,6 +699,24 @@ pub fn generate_pooled_plan(
     total: usize,
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
+    generate_pooled_plan_prec(model, param, grid, plan, ds, cfg, total, pool, KernelPrecision::Exact)
+}
+
+/// [`generate_pooled_plan`] at an explicit kernel precision tier: every
+/// shard's worker stamps the tier on its own [`EvalScratch`], so a pooled
+/// fast-tier run never leaks precision into other jobs sharing the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_pooled_plan_prec(
+    model: &Arc<dyn Denoiser>,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+    pool: &ThreadPool,
+    precision: KernelPrecision,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
     anyhow::ensure!(cfg.rows > 0, "rows must be positive");
     if total == 0 {
         return Ok((Vec::new(), 0.0, Vec::new(), vec![0.0; plan.segments.len()]));
@@ -688,7 +757,15 @@ pub fn generate_pooled_plan(
                 trace: cfg.trace && i == 0,
             };
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_plan_masked(model.as_ref(), param, &grid, &plan, &bcfg, &mask_row)
+                run_plan_masked_prec(
+                    model.as_ref(),
+                    param,
+                    &grid,
+                    &plan,
+                    &bcfg,
+                    &mask_row,
+                    precision,
+                )
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("generation batch {i} panicked")));
             let (lock, cv) = &*shared;

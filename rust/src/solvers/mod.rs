@@ -16,6 +16,12 @@ pub use stochastic::ChurnParams;
 use crate::diffusion::CurvatureClock;
 
 /// Declarative solver selection (CLI / protocol / experiment configs).
+///
+/// Solver choice is orthogonal to the kernel precision tier
+/// ([`crate::model::KernelPrecision`]): any solver runs at any tier, so
+/// precision is threaded through the engine's `*_prec` entry points
+/// rather than enumerated here — adding it per-solver would square the
+/// config space for no gain (DESIGN.md §10).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SolverSpec {
     /// First-order Euler: 1 NFE / interval.

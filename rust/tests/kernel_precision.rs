@@ -1,0 +1,292 @@
+//! Tolerance-bounded parity harness for the opt-in SIMD kernel tiers
+//! (DESIGN.md §10).
+//!
+//! The contract under test:
+//!
+//! - `KernelPrecision::Exact` (the default) never takes the SIMD path —
+//!   it stays `f32::to_bits`-identical to the seed kernel on every model,
+//!   eligible or not (rust/tests/kernel_parity.rs pins the seed itself).
+//! - `FastF64` reorders the accumulation into lanes/tiles but keeps f64
+//!   arithmetic: per-element relative error vs exact ≤ 1e-6.
+//! - `FastF32` demotes distances/softmax/accumulation to f32: per-element
+//!   relative error ≤ 5e-2 (vnorm2, a dim-long reduction, ≤ 1e-1).
+//! - Within a tier the kernel is deterministic and row-independent:
+//!   splitting a batch across calls is bit-identical to one call.
+//! - Ineligible (tiny) shapes silently fall back to the exact kernel.
+//! - End to end, fast-tier samples keep the golden metrics: |ΔFD|,
+//!   per-dim |Δmean|, and relative cov-trace drift vs the exact run stay
+//!   ≤ 0.05 across a solver × schedule grid.
+
+use sdm::diffusion::Param;
+use sdm::metrics::{frechet_to_reference, sample_mean_cov};
+use sdm::model::gmm::testmodel::{synthetic, toy};
+use sdm::model::{
+    class_mask, uncond_mask, uncond_mask_row, Denoiser, EvalOut, GmmModel, KernelPrecision,
+    KernelScratch, MaskRef,
+};
+use sdm::sampler::{generate_plan_prec, RunConfig, SamplingPlan};
+use sdm::schedule::baselines::{
+    cosine_schedule, edm_schedule, linear_sigma_schedule, logsnr_schedule,
+};
+use sdm::solvers::SolverSpec;
+use sdm::util::Rng;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Relative-error check: |got − want| ≤ tol · (1 + |want|) per element.
+fn assert_close(got: &[f32], want: &[f32], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length {} vs {}", got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let err = (*g as f64 - *w as f64).abs();
+        let bound = tol * (1.0 + (*w as f64).abs());
+        assert!(err <= bound, "{what}[{i}]: {g} vs {w} (err {err:.3e} > {bound:.3e})");
+    }
+}
+
+/// One uniform-σ kernel eval at a given precision tier.
+fn eval_at_tier(
+    model: &GmmModel,
+    xhat: &[f32],
+    rows: usize,
+    sigma: f32,
+    a: f32,
+    b: f32,
+    mask: MaskRef<'_>,
+    precision: KernelPrecision,
+) -> EvalOut {
+    let mut out = EvalOut::default();
+    let mut scratch = KernelScratch::new();
+    scratch.set_precision(precision);
+    model
+        .denoise_v_uniform_into(xhat, rows, sigma, a, b, mask, &mut out, &mut scratch)
+        .unwrap();
+    out
+}
+
+/// SIMD-eligible shapes with odd dims/K alongside the round ones.
+fn eligible_shapes() -> Vec<(usize, usize)> {
+    vec![(16, 64), (13, 19), (9, 11), (64, 256)]
+}
+
+#[test]
+fn exact_tier_stays_bit_identical_to_the_seed_kernel_on_eligible_shapes() {
+    // the dispatch gate must be numerically invisible at the default
+    // tier: eligible shapes with an Exact scratch still reproduce the
+    // legacy broadcast-vector path to the last bit
+    let mut rng = Rng::new(0x51AB);
+    for (dim, k) in eligible_shapes() {
+        let model = synthetic(dim, k);
+        let rows = 1 + rng.below(17);
+        let mut xhat = vec![0.0f32; rows * dim];
+        rng.fill_normal_f32(&mut xhat, 3.0);
+        let sigma = (0.002 * (80.0f64 / 0.002).powf(rng.uniform())) as f32;
+        let (a, b) = (rng.normal() as f32, rng.normal() as f32);
+        let legacy = model
+            .denoise_v(&xhat, &vec![sigma; rows], &vec![a; rows], &vec![b; rows], &uncond_mask(rows, k))
+            .unwrap();
+        let row = uncond_mask_row(k);
+        let exact =
+            eval_at_tier(&model, &xhat, rows, sigma, a, b, MaskRef::Row(&row), KernelPrecision::Exact);
+        assert_bits_eq(&legacy.d, &exact.d, &format!("dim{dim}k{k}.d"));
+        assert_bits_eq(&legacy.v, &exact.v, &format!("dim{dim}k{k}.v"));
+        assert_bits_eq(&legacy.vnorm2, &exact.vnorm2, &format!("dim{dim}k{k}.vnorm2"));
+    }
+}
+
+#[test]
+fn fast_tiers_meet_per_element_error_bounds_on_both_mask_forms() {
+    let mut rng = Rng::new(0xFA57F1);
+    for (dim, k) in eligible_shapes() {
+        let model = synthetic(dim, k);
+        for case in 0..6usize {
+            let rows = 1 + rng.below(21);
+            let mut xhat = vec![0.0f32; rows * dim];
+            rng.fill_normal_f32(&mut xhat, 3.0);
+            // log-uniform σ plus the exact endpoints of the range
+            let sigma = match case % 3 {
+                0 => 0.002f32,
+                1 => 80.0f32,
+                _ => (0.002 * (80.0f64 / 0.002).powf(rng.uniform())) as f32,
+            };
+            let (a, b) = (rng.normal() as f32, rng.normal() as f32);
+            let row = uncond_mask_row(k);
+            let full = class_mask(rows, &model.info.classes, case % model.info.n_classes);
+            let masks: [(MaskRef<'_>, &str); 2] =
+                [(MaskRef::Row(&row), "row"), (MaskRef::Full(&full), "full")];
+            for (mask, mtag) in masks {
+                let what = format!("dim{dim}k{k}/case{case}/{mtag}");
+                let exact =
+                    eval_at_tier(&model, &xhat, rows, sigma, a, b, mask, KernelPrecision::Exact);
+                let f64t =
+                    eval_at_tier(&model, &xhat, rows, sigma, a, b, mask, KernelPrecision::FastF64);
+                assert_close(&f64t.d, &exact.d, 1e-6, &format!("{what}/f64.d"));
+                assert_close(&f64t.v, &exact.v, 1e-6, &format!("{what}/f64.v"));
+                assert_close(&f64t.vnorm2, &exact.vnorm2, 1e-6, &format!("{what}/f64.vnorm2"));
+                let f32t =
+                    eval_at_tier(&model, &xhat, rows, sigma, a, b, mask, KernelPrecision::FastF32);
+                assert_close(&f32t.d, &exact.d, 5e-2, &format!("{what}/f32.d"));
+                assert_close(&f32t.v, &exact.v, 5e-2, &format!("{what}/f32.v"));
+                assert_close(&f32t.vnorm2, &exact.vnorm2, 1e-1, &format!("{what}/f32.vnorm2"));
+            }
+        }
+    }
+}
+
+#[test]
+fn split_calls_are_bit_identical_to_one_call_within_a_tier() {
+    // rows are independent in the tile kernel, so integrating a batch in
+    // two calls (crossing the ROW_TILE boundary at an odd offset) must
+    // reproduce the single-call output bit for bit — the property that
+    // lets the batcher chunk fast-tier groups freely
+    let (dim, k) = (16, 64);
+    let model = synthetic(dim, k);
+    let rows = 37usize;
+    let split = 19usize;
+    let mut rng = Rng::new(0x5317);
+    let mut xhat = vec![0.0f32; rows * dim];
+    rng.fill_normal_f32(&mut xhat, 2.5);
+    let row = uncond_mask_row(k);
+    for precision in [KernelPrecision::FastF64, KernelPrecision::FastF32] {
+        let whole =
+            eval_at_tier(&model, &xhat, rows, 0.9, 0.4, -0.6, MaskRef::Row(&row), precision);
+        // same scratch reused across both chunks, like a sampler loop
+        let mut scratch = KernelScratch::new();
+        scratch.set_precision(precision);
+        let mut head = EvalOut::default();
+        model
+            .denoise_v_uniform_into(
+                &xhat[..split * dim],
+                split,
+                0.9,
+                0.4,
+                -0.6,
+                MaskRef::Row(&row),
+                &mut head,
+                &mut scratch,
+            )
+            .unwrap();
+        let mut tail = EvalOut::default();
+        model
+            .denoise_v_uniform_into(
+                &xhat[split * dim..],
+                rows - split,
+                0.9,
+                0.4,
+                -0.6,
+                MaskRef::Row(&row),
+                &mut tail,
+                &mut scratch,
+            )
+            .unwrap();
+        let cat = |a: &[f32], b: &[f32]| [a, b].concat();
+        let tag = format!("{precision:?}");
+        assert_bits_eq(&cat(&head.d, &tail.d), &whole.d, &format!("{tag}.d"));
+        assert_bits_eq(&cat(&head.v, &tail.v), &whole.v, &format!("{tag}.v"));
+        assert_bits_eq(&cat(&head.vnorm2, &tail.vnorm2), &whole.vnorm2, &format!("{tag}.vnorm2"));
+    }
+}
+
+#[test]
+fn ineligible_shapes_fall_back_to_the_exact_kernel_bitwise() {
+    // below the dispatch floor (k < 8 or dim·k < 64) a fast-tier request
+    // silently runs the exact kernel — small models never pay (or see)
+    // the SIMD path
+    let mut rng = Rng::new(0x71A7);
+    for model in [toy(), synthetic(2, 8), synthetic(3, 7)] {
+        let (dim, k) = (model.info.dim, model.info.k);
+        let rows = 9usize;
+        let mut xhat = vec![0.0f32; rows * dim];
+        rng.fill_normal_f32(&mut xhat, 2.0);
+        let row = uncond_mask_row(k);
+        let exact =
+            eval_at_tier(&model, &xhat, rows, 1.3, 0.2, -0.8, MaskRef::Row(&row), KernelPrecision::Exact);
+        for precision in [KernelPrecision::FastF64, KernelPrecision::FastF32] {
+            let fast = eval_at_tier(&model, &xhat, rows, 1.3, 0.2, -0.8, MaskRef::Row(&row), precision);
+            let tag = format!("{}/{precision:?}", model.info.name);
+            assert_bits_eq(&fast.d, &exact.d, &format!("{tag}.d"));
+            assert_bits_eq(&fast.v, &exact.v, &format!("{tag}.v"));
+            assert_bits_eq(&fast.vnorm2, &exact.vnorm2, &format!("{tag}.vnorm2"));
+        }
+    }
+}
+
+#[test]
+fn golden_metrics_hold_across_solver_schedule_grid_at_fast_tiers() {
+    // end-to-end drift budget: at each (solver, schedule) combination the
+    // fast-tier run (same seed as exact, so sampling noise cancels in the
+    // delta) must keep FD within 0.05 of the exact run, every mean
+    // component within 0.05, and the covariance trace within 5%
+    let model = synthetic(16, 64);
+    let ds = model.info.clone();
+    let total = 2048usize;
+    let steps = 12usize;
+    let schedules: Vec<(&str, sdm::diffusion::SigmaGrid)> = vec![
+        ("edm", edm_schedule(steps, ds.sigma_min, ds.sigma_max, ds.rho).unwrap()),
+        ("linear", linear_sigma_schedule(steps, ds.sigma_min, ds.sigma_max).unwrap()),
+        ("cosine", cosine_schedule(steps, ds.sigma_min, ds.sigma_max).unwrap()),
+        ("logsnr", logsnr_schedule(steps, ds.sigma_min, ds.sigma_max).unwrap()),
+    ];
+    let solvers: Vec<(&str, SolverSpec)> = vec![
+        ("euler", SolverSpec::Euler),
+        ("heun", SolverSpec::Heun),
+        ("dpm2m", SolverSpec::Dpm2m),
+    ];
+    for (stag, grid) in &schedules {
+        for (vtag, solver) in &solvers {
+            let plan = SamplingPlan::single(*solver);
+            let cfg = RunConfig { rows: 256, seed: 0xE7A1, class: None, trace: false };
+            let (exact_s, _, _, _) = generate_plan_prec(
+                &model,
+                Param::Edm,
+                grid,
+                &plan,
+                &ds,
+                &cfg,
+                total,
+                KernelPrecision::Exact,
+            )
+            .unwrap();
+            let st_e = sample_mean_cov(&exact_s, ds.dim);
+            let fd_e = frechet_to_reference(&st_e, &ds.exact_mean, &ds.exact_cov).unwrap();
+            for precision in [KernelPrecision::FastF64, KernelPrecision::FastF32] {
+                let what = format!("{vtag}+{stag}/{precision:?}");
+                let (fast_s, _, _, _) = generate_plan_prec(
+                    &model,
+                    Param::Edm,
+                    grid,
+                    &plan,
+                    &ds,
+                    &cfg,
+                    total,
+                    precision,
+                )
+                .unwrap();
+                let st_f = sample_mean_cov(&fast_s, ds.dim);
+                let fd_f = frechet_to_reference(&st_f, &ds.exact_mean, &ds.exact_cov).unwrap();
+                assert!(
+                    (fd_e - fd_f).abs() <= 0.05,
+                    "{what}: FD drift {fd_e:.4} vs {fd_f:.4}"
+                );
+                for j in 0..ds.dim {
+                    assert!(
+                        (st_e.mean[j] - st_f.mean[j]).abs() <= 0.05,
+                        "{what}: mean[{j}] {:.4} vs {:.4}",
+                        st_e.mean[j],
+                        st_f.mean[j]
+                    );
+                }
+                let tr = |c: &sdm::linalg::Mat| (0..ds.dim).map(|i| c.at(i, i)).sum::<f64>();
+                let (te, tf) = (tr(&st_e.cov), tr(&st_f.cov));
+                assert!(
+                    (te - tf).abs() <= 0.05 * te.abs().max(1e-9),
+                    "{what}: cov trace {te:.4} vs {tf:.4}"
+                );
+            }
+        }
+    }
+}

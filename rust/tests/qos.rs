@@ -556,6 +556,7 @@ fn closed_loop_loadgen_is_deterministic_given_a_seed() {
         steps,
         priority: None,
         deadline_ms: None,
+        kernel_precision: None,
     };
     // two templates so the drawn sequence actually varies with the seed
     let profile = TraceProfile { templates: vec![(0.5, tpl(5)), (0.5, tpl(9))] };
