@@ -1,0 +1,324 @@
+//! Hand-rolled Rust lexer for the `sdm analyze` passes.
+//!
+//! The vendoring policy rules out `syn`/`quote` (DESIGN.md §2), and the
+//! analyzer's four passes only need token streams with line numbers —
+//! not a real AST — so this lexes a useful subset faithfully: idents,
+//! punctuation, numbers, cooked/raw/byte strings, char literals vs
+//! lifetimes, and line/block comments (captured separately, because the
+//! `// lint:` / `// lock-order:` annotation grammar lives in comments).
+//!
+//! Known limits (documented in DESIGN.md §11): no macro expansion — a
+//! macro body is lexed as the tokens it contains — and float literals /
+//! suffixes are lumped into one `Num` token.
+
+/// One lexical token. String contents are preserved (the wire-schema
+/// pass reads JSON field names out of request-template literals).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    /// String literal (cooked, raw, or byte) — content without quotes,
+    /// escapes left as written.
+    Str(String),
+    /// Char literal (content ignored — only lexed so `'a'` never opens a
+    /// phantom string).
+    Char,
+    /// Lifetime like `'a` (distinguished from char literals).
+    Lifetime,
+    Num,
+    Punct(char),
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Lexer output: the token stream plus line-indexed comment text (the
+/// annotation passes walk comments by line).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    /// line → comment text (after `//`, trimmed). A line holds at most
+    /// one line comment; later wins (never happens in rustfmt'd code).
+    pub comments: std::collections::BTreeMap<u32, String>,
+}
+
+impl Lexed {
+    pub fn comment(&self, line: u32) -> Option<&str> {
+        self.comments.get(&line).map(|s| s.as_str())
+    }
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b'\n' {
+                    j += 1;
+                }
+                let text = src[start..j].trim().to_string();
+                out.comments.insert(line, text);
+                i = j;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // block comment; Rust block comments nest
+                let mut depth = 1;
+                let mut j = i + 2;
+                while j < b.len() && depth > 0 {
+                    if b[j] == b'\n' {
+                        line += 1;
+                        j += 1;
+                    } else if j + 1 < b.len() && b[j] == b'/' && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if j + 1 < b.len() && b[j] == b'*' && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            b'"' => {
+                let (content, j, nl) = cooked_string(src, i);
+                out.tokens.push(Token { tok: Tok::Str(content), line });
+                line += nl;
+                i = j;
+            }
+            b'\'' => {
+                // lifetime vs char literal: '\x', or 'c' with a closing
+                // quote two ahead, is a char; otherwise a lifetime
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    let mut j = i + 2;
+                    if j < b.len() {
+                        j += 1; // the escaped char
+                    }
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1; // \u{..} etc
+                    }
+                    out.tokens.push(Token { tok: Tok::Char, line });
+                    i = (j + 1).min(b.len());
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                    out.tokens.push(Token { tok: Tok::Char, line });
+                    i = i + 3;
+                } else {
+                    let mut j = i + 1;
+                    while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                        j += 1;
+                    }
+                    out.tokens.push(Token { tok: Tok::Lifetime, line });
+                    i = j;
+                }
+            }
+            _ if c.is_ascii_digit() => {
+                let mut j = i + 1;
+                while j < b.len()
+                    && (b[j].is_ascii_alphanumeric() || b[j] == b'_' || b[j] == b'.')
+                {
+                    // `0..n` range: the dots belong to punctuation
+                    if b[j] == b'.' && j + 1 < b.len() && b[j + 1] == b'.' {
+                        break;
+                    }
+                    j += 1;
+                }
+                out.tokens.push(Token { tok: Tok::Num, line });
+                i = j;
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                let mut j = i + 1;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                let ident = &src[i..j];
+                // raw / byte-raw string prefixes: r"", r#""#, br"" — must
+                // be handled here or embedded quotes corrupt the stream
+                if (ident == "r" || ident == "br") && j < b.len() && (b[j] == b'"' || b[j] == b'#')
+                {
+                    if let Some((content, k, nl)) = raw_string(src, j) {
+                        out.tokens.push(Token { tok: Tok::Str(content), line });
+                        line += nl;
+                        i = k;
+                        continue;
+                    }
+                }
+                if ident == "b" && j < b.len() && b[j] == b'"' {
+                    let (content, k, nl) = cooked_string(src, j);
+                    out.tokens.push(Token { tok: Tok::Str(content), line });
+                    line += nl;
+                    i = k;
+                    continue;
+                }
+                out.tokens.push(Token { tok: Tok::Ident(ident.to_string()), line });
+                i = j;
+            }
+            _ => {
+                out.tokens.push(Token { tok: Tok::Punct(c as char), line });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Lex a cooked string starting at the opening quote `b[start] == '"'`.
+/// Returns (content, index after closing quote, newlines consumed).
+fn cooked_string(src: &str, start: usize) -> (String, usize, u32) {
+    let b = src.as_bytes();
+    let mut j = start + 1;
+    let mut nl = 0u32;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => break,
+            b'\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    let content = src[start + 1..j.min(src.len())].to_string();
+    ((content), (j + 1).min(b.len()), nl)
+}
+
+/// Lex a raw string whose hashes/quote begin at `start` (the `r`/`br`
+/// prefix already consumed). Returns None if it isn't actually a raw
+/// string (e.g. `r#` in an attribute-like position).
+fn raw_string(src: &str, start: usize) -> Option<(String, usize, u32)> {
+    let b = src.as_bytes();
+    let mut hashes = 0usize;
+    let mut j = start;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    let content_start = j;
+    let mut nl = 0u32;
+    while j < b.len() {
+        if b[j] == b'\n' {
+            nl += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' {
+            // need `hashes` following '#'
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                let content = src[content_start..j].to_string();
+                return Some((content, k, nl));
+            }
+        }
+        j += 1;
+    }
+    Some((src[content_start..].to_string(), b.len(), nl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<String> {
+        l.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn strs(l: &Lexed) -> Vec<String> {
+        l.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let l = lex("fn a() {\n  b.lock();\n}\n");
+        assert_eq!(idents(&l), vec!["fn", "a", "b", "lock"]);
+        let lock_tok = l
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("lock".into()))
+            .unwrap();
+        assert_eq!(lock_tok.line, 2);
+    }
+
+    #[test]
+    fn comments_captured_by_line() {
+        let l = lex("// lint: no-alloc\nfn f() {} // trailing\n");
+        assert_eq!(l.comment(1), Some("lint: no-alloc"));
+        assert_eq!(l.comment(2), Some("trailing"));
+    }
+
+    #[test]
+    fn raw_strings_with_embedded_quotes() {
+        let l = lex(r##"let s = r#","plan":"{p}""#;"##);
+        assert_eq!(strs(&l), vec![r#","plan":"{p}""#.to_string()]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = l.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = l.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn block_comments_nest_and_count_lines() {
+        let l = lex("/* outer /* inner */\nstill comment */ fn g() {}");
+        assert_eq!(idents(&l), vec!["fn", "g"]);
+        assert_eq!(l.tokens[0].line, 2);
+    }
+
+    #[test]
+    fn cooked_string_escapes() {
+        let l = lex(r#"let s = "a \"quoted\" b"; let t = "x";"#);
+        assert_eq!(strs(&l).len(), 2);
+        assert_eq!(strs(&l)[1], "x");
+    }
+
+    #[test]
+    fn range_after_number_is_punct() {
+        let l = lex("for i in 0..n {}");
+        let puncts: Vec<char> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match t.tok {
+                Tok::Punct(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(puncts, vec!['.', '.', '{', '}']);
+    }
+}

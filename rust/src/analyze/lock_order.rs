@@ -1,0 +1,309 @@
+//! Pass 1 — lock-order / deadlock detection.
+//!
+//! Builds the nested-acquisition graph: an edge `A -> B` means some fn
+//! acquires lock `B` while holding `A`, either directly or through one
+//! hop of intra-crate call inlining (a call made under a guard, resolved
+//! to a unique fn in the scanned tree, contributes that callee's
+//! acquisitions). Reports:
+//!   * every edge that participates in a cycle (`A -> ... -> A`),
+//!   * every edge that contradicts declared `// lock-order: N` ranks
+//!     (may acquire X while holding H only if rank(H) < rank(X)),
+//!   * any blocking op (`send` / `recv` / `recv_timeout` / zero-arg
+//!     `join`) executed while a guard is live, unless the site carries
+//!     `// lint: allow(lock): reason`.
+//!
+//! `util/sync.rs` defines the poison-recovery wrappers themselves; its
+//! fns are excluded both as sources of events and as call targets, so
+//! `lock_unpoisoned`'s own body doesn't fuse every lock into one node.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::scanner::{FnDef, ScannedFile};
+use super::{Diagnostic, PASS_LOCK_ORDER};
+
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: u32,
+    via: Option<String>,
+}
+
+fn is_sync_helper_file(path: &str) -> bool {
+    path.replace('\\', "/").ends_with("util/sync.rs")
+}
+
+/// Names too generic to resolve through the one-hop call graph.
+const CALL_STOPLIST: &[&str] = &[
+    "new", "len", "get", "insert", "push", "min", "max", "abs", "sqrt", "exp", "ln",
+    "clone", "drop", "into", "from", "default", "iter", "next", "row", "name", "tag",
+];
+
+pub fn run(files: &[ScannedFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    // fn name -> unique definition (None when ambiguous)
+    let mut by_name: BTreeMap<&str, Option<(&ScannedFile, &FnDef)>> = BTreeMap::new();
+    for f in files {
+        if is_sync_helper_file(&f.path) {
+            continue;
+        }
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            by_name
+                .entry(d.name.as_str())
+                .and_modify(|e| *e = None)
+                .or_insert(Some((f, d)));
+        }
+    }
+
+    let mut edges: Vec<Edge> = Vec::new();
+    for f in files {
+        if is_sync_helper_file(&f.path) {
+            continue;
+        }
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            // direct nested acquisitions
+            for acq in &d.acquisitions {
+                for held in &acq.held {
+                    if held != &acq.lock {
+                        edges.push(Edge {
+                            from: held.clone(),
+                            to: acq.lock.clone(),
+                            file: f.path.clone(),
+                            line: acq.line,
+                            via: None,
+                        });
+                    } else {
+                        diags.push(Diagnostic::new(
+                            PASS_LOCK_ORDER,
+                            &f.path,
+                            acq.line,
+                            format!("lock `{}` re-acquired while already held (std::sync::Mutex self-deadlocks)", acq.lock),
+                        ));
+                    }
+                }
+            }
+            // one hop of call inlining: calls made under a guard pull in
+            // the callee's own acquisitions
+            for call in &d.calls {
+                if call.held.is_empty() || CALL_STOPLIST.contains(&call.name.as_str()) {
+                    continue;
+                }
+                let Some(Some((_, callee))) = by_name.get(call.name.as_str()) else {
+                    continue;
+                };
+                for acq in &callee.acquisitions {
+                    for held in &call.held {
+                        if held != &acq.lock {
+                            edges.push(Edge {
+                                from: held.clone(),
+                                to: acq.lock.clone(),
+                                file: f.path.clone(),
+                                line: call.line,
+                                via: Some(callee.name.clone()),
+                            });
+                        } else {
+                            diags.push(Diagnostic::new(
+                                PASS_LOCK_ORDER,
+                                &f.path,
+                                call.line,
+                                format!(
+                                    "call to `{}` re-acquires `{}` already held here",
+                                    callee.name, acq.lock
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+            // blocking ops under a guard
+            for b in &d.blocking {
+                if f.allow_reason(b.line, "lock").is_some() {
+                    continue;
+                }
+                diags.push(Diagnostic::new(
+                    PASS_LOCK_ORDER,
+                    &f.path,
+                    b.line,
+                    format!(
+                        "blocking `.{}(..)` while holding lock{} {}; drop the guard first or annotate `// lint: allow(lock): reason`",
+                        b.what,
+                        if b.held.len() > 1 { "s" } else { "" },
+                        b.held
+                            .iter()
+                            .map(|h| format!("`{h}`"))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+
+    // cycle detection: an edge is cyclic iff `to` can reach `from`
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(e.from.as_str()).or_default().insert(e.to.as_str());
+    }
+    let reaches = |from: &str, target: &str| -> bool {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![from];
+        while let Some(n) = stack.pop() {
+            if n == target {
+                return true;
+            }
+            if !seen.insert(n) {
+                continue;
+            }
+            if let Some(nexts) = adj.get(n) {
+                stack.extend(nexts.iter().copied());
+            }
+        }
+        false
+    };
+
+    // declared-rank table
+    let mut ranks: BTreeMap<&str, i64> = BTreeMap::new();
+    for f in files {
+        for r in &f.lock_ranks {
+            ranks.insert(r.lock.as_str(), r.rank);
+        }
+    }
+
+    let mut reported: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for e in &edges {
+        let via = e
+            .via
+            .as_ref()
+            .map(|v| format!(" (via call to `{v}`)"))
+            .unwrap_or_default();
+        if reaches(&e.to, &e.from) {
+            let msg = format!(
+                "lock cycle: acquires `{}` while holding `{}`{} and `{}` can be held while taking `{}` elsewhere",
+                e.to, e.from, via, e.to, e.from
+            );
+            if reported.insert((e.file.clone(), e.line, msg.clone())) {
+                diags.push(Diagnostic::new(PASS_LOCK_ORDER, &e.file, e.line, msg));
+            }
+            continue;
+        }
+        if let (Some(&rh), Some(&ra)) = (ranks.get(e.from.as_str()), ranks.get(e.to.as_str())) {
+            if rh >= ra {
+                let msg = format!(
+                    "lock-order violation: acquires `{}` (rank {}) while holding `{}` (rank {}){}; declared order requires rank(held) < rank(acquired)",
+                    e.to, ra, e.from, rh, via
+                );
+                if reported.insert((e.file.clone(), e.line, msg.clone())) {
+                    diags.push(Diagnostic::new(PASS_LOCK_ORDER, &e.file, e.line, msg));
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_file;
+    use super::*;
+
+    #[test]
+    fn ab_ba_cycle_is_reported_on_both_edges() {
+        let f = scan_file(
+            "x.rs",
+            "impl S {\n\
+             fn f(&self) { let a = self.alpha.lock().unwrap(); let b = self.beta.lock().unwrap(); let _ = (a, b); }\n\
+             fn g(&self) { let b = self.beta.lock().unwrap(); let a = self.alpha.lock().unwrap(); let _ = (a, b); }\n\
+             }\n",
+        );
+        let d = run(&[f]);
+        let cyc: Vec<_> = d.iter().filter(|d| d.message.contains("lock cycle")).collect();
+        assert_eq!(cyc.len(), 2, "{d:?}");
+        assert_eq!(cyc[0].line, 2);
+        assert_eq!(cyc[1].line, 3);
+    }
+
+    #[test]
+    fn nested_acquisition_via_callee_closes_cycle() {
+        let f = scan_file(
+            "x.rs",
+            "impl S {\n\
+             fn outer(&self) { let b = self.beta.lock().unwrap(); self.take_alpha(); let _ = b; }\n\
+             fn take_alpha(&self) { let a = self.alpha.lock().unwrap(); let b = self.beta.lock().unwrap(); let _ = (a, b); }\n\
+             }\n",
+        );
+        let d = run(&[f]);
+        assert!(
+            d.iter().any(|d| d.message.contains("via call to `take_alpha`")),
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn declared_rank_violation_without_cycle() {
+        let f = scan_file(
+            "x.rs",
+            "struct S {\n\
+               // lock-order: 10\n\
+               low: Mutex<u32>,\n\
+               // lock-order: 20\n\
+               high: Mutex<u32>,\n\
+             }\n\
+             impl S { fn f(&self) { let h = self.high.lock().unwrap(); let l = self.low.lock().unwrap(); let _ = (h, l); } }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("rank 20"), "{d:?}");
+        assert!(d[0].message.contains("lock-order violation"), "{d:?}");
+    }
+
+    #[test]
+    fn rank_respecting_nesting_is_clean() {
+        let f = scan_file(
+            "x.rs",
+            "struct S {\n\
+               // lock-order: 10\n\
+               low: Mutex<u32>,\n\
+               // lock-order: 20\n\
+               high: Mutex<u32>,\n\
+             }\n\
+             impl S { fn f(&self) { let l = self.low.lock().unwrap(); let h = self.high.lock().unwrap(); let _ = (h, l); } }\n",
+        );
+        assert!(run(&[f]).is_empty());
+    }
+
+    #[test]
+    fn send_under_guard_flagged_unless_allowed() {
+        let f = scan_file(
+            "x.rs",
+            "fn bad(m: &M) { let g = m.lock().unwrap(); g.send(1).unwrap(); }\n\
+             fn ok(m: &M) {\n\
+               let g = m.lock().unwrap();\n\
+               g.send(1).unwrap(); // lint: allow(lock): channel is unbounded, send never blocks\n\
+             }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("blocking `.send(..)`"));
+        assert_eq!(d[0].line, 1);
+    }
+
+    #[test]
+    fn different_impls_same_field_name_do_not_collide() {
+        let f = scan_file(
+            "x.rs",
+            "impl Inbox { fn f(&self) { let a = self.state.lock().unwrap(); let _ = a; } }\n\
+             impl Drr { fn g(&self) { let b = self.state.lock().unwrap(); let a = other.lock().unwrap(); let _ = (a, b); } }\n",
+        );
+        let d = run(&[f]);
+        // Drr::state -> other edge exists but no cycle, no ranks: clean
+        assert!(d.is_empty(), "{d:?}");
+    }
+}

@@ -1,0 +1,299 @@
+//! `sdm analyze` — in-repo static analysis over `rust/src/**`.
+//!
+//! Dependency-free by construction (the vendoring policy rules out
+//! syn/quote): a hand-rolled lexer (`lexer`), a lightweight
+//! item/expression scanner (`scanner`), and four passes:
+//!
+//!   1. `lock-order`   — nested-acquisition cycles, declared-rank
+//!                        violations, blocking ops under a guard
+//!   2. `panic-policy` — unwrap/expect/panic!/unreachable! zoning
+//!   3. `no-alloc`     — `// lint: no-alloc` hot-path enforcement
+//!   4. `wire-schema`  — JSON field-name drift between protocol.rs
+//!                        and the client/loadgen producers
+//!
+//! Findings can be waived per (pass, file) through a checked-in
+//! baseline (`.lint-baseline`); `--deny` turns remaining findings into
+//! a non-zero exit for CI. DESIGN.md §11 documents the annotation
+//! grammar, the declared lock order, and the known syntactic limits.
+
+pub mod lexer;
+pub mod lock_order;
+pub mod no_alloc;
+pub mod panic_policy;
+pub mod scanner;
+pub mod wire_schema;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::{Args, Json};
+use scanner::{scan_file, ScannedFile};
+
+pub const PASS_LOCK_ORDER: &str = "lock-order";
+pub const PASS_PANIC: &str = "panic-policy";
+pub const PASS_NO_ALLOC: &str = "no-alloc";
+pub const PASS_WIRE: &str = "wire-schema";
+
+/// One finding, anchored to a file:line.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(pass: &'static str, file: &str, line: u32, message: String) -> Diagnostic {
+        Diagnostic { pass, file: file.to_string(), line, message }
+    }
+
+    /// The stable rendering golden tests assert against.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.pass, self.message)
+    }
+}
+
+/// Checked-in waivers, one `(pass, file)` pair per line:
+///
+/// ```text
+/// # comment
+/// panic-policy rust/src/solvers/adaptive.rs
+/// ```
+///
+/// File-granular on purpose: line-exact baselines rot on every edit
+/// above the waived site, which matters in a repo whose authoring
+/// containers often cannot run the analyzer to regenerate them.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: BTreeSet<(String, String)>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Baseline {
+        let mut entries = BTreeSet::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            if let (Some(pass), Some(file)) = (it.next(), it.next()) {
+                entries.insert((pass.to_string(), file.replace('\\', "/")));
+            }
+        }
+        Baseline { entries }
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Ok(Baseline::parse(&text))
+    }
+
+    pub fn covers(&self, d: &Diagnostic) -> bool {
+        self.entries.contains(&(d.pass.to_string(), d.file.replace('\\', "/")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries that matched no finding — stale waivers worth pruning.
+    pub fn unused(&self, all: &[Diagnostic]) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|(pass, file)| {
+                !all.iter().any(|d| d.pass == pass && d.file.replace('\\', "/") == *file)
+            })
+            .map(|(pass, file)| format!("{pass} {file}"))
+            .collect()
+    }
+}
+
+/// Result of analyzing a tree: findings split by baseline coverage.
+#[derive(Debug)]
+pub struct Report {
+    pub active: Vec<Diagnostic>,
+    pub baselined: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    pub stale_baseline: Vec<String>,
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("files_scanned".to_string(), Json::Num(self.files_scanned as f64));
+        obj.insert("baselined".to_string(), Json::Num(self.baselined.len() as f64));
+        let findings = self
+            .active
+            .iter()
+            .map(|d| {
+                let mut f = std::collections::BTreeMap::new();
+                f.insert("pass".to_string(), Json::Str(d.pass.to_string()));
+                f.insert("file".to_string(), Json::Str(d.file.clone()));
+                f.insert("line".to_string(), Json::Num(d.line as f64));
+                f.insert("message".to_string(), Json::Str(d.message.clone()));
+                Json::Obj(f)
+            })
+            .collect();
+        obj.insert("findings".to_string(), Json::Arr(findings));
+        obj.insert(
+            "stale_baseline".to_string(),
+            Json::Arr(self.stale_baseline.iter().cloned().map(Json::Str).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for
+/// deterministic diagnostics.
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(root)
+        .with_context(|| format!("reading directory {}", root.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root`. Diagnostic paths are the walked
+/// paths as given (relative roots stay relative), `/`-separated.
+pub fn scan_tree(root: &Path) -> Result<Vec<ScannedFile>> {
+    let mut paths = Vec::new();
+    collect_rs_files(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::new();
+    for p in &paths {
+        let src = fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p.to_string_lossy().replace('\\', "/");
+        files.push(scan_file(&rel, &src));
+    }
+    Ok(files)
+}
+
+/// Run all four passes over already-scanned files, sorted by
+/// (file, line, pass) for stable output.
+pub fn run_passes(files: &[ScannedFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    diags.extend(lock_order::run(files));
+    diags.extend(panic_policy::run(files));
+    diags.extend(no_alloc::run(files));
+    diags.extend(wire_schema::run(files));
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.pass, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.pass, b.message.as_str()))
+    });
+    diags
+}
+
+/// Analyze a tree and apply a baseline: the library entry point the
+/// CLI and the integration tests share.
+pub fn analyze_tree(root: &Path, baseline: Option<&Path>) -> Result<Report> {
+    let files = scan_tree(root)?;
+    let all = run_passes(&files);
+    let baseline = match baseline {
+        Some(p) => Baseline::load(p)?,
+        None => Baseline::default(),
+    };
+    let stale_baseline = baseline.unused(&all);
+    let (baselined, active): (Vec<_>, Vec<_>) =
+        all.into_iter().partition(|d| baseline.covers(d));
+    Ok(Report { active, baselined, files_scanned: files.len(), stale_baseline })
+}
+
+/// `sdm analyze [--deny] [--baseline FILE] [--json] [--root DIR]`
+pub fn run_cli(args: &Args) -> Result<()> {
+    let root = args.get("root", "rust/src");
+    let baseline = args.opt("baseline");
+    let json = args.has("json");
+    let deny = args.has("deny");
+    args.finish()?;
+
+    let report = analyze_tree(Path::new(&root), baseline.as_deref().map(Path::new))?;
+
+    if json {
+        println!("{}", report.to_json().to_string());
+    } else {
+        for d in &report.active {
+            println!("{}", d.render());
+        }
+        for s in &report.stale_baseline {
+            println!("note: stale baseline entry `{s}` matched no finding");
+        }
+        println!(
+            "analyze: {} finding{} ({} baselined) across {} files",
+            report.active.len(),
+            if report.active.len() == 1 { "" } else { "s" },
+            report.baselined.len(),
+            report.files_scanned
+        );
+    }
+
+    if deny && !report.active.is_empty() {
+        bail!("analyze --deny: {} non-baselined finding(s)", report.active.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_parses_comments_and_waives_by_pass_and_file() {
+        let b = Baseline::parse(
+            "# waivers\n\npanic-policy rust/src/solvers/adaptive.rs\nlock-order rust/src/util/threadpool.rs\n",
+        );
+        assert_eq!(b.len(), 2);
+        let hit = Diagnostic::new(PASS_PANIC, "rust/src/solvers/adaptive.rs", 42, "x".into());
+        let miss = Diagnostic::new(PASS_PANIC, "rust/src/solvers/euler.rs", 1, "x".into());
+        let wrong_pass =
+            Diagnostic::new(PASS_NO_ALLOC, "rust/src/solvers/adaptive.rs", 42, "x".into());
+        assert!(b.covers(&hit));
+        assert!(!b.covers(&miss));
+        assert!(!b.covers(&wrong_pass));
+    }
+
+    #[test]
+    fn stale_entries_are_reported() {
+        let b = Baseline::parse("panic-policy rust/src/never.rs\n");
+        let unused = b.unused(&[]);
+        assert_eq!(unused, vec!["panic-policy rust/src/never.rs".to_string()]);
+    }
+
+    #[test]
+    fn render_format_is_stable() {
+        let d = Diagnostic::new(PASS_WIRE, "rust/src/coordinator/client.rs", 7, "msg".into());
+        assert_eq!(d.render(), "rust/src/coordinator/client.rs:7: [wire-schema] msg");
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = Report {
+            active: vec![Diagnostic::new(PASS_PANIC, "a.rs", 1, "m".into())],
+            baselined: vec![],
+            files_scanned: 3,
+            stale_baseline: vec![],
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("files_scanned").unwrap().as_f64().unwrap(), 3.0);
+        let arr = j.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("pass").unwrap().as_str().unwrap(), "panic-policy");
+    }
+}

@@ -1,0 +1,153 @@
+//! Pass 3 — no-alloc hot-path enforcement.
+//!
+//! Fns annotated `// lint: no-alloc` (kernel tile passes, the uniform-σ
+//! denoiser entry points, engine step inner loops) are rejected if they
+//! — or any intra-crate callee reachable in one hop — syntactically
+//! allocate. The forbidden set is the closed list from the issue:
+//! `Vec::new`, `vec!`, `.to_vec()`, `.clone()`, `.collect()`,
+//! `format!`, `Box::new`, `String::from`. This turns the CountingAlloc
+//! test-time check into a compile-free whole-tree guarantee; it is
+//! deliberately syntactic — `with_capacity`/`resize` on caller-owned
+//! scratch are the sanctioned amortized-allocation idiom and stay legal.
+//!
+//! A call site may be excused with `// lint: allow(alloc): reason`
+//! (e.g. a dispatch into a sharded path that pays an owned-copy setup
+//! outside the row loop).
+
+use std::collections::BTreeMap;
+
+use super::scanner::{FnDef, ScannedFile};
+use super::{Diagnostic, PASS_NO_ALLOC};
+
+/// Names too generic to resolve through the one-hop call graph.
+const CALL_STOPLIST: &[&str] = &[
+    "new", "len", "get", "insert", "push", "min", "max", "abs", "sqrt", "exp", "ln",
+    "clone", "drop", "into", "from", "default", "iter", "next", "row", "name", "tag",
+];
+
+pub fn run(files: &[ScannedFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    let mut by_name: BTreeMap<&str, Option<(&ScannedFile, &FnDef)>> = BTreeMap::new();
+    for f in files {
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            by_name
+                .entry(d.name.as_str())
+                .and_modify(|e| *e = None)
+                .or_insert(Some((f, d)));
+        }
+    }
+
+    for f in files {
+        for d in &f.fns {
+            if !d.no_alloc || d.is_test {
+                continue;
+            }
+            // direct allocations
+            for a in &d.allocs {
+                if f.allow_reason(a.line, "alloc").is_some() {
+                    continue;
+                }
+                diags.push(Diagnostic::new(
+                    PASS_NO_ALLOC,
+                    &f.path,
+                    a.line,
+                    format!("no-alloc fn `{}` contains `{}`", d.name, a.what),
+                ));
+            }
+            // one hop into intra-crate callees
+            for call in &d.calls {
+                if CALL_STOPLIST.contains(&call.name.as_str()) {
+                    continue;
+                }
+                if f.allow_reason(call.line, "alloc").is_some() {
+                    continue;
+                }
+                let Some(Some((cf, callee))) = by_name.get(call.name.as_str()) else {
+                    continue;
+                };
+                if let Some(a) = callee.allocs.iter().find(|a| cf.allow_reason(a.line, "alloc").is_none()) {
+                    diags.push(Diagnostic::new(
+                        PASS_NO_ALLOC,
+                        &f.path,
+                        call.line,
+                        format!(
+                            "no-alloc fn `{}` calls `{}`, which allocates (`{}` at {}:{})",
+                            d.name, callee.name, a.what, cf.path, a.line
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_file;
+    use super::*;
+
+    #[test]
+    fn direct_alloc_in_no_alloc_fn_is_flagged() {
+        let f = scan_file(
+            "x.rs",
+            "// lint: no-alloc\nfn hot() { let v = vec![1, 2]; let _ = v; }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("contains `vec!`"), "{d:?}");
+    }
+
+    #[test]
+    fn transitive_alloc_via_callee_is_flagged() {
+        let f = scan_file(
+            "x.rs",
+            "// lint: no-alloc\n\
+             fn hot(xs: &[f64]) { helper(xs); }\n\
+             fn helper(xs: &[f64]) { let v = xs.to_vec(); let _ = v; }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("calls `helper`, which allocates"), "{d:?}");
+        assert!(d[0].message.contains(".to_vec()"), "{d:?}");
+    }
+
+    #[test]
+    fn clean_fn_and_unannotated_allocs_pass() {
+        let f = scan_file(
+            "x.rs",
+            "// lint: no-alloc\n\
+             fn hot(out: &mut [f64]) { for o in out.iter_mut() { *o = 0.0; } }\n\
+             fn cold() { let v = Vec::new(); let _ = v; }\n",
+        );
+        assert!(run(&[f]).is_empty());
+    }
+
+    #[test]
+    fn allow_alloc_excuses_a_dispatch_call() {
+        let f = scan_file(
+            "x.rs",
+            "// lint: no-alloc\n\
+             fn hot(xs: &[f64]) {\n\
+               // lint: allow(alloc): sharded setup copies outside the row loop\n\
+               return sharded(xs);\n\
+             }\n\
+             fn sharded(xs: &[f64]) { let v = xs.to_vec(); let _ = v; }\n",
+        );
+        assert!(run(&[f]).is_empty());
+    }
+
+    #[test]
+    fn resize_and_with_capacity_stay_legal() {
+        let f = scan_file(
+            "x.rs",
+            "// lint: no-alloc\n\
+             fn hot(buf: &mut Vec<f64>, n: usize) { buf.resize(n, 0.0); buf.reserve(n); }\n",
+        );
+        assert!(run(&[f]).is_empty());
+    }
+}

@@ -1,0 +1,125 @@
+//! Pass 2 — panic-policy zones.
+//!
+//! `unwrap` / `expect` / `panic!` / `unreachable!` are forbidden in
+//! `coordinator/*` request/reply paths: a panicking route kills a thread
+//! that owes the client a structured reply (the failure class the PR-5
+//! rejection taxonomy exists to prevent). Allowed escapes:
+//!   * test/bench code (`#[cfg(test)]` / `#[test]` / `#[bench]`),
+//!   * `main.rs` CLI setup (exempt wholesale),
+//!   * a `// lint: allow(panic): <reason>` annotation on the site's
+//!     line or the line above — the reason is mandatory.
+//!
+//! Sites outside `coordinator/` are reported too, so the checked-in
+//! baseline can hold them while zones get burned down incrementally;
+//! the driver applies the baseline, not this pass.
+
+use super::scanner::ScannedFile;
+use super::{Diagnostic, PASS_PANIC};
+
+fn zone_of(path: &str) -> Option<&'static str> {
+    let p = path.replace('\\', "/");
+    if p.ends_with("main.rs") {
+        return None; // CLI setup may panic
+    }
+    if p.contains("/coordinator/") {
+        Some("coordinator request/reply path")
+    } else {
+        Some("library code")
+    }
+}
+
+pub fn run(files: &[ScannedFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for f in files {
+        let Some(zone) = zone_of(&f.path) else { continue };
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            for p in &d.panics {
+                match f.allow_reason(p.line, "panic") {
+                    Some(reason) if !reason.is_empty() => continue,
+                    Some(_) => {
+                        diags.push(Diagnostic::new(
+                            PASS_PANIC,
+                            &f.path,
+                            p.line,
+                            format!(
+                                "`// lint: allow(panic)` on `{}` is missing its reason (grammar: `// lint: allow(panic): <reason>`)",
+                                p.what
+                            ),
+                        ));
+                        continue;
+                    }
+                    None => {}
+                }
+                diags.push(Diagnostic::new(
+                    PASS_PANIC,
+                    &f.path,
+                    p.line,
+                    format!(
+                        "panic site `{}` in {} (fn `{}`); return a structured error or annotate `// lint: allow(panic): reason`",
+                        p.what, zone, d.name
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_file;
+    use super::*;
+
+    #[test]
+    fn coordinator_unwrap_is_flagged() {
+        let f = scan_file(
+            "rust/src/coordinator/server.rs",
+            "fn reply(x: R) { let v = x.unwrap(); let _ = v; }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("panic site `unwrap`"), "{d:?}");
+        assert!(d[0].message.contains("coordinator request/reply path"));
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_but_bare_allow_does_not() {
+        let f = scan_file(
+            "rust/src/coordinator/server.rs",
+            "fn reply(x: R) {\n\
+               // lint: allow(panic): poisoned mutex means a worker already panicked\n\
+               let v = x.unwrap();\n\
+               // lint: allow(panic)\n\
+               let w = x.expect(\"w\");\n\
+               let _ = (v, w);\n }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("missing its reason"));
+    }
+
+    #[test]
+    fn tests_and_main_are_exempt() {
+        let t = scan_file(
+            "rust/src/coordinator/qos.rs",
+            "#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { x.unwrap(); }\n}\n",
+        );
+        let m = scan_file("rust/src/main.rs", "fn run() { x.unwrap(); }\n");
+        assert!(run(&[t]).is_empty());
+        assert!(run(&[m]).is_empty());
+    }
+
+    #[test]
+    fn non_coordinator_sites_report_as_library_code() {
+        let f = scan_file(
+            "rust/src/sampler/engine.rs",
+            "fn step() { unreachable!(\"gated\"); }\n",
+        );
+        let d = run(&[f]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("library code"), "{d:?}");
+    }
+}

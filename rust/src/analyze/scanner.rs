@@ -1,0 +1,1029 @@
+//! Item/expression scanner over lexed token streams.
+//!
+//! Extracts exactly the facts the four `sdm analyze` passes need — fn
+//! items with impl qualifiers, `#[cfg(test)]`/`#[test]` exclusion
+//! ranges, guard-scoped lock acquisitions with the set of locks held at
+//! every event, panic/alloc sites, call sites, `// lock-order: N` field
+//! ranks, and the `// lint:` annotation grammar (DESIGN.md §11).
+//!
+//! Guard scoping is syntactic: a `let`-bound guard lives to the end of
+//! its enclosing block (or an explicit `drop(guard)`); a temporary guard
+//! (`x.lock().unwrap().f()`) lives to the end of its statement. `if let
+//! Ok(g) = x.lock()` is over-scoped to the enclosing block — the
+//! conservative direction for deadlock detection.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Lexed, Tok, Token};
+
+/// A site of interest inside a fn body (panic or alloc).
+#[derive(Clone, Debug)]
+pub struct Site {
+    /// what was found, e.g. `unwrap`, `vec!`, `Vec::new`
+    pub what: String,
+    pub line: u32,
+}
+
+/// One lock acquisition with the locks already held when it happened.
+#[derive(Clone, Debug)]
+pub struct LockEvent {
+    pub lock: String,
+    pub line: u32,
+    pub held: Vec<String>,
+}
+
+/// A blocking op (`send`/`recv`/`recv_timeout`/zero-arg `join`) that ran
+/// while at least one guard was live.
+#[derive(Clone, Debug)]
+pub struct BlockingEvent {
+    pub what: String,
+    pub line: u32,
+    pub held: Vec<String>,
+}
+
+/// A call site (free, path, or method call) with the held-lock context.
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    /// last path segment / method name
+    pub name: String,
+    pub line: u32,
+    pub held: Vec<String>,
+    pub is_method: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct FnDef {
+    pub name: String,
+    /// enclosing `impl` type, if any
+    pub qualifier: Option<String>,
+    pub line: u32,
+    /// inside `#[cfg(test)]` / `#[test]` / `#[bench]` code
+    pub is_test: bool,
+    /// fn carries a `// lint: no-alloc` annotation
+    pub no_alloc: bool,
+    pub panics: Vec<Site>,
+    pub allocs: Vec<Site>,
+    pub calls: Vec<CallSite>,
+    pub acquisitions: Vec<LockEvent>,
+    pub blocking: Vec<BlockingEvent>,
+}
+
+/// A `// lock-order: N` rank on a struct field.
+#[derive(Clone, Debug)]
+pub struct LockRank {
+    /// qualified `Struct::field`, or the bare field if no struct context
+    pub lock: String,
+    pub rank: i64,
+    pub line: u32,
+}
+
+pub struct ScannedFile {
+    /// path as reported in diagnostics (relative, `/`-separated)
+    pub path: String,
+    pub lexed: Lexed,
+    /// token-index ranges of test-gated code
+    pub excluded: Vec<(usize, usize)>,
+    pub fns: Vec<FnDef>,
+    pub lock_ranks: Vec<LockRank>,
+}
+
+impl ScannedFile {
+    /// Is token index `i` inside test-gated code?
+    pub fn in_test(&self, i: usize) -> bool {
+        self.excluded.iter().any(|&(a, b)| i >= a && i <= b)
+    }
+
+    /// `// lint: allow(kind): reason` on `line` (trailing) or the line
+    /// above. Returns the reason text (possibly empty) when present.
+    pub fn allow_reason(&self, line: u32, kind: &str) -> Option<String> {
+        for l in [line, line.saturating_sub(1)] {
+            if let Some(c) = self.lexed.comment(l) {
+                if let Some(r) = parse_allow(c, kind) {
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Parse `lint: allow(kind)[: reason]` out of a comment body.
+fn parse_allow(comment: &str, kind: &str) -> Option<String> {
+    let idx = comment.find("lint:")?;
+    let rest = comment[idx + 5..].trim_start();
+    let marker = format!("allow({kind})");
+    let rest = rest.strip_prefix(marker.as_str())?;
+    let reason = rest.trim_start().strip_prefix(':').unwrap_or("").trim();
+    Some(reason.to_string())
+}
+
+/// Does a comment carry `lint: no-alloc`?
+fn parse_no_alloc(comment: &str) -> bool {
+    comment
+        .find("lint:")
+        .map(|i| comment[i + 5..].trim_start().starts_with("no-alloc"))
+        .unwrap_or(false)
+}
+
+/// Parse `lock-order: N` out of a comment body.
+fn parse_lock_order(comment: &str) -> Option<i64> {
+    let idx = comment.find("lock-order:")?;
+    comment[idx + 11..].trim().split_whitespace().next()?.parse().ok()
+}
+
+fn ident(t: &Token) -> Option<&str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s),
+        _ => None,
+    }
+}
+
+fn is_punct(t: &Token, c: char) -> bool {
+    matches!(t.tok, Tok::Punct(p) if p == c)
+}
+
+/// Scan one file. `path` is the diagnostic-facing relative path.
+pub fn scan_file(path: &str, src: &str) -> ScannedFile {
+    let lexed = lex(src);
+    let toks = &lexed.tokens;
+
+    // line → (has tokens, first token is '#') — annotation walk support
+    let mut line_first: BTreeMap<u32, char> = BTreeMap::new();
+    for t in toks {
+        line_first.entry(t.line).or_insert(match t.tok {
+            Tok::Punct(c) => c,
+            _ => 'i',
+        });
+    }
+
+    let excluded = test_ranges(toks);
+    let impls = impl_ranges(toks);
+    let structs = struct_ranges(toks);
+    let lock_ranks = collect_lock_ranks(&lexed, &line_first, &structs, toks);
+
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident(&toks[i]) == Some("fn") {
+            if let Some(name) = toks.get(i + 1).and_then(ident) {
+                if let Some((body_start, body_end)) = fn_body(toks, i + 2) {
+                    let line = toks[i].line;
+                    let qualifier = impls
+                        .iter()
+                        .find(|(_, a, b)| i >= *a && i <= *b)
+                        .map(|(n, _, _)| n.clone());
+                    let is_test =
+                        excluded.iter().any(|&(a, b)| body_start >= a && body_start <= b);
+                    let no_alloc = fn_has_no_alloc(&lexed, &line_first, line);
+                    let mut def = FnDef {
+                        name: name.to_string(),
+                        qualifier,
+                        line,
+                        is_test,
+                        no_alloc,
+                        panics: vec![],
+                        allocs: vec![],
+                        calls: vec![],
+                        acquisitions: vec![],
+                        blocking: vec![],
+                    };
+                    walk_body(toks, body_start, body_end, &mut def);
+                    fns.push(def);
+                    i = body_end + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+
+    ScannedFile { path: path.to_string(), lexed, excluded, fns, lock_ranks }
+}
+
+/// Walk upward from the `fn` line over comments and attribute lines
+/// looking for `// lint: no-alloc`.
+fn fn_has_no_alloc(lexed: &Lexed, line_first: &BTreeMap<u32, char>, fn_line: u32) -> bool {
+    let mut l = fn_line;
+    // same-line trailing comment counts too
+    if lexed.comment(l).map(parse_no_alloc).unwrap_or(false) {
+        return true;
+    }
+    while l > 1 {
+        l -= 1;
+        if let Some(c) = lexed.comment(l) {
+            if parse_no_alloc(c) {
+                return true;
+            }
+            continue; // comment/doc line — keep walking
+        }
+        match line_first.get(&l) {
+            Some('#') => continue, // attribute line
+            Some(_) => return false,
+            None => return false, // blank line breaks attachment
+        }
+    }
+    false
+}
+
+/// Token ranges gated behind `#[cfg(test)]` / `#[test]` / `#[bench]`:
+/// from the item's opening `{` to its matching `}`.
+fn test_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_punct(&toks[i], '#')
+            && toks.get(i + 1).map(|t| is_punct(t, '[')).unwrap_or(false)
+        {
+            // find the attribute's closing ']' and whether it mentions test/bench
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut is_test_attr = false;
+            while j < toks.len() {
+                if is_punct(&toks[j], '[') {
+                    depth += 1;
+                } else if is_punct(&toks[j], ']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if matches!(ident(&toks[j]), Some("test") | Some("bench")) {
+                    is_test_attr = true;
+                }
+                j += 1;
+            }
+            if is_test_attr {
+                // skip further attributes, find the item body `{`; a `;`
+                // first means no body (e.g. `#[cfg(test)] use ...;`)
+                let mut k = j + 1;
+                let mut pdepth = 0usize;
+                while k < toks.len() {
+                    if is_punct(&toks[k], '#')
+                        && toks.get(k + 1).map(|t| is_punct(t, '[')).unwrap_or(false)
+                    {
+                        // nested attribute: skip it
+                        let mut d = 0usize;
+                        while k < toks.len() {
+                            if is_punct(&toks[k], '[') {
+                                d += 1;
+                            } else if is_punct(&toks[k], ']') {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            k += 1;
+                        }
+                    } else if is_punct(&toks[k], '(') || is_punct(&toks[k], '[') {
+                        pdepth += 1;
+                    } else if is_punct(&toks[k], ')') || is_punct(&toks[k], ']') {
+                        pdepth = pdepth.saturating_sub(1);
+                    } else if pdepth == 0 && is_punct(&toks[k], ';') {
+                        break; // bodyless item
+                    } else if pdepth == 0 && is_punct(&toks[k], '{') {
+                        let end = match_brace(toks, k);
+                        out.push((k, end));
+                        break;
+                    }
+                    k += 1;
+                }
+                i = j + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `(type name, start, end)` for every `impl` block.
+fn impl_ranges(toks: &[Token]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident(&toks[i]) == Some("impl") {
+            // optional generics header
+            let mut j = i + 1;
+            if j < toks.len() && is_punct(&toks[j], '<') {
+                let mut angle = 0i32;
+                while j < toks.len() {
+                    if is_punct(&toks[j], '<') {
+                        angle += 1;
+                    } else if is_punct(&toks[j], '>') {
+                        angle -= 1;
+                        if angle == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            // scan to the body `{`; if a `for` appears, the type is the
+            // first path after it, else the first path after the generics
+            let mut name: Option<String> = None;
+            let mut after_for = false;
+            while j < toks.len() && !is_punct(&toks[j], '{') {
+                match ident(&toks[j]) {
+                    Some("for") => {
+                        after_for = true;
+                        name = None; // trait name discarded; type follows
+                    }
+                    Some(s) if name.is_none() || after_for => {
+                        // path: keep the last `::` segment
+                        if name.is_none() {
+                            name = Some(s.to_string());
+                        } else if after_for {
+                            name = Some(s.to_string());
+                        }
+                        if after_for {
+                            after_for = false;
+                        }
+                    }
+                    Some(s)
+                        if j >= 2
+                            && is_punct(&toks[j - 1], ':')
+                            && is_punct(&toks[j - 2], ':') =>
+                    {
+                        name = Some(s.to_string()); // later path segment wins
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j < toks.len() {
+                let end = match_brace(toks, j);
+                if let Some(n) = name {
+                    out.push((n, j, end));
+                }
+                // don't skip the body: nested impls don't occur, but fns
+                // inside must be found by the main loop
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `(struct name, start, end)` for every brace-bodied struct.
+fn struct_ranges(toks: &[Token]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if ident(&toks[i]) == Some("struct") {
+            if let Some(name) = ident(&toks[i + 1]) {
+                let mut j = i + 2;
+                // generics / where clause until `{` or `;`/`(`
+                let mut found = None;
+                while j < toks.len() {
+                    if is_punct(&toks[j], '{') {
+                        found = Some(j);
+                        break;
+                    }
+                    if is_punct(&toks[j], ';') || is_punct(&toks[j], '(') {
+                        break;
+                    }
+                    j += 1;
+                }
+                if let Some(start) = found {
+                    let end = match_brace(toks, start);
+                    out.push((name.to_string(), start, end));
+                    i = start;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Collect `// lock-order: N` ranks: the annotated field is the first
+/// ident on the comment's own line, or on the next line with tokens.
+fn collect_lock_ranks(
+    lexed: &Lexed,
+    line_first: &BTreeMap<u32, char>,
+    structs: &[(String, usize, usize)],
+    toks: &[Token],
+) -> Vec<LockRank> {
+    let mut out = Vec::new();
+    for (&line, text) in &lexed.comments {
+        let Some(rank) = parse_lock_order(text) else { continue };
+        // field ident: same line if it has tokens, else next token line
+        let field_line = if line_first.contains_key(&line) {
+            line
+        } else {
+            match line_first.range(line + 1..).next() {
+                Some((&l, _)) => l,
+                None => continue,
+            }
+        };
+        let Some((idx, field)) = toks
+            .iter()
+            .enumerate()
+            .find(|(_, t)| t.line == field_line && matches!(t.tok, Tok::Ident(_)))
+            .and_then(|(i, t)| ident(t).map(|s| (i, s.to_string())))
+        else {
+            continue;
+        };
+        let qualified = structs
+            .iter()
+            .find(|(_, a, b)| idx >= *a && idx <= *b)
+            .map(|(n, _, _)| format!("{n}::{field}"))
+            .unwrap_or(field);
+        out.push(LockRank { lock: qualified, rank, line });
+    }
+    out
+}
+
+/// Index of the `{` opening a fn body, scanning from just after the fn
+/// name. Returns None for bodyless trait-method declarations.
+fn fn_body(toks: &[Token], from: usize) -> Option<(usize, usize)> {
+    let mut depth = 0usize;
+    let mut j = from;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') => depth = depth.saturating_sub(1),
+            Tok::Punct(';') if depth == 0 => return None,
+            Tok::Punct('{') if depth == 0 => {
+                let end = match_brace(toks, j);
+                return Some((j, end));
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn match_brace(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < toks.len() {
+        if is_punct(&toks[j], '{') {
+            depth += 1;
+        } else if is_punct(&toks[j], '}') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+struct Guard {
+    lock: String,
+    var: Option<String>,
+    depth: usize,
+    temp: bool,
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "let", "else", "fn", "move", "in",
+    "as", "ref", "mut", "break", "continue", "unsafe", "where",
+];
+
+/// Linear walk over a fn body tracking brace depth and live guards;
+/// records panic/alloc sites, calls, acquisitions, and blocking ops.
+fn walk_body(toks: &[Token], body_start: usize, body_end: usize, def: &mut FnDef) {
+    let mut depth = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut j = body_start;
+    while j <= body_end {
+        let t = &toks[j];
+        match &t.tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+            }
+            Tok::Punct(';') => {
+                guards.retain(|g| !(g.temp && g.depth >= depth));
+            }
+            Tok::Punct('.') => {
+                if let Some(m) = toks.get(j + 1).and_then(ident) {
+                    let open = toks.get(j + 2).map(|t| is_punct(t, '(')).unwrap_or(false);
+                    let zero_arg =
+                        open && toks.get(j + 3).map(|t| is_punct(t, ')')).unwrap_or(false);
+                    if open {
+                        match m {
+                            "lock" if zero_arg => {
+                                let (lock, var, temp) =
+                                    acquisition_at(toks, j, body_start, def.qualifier.as_deref());
+                                record_acquisition(def, &mut guards, lock, var, temp, depth, t.line);
+                                j += 4;
+                                continue;
+                            }
+                            "send" | "recv_timeout" if !guards.is_empty() => {
+                                record_blocking(def, &guards, m, t.line);
+                            }
+                            "recv" | "join" if zero_arg && !guards.is_empty() => {
+                                record_blocking(def, &guards, m, t.line);
+                            }
+                            "unwrap" | "expect" => {
+                                def.panics.push(Site { what: m.to_string(), line: t.line });
+                            }
+                            "to_vec" | "clone" | "collect" => {
+                                def.allocs.push(Site { what: format!(".{m}()"), line: t.line });
+                            }
+                            _ => {}
+                        }
+                        // every method call is also a call site
+                        if !KEYWORDS.contains(&m) {
+                            def.calls.push(CallSite {
+                                name: m.to_string(),
+                                line: t.line,
+                                held: held_locks(&guards),
+                                is_method: true,
+                            });
+                        }
+                    }
+                }
+            }
+            Tok::Ident(name) => {
+                let next_bang =
+                    toks.get(j + 1).map(|t| is_punct(t, '!')).unwrap_or(false);
+                let next_paren =
+                    toks.get(j + 1).map(|t| is_punct(t, '(')).unwrap_or(false);
+                match name.as_str() {
+                    "fn" => {
+                        // nested fn item: scanned as its own FnDef by the
+                        // outer loop; skip its body here so its events
+                        // don't double-count into this fn
+                        if let Some((_, end)) = fn_body(toks, j + 2) {
+                            if end <= body_end {
+                                j = end + 1;
+                                continue;
+                            }
+                        }
+                    }
+                    "panic" | "unreachable" if next_bang => {
+                        def.panics.push(Site { what: format!("{name}!"), line: t.line });
+                    }
+                    "vec" | "format" if next_bang => {
+                        def.allocs.push(Site { what: format!("{name}!"), line: t.line });
+                    }
+                    "Vec" | "Box" | "String" => {
+                        // Vec::new / Box::new / String::from
+                        if is_path_to(toks, j, &["new", "from"]) {
+                            let m = ident(&toks[j + 3]).unwrap_or("");
+                            if (name == "String" && m == "from")
+                                || (name != "String" && m == "new")
+                            {
+                                def.allocs
+                                    .push(Site { what: format!("{name}::{m}"), line: t.line });
+                            }
+                        }
+                    }
+                    "drop" if next_paren => {
+                        if let Some(v) = toks.get(j + 2).and_then(ident) {
+                            if toks.get(j + 3).map(|t| is_punct(t, ')')).unwrap_or(false) {
+                                guards.retain(|g| g.var.as_deref() != Some(v));
+                            }
+                        }
+                    }
+                    "lock_unpoisoned" if next_paren => {
+                        let (lock, var, temp) =
+                            unpoisoned_acquisition(toks, j, body_start, def.qualifier.as_deref());
+                        record_acquisition(def, &mut guards, lock, var, temp, depth, t.line);
+                    }
+                    _ => {}
+                }
+                if next_paren && !KEYWORDS.contains(&name.as_str()) {
+                    let prev_dot = j > 0 && is_punct(&toks[j - 1], '.');
+                    if !prev_dot {
+                        def.calls.push(CallSite {
+                            name: name.clone(),
+                            line: t.line,
+                            held: held_locks(&guards),
+                            is_method: false,
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+}
+
+fn held_locks(guards: &[Guard]) -> Vec<String> {
+    let set: BTreeSet<String> = guards.iter().map(|g| g.lock.clone()).collect();
+    set.into_iter().collect()
+}
+
+fn record_acquisition(
+    def: &mut FnDef,
+    guards: &mut Vec<Guard>,
+    lock: String,
+    var: Option<String>,
+    temp: bool,
+    depth: usize,
+    line: u32,
+) {
+    def.acquisitions.push(LockEvent { lock: lock.clone(), line, held: held_locks(guards) });
+    guards.push(Guard { lock, var, depth, temp });
+}
+
+fn record_blocking(def: &mut FnDef, guards: &[Guard], what: &str, line: u32) {
+    def.blocking.push(BlockingEvent {
+        what: what.to_string(),
+        line,
+        held: held_locks(guards),
+    });
+}
+
+/// Is `toks[i]` followed by `:: seg (` with seg in `segs`?
+fn is_path_to(toks: &[Token], i: usize, segs: &[&str]) -> bool {
+    toks.get(i + 1).map(|t| is_punct(t, ':')).unwrap_or(false)
+        && toks.get(i + 2).map(|t| is_punct(t, ':')).unwrap_or(false)
+        && toks
+            .get(i + 3)
+            .and_then(ident)
+            .map(|s| segs.contains(&s))
+            .unwrap_or(false)
+}
+
+/// Resolve a `.lock()` acquisition at the `.` token `dot`: walk the
+/// receiver chain backward (skipping over method-call groups like
+/// `.as_ref().expect("..")`) to the nearest plain ident — the lock
+/// identity — and note whether the chain roots at `self` (which
+/// qualifies the lock with the impl type). Then classify the binding.
+fn acquisition_at(
+    toks: &[Token],
+    dot: usize,
+    body_start: usize,
+    qualifier: Option<&str>,
+) -> (String, Option<String>, bool) {
+    let mut k = dot; // points at the '.' before `lock`
+    let mut lock: Option<String> = None;
+    let mut saw_self = false;
+    let mut chain_start = dot;
+    while k > body_start {
+        let prev = k - 1;
+        match &toks[prev].tok {
+            Tok::Punct(')') => {
+                // skip the balanced group, then the method name + its dot
+                let mut d = 0i32;
+                let mut p = prev;
+                loop {
+                    if is_punct(&toks[p], ')') {
+                        d += 1;
+                    } else if is_punct(&toks[p], '(') {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    if p == body_start {
+                        break;
+                    }
+                    p -= 1;
+                }
+                // p at '('; method ident before it, '.' before that
+                if p > body_start + 1 && ident(&toks[p - 1]).is_some() {
+                    k = p - 1;
+                } else {
+                    break;
+                }
+            }
+            Tok::Ident(s) if s == "self" => {
+                saw_self = true;
+                chain_start = prev;
+                break;
+            }
+            Tok::Ident(s) => {
+                if lock.is_none() {
+                    lock = Some(s.clone());
+                }
+                chain_start = prev;
+                // keep walking only through `.`/`::` chains
+                if prev > body_start
+                    && (is_punct(&toks[prev - 1], '.') || is_punct(&toks[prev - 1], ':'))
+                {
+                    k = prev - 1;
+                    if is_punct(&toks[k], ':') && k > body_start {
+                        k -= 1; // second ':' of '::'
+                    }
+                } else {
+                    break;
+                }
+            }
+            Tok::Punct('.') | Tok::Punct(':') => {
+                k = prev;
+            }
+            _ => break,
+        }
+    }
+    let lock = lock.unwrap_or_else(|| "<unknown>".to_string());
+    let lock = match (saw_self, qualifier) {
+        (true, Some(q)) => format!("{q}::{lock}"),
+        _ => lock,
+    };
+    let (var, temp) = binding_of(toks, chain_start, body_start);
+    (lock, var, temp)
+}
+
+/// Resolve a `lock_unpoisoned(&chain)` acquisition at the fn-name token.
+fn unpoisoned_acquisition(
+    toks: &[Token],
+    name_idx: usize,
+    body_start: usize,
+    qualifier: Option<&str>,
+) -> (String, Option<String>, bool) {
+    // last ident before the matching ')' is the lock field
+    let open = name_idx + 1;
+    let mut d = 0i32;
+    let mut j = open;
+    let mut last = None;
+    let mut saw_self = false;
+    while j < toks.len() {
+        if is_punct(&toks[j], '(') {
+            d += 1;
+        } else if is_punct(&toks[j], ')') {
+            d -= 1;
+            if d == 0 {
+                break;
+            }
+        } else if let Some(s) = ident(&toks[j]) {
+            if s == "self" {
+                saw_self = true;
+            } else {
+                last = Some(s.to_string());
+            }
+        }
+        j += 1;
+    }
+    let lock = last.unwrap_or_else(|| "<unknown>".to_string());
+    let lock = match (saw_self, qualifier) {
+        (true, Some(q)) => format!("{q}::{lock}"),
+        _ => lock,
+    };
+    let (var, temp) = binding_of(toks, name_idx, body_start);
+    (lock, var, temp)
+}
+
+/// Walk back from the start of an acquisition expression to the start
+/// of its statement; a `let` makes it a block-scoped guard bound to the
+/// last ident before `=` (skipping `mut` and pattern constructors).
+fn binding_of(toks: &[Token], expr_start: usize, body_start: usize) -> (Option<String>, bool) {
+    let mut k = expr_start;
+    let mut steps = 0;
+    while k > body_start && steps < 48 {
+        let prev = k - 1;
+        match &toks[prev].tok {
+            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') => break,
+            Tok::Ident(s) if s == "let" => {
+                // guard name: last ident between `let` and `=`
+                let mut var = None;
+                let mut m = prev + 1;
+                while m < expr_start {
+                    if is_punct(&toks[m], '=') {
+                        break;
+                    }
+                    if let Some(s) = ident(&toks[m]) {
+                        if s != "mut" {
+                            var = Some(s.to_string());
+                        }
+                    }
+                    m += 1;
+                }
+                return (var, false);
+            }
+            _ => {}
+        }
+        k = prev;
+        steps += 1;
+    }
+    (None, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> ScannedFile {
+        scan_file("test.rs", src)
+    }
+
+    fn find<'a>(f: &'a ScannedFile, name: &str) -> &'a FnDef {
+        f.fns.iter().find(|d| d.name == name).unwrap()
+    }
+
+    #[test]
+    fn fn_items_and_impl_qualifiers() {
+        let f = scan(
+            "struct A { x: u32 }\n\
+             impl A {\n  fn m(&self) {}\n}\n\
+             impl Drop for A {\n  fn drop(&mut self) {}\n}\n\
+             fn free() {}\n",
+        );
+        assert_eq!(find(&f, "m").qualifier.as_deref(), Some("A"));
+        assert_eq!(find(&f, "drop").qualifier.as_deref(), Some("A"));
+        assert_eq!(find(&f, "free").qualifier, None);
+    }
+
+    #[test]
+    fn test_code_is_excluded() {
+        let f = scan(
+            "fn live() { x.unwrap(); }\n\
+             #[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { y.unwrap(); }\n}\n",
+        );
+        assert!(!find(&f, "live").is_test);
+        assert!(find(&f, "t").is_test);
+    }
+
+    #[test]
+    fn cfg_test_on_bodyless_item_does_not_leak() {
+        let f = scan("#[cfg(test)]\nuse foo::bar;\nfn live() { x.unwrap(); }\n");
+        assert!(!find(&f, "live").is_test);
+    }
+
+    #[test]
+    fn nested_let_guards_record_held_locks() {
+        let f = scan(
+            "impl S { fn f(&self) {\n\
+               let a = self.first.lock().unwrap();\n\
+               let b = self.second.lock().unwrap();\n\
+               drop(b); drop(a);\n } }",
+        );
+        let d = find(&f, "f");
+        assert_eq!(d.acquisitions.len(), 2);
+        assert_eq!(d.acquisitions[0].lock, "S::first");
+        assert!(d.acquisitions[0].held.is_empty());
+        assert_eq!(d.acquisitions[1].lock, "S::second");
+        assert_eq!(d.acquisitions[1].held, vec!["S::first".to_string()]);
+    }
+
+    #[test]
+    fn drop_ends_a_guard_scope() {
+        let f = scan(
+            "impl S { fn f(&self) {\n\
+               let a = self.first.lock().unwrap();\n\
+               drop(a);\n\
+               let b = self.second.lock().unwrap();\n\
+               let _ = b;\n } }",
+        );
+        let d = find(&f, "f");
+        assert!(d.acquisitions[1].held.is_empty(), "{:?}", d.acquisitions);
+    }
+
+    #[test]
+    fn block_scope_ends_a_guard() {
+        let f = scan(
+            "impl S { fn f(&self) {\n\
+               { let a = self.first.lock().unwrap(); let _ = a; }\n\
+               let b = self.second.lock().unwrap();\n\
+               let _ = b;\n } }",
+        );
+        let d = find(&f, "f");
+        assert!(d.acquisitions[1].held.is_empty(), "{:?}", d.acquisitions);
+    }
+
+    #[test]
+    fn temp_guard_dies_at_statement_end() {
+        let f = scan(
+            "impl S { fn f(&self) {\n\
+               self.q.lock().unwrap().push(1);\n\
+               let b = self.second.lock().unwrap();\n\
+               let _ = b;\n } }",
+        );
+        let d = find(&f, "f");
+        assert_eq!(d.acquisitions[0].lock, "S::q");
+        assert!(d.acquisitions[1].held.is_empty(), "{:?}", d.acquisitions);
+    }
+
+    #[test]
+    fn chained_receiver_resolves_through_method_groups() {
+        let f = scan(
+            "impl P { fn exec(&self) {\n\
+               self.tx.as_ref().expect(\"alive\").lock().expect(\"sane\").send(1).unwrap();\n\
+             } }",
+        );
+        let d = find(&f, "exec");
+        assert_eq!(d.acquisitions[0].lock, "P::tx");
+        assert_eq!(d.blocking.len(), 1, "{:?}", d.blocking);
+        assert_eq!(d.blocking[0].what, "send");
+    }
+
+    #[test]
+    fn recv_under_let_guard_is_blocking() {
+        let f = scan(
+            "fn worker(rx: &M) {\n\
+               let guard = rx.lock().expect(\"p\");\n\
+               let job = guard.recv();\n\
+               let _ = job;\n }",
+        );
+        let d = find(&f, "worker");
+        assert_eq!(d.blocking.len(), 1);
+        assert_eq!(d.blocking[0].what, "recv");
+        assert_eq!(d.blocking[0].held, vec!["rx".to_string()]);
+    }
+
+    #[test]
+    fn str_join_is_not_blocking() {
+        let f = scan("fn f(parts: &[String]) { let g = m.lock().unwrap(); let s = parts.join(\", \"); let _ = (g, s); }");
+        assert!(find(&f, "f").blocking.is_empty());
+    }
+
+    #[test]
+    fn lock_unpoisoned_counts_as_acquisition() {
+        let f = scan(
+            "impl S { fn f(&self) {\n\
+               let g = lock_unpoisoned(&self.routes);\n\
+               let h = lock_unpoisoned(&self.other);\n\
+               let _ = (g, h);\n } }",
+        );
+        let d = find(&f, "f");
+        assert_eq!(d.acquisitions[0].lock, "S::routes");
+        assert_eq!(d.acquisitions[1].held, vec!["S::routes".to_string()]);
+    }
+
+    #[test]
+    fn panic_and_alloc_sites() {
+        let f = scan(
+            "fn f() {\n\
+               let v = x.unwrap();\n\
+               let w = y.expect(\"w\");\n\
+               panic!(\"boom\");\n\
+               unreachable!();\n\
+               let a = vec![1];\n\
+               let b = Vec::new();\n\
+               let c = items.to_vec();\n\
+               let d = s.clone();\n\
+               let e = format!(\"x\");\n\
+               let g = Box::new(1);\n\
+               let h = String::from(\"s\");\n\
+               let i = it.collect();\n\
+               let j = x.unwrap_or_else(def);\n\
+             }",
+        );
+        let d = find(&f, "f");
+        assert_eq!(d.panics.len(), 4, "{:?}", d.panics);
+        assert_eq!(d.allocs.len(), 8, "{:?}", d.allocs);
+    }
+
+    #[test]
+    fn lock_order_annotation_binds_to_field_with_struct_qualifier() {
+        let f = scan(
+            "struct Inbox {\n\
+               // lock-order: 31\n\
+               state: Mutex<u32>,\n\
+               cv: Condvar,\n\
+             }\n",
+        );
+        assert_eq!(f.lock_ranks.len(), 1);
+        assert_eq!(f.lock_ranks[0].lock, "Inbox::state");
+        assert_eq!(f.lock_ranks[0].rank, 31);
+    }
+
+    #[test]
+    fn no_alloc_annotation_attaches_through_attributes() {
+        let f = scan(
+            "// lint: no-alloc\n\
+             #[allow(clippy::too_many_arguments)]\n\
+             fn hot() {}\n\
+             fn cold() {}\n",
+        );
+        assert!(find(&f, "hot").no_alloc);
+        assert!(!find(&f, "cold").no_alloc);
+    }
+
+    #[test]
+    fn allow_reason_parses_on_line_and_above() {
+        let f = scan(
+            "fn f() {\n\
+               // lint: allow(panic): startup invariant\n\
+               x.unwrap();\n\
+               y.expect(\"e\"); // lint: allow(panic): checked above\n\
+             }",
+        );
+        assert_eq!(f.allow_reason(3, "panic").as_deref(), Some("startup invariant"));
+        assert_eq!(f.allow_reason(4, "panic").as_deref(), Some("checked above"));
+        assert_eq!(f.allow_reason(1, "panic"), None);
+    }
+
+    #[test]
+    fn call_sites_record_held_locks() {
+        let f = scan(
+            "impl S { fn f(&self) {\n\
+               let g = self.state.lock().unwrap();\n\
+               self.helper(1);\n\
+               free_fn(2);\n\
+               let _ = g;\n } }",
+        );
+        let d = find(&f, "f");
+        let helper = d.calls.iter().find(|c| c.name == "helper").unwrap();
+        assert!(helper.is_method);
+        assert_eq!(helper.held, vec!["S::state".to_string()]);
+        let free = d.calls.iter().find(|c| c.name == "free_fn").unwrap();
+        assert!(!free.is_method);
+        assert_eq!(free.held, vec!["S::state".to_string()]);
+    }
+}

@@ -1,0 +1,286 @@
+//! Pass 4 — wire-schema consistency.
+//!
+//! The JSON wire schema is hand-maintained in three places: the parser
+//! (`coordinator/protocol.rs`) and the producers (`coordinator/client.rs`,
+//! `coordinator/loadgen.rs`, whose request templates are raw-string JSON
+//! fragments). This pass cross-checks the field-name string literals so
+//! a new field can't silently drift:
+//!
+//!   * every request key a producer writes (a `"key":` pattern inside a
+//!     string literal) must be parsed by protocol.rs (a `.get("key")` or
+//!     an `opt_*(obj, "key")` helper call);
+//!   * every reply key a producer reads (`.get("key")`) must be emitted
+//!     by protocol.rs (`.insert("key", ..)`).
+//!
+//! The reverse directions are deliberately unchecked: protocol.rs may
+//! parse optional fields no current producer sends, and emits more
+//! fields than any one consumer reads. Roles are assigned by filename so
+//! the seeded fixtures exercise the same code path as the real tree;
+//! when the analyzed set has no parser file the pass is skipped.
+
+use std::collections::BTreeSet;
+
+use super::lexer::Tok;
+use super::scanner::ScannedFile;
+use super::{Diagnostic, PASS_WIRE};
+
+fn basename(path: &str) -> &str {
+    path.rsplit(['/', '\\']).next().unwrap_or(path)
+}
+
+fn is_parser(f: &ScannedFile) -> bool {
+    basename(&f.path) == "protocol.rs"
+}
+
+fn is_producer(f: &ScannedFile) -> bool {
+    matches!(basename(&f.path), "client.rs" | "loadgen.rs")
+}
+
+/// String literals passed to `.get(` / `opt_*(`: the keys protocol.rs
+/// parses out of a request (or a producer reads out of a reply).
+fn get_keys(f: &ScannedFile) -> Vec<(String, u32)> {
+    let toks = &f.lexed.tokens;
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if f.in_test(i) {
+            continue;
+        }
+        let (is_get, name_idx) = match &t.tok {
+            Tok::Ident(s) if s == "get" => {
+                (i > 0 && matches!(toks[i - 1].tok, Tok::Punct('.')), i)
+            }
+            Tok::Ident(s) if s.starts_with("opt_") => (true, i),
+            _ => continue,
+        };
+        if !is_get {
+            continue;
+        }
+        if !matches!(toks.get(name_idx + 1).map(|t| &t.tok), Some(Tok::Punct('('))) {
+            continue;
+        }
+        // first string literal inside the paren group
+        let mut depth = 0i32;
+        let mut j = name_idx + 1;
+        while j < toks.len() {
+            match &toks[j].tok {
+                Tok::Punct('(') => depth += 1,
+                Tok::Punct(')') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                Tok::Str(s) => {
+                    if looks_like_key(s) {
+                        out.push((s.clone(), toks[j].line));
+                    }
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// String literals passed first to `.insert(`: the reply keys
+/// protocol.rs emits.
+fn insert_keys(f: &ScannedFile) -> BTreeSet<String> {
+    let toks = &f.lexed.tokens;
+    let mut out = BTreeSet::new();
+    for (i, t) in toks.iter().enumerate() {
+        if f.in_test(i) {
+            continue;
+        }
+        if !matches!(&t.tok, Tok::Ident(s) if s == "insert") {
+            continue;
+        }
+        if i == 0 || !matches!(toks[i - 1].tok, Tok::Punct('.')) {
+            continue;
+        }
+        if !matches!(toks.get(i + 1).map(|t| &t.tok), Some(Tok::Punct('('))) {
+            continue;
+        }
+        if let Some(Tok::Str(s)) = toks.get(i + 2).map(|t| &t.tok) {
+            out.insert(s.clone());
+        }
+    }
+    out
+}
+
+/// `"key":` patterns inside a producer's string literals — the request
+/// fields it writes. Handles both raw-string templates and cooked
+/// strings with `\"` escapes.
+fn template_keys(f: &ScannedFile) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (i, t) in f.lexed.tokens.iter().enumerate() {
+        if f.in_test(i) {
+            continue;
+        }
+        let Tok::Str(s) = &t.tok else { continue };
+        let s = s.replace("\\\"", "\"");
+        let b = s.as_bytes();
+        let mut j = 0usize;
+        while j < b.len() {
+            if b[j] == b'"' {
+                let start = j + 1;
+                let mut k = start;
+                while k < b.len() && (b[k].is_ascii_alphanumeric() || b[k] == b'_') {
+                    k += 1;
+                }
+                if k > start && k < b.len() && b[k] == b'"' {
+                    let mut m = k + 1;
+                    while m < b.len() && (b[m] == b' ' || b[m] == b'\t') {
+                        m += 1;
+                    }
+                    if m < b.len() && b[m] == b':' {
+                        out.push((s[start..k].to_string(), t.line));
+                        j = m + 1;
+                        continue;
+                    }
+                }
+                j = k.max(start);
+                continue;
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Keys are lowercase snake idents; skips helper-literal noise like
+/// format strings or error text that happens to reach `.get(`.
+fn looks_like_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_')
+}
+
+pub fn run(files: &[ScannedFile]) -> Vec<Diagnostic> {
+    let parsers: Vec<&ScannedFile> = files.iter().filter(|f| is_parser(f)).collect();
+    if parsers.is_empty() {
+        return Vec::new();
+    }
+    let mut parse_keys: BTreeSet<String> = BTreeSet::new();
+    let mut emit_keys: BTreeSet<String> = BTreeSet::new();
+    for p in &parsers {
+        parse_keys.extend(get_keys(p).into_iter().map(|(k, _)| k));
+        emit_keys.extend(insert_keys(p));
+    }
+
+    let mut diags = Vec::new();
+    for f in files.iter().filter(|f| is_producer(f)) {
+        for (key, line) in template_keys(f) {
+            if !parse_keys.contains(&key) {
+                diags.push(Diagnostic::new(
+                    PASS_WIRE,
+                    &f.path,
+                    line,
+                    format!("wire field \"{key}\" produced here is not parsed by protocol.rs"),
+                ));
+            }
+        }
+        for (key, line) in get_keys(f) {
+            if !emit_keys.contains(&key) {
+                diags.push(Diagnostic::new(
+                    PASS_WIRE,
+                    &f.path,
+                    line,
+                    format!(
+                        "wire field \"{key}\" read from a reply here is never emitted by protocol.rs"
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_file;
+    use super::*;
+
+    fn proto() -> ScannedFile {
+        scan_file(
+            "rust/src/coordinator/protocol.rs",
+            "fn parse(obj: &Obj) {\n\
+               let op = obj.get(\"op\");\n\
+               let n = opt_f64(obj, \"steps\");\n\
+               let _ = (op, n);\n\
+             }\n\
+             fn reply(m: &mut Obj) {\n\
+               m.insert(\"ok\", t());\n\
+               m.insert(\"latency_us\", n());\n\
+             }\n",
+        )
+    }
+
+    #[test]
+    fn consistent_producer_is_clean() {
+        let client = scan_file(
+            "rust/src/coordinator/client.rs",
+            "fn req() -> String { format!(r#\"{{\"op\":\"sample\",\"steps\":{{}}}}\"#) }\n\
+             fn read(v: &Json) { let ok = v.get(\"ok\"); let _ = ok; }\n",
+        );
+        let d = run(&[proto(), client]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unparsed_request_key_is_flagged() {
+        let client = scan_file(
+            "rust/src/coordinator/client.rs",
+            "fn req() -> String { format!(r#\"{{\"op\":\"sample\",\"stepss\":4}}\"#) }\n",
+        );
+        let d = run(&[proto(), client]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(
+            d[0].message
+                .contains("wire field \"stepss\" produced here is not parsed"),
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn unemitted_reply_read_is_flagged() {
+        let client = scan_file(
+            "rust/src/coordinator/client.rs",
+            "fn read(v: &Json) { let x = v.get(\"okk\"); let _ = x; }\n",
+        );
+        let d = run(&[proto(), client]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("never emitted by protocol.rs"), "{d:?}");
+    }
+
+    #[test]
+    fn cooked_escaped_templates_are_scanned() {
+        let client = scan_file(
+            "rust/src/coordinator/client.rs",
+            "fn req() -> String { \"{\\\"op\\\":\\\"sample\\\",\\\"bogus\\\":1}\".to_string() }\n",
+        );
+        let d = run(&[proto(), client]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("\"bogus\""), "{d:?}");
+    }
+
+    #[test]
+    fn no_parser_in_set_skips_the_pass() {
+        let client = scan_file(
+            "rust/src/coordinator/client.rs",
+            "fn req() -> String { format!(r#\"{{\"anything\":1}}\"#) }\n",
+        );
+        assert!(run(&[client]).is_empty());
+    }
+
+    #[test]
+    fn value_strings_are_not_mistaken_for_keys() {
+        let client = scan_file(
+            "rust/src/coordinator/loadgen.rs",
+            "fn req() -> String { format!(r#\"{{\"op\":\"sample\"}},\"steps\" more\"#) }\n",
+        );
+        // "sample" is a value (followed by `}`), `"steps"` has no colon
+        let d = run(&[proto(), client]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+}

@@ -36,7 +36,7 @@ use crate::metrics::sample_mean_cov;
 use crate::sampler::{
     generate_plan_prec, generate_pooled_plan_prec, run_plan_prec, RunConfig, SamplingPlan,
 };
-use crate::util::{ThreadPool, Timer};
+use crate::util::{lock_unpoisoned, wait_unpoisoned, ThreadPool, Timer};
 use crate::Result;
 
 /// A request waiting in a batch group.
@@ -143,6 +143,7 @@ impl Ord for PrioChunk {
 
 /// Count of chunks a dataset currently has integrating on the pool.
 struct Inflight {
+    // lock-order: 20
     count: Mutex<usize>,
     cv: Condvar,
 }
@@ -153,26 +154,26 @@ impl Inflight {
     }
 
     fn current(&self) -> usize {
-        *self.count.lock().expect("inflight poisoned")
+        *lock_unpoisoned(&self.count)
     }
 
     fn inc(&self) -> usize {
-        let mut c = self.count.lock().expect("inflight poisoned");
+        let mut c = lock_unpoisoned(&self.count);
         *c += 1;
         *c
     }
 
     fn dec(&self) {
-        let mut c = self.count.lock().expect("inflight poisoned");
+        let mut c = lock_unpoisoned(&self.count);
         *c -= 1;
         self.cv.notify_all();
     }
 
     /// Block until fewer than `limit` chunks are in flight.
     fn wait_below(&self, limit: usize) {
-        let mut c = self.count.lock().expect("inflight poisoned");
+        let mut c = lock_unpoisoned(&self.count);
         while *c >= limit {
-            c = self.cv.wait(c).expect("inflight poisoned");
+            c = wait_unpoisoned(&self.cv, c);
         }
     }
 
@@ -265,16 +266,15 @@ pub fn batcher_loop(
                 .max()
                 .unwrap_or_default();
             if rows >= policy.max_batch || age >= policy.max_wait {
-                let g = groups.remove(&key).expect("key from snapshot");
-                enqueue_chunks(&dataset, &metrics, g, &policy, shapes.as_deref(), &mut backlog, &mut seq);
+                if let Some(g) = groups.remove(&key) {
+                    enqueue_chunks(&dataset, &metrics, g, &policy, shapes.as_deref(), &mut backlog, &mut seq);
+                }
             }
         }
         // 2) drain the backlog — highest class first, FIFO within — into
         //    free integration slots, shedding expired requests pre-flush
-        while !backlog.is_empty()
-            && (policy.max_inflight == 0 || inflight.current() < policy.max_inflight)
-        {
-            let pc = backlog.pop().expect("backlog non-empty");
+        while policy.max_inflight == 0 || inflight.current() < policy.max_inflight {
+            let Some(pc) = backlog.pop() else { break };
             let chunk = shed_expired(&dataset, &metrics, pc.chunk);
             if chunk.is_empty() {
                 continue;
@@ -390,7 +390,7 @@ fn chunk_group(group: Vec<Pending>, max_batch: usize, shapes: Option<&[usize]>) 
         s.dedup();
         (!s.is_empty()).then_some(s)
     });
-    let cap = shapes.as_ref().map(|s| *s.last().expect("non-empty")).unwrap_or(max_batch);
+    let cap = shapes.as_ref().and_then(|s| s.last().copied()).unwrap_or(max_batch);
     // padded rows wasted if `r` rows run as one chunk
     let pad = |r: usize| -> usize {
         match &shapes {

@@ -268,7 +268,9 @@ pub fn open_loop(
     let mut latency = Histogram::new();
     let mut trace_hash = 0u64;
     for h in handles {
-        let (hist, trace) = h.join().unwrap()?;
+        let (hist, trace) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("load-generator worker panicked"))??;
         latency.merge(&hist);
         trace_hash ^= trace;
     }
@@ -329,7 +331,9 @@ pub fn closed_loop(
     let mut latency = Histogram::new();
     let mut trace_hash = 0u64;
     for h in handles {
-        let (hist, trace) = h.join().unwrap()?;
+        let (hist, trace) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("load-generator worker panicked"))??;
         latency.merge(&hist);
         trace_hash ^= trace;
     }

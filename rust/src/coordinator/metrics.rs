@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::coordinator::qos::ShedCause;
-use crate::util::{Histogram, Json};
+use crate::util::{lock_unpoisoned, Histogram, Json};
 
 #[derive(Default)]
 struct RouteMetrics {
@@ -38,6 +38,7 @@ struct RouteMetrics {
 
 /// Thread-safe metrics sink shared across batchers and connections.
 pub struct ServerMetrics {
+    // lock-order: 10
     routes: Mutex<BTreeMap<String, RouteMetrics>>,
 }
 
@@ -53,7 +54,7 @@ impl ServerMetrics {
     }
 
     pub fn record_request(&self, dataset: &str, latency_us: f64, rows: usize, nfe: f64) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         let r = routes.entry(dataset.to_string()).or_default();
         r.latency_us.record(latency_us);
         r.requests += 1;
@@ -62,7 +63,7 @@ impl ServerMetrics {
     }
 
     pub fn record_batch(&self, dataset: &str, group_size: usize, rows: usize) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         let r = routes.entry(dataset.to_string()).or_default();
         r.batches += 1;
         r.batched_rows += rows as u64;
@@ -70,13 +71,13 @@ impl ServerMetrics {
     }
 
     pub fn record_error(&self, dataset: &str) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         routes.entry(dataset.to_string()).or_default().errors += 1;
     }
 
     /// A ready group was chunked into `chunks` integrations at `max_batch`.
     pub fn record_split(&self, dataset: &str, chunks: usize) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         let r = routes.entry(dataset.to_string()).or_default();
         r.splits += 1;
         r.split_chunks += chunks as u64;
@@ -85,14 +86,14 @@ impl ServerMetrics {
     /// Observe the current number of in-flight (submitted, unfinished)
     /// integration chunks.
     pub fn record_inflight(&self, dataset: &str, current: usize) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         let r = routes.entry(dataset.to_string()).or_default();
         r.inflight_hwm = r.inflight_hwm.max(current as u64);
     }
 
     /// Observe the route's outstanding-request gauge (batcher tick).
     pub fn record_queue_depth(&self, dataset: &str, depth: usize) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         let r = routes.entry(dataset.to_string()).or_default();
         r.queue_depth = depth as u64;
         r.queue_depth_hwm = r.queue_depth_hwm.max(depth as u64);
@@ -100,7 +101,7 @@ impl ServerMetrics {
 
     /// A request was refused without integration (QoS shed taxonomy).
     pub fn record_shed(&self, dataset: &str, cause: ShedCause) {
-        let mut routes = self.routes.lock().unwrap();
+        let mut routes = lock_unpoisoned(&self.routes);
         let r = routes.entry(dataset.to_string()).or_default();
         match cause {
             ShedCause::QueueFull => r.sheds_queue_full += 1,
@@ -127,7 +128,7 @@ impl ServerMetrics {
 
     /// JSON snapshot for the `stats` op / operator dashboards.
     pub fn snapshot(&self) -> Json {
-        let routes = self.routes.lock().unwrap();
+        let routes = lock_unpoisoned(&self.routes);
         let mut out = BTreeMap::new();
         for (name, r) in routes.iter() {
             let mut m = BTreeMap::new();

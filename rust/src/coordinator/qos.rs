@@ -40,7 +40,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::Pending;
-use crate::util::ThreadPool;
+use crate::util::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned, ThreadPool};
 use crate::Result;
 
 /// Priority class of a request. Declaration order is ascending priority
@@ -197,6 +197,7 @@ struct InboxState {
 /// *outstanding* request of the route (see the module docs). Push never
 /// blocks — over the bound it rejects, which is the whole point.
 pub struct Inbox {
+    // lock-order: 31
     state: Mutex<InboxState>,
     cv: Condvar,
     /// admission bound (0 = unbounded)
@@ -234,14 +235,14 @@ impl Inbox {
 
     /// Requests currently queued (not yet pulled by the batcher).
     pub fn queued(&self) -> usize {
-        self.state.lock().expect("inbox poisoned").q.len()
+        lock_unpoisoned(&self.state).q.len()
     }
 
     /// Admit and enqueue, or reject with the pending handed back. The
     /// accepted request's [`AdmitGuard`] is installed here — exactly one
     /// per admission.
     pub fn try_push(&self, mut pending: Pending) -> std::result::Result<(), PushRejected> {
-        let mut st = self.state.lock().expect("inbox poisoned");
+        let mut st = lock_unpoisoned(&self.state);
         if st.closed {
             return Err(PushRejected::Closed { pending });
         }
@@ -263,7 +264,7 @@ impl Inbox {
     /// [`RecvError::Closed`] — accepted work is never stranded.
     pub fn recv_timeout(&self, timeout: Duration) -> std::result::Result<Pending, RecvError> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().expect("inbox poisoned");
+        let mut st = lock_unpoisoned(&self.state);
         loop {
             if let Some(p) = st.q.pop_front() {
                 return Ok(p);
@@ -275,30 +276,28 @@ impl Inbox {
             if now >= deadline {
                 return Err(RecvError::Timeout);
             }
-            let (guard, _timed_out) = self
-                .cv
-                .wait_timeout(st, deadline - now)
-                .expect("inbox poisoned");
+            let (guard, _timed_out) =
+                wait_timeout_unpoisoned(&self.cv, st, deadline - now);
             st = guard;
         }
     }
 
     /// Non-blocking pop.
     pub fn try_recv(&self) -> Option<Pending> {
-        self.state.lock().expect("inbox poisoned").q.pop_front()
+        lock_unpoisoned(&self.state).q.pop_front()
     }
 
     /// Close the inbox: subsequent pushes fail with
     /// [`PushRejected::Closed`]; queued requests remain poppable.
     pub fn close(&self) {
-        self.state.lock().expect("inbox poisoned").closed = true;
+        lock_unpoisoned(&self.state).closed = true;
         self.cv.notify_all();
     }
 
     /// Pop everything still queued (shutdown backstop — the batcher's own
     /// drain normally leaves nothing here).
     pub fn drain_remaining(&self) -> Vec<Pending> {
-        let mut st = self.state.lock().expect("inbox poisoned");
+        let mut st = lock_unpoisoned(&self.state);
         st.q.drain(..).collect()
     }
 }
@@ -341,6 +340,7 @@ struct DrrState {
 /// thread of its own.
 pub struct DrrScheduler {
     pool: Arc<ThreadPool>,
+    // lock-order: 30
     state: Mutex<DrrState>,
     cv: Condvar,
     slots: usize,
@@ -385,23 +385,23 @@ impl DrrScheduler {
     /// weight 1; registering up front makes the round-robin order the
     /// sorted route set regardless of arrival order.
     pub fn register_route(&self, route: &str, weight: f64) {
-        let mut st = self.state.lock().expect("drr poisoned");
+        let mut st = lock_unpoisoned(&self.state);
         Self::route_entry(&mut st, route).weight = weight.max(1e-3);
     }
 
     fn route_entry<'a>(st: &'a mut DrrState, route: &str) -> &'a mut RouteQueue {
-        if !st.queues.contains_key(route) {
-            st.queues.insert(route.to_string(), RouteQueue { weight: 1.0, ..RouteQueue::default() });
-            st.order.push(route.to_string());
-        }
-        st.queues.get_mut(route).expect("route just inserted")
+        let DrrState { queues, order, .. } = st;
+        queues.entry(route.to_string()).or_insert_with(|| {
+            order.push(route.to_string());
+            RouteQueue { weight: 1.0, ..RouteQueue::default() }
+        })
     }
 
     /// Queue one chunk of `rows` rows for `route` and dispatch whatever
     /// the DRR order and free slots allow. Never blocks.
     pub fn submit(&self, route: &str, rows: usize, job: Job) {
         let ready = {
-            let mut st = self.state.lock().expect("drr poisoned");
+            let mut st = lock_unpoisoned(&self.state);
             let q = Self::route_entry(&mut st, route);
             q.pending.push_back(QueuedChunk { rows: rows.max(1), job });
             st.pending_total += 1;
@@ -441,21 +441,27 @@ impl DrrScheduler {
             let max_visits = st.order.len() * rounds;
             while !dispatched && visits <= max_visits {
                 let name = st.order[st.cursor].clone();
-                let q = st.queues.get_mut(&name).expect("ordered route");
-                if q.pending.is_empty() {
-                    q.deficit = 0.0;
-                    st.cursor = (st.cursor + 1) % st.order.len();
-                    visits += 1;
-                    continue;
-                }
-                let head_rows = q.pending[0].rows as f64;
+                let head_rows = match st.queues.get(&name).and_then(|q| q.pending.front()) {
+                    Some(head) => head.rows as f64,
+                    None => {
+                        // empty (or unknown) route: forfeit deficit, move on
+                        if let Some(q) = st.queues.get_mut(&name) {
+                            q.deficit = 0.0;
+                        }
+                        st.cursor = (st.cursor + 1) % st.order.len();
+                        visits += 1;
+                        continue;
+                    }
+                };
+                let q = Self::route_entry(&mut st, &name);
                 if q.deficit >= head_rows {
-                    let chunk = q.pending.pop_front().expect("head checked");
-                    q.deficit -= head_rows;
-                    q.served_rows += chunk.rows as u64;
-                    q.inflight += 1;
-                    st.pending_total -= 1;
-                    out.push((name, chunk.job));
+                    if let Some(chunk) = q.pending.pop_front() {
+                        q.deficit -= head_rows;
+                        q.served_rows += chunk.rows as u64;
+                        q.inflight += 1;
+                        st.pending_total -= 1;
+                        out.push((name, chunk.job));
+                    }
                     dispatched = true;
                     // stay on this route: it may spend the rest of its
                     // deficit next iteration of the outer loop
@@ -483,6 +489,7 @@ impl DrrScheduler {
 
     fn dispatch(&self, jobs: Vec<(String, Job)>) {
         for (route, job) in jobs {
+            // lint: allow(panic): the Weak back-ref is always upgradable while a caller holds the Arc
             let sched = self.this.upgrade().expect("scheduler alive while dispatching");
             let guard = CompletionGuard { sched, route };
             self.pool.execute(move || {
@@ -494,7 +501,7 @@ impl DrrScheduler {
 
     fn complete(&self, route: &str) {
         let ready = {
-            let mut st = self.state.lock().expect("drr poisoned");
+            let mut st = lock_unpoisoned(&self.state);
             st.inflight_total = st.inflight_total.saturating_sub(1);
             if let Some(q) = st.queues.get_mut(route) {
                 q.inflight = q.inflight.saturating_sub(1);
@@ -508,7 +515,7 @@ impl DrrScheduler {
     /// Rows dispatched per route since start — the fairness observable
     /// (`stats` exposes it per route as `drr_served_rows`).
     pub fn served_rows(&self) -> BTreeMap<String, u64> {
-        let st = self.state.lock().expect("drr poisoned");
+        let st = lock_unpoisoned(&self.state);
         st.queues.iter().map(|(k, q)| (k.clone(), q.served_rows)).collect()
     }
 
@@ -516,7 +523,7 @@ impl DrrScheduler {
     /// batcher's shutdown drain uses its own in-flight gauge instead;
     /// this exists for tests and tools.
     pub fn wait_route_idle(&self, route: &str) {
-        let mut st = self.state.lock().expect("drr poisoned");
+        let mut st = lock_unpoisoned(&self.state);
         loop {
             let busy = st
                 .queues
@@ -526,7 +533,7 @@ impl DrrScheduler {
             if !busy {
                 return;
             }
-            st = self.cv.wait(st).expect("drr poisoned");
+            st = wait_unpoisoned(&self.cv, st);
         }
     }
 }

@@ -34,7 +34,7 @@ use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Response, SampleRequest};
 use crate::coordinator::qos::{DrrScheduler, Inbox, PushRejected, QosPolicy, ShedCause};
-use crate::util::{Json, ThreadPool};
+use crate::util::{lock_unpoisoned, Json, ThreadPool};
 use crate::Result;
 
 pub struct Router {
@@ -86,6 +86,7 @@ impl Router {
                 .spawn(move || {
                     batcher_loop(name2, hub2, metrics2, inbox2, policy, sched2, stop2)
                 })
+                // lint: allow(panic): thread-spawn failure at startup is unrecoverable (OS limits), before any request is accepted
                 .expect("spawning batcher");
             routes.insert(name, inbox);
             joins.push(join);
@@ -182,7 +183,7 @@ impl Router {
         }
         self.stop.store(true, Ordering::SeqCst);
         let joins: Vec<_> = {
-            let mut guard = self.joins.lock().expect("router joins poisoned");
+            let mut guard = lock_unpoisoned(&self.joins);
             guard.drain(..).collect()
         };
         for j in joins {

@@ -31,6 +31,7 @@ pub mod sampler;
 pub mod coordinator;
 pub mod experiments;
 pub mod perf;
+pub mod analyze;
 
 /// Crate-wide result type (anyhow-based; this is an application-grade
 /// library whose errors are surfaced to operators, not matched on).

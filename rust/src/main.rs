@@ -205,6 +205,7 @@ fn run() -> Result<()> {
         }
         "bench-client" => bench_client(&args),
         "loadgen" => loadgen(&args),
+        "analyze" => sdm::analyze::run_cli(&args),
         "bench-sampler" => {
             // same harness as `cargo bench --bench bench_sampler`; the CLI
             // binary has no counting allocator, so allocs/call is omitted
@@ -670,6 +671,10 @@ fn print_help() {
          \x20               --kernel-precision exact|fast-f64|fast-f32\n\
          \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
          \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\
+         \x20 analyze       in-repo static analysis over rust/src (lock-order,\n\
+         \x20               panic-policy zones, no-alloc hot paths, wire-schema\n\
+         \x20               drift) [DESIGN.md S11]: --deny exit non-zero on\n\
+         \x20               findings, --baseline .lint-baseline, --json, --root DIR\n\
          \x20 ablate-clock  curvature-clock ablation; ablate-refgrid: Alg.1 warm-start\n\n\
          common flags: --artifacts DIR --backend pjrt|native --samples N --seed S\n\
          \x20             --kernel-precision exact|fast-f64|fast-f32 --toy"

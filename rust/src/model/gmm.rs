@@ -350,6 +350,7 @@ impl XddotScratch {
 /// `out = M·v`, accumulating into the caller's buffer: the Jacobian
 /// matvec sits on the ẍ path, which figure loops evaluate once per
 /// schedule interval — no per-call `Vec`.
+// lint: no-alloc
 fn matvec_into(m: &Mat, v: &[f64], out: &mut [f64]) {
     let n = m.n;
     for i in 0..n {
@@ -361,6 +362,7 @@ fn matvec_into(m: &Mat, v: &[f64], out: &mut [f64]) {
 /// v_k = τ_k² + σ², the log-det term 0.5·dim·ln v_k, and α_k = τ_k²/v_k.
 /// Each is computed with exactly the arithmetic the per-row path used, so
 /// hoisting cannot change a single bit of any row's output.
+// lint: no-alloc
 fn precompute_sigma_terms(info: &DatasetInfo, s2: f64, sc: &mut KernelScratch) {
     let (dim, k) = (info.dim, info.k);
     for c in 0..k {
@@ -376,6 +378,7 @@ fn precompute_sigma_terms(info: &DatasetInfo, s2: f64, sc: &mut KernelScratch) {
 /// [`GmmModel::denoise_row`] + the velocity fold of the legacy batch
 /// loop; the f64 accumulation order is the bit-identity contract
 /// (DESIGN.md §7) — do not re-associate any of it.
+// lint: no-alloc
 #[allow(clippy::too_many_arguments)]
 fn row_kernel(
     info: &DatasetInfo,
@@ -580,6 +583,7 @@ impl Denoiser for GmmModel {
     /// broadcast vectors, zero heap allocations inside the row loop —
     /// and, when a shard pool is attached, deterministic help-first
     /// row-sharding for large batches.
+    // lint: no-alloc
     fn denoise_v_uniform_into(
         &self,
         xhat: &[f32],
@@ -630,6 +634,7 @@ impl Denoiser for GmmModel {
                 && cfg.pool.pending() < cfg.pool.threads()
                 && kernel_params_match(&self.info, &cfg.info)
             {
+                // lint: allow(alloc): the sharded path's owned mask/state copies are the price of 'static pool jobs; it only dispatches for >= min_rows batches
                 return denoise_uniform_sharded(cfg, xhat, rows, s2, ar, br, mask, scratch, out);
             }
         }

@@ -381,6 +381,7 @@ impl SimdScratch {
 /// `out.ensure_shape` and `scratch.ensure_dims` done, and the σ-term
 /// precompute (`var`/`half_dim_ln_var`/`alpha`) already hoisted into
 /// `scratch` — this reuses it rather than recomputing.
+// lint: no-alloc
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn denoise_uniform_simd(
     info: &DatasetInfo,

@@ -149,6 +149,7 @@ impl RuntimeHandle {
         self.tx
             .lock()
             .expect("runtime handle poisoned")
+            // lint: allow(lock): temporary guard; the sender mutex only serializes an unbounded mpsc send, which cannot block
             .send(msg)
             .map_err(|_| anyhow::anyhow!("runtime executor stopped"))
     }

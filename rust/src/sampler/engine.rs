@@ -537,6 +537,7 @@ fn run_pid_segment(
 /// Normalized embedded-pair error (k-diffusion semantics): RMS over all
 /// coordinates of (x_low − x_high)/δ with δ = max(atol, rtol·max(|x_low|,
 /// |x_prev|)).
+// lint: no-alloc
 fn pid_error(x_low: &[f32], x_high: &[f32], x_prev: &[f32], atol: f64, rtol: f64) -> f64 {
     debug_assert_eq!(x_low.len(), x_high.len());
     debug_assert_eq!(x_low.len(), x_prev.len());
@@ -552,6 +553,7 @@ fn pid_error(x_low: &[f32], x_high: &[f32], x_prev: &[f32], atol: f64, rtol: f64
     (acc / x_low.len().max(1) as f64).sqrt()
 }
 
+// lint: no-alloc
 fn mean_dv_norm(v_prev: &[f32], v_cur: &[f32], rows: usize, dim: usize) -> f64 {
     let mut total = 0.0f64;
     for r in 0..rows {

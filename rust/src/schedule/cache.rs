@@ -130,9 +130,11 @@ struct State {
 /// Thread-safe schedule cache shared by every request path of a hub.
 pub struct ScheduleCache {
     cfg: CacheConfig,
+    // lock-order: 50
     state: Mutex<State>,
     cv: Condvar,
     /// serializes file appends/rewrites (never held with `state` wanted).
+    // lock-order: 51
     persist: Mutex<()>,
 }
 

@@ -50,6 +50,7 @@ impl LambdaKind {
 }
 
 /// Convex combination x = Λ·x^E + (1−Λ)·x^H written into `out` (eq. 9).
+// lint: no-alloc
 pub fn blend(x_euler: &[f32], x_heun: &[f32], lambda: f64, out: &mut [f32]) {
     debug_assert_eq!(x_euler.len(), x_heun.len());
     debug_assert_eq!(x_euler.len(), out.len());

@@ -3,6 +3,7 @@
 //! regime (paper §3.1).
 
 /// In-place Euler update over a flat [rows·dim] state.
+// lint: no-alloc
 pub fn euler_step(x: &mut [f32], v: &[f32], dt: f64) {
     debug_assert_eq!(x.len(), v.len());
     let dt = dt as f32;

@@ -5,6 +5,7 @@
 /// Heun correction: given the Euler predictor x̃ (already at t+Δt) and the
 /// velocities at both ends, produce the corrected state
 /// x' = x + Δt·(v + ṽ)/2 in place of x.
+// lint: no-alloc
 pub fn heun_correct(x: &mut [f32], v0: &[f32], v1: &[f32], dt: f64) {
     debug_assert_eq!(x.len(), v0.len());
     debug_assert_eq!(x.len(), v1.len());

@@ -10,6 +10,7 @@ pub mod cli;
 pub mod histogram;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 
 pub use bench::{bench, bench_throughput, BenchResult};
@@ -17,6 +18,7 @@ pub use cli::Args;
 pub use histogram::Histogram;
 pub use json::Json;
 pub use rng::Rng;
+pub use sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 pub use threadpool::ThreadPool;
 
 use std::time::Instant;

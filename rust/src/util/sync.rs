@@ -1,0 +1,69 @@
+//! Poison-recovery lock helpers.
+//!
+//! The coordinator's panic policy (DESIGN.md §11) forbids `unwrap` /
+//! `expect` on request/reply paths, and most of those sites were
+//! `lock().unwrap()` — where the unwrap can only fire if another thread
+//! already panicked while holding the guard. For the state these locks
+//! protect (metrics counters, admission queues, scheduler books), the
+//! right response to poison is to keep serving with the last consistent
+//! state, not to cascade the panic into every thread that touches the
+//! mutex. These wrappers recover the inner guard via
+//! `PoisonError::into_inner`.
+//!
+//! Locks whose invariants genuinely cannot survive a mid-update panic
+//! should keep an annotated `expect` instead
+//! (`// lint: allow(panic): <reason>`).
+//!
+//! `sdm analyze` treats `lock_unpoisoned(..)` as a lock acquisition for
+//! the deadlock pass, and skips this file's own bodies so the wrappers
+//! don't fuse every caller's lock into one graph node.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// `m.lock()` that recovers from poisoning instead of panicking.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `cv.wait(g)` that recovers from poisoning instead of panicking.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `cv.wait_timeout(g, d)` that recovers from poisoning.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    d: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, d).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_times_out_normally() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, res) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

@@ -63,6 +63,7 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = {
                             let guard = rx.lock().expect("pool receiver poisoned");
+                            // lint: allow(lock): the receiver mutex exists only to serialize recv across workers; holding it over the blocking recv IS the design
                             guard.recv()
                         };
                         match job {
@@ -105,6 +106,7 @@ impl ThreadPool {
             .expect("pool already shut down")
             .lock()
             .expect("pool sender poisoned")
+            // lint: allow(lock): temporary guard; the sender mutex only serializes send on an unbounded channel, so send cannot block
             .send(Box::new(f))
             .expect("pool workers gone");
     }

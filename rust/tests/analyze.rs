@@ -1,0 +1,204 @@
+//! Integration tests for `sdm analyze` (DESIGN.md §11).
+//!
+//! Two halves:
+//!   * seeded fixtures under `rust/tests/fixtures/analyze/` — each must
+//!     reproduce its golden diagnostics exactly (render format included),
+//!     and each must be deny-worthy (non-empty active findings);
+//!   * the self-check — analyzing the real `rust/src` against the
+//!     checked-in `.lint-baseline` must yield zero active findings, with
+//!     no coordinator entries hiding in the baseline.
+//!
+//! Tests run from the workspace root (cargo sets the test binary's cwd
+//! to `CARGO_MANIFEST_DIR`), so fixture paths stay relative and the
+//! golden renders are stable.
+
+use std::path::Path;
+
+use sdm::analyze::{analyze_tree, Report, PASS_LOCK_ORDER, PASS_NO_ALLOC, PASS_PANIC, PASS_WIRE};
+
+fn fixture(name: &str) -> String {
+    format!("rust/tests/fixtures/analyze/{name}")
+}
+
+fn analyze_fixture(root: &str) -> Report {
+    analyze_tree(Path::new(root), None).expect("fixture tree scans")
+}
+
+fn renders(report: &Report, pass: &str) -> Vec<String> {
+    report
+        .active
+        .iter()
+        .filter(|d| d.pass == pass)
+        .map(|d| d.render())
+        .collect()
+}
+
+#[test]
+fn lock_cycle_fixture_reports_both_edges() {
+    let root = fixture("lock_cycle");
+    let report = analyze_fixture(&root);
+    assert_eq!(
+        renders(&report, PASS_LOCK_ORDER),
+        vec![
+            format!(
+                "{root}/ab.rs:14: [lock-order] lock cycle: acquires `Pair::beta` while holding \
+                 `Pair::alpha` and `Pair::beta` can be held while taking `Pair::alpha` elsewhere"
+            ),
+            format!(
+                "{root}/ab.rs:20: [lock-order] lock cycle: acquires `Pair::alpha` while holding \
+                 `Pair::beta` and `Pair::alpha` can be held while taking `Pair::beta` elsewhere"
+            ),
+        ],
+    );
+    assert!(!report.active.is_empty(), "fixture must be deny-worthy");
+}
+
+#[test]
+fn hidden_nested_acquisition_found_through_one_hop_of_inlining() {
+    let root = fixture("lock_nested_callee");
+    let report = analyze_fixture(&root);
+    assert_eq!(
+        renders(&report, PASS_LOCK_ORDER),
+        vec![
+            format!(
+                "{root}/nested.rs:16: [lock-order] lock cycle: acquires `Books::ledger` while \
+                 holding `Books::journal` (via call to `take_ledger`) and `Books::ledger` can \
+                 be held while taking `Books::journal` elsewhere"
+            ),
+            format!(
+                "{root}/nested.rs:27: [lock-order] lock cycle: acquires `Books::journal` while \
+                 holding `Books::ledger` and `Books::journal` can be held while taking \
+                 `Books::ledger` elsewhere"
+            ),
+        ],
+    );
+}
+
+#[test]
+fn coordinator_zoned_unwrap_is_flagged_and_tests_stay_exempt() {
+    let root = fixture("panic_zone");
+    let report = analyze_fixture(&root);
+    let all: Vec<String> = report.active.iter().map(|d| d.render()).collect();
+    assert_eq!(
+        all,
+        vec![format!(
+            "{root}/coordinator/reply.rs:6: [panic-policy] panic site `unwrap` in coordinator \
+             request/reply path (fn `reply_line`); return a structured error or annotate \
+             `// lint: allow(panic): reason`"
+        )],
+        "exactly the seeded site — the #[cfg(test)] copy must not report"
+    );
+}
+
+#[test]
+fn no_alloc_fixture_flags_direct_and_transitive_allocation() {
+    let root = fixture("no_alloc");
+    let report = analyze_fixture(&root);
+    let all: Vec<String> = report.active.iter().map(|d| d.render()).collect();
+    assert_eq!(
+        all,
+        vec![
+            format!("{root}/hot.rs:8: [no-alloc] no-alloc fn `hot_scale` contains `.collect()`"),
+            format!(
+                "{root}/hot.rs:13: [no-alloc] no-alloc fn `hot_norm` calls `helper_sum`, which \
+                 allocates (`.to_vec()` at {root}/hot.rs:17)"
+            ),
+        ],
+        "clean_axpy must stay clean, helper_sum itself is unannotated"
+    );
+}
+
+#[test]
+fn wire_schema_fixture_flags_both_drift_directions() {
+    let root = fixture("wire_bad");
+    let report = analyze_fixture(&root);
+    let all: Vec<String> = report.active.iter().map(|d| d.render()).collect();
+    assert_eq!(
+        all,
+        vec![
+            format!(
+                "{root}/client.rs:7: [wire-schema] wire field \"stepss\" produced here is not \
+                 parsed by protocol.rs"
+            ),
+            format!(
+                "{root}/client.rs:13: [wire-schema] wire field \"latency\" read from a reply \
+                 here is never emitted by protocol.rs"
+            ),
+        ],
+        "op/steps/ok are consistent and must not report"
+    );
+}
+
+#[test]
+fn every_seeded_fixture_is_deny_worthy() {
+    for name in ["lock_cycle", "lock_nested_callee", "panic_zone", "no_alloc", "wire_bad"] {
+        let report = analyze_fixture(&fixture(name));
+        assert!(
+            !report.active.is_empty(),
+            "fixture `{name}` produced no findings — `sdm analyze --deny` would pass on it"
+        );
+    }
+}
+
+#[test]
+fn passes_do_not_bleed_across_fixtures() {
+    // the lock fixtures legitimately also carry panic findings (bare
+    // unwraps), but must produce no wire/no-alloc noise; the wire and
+    // no-alloc fixtures must stay single-pass.
+    for name in ["lock_cycle", "lock_nested_callee"] {
+        let report = analyze_fixture(&fixture(name));
+        assert!(renders(&report, PASS_WIRE).is_empty(), "{name}");
+        assert!(renders(&report, PASS_NO_ALLOC).is_empty(), "{name}");
+    }
+    let wire = analyze_fixture(&fixture("wire_bad"));
+    assert!(renders(&wire, PASS_LOCK_ORDER).is_empty());
+    assert!(renders(&wire, PASS_PANIC).is_empty());
+    let hot = analyze_fixture(&fixture("no_alloc"));
+    assert!(renders(&hot, PASS_LOCK_ORDER).is_empty());
+    assert!(renders(&hot, PASS_PANIC).is_empty());
+}
+
+#[test]
+fn real_tree_is_clean_modulo_baseline() {
+    let report = analyze_tree(Path::new("rust/src"), Some(Path::new(".lint-baseline")))
+        .expect("analyzing rust/src");
+    assert!(
+        report.active.is_empty(),
+        "non-baselined findings in rust/src:\n{}",
+        report
+            .active
+            .iter()
+            .map(|d| d.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    // the burn-down keeps paying for itself: waived findings exist, but
+    // none of them live under coordinator/
+    assert!(
+        report.baselined.iter().all(|d| !d.file.contains("/coordinator/")),
+        "baselined coordinator finding: {:?}",
+        report
+            .baselined
+            .iter()
+            .find(|d| d.file.contains("/coordinator/"))
+    );
+}
+
+#[test]
+fn baseline_file_has_no_coordinator_entries() {
+    let text = std::fs::read_to_string(".lint-baseline").expect("baseline checked in");
+    for line in text.lines().map(str::trim) {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        assert!(
+            !line.contains("coordinator/"),
+            "coordinator files must stay burned down, not waived: `{line}`"
+        );
+    }
+}

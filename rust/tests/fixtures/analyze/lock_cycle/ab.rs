@@ -1,0 +1,23 @@
+// Seeded violation: AB/BA deadlock. `ab` acquires alpha then beta,
+// `ba` acquires beta then alpha — both edges participate in a cycle.
+// (Never compiled: fixture input for `sdm analyze` tests only.)
+use std::sync::Mutex;
+
+pub struct Pair {
+    pub alpha: Mutex<u32>,
+    pub beta: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn ab(&self) -> u32 {
+        let a = self.alpha.lock().unwrap();
+        let b = self.beta.lock().unwrap();
+        *a + *b
+    }
+
+    pub fn ba(&self) -> u32 {
+        let b = self.beta.lock().unwrap();
+        let a = self.alpha.lock().unwrap();
+        *a + *b
+    }
+}

@@ -1,0 +1,30 @@
+// Seeded violation: the nested acquisition hides one call away.
+// `outer` holds `journal` while calling `take_ledger` (journal -> ledger
+// through one hop of inlining); `use_both` holds `ledger` while taking
+// `journal` (ledger -> journal directly). Together: a cycle.
+// (Never compiled: fixture input for `sdm analyze` tests only.)
+use std::sync::Mutex;
+
+pub struct Books {
+    pub ledger: Mutex<u32>,
+    pub journal: Mutex<u32>,
+}
+
+impl Books {
+    pub fn outer(&self) -> u32 {
+        let j = self.journal.lock().unwrap();
+        self.take_ledger();
+        *j
+    }
+
+    pub fn take_ledger(&self) -> u32 {
+        let l = self.ledger.lock().unwrap();
+        *l
+    }
+
+    pub fn use_both(&self) -> u32 {
+        let l = self.ledger.lock().unwrap();
+        let j = self.journal.lock().unwrap();
+        *l + *j
+    }
+}

@@ -1,0 +1,26 @@
+// Seeded violations: a `// lint: no-alloc` fn that allocates directly,
+// and one whose only sin is calling a transitively-allocating helper.
+// `clean_axpy` must stay clean.
+// (Never compiled: fixture input for `sdm analyze` tests only.)
+
+// lint: no-alloc
+pub fn hot_scale(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| x * 2.0).collect()
+}
+
+// lint: no-alloc
+pub fn hot_norm(xs: &[f64]) -> f64 {
+    helper_sum(xs).sqrt()
+}
+
+fn helper_sum(xs: &[f64]) -> f64 {
+    let v = xs.to_vec();
+    v.iter().map(|x| x * x).sum()
+}
+
+// lint: no-alloc
+pub fn clean_axpy(a: f64, xs: &[f64], ys: &mut [f64]) {
+    for (y, x) in ys.iter_mut().zip(xs) {
+        *y += a * x;
+    }
+}

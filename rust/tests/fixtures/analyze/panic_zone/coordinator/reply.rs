@@ -1,0 +1,17 @@
+// Seeded violation: a bare `unwrap` on a coordinator reply path. The
+// test-module copy below must stay exempt.
+// (Never compiled: fixture input for `sdm analyze` tests only.)
+
+pub fn reply_line(v: Option<u32>) -> String {
+    let n = v.unwrap();
+    format!("ok {n}")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_exempt() {
+        assert_eq!(super::reply_line(Some(1)).len().max(0), 4);
+        let _ = Some(2u32).unwrap();
+    }
+}

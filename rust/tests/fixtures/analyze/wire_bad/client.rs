@@ -1,0 +1,14 @@
+// Seeded violations: the template writes `stepss` (typo protocol.rs
+// never parses) and the reply reader asks for `latency` (a key
+// protocol.rs never emits). `op`/`steps`/`ok` are consistent.
+// (Never compiled: fixture input for `sdm analyze` tests only.)
+
+pub fn request_line(n: u32) -> String {
+    format!(r#"{{"op":"sample","steps":{n},"stepss":{n}}}"#)
+}
+
+pub fn read_reply(v: &Json) -> Option<f64> {
+    let ok = v.get("ok");
+    let _ = ok;
+    v.get("latency").and_then(value_as_f64)
+}

@@ -1,0 +1,15 @@
+// Fixture parser half of the wire-schema pair: parses `op`/`steps`,
+// emits `ok`/`nfe`. client.rs drifts on both directions.
+// (Never compiled: fixture input for `sdm analyze` tests only.)
+
+pub fn parse(obj: &Json) -> Option<f64> {
+    let op = obj.get("op");
+    let steps = opt_f64(obj, "steps");
+    let _ = op;
+    steps
+}
+
+pub fn reply(m: &mut Map) {
+    m.insert("ok", flag());
+    m.insert("nfe", count());
+}
