@@ -1,0 +1,487 @@
+//! Seeded, deterministic fault injection for the serving stack
+//! (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] is parsed from a compact spec — mirroring the sampling
+//! plan grammar — and consulted at four injection sites:
+//!
+//! - `eval_err@1/200` — fail one in 200 denoiser evaluations with a
+//!   structured model error ([`ChaosDenoiser`] wraps the hub's models).
+//! - `eval_delay@p50=5ms` — sleep every evaluation for an
+//!   exponentially-distributed spike with the given median (capped at
+//!   20× the median so chaos can never hang a test).
+//! - `conn_drop@1/50` — drop one in 50 reply writes mid-frame: the
+//!   server writes a truncated prefix and closes the socket, so the
+//!   client observes an ambiguous post-write failure.
+//! - `cache_corrupt@1/4` — garble one in 4 schedule-cache JSONL appends
+//!   (alternating truncation and garbage), exercising the counted
+//!   lenient-load recovery path.
+//! - `batcher_panic@1/64` — panic a batcher grouping thread, exercising
+//!   the router watchdog's fail-route-closed path.
+//!
+//! A bare site name (no `@`) means probability 1.
+//!
+//! Decisions are **deterministic per (seed, site, call-index)**: each
+//! site keeps an atomic call counter and hashes `(seed, site, n)` into a
+//! uniform draw, so for a fixed seed the k-th event at a site always
+//! makes the same decision regardless of thread interleaving — total
+//! injected counts over a fixed workload are reproducible. With no plan
+//! configured (the default), every call site holds an `Option` that is
+//! `None`, so the off path is a branch on a register — zero overhead.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::model::{Denoiser, EvalOut, KernelScratch, MaskRef};
+use crate::util::Json;
+use crate::Result;
+
+/// Number of injection sites (array sizing).
+const SITES: usize = 5;
+
+/// Where a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// denoiser evaluation returns a structured error
+    EvalErr = 0,
+    /// denoiser evaluation sleeps (latency spike)
+    EvalDelay = 1,
+    /// reply write truncated mid-frame, connection closed
+    ConnDrop = 2,
+    /// schedule-cache JSONL append line garbled
+    CacheCorrupt = 3,
+    /// batcher grouping thread panics (watchdog drill)
+    BatcherPanic = 4,
+}
+
+impl FaultSite {
+    const ALL: [FaultSite; SITES] = [
+        FaultSite::EvalErr,
+        FaultSite::EvalDelay,
+        FaultSite::ConnDrop,
+        FaultSite::CacheCorrupt,
+        FaultSite::BatcherPanic,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::EvalErr => "eval_err",
+            FaultSite::EvalDelay => "eval_delay",
+            FaultSite::ConnDrop => "conn_drop",
+            FaultSite::CacheCorrupt => "cache_corrupt",
+            FaultSite::BatcherPanic => "batcher_panic",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    /// Per-site salt so the same call index draws independently at each
+    /// site.
+    fn salt(&self) -> u64 {
+        (*self as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F)
+    }
+}
+
+/// Per-site configuration: fire probability plus the delay median for
+/// [`FaultSite::EvalDelay`]. `prob == 0` means the site is off.
+#[derive(Clone, Copy, Debug, Default)]
+struct SiteSpec {
+    prob: f64,
+    p50_ms: f64,
+}
+
+/// A parsed, seeded fault plan. Shared as `Arc<FaultPlan>` across the
+/// denoiser wrappers, connection handlers, batcher threads, and the
+/// schedule cache; all state is atomic.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: String,
+    sites: [SiteSpec; SITES],
+    calls: [AtomicU64; SITES],
+    fired: [AtomicU64; SITES],
+}
+
+/// SplitMix64 finalizer for the decision hash.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// Parse a plan spec like
+    /// `eval_err@1/200,eval_delay@p50=5ms,conn_drop@1/50,cache_corrupt`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut sites = [SiteSpec::default(); SITES];
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, param) = match clause.split_once('@') {
+                Some((n, p)) => (n.trim(), Some(p.trim())),
+                None => (clause, None),
+            };
+            let site = FaultSite::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown fault site {name:?} in chaos plan {spec:?} \
+                     (eval_err|eval_delay|conn_drop|cache_corrupt|batcher_panic)"
+                )
+            })?;
+            let slot = &mut sites[site as usize];
+            match (site, param) {
+                (FaultSite::EvalDelay, Some(p)) => {
+                    let ms = p
+                        .strip_prefix("p50=")
+                        .and_then(|v| v.strip_suffix("ms"))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("eval_delay wants p50=<float>ms, got {p:?}")
+                        })?;
+                    let ms: f64 = ms.trim().parse()?;
+                    anyhow::ensure!(ms > 0.0, "eval_delay median must be > 0, got {ms}");
+                    slot.prob = 1.0;
+                    slot.p50_ms = ms;
+                }
+                (FaultSite::EvalDelay, None) => {
+                    anyhow::bail!("eval_delay needs a parameter, e.g. eval_delay@p50=5ms")
+                }
+                (_, Some(p)) => {
+                    let (num, den) = p.split_once('/').ok_or_else(|| {
+                        anyhow::anyhow!("{name} wants a ratio like 1/50, got {p:?}")
+                    })?;
+                    let num: f64 = num.trim().parse()?;
+                    let den: f64 = den.trim().parse()?;
+                    anyhow::ensure!(
+                        num >= 0.0 && den > 0.0 && num <= den,
+                        "{name}@{p}: want 0 <= n <= m with m > 0"
+                    );
+                    slot.prob = num / den;
+                }
+                (_, None) => slot.prob = 1.0,
+            }
+        }
+        Ok(FaultPlan {
+            seed,
+            spec: spec.to_string(),
+            sites,
+            calls: Default::default(),
+            fired: Default::default(),
+        })
+    }
+
+    /// The spec string this plan was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True when no site can ever fire.
+    pub fn is_noop(&self) -> bool {
+        self.sites.iter().all(|s| s.prob <= 0.0)
+    }
+
+    /// Whether a site is configured at all (cheap pre-check for call
+    /// sites that want to skip work when the site is off).
+    pub fn site_enabled(&self, site: FaultSite) -> bool {
+        self.sites[site as usize].prob > 0.0
+    }
+
+    /// Draw the next deterministic uniform for `site`, advancing its
+    /// call counter.
+    fn roll(&self, site: FaultSite) -> f64 {
+        let n = self.calls[site as usize].fetch_add(1, Ordering::Relaxed);
+        let h = mix64(self.seed ^ site.salt() ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Roll the site's dice: true = inject. Counts calls and fires.
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let p = self.sites[site as usize].prob;
+        if p <= 0.0 {
+            return false;
+        }
+        let hit = self.roll(site) < p;
+        if hit {
+            self.fired[site as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// The latency spike for the next evaluation, if the delay site is
+    /// configured: exponential with the configured median, capped at
+    /// 20× the median.
+    pub fn eval_delay(&self) -> Option<Duration> {
+        let s = self.sites[FaultSite::EvalDelay as usize];
+        if s.prob <= 0.0 {
+            return None;
+        }
+        let u = self.roll(FaultSite::EvalDelay);
+        self.fired[FaultSite::EvalDelay as usize].fetch_add(1, Ordering::Relaxed);
+        let ms = (s.p50_ms * (-(1.0 - u).ln()) / std::f64::consts::LN_2).min(s.p50_ms * 20.0);
+        Some(Duration::from_secs_f64(ms / 1e3))
+    }
+
+    /// Maybe garble one serialized JSONL line before it is appended to
+    /// the schedule-cache file: alternates mid-line truncation (a torn
+    /// write) and a garbage line (bit rot). `None` = append unchanged.
+    pub fn corrupt_line(&self, line: &str) -> Option<String> {
+        if !self.fire(FaultSite::CacheCorrupt) {
+            return None;
+        }
+        let k = self.fired[FaultSite::CacheCorrupt as usize].load(Ordering::Relaxed);
+        if k % 2 == 1 {
+            Some(line.chars().take(line.chars().count() / 2).collect())
+        } else {
+            Some(format!("!chaos-garbled!{line}"))
+        }
+    }
+
+    /// Times a site was consulted.
+    pub fn calls(&self, site: FaultSite) -> u64 {
+        self.calls[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Times a site actually injected a fault.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Injection counters for the `stats` op:
+    /// `{"spec": ..., "seed": ..., "<site>": {"calls": n, "fired": m}}`.
+    pub fn counts_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("spec".to_string(), Json::Str(self.spec.clone()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        for site in FaultSite::ALL {
+            if !self.site_enabled(site) {
+                continue;
+            }
+            let mut s = std::collections::BTreeMap::new();
+            s.insert("calls".to_string(), Json::Num(self.calls(site) as f64));
+            s.insert("fired".to_string(), Json::Num(self.fired(site) as f64));
+            m.insert(site.name().to_string(), Json::Obj(s));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// A [`Denoiser`] wrapper injecting the plan's `eval_delay` latency
+/// spikes and `eval_err` failures in front of every evaluation, on all
+/// three trait entry points (so the allocation-free uniform-σ hot path
+/// stays on the inner fast kernel when no fault fires).
+pub struct ChaosDenoiser {
+    inner: Arc<dyn Denoiser>,
+    plan: Arc<FaultPlan>,
+}
+
+impl ChaosDenoiser {
+    pub fn new(inner: Arc<dyn Denoiser>, plan: Arc<FaultPlan>) -> ChaosDenoiser {
+        ChaosDenoiser { inner, plan }
+    }
+
+    fn inject(&self) -> Result<()> {
+        if let Some(d) = self.plan.eval_delay() {
+            std::thread::sleep(d);
+        }
+        if self.plan.fire(FaultSite::EvalErr) {
+            anyhow::bail!(
+                "chaos: injected eval failure ({} of {} evals)",
+                self.plan.fired(FaultSite::EvalErr),
+                self.plan.calls(FaultSite::EvalErr)
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Denoiser for ChaosDenoiser {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn backend(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn denoise_v(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        self.inject()?;
+        self.inner.denoise_v(xhat, sigma, a, b, mask)
+    }
+
+    fn denoise_v_into(
+        &self,
+        xhat: &[f32],
+        sigma: &[f32],
+        a: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        out: &mut EvalOut,
+        scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        self.inject()?;
+        self.inner.denoise_v_into(xhat, sigma, a, b, mask, out, scratch)
+    }
+
+    fn denoise_v_uniform_into(
+        &self,
+        xhat: &[f32],
+        rows: usize,
+        sigma: f32,
+        a: f32,
+        b: f32,
+        mask: MaskRef<'_>,
+        out: &mut EvalOut,
+        scratch: &mut KernelScratch,
+    ) -> Result<()> {
+        self.inject()?;
+        self.inner.denoise_v_uniform_into(xhat, rows, sigma, a, b, mask, out, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::testmodel::toy;
+
+    #[test]
+    fn grammar_parses_the_issue_example() {
+        let p = FaultPlan::parse(
+            "eval_err@1/200,eval_delay@p50=5ms,conn_drop@1/50,cache_corrupt",
+            7,
+        )
+        .unwrap();
+        assert!(p.site_enabled(FaultSite::EvalErr));
+        assert!(p.site_enabled(FaultSite::EvalDelay));
+        assert!(p.site_enabled(FaultSite::ConnDrop));
+        assert!(p.site_enabled(FaultSite::CacheCorrupt));
+        assert!(!p.site_enabled(FaultSite::BatcherPanic));
+        assert!(!p.is_noop());
+        assert_eq!(p.seed(), 7);
+    }
+
+    #[test]
+    fn grammar_rejects_bad_specs() {
+        assert!(FaultPlan::parse("explode@1/2", 0).is_err());
+        assert!(FaultPlan::parse("eval_err@2", 0).is_err());
+        assert!(FaultPlan::parse("eval_err@3/2", 0).is_err());
+        assert!(FaultPlan::parse("eval_delay", 0).is_err());
+        assert!(FaultPlan::parse("eval_delay@5ms", 0).is_err());
+        assert!(FaultPlan::parse("eval_delay@p50=0ms", 0).is_err());
+        // empty plan parses as a no-op
+        assert!(FaultPlan::parse("", 0).unwrap().is_noop());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed_and_index() {
+        let a = FaultPlan::parse("eval_err@1/4", 42).unwrap();
+        let b = FaultPlan::parse("eval_err@1/4", 42).unwrap();
+        let da: Vec<bool> = (0..256).map(|_| a.fire(FaultSite::EvalErr)).collect();
+        let db: Vec<bool> = (0..256).map(|_| b.fire(FaultSite::EvalErr)).collect();
+        assert_eq!(da, db);
+        let c = FaultPlan::parse("eval_err@1/4", 43).unwrap();
+        let dc: Vec<bool> = (0..256).map(|_| c.fire(FaultSite::EvalErr)).collect();
+        assert_ne!(da, dc, "different seeds must draw different fault sequences");
+        // empirical rate within 2x of 1/4 over 256 draws
+        let hits = da.iter().filter(|h| **h).count();
+        assert!((32..=128).contains(&hits), "hits {hits} far from 64");
+        assert_eq!(a.fired(FaultSite::EvalErr) as usize, hits);
+        assert_eq!(a.calls(FaultSite::EvalErr), 256);
+    }
+
+    #[test]
+    fn sites_draw_independently() {
+        let p = FaultPlan::parse("eval_err@1/2,conn_drop@1/2", 9).unwrap();
+        let e: Vec<bool> = (0..64).map(|_| p.fire(FaultSite::EvalErr)).collect();
+        let c: Vec<bool> = (0..64).map(|_| p.fire(FaultSite::ConnDrop)).collect();
+        assert_ne!(e, c, "sites must not share a decision stream");
+    }
+
+    #[test]
+    fn off_sites_never_fire_and_cost_no_counter() {
+        let p = FaultPlan::parse("eval_err@1/2", 1).unwrap();
+        for _ in 0..32 {
+            assert!(!p.fire(FaultSite::ConnDrop));
+        }
+        assert_eq!(p.calls(FaultSite::ConnDrop), 0);
+        assert_eq!(p.fired(FaultSite::ConnDrop), 0);
+        assert!(p.eval_delay().is_none());
+    }
+
+    #[test]
+    fn delay_is_bounded_by_twenty_medians() {
+        let p = FaultPlan::parse("eval_delay@p50=2ms", 5).unwrap();
+        for _ in 0..1000 {
+            let d = p.eval_delay().unwrap();
+            assert!(d <= Duration::from_millis(40), "delay {d:?} above 20x median");
+        }
+    }
+
+    #[test]
+    fn corrupt_line_alternates_truncation_and_garbage() {
+        let p = FaultPlan::parse("cache_corrupt", 3).unwrap();
+        let line = r#"{"k":"v","n":123456}"#;
+        let a = p.corrupt_line(line).unwrap();
+        let b = p.corrupt_line(line).unwrap();
+        let garbled = |s: &str| s.starts_with("!chaos-garbled!");
+        let torn = |s: &str| s.len() < line.len() && line.starts_with(s);
+        assert!(torn(&a) ^ torn(&b), "one of the two must be a torn line");
+        assert!(garbled(&a) ^ garbled(&b), "one of the two must be garbage");
+        // off plan never corrupts
+        let off = FaultPlan::parse("eval_err@1/2", 3).unwrap();
+        assert!(off.corrupt_line(line).is_none());
+    }
+
+    #[test]
+    fn chaos_denoiser_injects_and_delegates() {
+        let model = Arc::new(toy());
+        let plan = Arc::new(FaultPlan::parse("eval_err@1/2", 11).unwrap());
+        let wrapped = ChaosDenoiser::new(model.clone(), Arc::clone(&plan));
+        assert_eq!(wrapped.dim(), model.dim());
+        assert_eq!(wrapped.k(), model.k());
+        assert_eq!(wrapped.backend(), "chaos");
+        let rows = 2;
+        let (dim, k) = (model.dim(), model.k());
+        let xhat = vec![0.1f32; rows * dim];
+        let sigma = vec![1.0f32; rows];
+        let ones = vec![1.0f32; rows];
+        let mask = vec![0.0f32; rows * k];
+        let (mut ok, mut err) = (0, 0);
+        for _ in 0..64 {
+            match wrapped.denoise_v(&xhat, &sigma, &ones, &ones, &mask) {
+                Ok(out) => {
+                    assert_eq!(out.d.len(), rows * dim);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(format!("{e:#}").contains("chaos: injected"));
+                    err += 1;
+                }
+            }
+        }
+        assert!(ok > 0 && err > 0, "ok {ok} err {err}");
+        assert_eq!(plan.fired(FaultSite::EvalErr), err);
+    }
+
+    #[test]
+    fn counts_json_lists_enabled_sites_only() {
+        let p = FaultPlan::parse("eval_err@1/2", 1).unwrap();
+        let _ = p.fire(FaultSite::EvalErr);
+        let j = p.counts_json();
+        assert!(j.get("eval_err").is_ok());
+        assert!(j.get("conn_drop").is_err());
+        assert_eq!(j.get("seed").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

@@ -28,6 +28,7 @@ use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::chaos::{FaultPlan, FaultSite};
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{PlanRequest, Response, SampleRequest};
@@ -202,6 +203,11 @@ impl Drop for InflightGuard {
 /// owns cross-route dispatch order. Expired requests are shed as each
 /// chunk leaves the backlog, so a deadline is honored no matter how long
 /// the chunk queued.
+///
+/// `chaos` (DESIGN.md §12): an optional fault plan whose `batcher_panic`
+/// site kills this thread mid-loop — the hook the router's watchdog is
+/// tested against. `None` (production default) adds zero work per
+/// iteration beyond one branch.
 pub fn batcher_loop(
     dataset: String,
     hub: Arc<EngineHub>,
@@ -210,6 +216,7 @@ pub fn batcher_loop(
     policy: BatchPolicy,
     sched: Arc<DrrScheduler>,
     stop: Arc<std::sync::atomic::AtomicBool>,
+    chaos: Option<Arc<FaultPlan>>,
 ) {
     use std::sync::atomic::Ordering;
 
@@ -219,6 +226,13 @@ pub fn batcher_loop(
     let mut backlog: BinaryHeap<PrioChunk> = BinaryHeap::new();
     let mut seq = 0u64;
     loop {
+        if let Some(c) = &chaos {
+            if c.fire(FaultSite::BatcherPanic) {
+                // lint: allow(panic): deliberate injected crash — the
+                // router's watchdog must observe a dead batcher thread
+                panic!("chaos: injected batcher panic on route {dataset:?}");
+            }
+        }
         // wait for work, with a timeout so aged groups still flush
         let mut closing = false;
         match inbox.recv_timeout(policy.max_wait) {
@@ -477,6 +491,7 @@ fn flush(
                     batched_with,
                     samples: p.req.return_samples.then(|| slice.to_vec()),
                     dim,
+                    request_id: p.req.request_id.clone(),
                 };
                 metrics.record_request(dataset, latency_us, rows, nfe);
                 let _ = p.reply.send(resp);
@@ -588,7 +603,7 @@ mod tests {
         let inbox2 = inbox.clone();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         std::thread::spawn(move || {
-            batcher_loop("toy".into(), hub, m2, inbox2, policy, sched, stop)
+            batcher_loop("toy".into(), hub, m2, inbox2, policy, sched, stop, None)
         });
         (inbox, metrics)
     }
@@ -780,7 +795,7 @@ mod tests {
         let inbox2 = inbox.clone();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         std::thread::spawn(move || {
-            batcher_loop("ghost".into(), hub, m2, inbox2, BatchPolicy::default(), sched, stop)
+            batcher_loop("ghost".into(), hub, m2, inbox2, BatchPolicy::default(), sched, stop, None)
         });
         let mut req = mk_request(2, "euler");
         req.dataset = "ghost".into();

@@ -1,12 +1,23 @@
 //! Blocking JSON-lines client for the coordinator (examples, benches,
-//! load generators), with typed surfacing of QoS refusals.
+//! load generators), with typed surfacing of QoS refusals and an opt-in
+//! resilient wrapper ([`ResilientClient`]) that layers retry/backoff and
+//! per-route circuit breaking on top of the raw connection.
+//!
+//! Failure classification (DESIGN.md §12): the wire client splits
+//! transport failures into **pre-write** (the request never left this
+//! process — always safe to resend) and **post-write** (the request was
+//! written but no reply arrived — the server may or may not have executed
+//! it). The resilient wrapper only resends a post-write failure when the
+//! request carries an idempotency `request_id`; otherwise it surfaces a
+//! terminal error and counts the avoided double submission.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use anyhow::Context;
 
-use crate::util::Json;
+use crate::util::{Backoff, BreakerConfig, CircuitBreaker, Json, RetryPolicy, Rng};
 use crate::Result;
 
 /// A structured QoS refusal decoded from a response line's `code` field.
@@ -21,6 +32,8 @@ pub enum Rejection {
     DeadlineExceeded { route: String, waited_ms: f64 },
     /// the coordinator is shutting down
     ShuttingDown { route: String },
+    /// the route's batcher thread died; the watchdog failed it closed
+    RouteDown { route: String },
 }
 
 impl std::fmt::Display for Rejection {
@@ -35,6 +48,9 @@ impl std::fmt::Display for Rejection {
             }
             Rejection::ShuttingDown { route } => {
                 write!(f, "coordinator shutting down (route {route:?})")
+            }
+            Rejection::RouteDown { route } => {
+                write!(f, "route {route:?} is down (batcher thread dead)")
             }
         }
     }
@@ -63,10 +79,34 @@ impl Rejection {
                 waited_ms: v.get("waited_ms").ok()?.as_f64().ok()?,
             }),
             "shutting_down" => Some(Rejection::ShuttingDown { route }),
+            "route_down" => Some(Rejection::RouteDown { route }),
             _ => None,
         }
     }
 }
+
+/// A transport failure from [`Client::send_classified`], split by whether
+/// the request had already been written to the socket when it happened.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SendError {
+    /// the request never reached the wire (connect/write failure) — the
+    /// server cannot have seen it, so a resend is always safe
+    PreWrite(String),
+    /// the request was written but the reply never arrived (read error,
+    /// EOF, or a torn reply line) — the server may have executed it
+    PostWrite(String),
+}
+
+impl std::fmt::Display for SendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SendError::PreWrite(e) => write!(f, "pre-write transport failure: {e}"),
+            SendError::PostWrite(e) => write!(f, "post-write transport failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SendError {}
 
 pub struct Client {
     writer: TcpStream,
@@ -90,12 +130,29 @@ impl Client {
         Json::parse(resp.trim())
     }
 
+    /// [`Client::send`], but classifying transport failures by send phase
+    /// (see [`SendError`]). A reply line that arrives but does not parse —
+    /// e.g. torn mid-line by a dropped connection — is post-write: the
+    /// server executed the request even though we cannot read the result.
+    pub fn send_classified(&mut self, line: &str) -> std::result::Result<Json, SendError> {
+        if let Err(e) = writeln!(self.writer, "{line}") {
+            return Err(SendError::PreWrite(e.to_string()));
+        }
+        let mut resp = String::new();
+        match self.reader.read_line(&mut resp) {
+            Err(e) => Err(SendError::PostWrite(e.to_string())),
+            Ok(0) => Err(SendError::PostWrite("server closed connection".into())),
+            Ok(_) => Json::parse(resp.trim())
+                .map_err(|e| SendError::PostWrite(format!("unparseable reply: {e:#}"))),
+        }
+    }
+
     /// [`Client::send`], surfacing QoS refusals as typed errors: a
     /// response carrying a `queue_full` / `deadline_exceeded` /
-    /// `shutting_down` code returns `Err` wrapping a [`Rejection`]
-    /// (recover it with `err.downcast_ref::<Rejection>()`). Other
-    /// responses — including plain `"ok":false` errors — pass through as
-    /// `Ok(json)` for the caller to interpret.
+    /// `shutting_down` / `route_down` code returns `Err` wrapping a
+    /// [`Rejection`] (recover it with `err.downcast_ref::<Rejection>()`).
+    /// Other responses — including plain `"ok":false` errors — pass
+    /// through as `Ok(json)` for the caller to interpret.
     pub fn send_checked(&mut self, line: &str) -> Result<Json> {
         let v = self.send(line)?;
         match Rejection::from_response(&v) {
@@ -107,6 +164,19 @@ impl Client {
     pub fn ping(&mut self) -> Result<bool> {
         let v = self.send(r#"{"op":"ping"}"#)?;
         Ok(v.get("ok")? == &Json::Bool(true))
+    }
+
+    /// Liveness probe: true when the server answers at all.
+    pub fn health(&mut self) -> Result<bool> {
+        let v = self.send(r#"{"op":"health"}"#)?;
+        Ok(v.get("ok")? == &Json::Bool(true))
+    }
+
+    /// Readiness probe: true when the server reports it can take traffic
+    /// (artifacts loaded, not draining, all batcher threads live).
+    pub fn ready(&mut self) -> Result<bool> {
+        let v = self.send(r#"{"op":"ready"}"#)?;
+        Ok(v.get("ready")? == &Json::Bool(true))
     }
 
     /// Convenience builder for a sample request.
@@ -151,6 +221,194 @@ impl Client {
     }
 }
 
+/// Counters a [`ResilientClient`] accumulates across sends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// individual wire attempts (first tries + retries)
+    pub attempts: u64,
+    /// resends after a retryable failure or `queue_full` refusal
+    pub retries: u64,
+    /// fresh TCP connections established after the first
+    pub reconnects: u64,
+    /// sends refused locally because the route's breaker was open
+    pub breaker_fast_fails: u64,
+    /// post-write failures NOT retried because the request carried no
+    /// idempotency `request_id` — each is a double submission avoided
+    pub double_submit_avoided: u64,
+}
+
+/// [`Client`] wrapped with retry/backoff, per-route circuit breaking,
+/// and automatic reconnection. One instance owns at most one connection;
+/// a transport failure drops it and the next attempt redials.
+///
+/// Terminal-vs-retryable (DESIGN.md §12): `queue_full` retries with the
+/// server's `retry_after_ms` as the backoff floor; pre-write transport
+/// failures always retry; post-write failures retry only for idempotent
+/// requests; `deadline_exceeded`, `shutting_down`, and `route_down` are
+/// terminal and surface as `Ok(json)` for the caller to classify.
+pub struct ResilientClient {
+    addr: String,
+    conn: Option<Client>,
+    policy: RetryPolicy,
+    breaker_cfg: BreakerConfig,
+    breakers: BTreeMap<String, CircuitBreaker>,
+    rng: Rng,
+    stats: RetryStats,
+    ever_connected: bool,
+}
+
+impl ResilientClient {
+    /// Lazy constructor — no connection is dialed until the first send.
+    pub fn new(addr: &str, policy: RetryPolicy, breaker_cfg: BreakerConfig, seed: u64) -> Self {
+        ResilientClient {
+            addr: addr.to_string(),
+            conn: None,
+            policy,
+            breaker_cfg,
+            breakers: BTreeMap::new(),
+            rng: Rng::new(seed ^ 0xC1A0_5EED),
+            stats: RetryStats::default(),
+            ever_connected: false,
+        }
+    }
+
+    pub fn stats(&self) -> RetryStats {
+        self.stats
+    }
+
+    /// Total breaker-open transitions across all routes.
+    pub fn breaker_opens(&self) -> u64 {
+        self.breakers.values().map(|b| b.opened()).sum()
+    }
+
+    /// Current breaker state for a route (`None` until first send).
+    pub fn breaker_state(&self, route: &str) -> Option<&'static str> {
+        self.breakers.get(route).map(|b| b.state_name())
+    }
+
+    /// Deliberately drop the current connection (the next attempt
+    /// redials). Used by chaos-enabled load generators to exercise the
+    /// reconnect path from the client side.
+    pub fn drop_connection(&mut self) {
+        self.conn = None;
+    }
+
+    fn breaker(&mut self, route: &str) -> &CircuitBreaker {
+        let cfg = self.breaker_cfg;
+        self.breakers.entry(route.to_string()).or_insert_with(|| CircuitBreaker::new(cfg))
+    }
+
+    /// One wire attempt: dial if disconnected, then send and classify.
+    fn attempt(&mut self, line: &str) -> std::result::Result<Json, SendError> {
+        if self.conn.is_none() {
+            match Client::connect(&self.addr) {
+                Ok(c) => {
+                    if self.ever_connected {
+                        self.stats.reconnects += 1;
+                    }
+                    self.ever_connected = true;
+                    self.conn = Some(c);
+                }
+                Err(e) => return Err(SendError::PreWrite(format!("{e:#}"))),
+            }
+        }
+        match self.conn.as_mut() {
+            Some(c) => c.send_classified(line),
+            None => Err(SendError::PreWrite("no connection".into())),
+        }
+    }
+
+    /// Send `line` on `route` with retry/backoff and circuit breaking.
+    ///
+    /// `idempotent` must be true only when the line carries a
+    /// `request_id` the server can deduplicate; it gates whether an
+    /// ambiguous post-write failure is retried.
+    ///
+    /// Returns `Ok(json)` for any final server reply — including
+    /// structured refusals, which callers classify via
+    /// [`Rejection::from_response`] — and `Err` only for locally-terminal
+    /// outcomes (breaker open, retry budget exhausted on transport
+    /// failure, non-idempotent post-write failure).
+    pub fn send_with_retry(&mut self, route: &str, line: &str, idempotent: bool) -> Result<Json> {
+        let jitter = self.rng.fork(0x7E7);
+        let mut backoff = Backoff::new(self.policy, jitter);
+        loop {
+            if !self.breaker(route).try_acquire() {
+                self.stats.breaker_fast_fails += 1;
+                anyhow::bail!("circuit open for route {route:?}: failing fast locally");
+            }
+            self.stats.attempts += 1;
+            match self.attempt(line) {
+                Ok(v) => match Rejection::from_response(&v) {
+                    Some(Rejection::QueueFull { retry_after_ms, .. }) => {
+                        self.breaker(route).on_failure();
+                        match backoff.next_delay(Some(retry_after_ms)) {
+                            Some(d) => {
+                                self.stats.retries += 1;
+                                std::thread::sleep(d);
+                            }
+                            // budget exhausted: surface the refusal itself
+                            None => return Ok(v),
+                        }
+                    }
+                    Some(Rejection::DeadlineExceeded { .. }) => {
+                        // the route functioned — it processed and timed
+                        // out the request; not a breaker-worthy fault
+                        self.breaker(route).on_success();
+                        return Ok(v);
+                    }
+                    Some(Rejection::ShuttingDown { .. }) | Some(Rejection::RouteDown { .. }) => {
+                        self.breaker(route).on_failure();
+                        return Ok(v);
+                    }
+                    // ok:true and plain model errors both mean the route
+                    // answered; the caller interprets the payload
+                    None => {
+                        self.breaker(route).on_success();
+                        return Ok(v);
+                    }
+                },
+                Err(SendError::PreWrite(e)) => {
+                    self.conn = None;
+                    self.breaker(route).on_failure();
+                    match backoff.next_delay(None) {
+                        Some(d) => {
+                            self.stats.retries += 1;
+                            std::thread::sleep(d);
+                        }
+                        None => anyhow::bail!(
+                            "request to route {route:?} failed pre-write after {} attempts: {e}",
+                            backoff.attempts()
+                        ),
+                    }
+                }
+                Err(SendError::PostWrite(e)) => {
+                    self.conn = None;
+                    self.breaker(route).on_failure();
+                    if !idempotent {
+                        self.stats.double_submit_avoided += 1;
+                        anyhow::bail!(
+                            "ambiguous post-write failure on route {route:?} and the request \
+                             carries no request_id — not resending to avoid a double \
+                             submission: {e}"
+                        );
+                    }
+                    match backoff.next_delay(None) {
+                        Some(d) => {
+                            self.stats.retries += 1;
+                            std::thread::sleep(d);
+                        }
+                        None => anyhow::bail!(
+                            "request to route {route:?} failed post-write after {} attempts: {e}",
+                            backoff.attempts()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +442,9 @@ mod tests {
             Rejection::from_response(&v),
             Some(Rejection::ShuttingDown { route: "c".into() })
         );
+        let rd = Response::RouteDown { route: "d".into() };
+        let v = Json::parse(&rd.to_line()).unwrap();
+        assert_eq!(Rejection::from_response(&v), Some(Rejection::RouteDown { route: "d".into() }));
         // ordinary errors and successes are not rejections
         let v = Json::parse(&Response::Err("boom".into()).to_line()).unwrap();
         assert_eq!(Rejection::from_response(&v), None);
@@ -197,5 +458,43 @@ mod tests {
         let err = anyhow::Error::new(r.clone());
         assert_eq!(err.downcast_ref::<Rejection>(), Some(&r));
         assert!(format!("{err}").contains("queue full"));
+    }
+
+    #[test]
+    fn resilient_client_fast_fails_when_breaker_is_open() {
+        // nothing listens on this port: every attempt is a pre-write
+        // connect failure, so the breaker trips after `threshold` fails
+        let policy = RetryPolicy { max_attempts: 1, ..RetryPolicy::default() };
+        let cfg = BreakerConfig { threshold: 2, cooldown: std::time::Duration::from_secs(60) };
+        let mut rc = ResilientClient::new("127.0.0.1:1", policy, cfg, 7);
+        for _ in 0..2 {
+            assert!(rc.send_with_retry("r", r#"{"op":"ping"}"#, false).is_err());
+        }
+        assert_eq!(rc.breaker_state("r"), Some("open"));
+        let before = rc.stats().attempts;
+        let err = rc.send_with_retry("r", r#"{"op":"ping"}"#, false).unwrap_err();
+        assert!(format!("{err}").contains("circuit open"), "{err}");
+        // fast-fail: no wire attempt was made
+        assert_eq!(rc.stats().attempts, before);
+        assert_eq!(rc.stats().breaker_fast_fails, 1);
+        assert_eq!(rc.breaker_opens(), 1);
+    }
+
+    #[test]
+    fn resilient_client_retries_pre_write_failures() {
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_ms: 0.1,
+            cap_ms: 0.2,
+            budget_ms: 1000.0,
+        };
+        let cfg = BreakerConfig { threshold: 100, cooldown: std::time::Duration::from_millis(10) };
+        let mut rc = ResilientClient::new("127.0.0.1:1", policy, cfg, 11);
+        let err = rc.send_with_retry("r", r#"{"op":"ping"}"#, false).unwrap_err();
+        assert!(format!("{err}").contains("pre-write"), "{err}");
+        assert_eq!(rc.stats().attempts, 3);
+        assert_eq!(rc.stats().retries, 2);
+        // pre-write failures never count as avoided double submissions
+        assert_eq!(rc.stats().double_submit_avoided, 0);
     }
 }

@@ -269,6 +269,22 @@ impl EngineHub {
         }
     }
 
+    /// Wrap every dataset's *serving* model in a
+    /// [`crate::chaos::ChaosDenoiser`] driven by `plan` (`--chaos`,
+    /// DESIGN.md §12): seeded eval failures and latency spikes on the
+    /// request path. The ground-truth oracle is left untouched — injected
+    /// faults must corrupt serving, never the reference the tests compare
+    /// against. Call before wrapping the hub in an `Arc`, like
+    /// [`EngineHub::attach_shard_pool`].
+    pub fn apply_chaos(&mut self, plan: Arc<crate::chaos::FaultPlan>) {
+        for e in self.datasets.values_mut() {
+            e.model = Arc::new(crate::chaos::ChaosDenoiser::new(
+                Arc::clone(&e.model),
+                Arc::clone(&plan),
+            ));
+        }
+    }
+
     pub fn dataset_names(&self) -> Vec<String> {
         self.datasets.keys().cloned().collect()
     }

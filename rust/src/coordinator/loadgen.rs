@@ -19,13 +19,20 @@
 //! `sdm bench-client --open-loop-rps` and the coordinator benches;
 //! SLO-search results append to `BENCH_qos.json`
 //! ([`append_qos_record`]).
+//!
+//! Resilience (DESIGN.md §12): [`closed_loop_with`] optionally runs each
+//! worker behind a [`ResilientClient`] (retry/backoff + per-route circuit
+//! breaking) and can drive a client-side [`FaultPlan`] whose `conn_drop`
+//! clause deliberately drops worker connections between requests — the
+//! chaos soak uses this to prove zero lost replies under injected faults.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::client::{Client, Rejection};
-use crate::util::{Histogram, Json, Rng, Timer};
+use crate::chaos::{FaultPlan, FaultSite};
+use crate::coordinator::client::{Client, Rejection, ResilientClient, RetryStats};
+use crate::util::{BreakerConfig, Histogram, Json, RetryPolicy, Rng, Timer};
 use crate::Result;
 
 /// One request template drawn by the generator.
@@ -48,6 +55,12 @@ pub struct RequestTemplate {
     /// `"exact"` / `"fast-f64"` / `"fast-f32"`); `None` = server default
     /// (exact).
     pub kernel_precision: Option<String>,
+    /// idempotency-token prefix: when set, each request line carries
+    /// `"request_id":"<prefix>-<seed hex>"` — unique per request (both
+    /// drivers derive a distinct seed per request), stable across a
+    /// resend of the same request, and deduplicated server-side. Marks
+    /// the request safe to retry after an ambiguous post-write failure.
+    pub request_id: Option<String>,
 }
 
 impl RequestTemplate {
@@ -66,6 +79,9 @@ impl RequestTemplate {
         if let Some(p) = &self.kernel_precision {
             extra.push_str(&format!(r#","kernel_precision":"{p}""#));
         }
+        if let Some(p) = &self.request_id {
+            extra.push_str(&format!(r#","request_id":"{p}-{seed:016x}""#));
+        }
         format!(
             r#"{{"op":"sample","dataset":"{}","n":{},"param":"{}","solver":"{}","schedule":"{}","steps":{},"seed":{}{}}}"#,
             self.dataset, self.n, self.param, self.solver, self.schedule, self.steps, seed, extra
@@ -77,6 +93,11 @@ impl RequestTemplate {
 #[derive(Clone, Debug)]
 pub struct TraceProfile {
     pub templates: Vec<(f64, RequestTemplate)>,
+    /// optional client-side fault-plan spec (DESIGN.md §12 grammar);
+    /// only the `conn_drop` clause is meaningful on the client, and it
+    /// takes effect only under [`closed_loop_with`] with retry enabled —
+    /// a plain client has no reconnect path to exercise.
+    pub chaos: Option<String>,
 }
 
 impl TraceProfile {
@@ -95,6 +116,7 @@ impl TraceProfile {
             priority: None,
             deadline_ms: None,
             kernel_precision: None,
+            request_id: None,
         };
         TraceProfile {
             templates: vec![
@@ -102,12 +124,13 @@ impl TraceProfile {
                 (0.25, t("cifar10g", 64, "heun", 18)),
                 (0.25, t("afhqg", 16, "sdm", 40)),
             ],
+            chaos: None,
         }
     }
 
     /// Single-template profile (the `sdm loadgen --dataset ...` shape).
     pub fn single(tpl: RequestTemplate) -> TraceProfile {
-        TraceProfile { templates: vec![(1.0, tpl)] }
+        TraceProfile { templates: vec![(1.0, tpl)], chaos: None }
     }
 
     /// Four mutually incompatible request groups (distinct solver /
@@ -128,6 +151,7 @@ impl TraceProfile {
             priority: None,
             deadline_ms: None,
             kernel_precision: None,
+            request_id: None,
         };
         TraceProfile {
             templates: vec![
@@ -136,6 +160,7 @@ impl TraceProfile {
                 (0.25, t("dpm2m", "logsnr", 16)),
                 (0.25, t("sdm", "edm", 18)),
             ],
+            chaos: None,
         }
     }
 
@@ -166,6 +191,16 @@ pub struct LoadReport {
     /// per-worker FNV folds XOR-combined, so the same seed reproduces the
     /// same hash regardless of thread interleaving.
     pub trace_hash: u64,
+    /// resends performed by resilient workers (0 without `--retry`)
+    pub retries: u64,
+    /// fresh TCP connections dialed after a worker's first
+    pub reconnects: u64,
+    /// breaker `Closed` → `Open` transitions across all workers/routes
+    pub breaker_opens: u64,
+    /// requests fast-failed locally by an open breaker
+    pub breaker_fast_fails: u64,
+    /// ambiguous post-write failures NOT resent (no `request_id`)
+    pub double_submit_avoided: u64,
 }
 
 impl LoadReport {
@@ -177,6 +212,21 @@ impl LoadReport {
     pub fn goodput_rps(&self) -> f64 {
         self.latency.count() as f64 / self.wall_s.max(1e-9)
     }
+}
+
+/// Client-resilience knobs for [`closed_loop_with`]. The default (all
+/// `None`) reproduces plain [`closed_loop`] behavior exactly: raw
+/// one-connection-per-worker sends, no retries, no fault injection.
+#[derive(Clone, Default)]
+pub struct LoadOptions {
+    /// enable retry/backoff + per-route circuit breaking per worker
+    pub retry: Option<RetryPolicy>,
+    /// breaker knobs (only used with `retry`; `None` = defaults)
+    pub breaker: Option<BreakerConfig>,
+    /// client-side fault plan; overrides the profile's `chaos` spec.
+    /// Only `conn_drop` is meaningful here (drops the worker's
+    /// connection before a send, forcing the reconnect path).
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 /// Per-request outcome classification shared by both drivers.
@@ -282,6 +332,11 @@ pub fn open_loop(
         expiries: expiries.load(Ordering::SeqCst),
         wall_s: timer.elapsed_us() / 1e6,
         trace_hash,
+        retries: 0,
+        reconnects: 0,
+        breaker_opens: 0,
+        breaker_fast_fails: 0,
+        double_submit_avoided: 0,
     })
 }
 
@@ -297,7 +352,34 @@ pub fn closed_loop(
     think: Duration,
     seed: u64,
 ) -> Result<LoadReport> {
+    closed_loop_with(addr, profile, workers, per_worker, think, seed, &LoadOptions::default())
+}
+
+/// [`closed_loop`] with client-resilience options: workers optionally
+/// send through a [`ResilientClient`] and optionally drop their own
+/// connections under a client-side fault plan (`opts.chaos`, falling
+/// back to the profile's `chaos` spec). With default options this is
+/// byte-for-byte the plain closed loop.
+///
+/// Accounting invariant (the chaos soak asserts it): every request lands
+/// in exactly one bucket, so
+/// `sent == latency.count() + errors + sheds + expiries` always holds —
+/// retries are *resends of one request*, not new requests.
+pub fn closed_loop_with(
+    addr: &str,
+    profile: &TraceProfile,
+    workers: usize,
+    per_worker: u64,
+    think: Duration,
+    seed: u64,
+    opts: &LoadOptions,
+) -> Result<LoadReport> {
     anyhow::ensure!(workers > 0 && per_worker > 0, "bad load parameters");
+    let chaos: Option<Arc<FaultPlan>> = match (&opts.chaos, &profile.chaos) {
+        (Some(p), _) => Some(Arc::clone(p)),
+        (None, Some(spec)) => Some(Arc::new(FaultPlan::parse(spec, seed)?)),
+        (None, None) => None,
+    };
     let errors = Arc::new(AtomicU64::new(0));
     let sheds = Arc::new(AtomicU64::new(0));
     let expiries = Arc::new(AtomicU64::new(0));
@@ -309,33 +391,69 @@ pub fn closed_loop(
         let errors = Arc::clone(&errors);
         let sheds = Arc::clone(&sheds);
         let expiries = Arc::clone(&expiries);
-        handles.push(std::thread::spawn(move || -> Result<(Histogram, u64)> {
+        let retry = opts.retry;
+        let breaker = opts.breaker.unwrap_or_default();
+        let chaos = chaos.clone();
+        handles.push(std::thread::spawn(move || -> Result<(Histogram, u64, RetryStats, u64)> {
             let mut rng = Rng::new(seed ^ (w as u64 * 0x9E37));
-            let mut client = Client::connect(&addr)?;
             let mut hist = Histogram::new();
             let mut trace = 0xcbf2_9ce4_8422_2325u64 ^ (w as u64);
+            let mut resilient = match retry {
+                Some(policy) => {
+                    Some(ResilientClient::new(&addr, policy, breaker, seed ^ (w as u64)))
+                }
+                None => None,
+            };
+            let mut plain = match resilient {
+                Some(_) => None,
+                None => Some(Client::connect(&addr)?),
+            };
             for i in 0..per_worker {
                 let idx = profile.draw_index(&mut rng);
                 trace = fold_trace(trace, idx);
-                let line = profile.templates[idx].1.line(seed ^ ((w as u64) << 32) ^ i);
+                let tpl = &profile.templates[idx].1;
+                let line = tpl.line(seed ^ ((w as u64) << 32) ^ i);
                 let t = Timer::start();
-                let resp = client.send(&line);
+                let resp = match (&mut resilient, &mut plain) {
+                    (Some(rc), _) => {
+                        if let Some(c) = &chaos {
+                            if c.fire(FaultSite::ConnDrop) {
+                                rc.drop_connection();
+                            }
+                        }
+                        rc.send_with_retry(&tpl.dataset, &line, tpl.request_id.is_some())
+                    }
+                    (None, Some(c)) => c.send(&line),
+                    (None, None) => Err(anyhow::anyhow!("worker has no client")),
+                };
                 classify(&resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries);
                 if !think.is_zero() {
                     std::thread::sleep(think);
                 }
             }
-            Ok((hist, trace))
+            let (stats, opens) = match &resilient {
+                Some(rc) => (rc.stats(), rc.breaker_opens()),
+                None => (RetryStats::default(), 0),
+            };
+            Ok((hist, trace, stats, opens))
         }));
     }
     let mut latency = Histogram::new();
     let mut trace_hash = 0u64;
+    let mut totals = RetryStats::default();
+    let mut breaker_opens = 0u64;
     for h in handles {
-        let (hist, trace) = h
+        let (hist, trace, stats, opens) = h
             .join()
             .map_err(|_| anyhow::anyhow!("load-generator worker panicked"))??;
         latency.merge(&hist);
         trace_hash ^= trace;
+        totals.attempts += stats.attempts;
+        totals.retries += stats.retries;
+        totals.reconnects += stats.reconnects;
+        totals.breaker_fast_fails += stats.breaker_fast_fails;
+        totals.double_submit_avoided += stats.double_submit_avoided;
+        breaker_opens += opens;
     }
     Ok(LoadReport {
         latency,
@@ -345,6 +463,11 @@ pub fn closed_loop(
         expiries: expiries.load(Ordering::SeqCst),
         wall_s: timer.elapsed_us() / 1e6,
         trace_hash,
+        retries: totals.retries,
+        reconnects: totals.reconnects,
+        breaker_opens,
+        breaker_fast_fails: totals.breaker_fast_fails,
+        double_submit_avoided: totals.double_submit_avoided,
     })
 }
 
@@ -510,6 +633,7 @@ mod tests {
             priority: None,
             deadline_ms: None,
             kernel_precision: None,
+            request_id: None,
         }
     }
 
@@ -520,6 +644,7 @@ mod tests {
                 (1.0, TraceProfile::standard().templates[0].1.clone()),
                 (0.0, TraceProfile::standard().templates[2].1.clone()),
             ],
+            chaos: None,
         };
         let mut rng = Rng::new(1);
         for _ in 0..100 {
@@ -577,6 +702,75 @@ mod tests {
             },
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn template_line_carries_request_id() {
+        let mut t = toy_template(4, 6);
+        t.request_id = Some("lg".into());
+        let line = t.line(0xABCD);
+        assert!(line.contains(r#""request_id":"lg-000000000000abcd""#), "{line}");
+        let parsed = crate::coordinator::protocol::Request::parse(&line).unwrap();
+        match parsed {
+            crate::coordinator::protocol::Request::Sample(s) => {
+                assert_eq!(s.request_id.as_deref(), Some("lg-000000000000abcd"));
+            }
+            _ => panic!(),
+        }
+        // distinct seeds yield distinct ids (the uniqueness guarantee)
+        assert_ne!(t.line(1), t.line(2));
+    }
+
+    #[test]
+    fn resilient_closed_loop_matches_plain_on_healthy_server() {
+        let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        let mut tpl = toy_template(2, 5);
+        tpl.request_id = Some("lg".into());
+        let profile = TraceProfile::single(tpl);
+        let opts = LoadOptions {
+            retry: Some(RetryPolicy::default()),
+            breaker: None,
+            chaos: None,
+        };
+        let report =
+            closed_loop_with(&addr, &profile, 2, 6, Duration::ZERO, 21, &opts).unwrap();
+        assert_eq!(report.sent, 12);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.latency.count(), 12, "every reply must be accounted");
+        // a healthy server needs no resilience machinery
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.breaker_opens, 0);
+        assert_eq!(report.double_submit_avoided, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn client_side_conn_drop_chaos_reconnects_and_loses_nothing() {
+        let hub = StdArc::new(EngineHub::from_infos(vec![toy().info]));
+        let server = Server::start(hub, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        let mut tpl = toy_template(2, 5);
+        tpl.request_id = Some("lg".into());
+        let mut profile = TraceProfile::single(tpl);
+        // drop the client connection before every single send
+        profile.chaos = Some("conn_drop@1/1".into());
+        let opts = LoadOptions { retry: Some(RetryPolicy::default()), ..Default::default() };
+        let report =
+            closed_loop_with(&addr, &profile, 1, 12, Duration::ZERO, 33, &opts).unwrap();
+        assert_eq!(report.sent, 12);
+        assert_eq!(
+            report.latency.count() + report.errors + report.sheds + report.expiries,
+            12,
+            "zero lost replies"
+        );
+        // dropping our own connection pre-send is invisible to accounting
+        // but must show up as reconnects: the first drop precedes the
+        // first dial, the remaining 11 each force a redial
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.reconnects, 11);
+        server.shutdown();
     }
 
     #[test]

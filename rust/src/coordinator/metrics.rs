@@ -34,6 +34,12 @@ struct RouteMetrics {
     sheds_deadline: u64,
     /// requests refused or drained by shutdown (`ShuttingDown` replies)
     sheds_shutdown: u64,
+    /// requests refused because the route's batcher thread died and the
+    /// watchdog failed the route closed (`RouteDown` replies)
+    sheds_route_down: u64,
+    /// sample requests resending a `request_id` already seen on this
+    /// route — the duplicate-detection signal a retrying client produces
+    dup_request_ids: u64,
 }
 
 /// Thread-safe metrics sink shared across batchers and connections.
@@ -107,7 +113,15 @@ impl ServerMetrics {
             ShedCause::QueueFull => r.sheds_queue_full += 1,
             ShedCause::Deadline => r.sheds_deadline += 1,
             ShedCause::Shutdown => r.sheds_shutdown += 1,
+            ShedCause::RouteDown => r.sheds_route_down += 1,
         }
+    }
+
+    /// A sample request arrived carrying a `request_id` the route has
+    /// already seen (client resend after an ambiguous failure).
+    pub fn record_duplicate(&self, dataset: &str) {
+        let mut routes = lock_unpoisoned(&self.routes);
+        routes.entry(dataset.to_string()).or_default().dup_request_ids += 1;
     }
 
     /// [`ServerMetrics::snapshot`] with extra top-level sections merged in
@@ -150,6 +164,8 @@ impl ServerMetrics {
             m.insert("sheds_queue_full".into(), Json::Num(r.sheds_queue_full as f64));
             m.insert("sheds_deadline".into(), Json::Num(r.sheds_deadline as f64));
             m.insert("sheds_shutdown".into(), Json::Num(r.sheds_shutdown as f64));
+            m.insert("sheds_route_down".into(), Json::Num(r.sheds_route_down as f64));
+            m.insert("dup_request_ids".into(), Json::Num(r.dup_request_ids as f64));
             let avg_nfe = if r.samples > 0 { r.nfe_total / r.samples as f64 } else { 0.0 };
             m.insert("avg_nfe".into(), Json::Num(avg_nfe));
             m.insert("latency_p50_us".into(), Json::Num(r.latency_us.quantile(0.5)));
@@ -212,6 +228,9 @@ mod tests {
         m.record_shed("a", ShedCause::QueueFull);
         m.record_shed("a", ShedCause::Deadline);
         m.record_shed("a", ShedCause::Shutdown);
+        m.record_shed("a", ShedCause::RouteDown);
+        m.record_duplicate("a");
+        m.record_duplicate("a");
         let snap = m.snapshot();
         let a = snap.get("a").unwrap();
         assert_eq!(a.get("queue_depth").unwrap().as_f64().unwrap(), 1.0);
@@ -219,6 +238,8 @@ mod tests {
         assert_eq!(a.get("sheds_queue_full").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(a.get("sheds_deadline").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(a.get("sheds_shutdown").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("sheds_route_down").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("dup_request_ids").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub mod qos;
 pub mod router;
 pub mod server;
 
-pub use client::{Client, Rejection};
+pub use client::{Client, Rejection, ResilientClient, RetryStats, SendError};
 pub use hub::{EngineHub, ModelBackend};
 pub use protocol::{Request, Response};
 pub use qos::{DrrScheduler, Inbox, QosClass, QosPolicy};

@@ -8,6 +8,7 @@
 //!  "eta_min":0.01,"eta_max":0.4,"p":1.0,"q":0.25,"lambda":"step",
 //!  "priority":"interactive","deadline_ms":250}
 //! {"op":"ping"}   {"op":"stats"}   {"op":"shutdown"}
+//! {"op":"health"} {"op":"ready"}
 //! ```
 //! A request may also carry `"plan"`: either a segmented plan string in
 //! the DESIGN.md §9 grammar (`"euler@max..2,dpm2m@2..0.5,sdm@0.5..0"`)
@@ -35,9 +36,23 @@
 //!
 //! Structured refusals carry `"ok":false` plus a machine-readable
 //! `"code"` — `queue_full` (with `depth`, `retry_after_ms`),
-//! `deadline_exceeded` (with `deadline_ms`, `waited_ms`), or
-//! `shutting_down` — so clients can branch without parsing prose
-//! (`client::Rejection` does exactly that).
+//! `deadline_exceeded` (with `deadline_ms`, `waited_ms`),
+//! `shutting_down`, or `route_down` (the route's batcher thread died and
+//! the watchdog failed it closed) — so clients can branch without
+//! parsing prose (`client::Rejection` does exactly that).
+//!
+//! Probes (DESIGN.md §12): `health` answers whenever the process can
+//! still accept a connection and parse a line — liveness, nothing more.
+//! `ready` answers whether the coordinator should receive *new* traffic:
+//! artifacts loaded ∧ not draining ∧ every route's batcher thread alive
+//! (`ready`, `draining`, `routes_live`, `routes_total`).
+//!
+//! A sample request may carry an optional `"request_id"` string. The
+//! coordinator treats resends of the same id as the same logical request
+//! for duplicate-detection purposes (counted per route in `stats`), and
+//! echoes the id on the `sample` reply — the hook a retrying client
+//! needs to resend an ambiguous post-write failure without
+//! double-counting.
 //!
 //! The `stats` response's `stats` object holds one section per dataset
 //! route (requests, latency quantiles, batch/split gauges — see
@@ -65,6 +80,10 @@ pub enum Request {
     Ping,
     Stats,
     Shutdown,
+    /// liveness probe: the process is up and parsing lines.
+    Health,
+    /// readiness probe: should this coordinator receive new traffic?
+    Ready,
     Sample(SampleRequest),
 }
 
@@ -110,6 +129,10 @@ pub struct SampleRequest {
     /// kernel precision tier (wire field `kernel_precision`; default
     /// exact). Part of the batch group key — see DESIGN.md §10.
     pub precision: KernelPrecision,
+    /// optional idempotency token: resends under the same id are counted
+    /// as duplicates by the router and the id is echoed on the reply.
+    /// Never part of the batch group key or any cache key.
+    pub request_id: Option<String>,
 }
 
 impl Request {
@@ -120,6 +143,8 @@ impl Request {
             "ping" => Ok(Request::Ping),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
+            "health" => Ok(Request::Health),
+            "ready" => Ok(Request::Ready),
             "sample" => Ok(Request::Sample(parse_sample(&v)?)),
             other => bail!("unknown op {other:?}"),
         }
@@ -169,6 +194,17 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
     let precision = match v.get("kernel_precision") {
         Ok(Json::Null) | Err(_) => KernelPrecision::Exact,
         Ok(p) => KernelPrecision::from_name(p.as_str()?)?,
+    };
+    let request_id = match v.get("request_id") {
+        Ok(Json::Null) | Err(_) => None,
+        Ok(id) => {
+            let id = id.as_str()?;
+            anyhow::ensure!(
+                !id.is_empty() && id.len() <= 128,
+                "request_id must be 1..=128 chars"
+            );
+            Some(id.to_string())
+        }
     };
 
     // plan / solver. `plan` wins when both are present; the legacy
@@ -247,6 +283,7 @@ fn parse_sample(v: &Json) -> Result<SampleRequest> {
         qos,
         deadline_ms,
         precision,
+        request_id,
     })
 }
 
@@ -276,6 +313,21 @@ pub enum Response {
     ShuttingDown {
         route: String,
     },
+    /// the route's batcher thread died and the watchdog failed the route
+    /// closed; the request was not integrated (code `route_down`).
+    RouteDown {
+        route: String,
+    },
+    /// liveness probe reply: the process is up.
+    Health,
+    /// readiness probe reply (DESIGN.md §12): `ready` = artifacts loaded
+    /// ∧ not draining ∧ every batcher thread alive.
+    Ready {
+        ready: bool,
+        draining: bool,
+        routes_live: usize,
+        routes_total: usize,
+    },
     SampleOk {
         n: usize,
         nfe: f64,
@@ -285,6 +337,8 @@ pub enum Response {
         batched_with: usize,
         samples: Option<Vec<f32>>,
         dim: usize,
+        /// echo of the request's idempotency token, when it sent one.
+        request_id: Option<String>,
     },
 }
 
@@ -339,6 +393,30 @@ impl Response {
                 );
                 m.insert("route".into(), Json::Str(route.clone()));
             }
+            Response::RouteDown { route } => {
+                m.insert("ok".into(), Json::Bool(false));
+                m.insert("code".into(), Json::Str("route_down".into()));
+                m.insert(
+                    "error".into(),
+                    Json::Str(format!(
+                        "route {route:?} is down: its batcher thread died and the \
+                         watchdog failed the route closed"
+                    )),
+                );
+                m.insert("route".into(), Json::Str(route.clone()));
+            }
+            Response::Health => {
+                m.insert("ok".into(), Json::Bool(true));
+                m.insert("op".into(), Json::Str("health".into()));
+            }
+            Response::Ready { ready, draining, routes_live, routes_total } => {
+                m.insert("ok".into(), Json::Bool(true));
+                m.insert("op".into(), Json::Str("ready".into()));
+                m.insert("ready".into(), Json::Bool(*ready));
+                m.insert("draining".into(), Json::Bool(*draining));
+                m.insert("routes_live".into(), Json::Num(*routes_live as f64));
+                m.insert("routes_total".into(), Json::Num(*routes_total as f64));
+            }
             Response::Stats(s) => {
                 m.insert("ok".into(), Json::Bool(true));
                 m.insert("stats".into(), s.clone());
@@ -352,6 +430,7 @@ impl Response {
                 batched_with,
                 samples,
                 dim,
+                request_id,
             } => {
                 m.insert("ok".into(), Json::Bool(true));
                 m.insert("n".into(), Json::Num(*n as f64));
@@ -364,6 +443,9 @@ impl Response {
                 m.insert("trace_cov".into(), Json::Num(*trace_cov));
                 m.insert("latency_us".into(), Json::Num(*latency_us));
                 m.insert("batched_with".into(), Json::Num(*batched_with as f64));
+                if let Some(id) = request_id {
+                    m.insert("request_id".into(), Json::Str(id.clone()));
+                }
                 if let Some(s) = samples {
                     m.insert(
                         "samples".into(),
@@ -501,12 +583,95 @@ mod tests {
             batched_with: 2,
             samples: None,
             dim: 2,
+            request_id: None,
         };
         let line = r.to_line();
         let v = Response::parse(&line).unwrap();
         assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
         assert_eq!(v.get("nfe").unwrap().as_f64().unwrap(), 35.0);
         assert_eq!(v.get("mean").unwrap().as_vec_f64().unwrap(), vec![0.5, -0.25]);
+        // no request_id on the request → none echoed on the reply
+        assert!(v.get("request_id").is_err());
+    }
+
+    #[test]
+    fn request_id_parses_validates_and_echoes() {
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"request_id":"req-42"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => assert_eq!(s.request_id.as_deref(), Some("req-42")),
+            _ => panic!(),
+        }
+        // absent and null both mean "no idempotency token"
+        let r = Request::parse(r#"{"op":"sample","dataset":"x","n":4}"#).unwrap();
+        match r {
+            Request::Sample(s) => assert_eq!(s.request_id, None),
+            _ => panic!(),
+        }
+        let r = Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"request_id":null}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample(s) => assert_eq!(s.request_id, None),
+            _ => panic!(),
+        }
+        // empty and oversized ids are rejected at parse
+        assert!(Request::parse(
+            r#"{"op":"sample","dataset":"x","n":4,"request_id":""}"#
+        )
+        .is_err());
+        let long = "a".repeat(129);
+        assert!(Request::parse(&format!(
+            r#"{{"op":"sample","dataset":"x","n":4,"request_id":"{long}"}}"#
+        ))
+        .is_err());
+
+        // the reply echoes the token verbatim
+        let r = Response::SampleOk {
+            n: 1,
+            nfe: 9.0,
+            mean: vec![0.0],
+            trace_cov: 1.0,
+            latency_us: 10.0,
+            batched_with: 1,
+            samples: None,
+            dim: 1,
+            request_id: Some("req-42".into()),
+        };
+        let v = Response::parse(&r.to_line()).unwrap();
+        assert_eq!(v.get("request_id").unwrap().as_str().unwrap(), "req-42");
+    }
+
+    #[test]
+    fn route_down_serializes_with_code() {
+        let rd = Response::RouteDown { route: "cifar10g".into() };
+        let v = Response::parse(&rd.to_line()).unwrap();
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "route_down");
+        assert_eq!(v.get("route").unwrap().as_str().unwrap(), "cifar10g");
+    }
+
+    #[test]
+    fn health_and_ready_roundtrip() {
+        let v = Response::parse(&Response::Health.to_line()).unwrap();
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "health");
+
+        let rd = Response::Ready {
+            ready: false,
+            draining: true,
+            routes_live: 1,
+            routes_total: 2,
+        };
+        let v = Response::parse(&rd.to_line()).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "ready");
+        assert_eq!(v.get("ready").unwrap(), &Json::Bool(false));
+        assert_eq!(v.get("draining").unwrap(), &Json::Bool(true));
+        assert_eq!(v.get("routes_live").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("routes_total").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]
@@ -609,5 +774,7 @@ mod tests {
             Request::parse(r#"{"op":"shutdown"}"#).unwrap(),
             Request::Shutdown
         ));
+        assert!(matches!(Request::parse(r#"{"op":"health"}"#).unwrap(), Request::Health));
+        assert!(matches!(Request::parse(r#"{"op":"ready"}"#).unwrap(), Request::Ready));
     }
 }

@@ -91,6 +91,8 @@ pub enum ShedCause {
     Deadline,
     /// the coordinator shut down with the request still queued
     Shutdown,
+    /// the route's batcher thread died; the watchdog failed it closed
+    RouteDown,
 }
 
 /// QoS policy knobs, one per mechanism (see the module docs).

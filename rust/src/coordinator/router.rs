@@ -24,11 +24,29 @@
 //! the close — with an explicit `ShuttingDown` reply, so in-flight
 //! clients always unblock instead of seeing a dead socket. Idempotent and
 //! callable through `&self`; [`Router::drop`] is the backstop.
+//!
+//! Resilience (DESIGN.md §12): each batcher runs under `catch_unwind`
+//! with a per-route liveness record. A watchdog thread scans those
+//! records and *fails dead routes closed*: the route's inbox is closed
+//! (new submits answer [`Response::RouteDown`]) and anything still queued
+//! is drained with the same structured reply — a crashed batcher costs
+//! its queued requests one error each, never a hang. The liveness records
+//! also back [`Router::is_ready`], the server's `ready` probe: a
+//! coordinator with a dead route, or one that is draining, reports
+//! not-ready so load balancers stop sending it new traffic.
+//!
+//! Idempotency: a sample request may carry a `request_id`. The router
+//! keeps a bounded set of recently seen ids per process and counts
+//! resends (`dup_request_ids` in `stats`); duplicates are still served —
+//! sampling is read-only, so the cheap and correct duplicate semantics
+//! are "serve again, surface the count".
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
+use crate::chaos::FaultPlan;
 use crate::coordinator::batcher::{batcher_loop, BatchPolicy, Pending};
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
@@ -37,8 +55,59 @@ use crate::coordinator::qos::{DrrScheduler, Inbox, PushRejected, QosPolicy, Shed
 use crate::util::{lock_unpoisoned, Json, ThreadPool};
 use crate::Result;
 
+/// Most recently seen `request_id`s kept for duplicate detection.
+const SEEN_IDS_CAP: usize = 4096;
+
+/// How often the watchdog re-scans batcher liveness.
+const WATCHDOG_PERIOD: Duration = Duration::from_millis(25);
+
+/// One batcher thread's liveness record, written by the spawn wrapper
+/// and read by the watchdog / readiness probe.
+struct RouteLiveness {
+    /// true from spawn until the batcher thread returns (normally or not).
+    alive: AtomicBool,
+    /// true iff the thread died by panic — the watchdog's trigger.
+    panicked: AtomicBool,
+}
+
+impl RouteLiveness {
+    fn new() -> RouteLiveness {
+        RouteLiveness { alive: AtomicBool::new(true), panicked: AtomicBool::new(false) }
+    }
+}
+
+/// Per-route state: the inbox requests flow through plus the liveness
+/// record of the batcher thread serving it.
+struct RouteState {
+    inbox: Arc<Inbox>,
+    live: Arc<RouteLiveness>,
+}
+
+/// Bounded recently-seen `request_id` set (FIFO eviction).
+#[derive(Default)]
+struct SeenIds {
+    set: HashSet<String>,
+    order: VecDeque<String>,
+}
+
+impl SeenIds {
+    /// Insert `id`; returns false when it was already present.
+    fn insert_bounded(&mut self, id: &str) -> bool {
+        if !self.set.insert(id.to_string()) {
+            return false;
+        }
+        self.order.push_back(id.to_string());
+        while self.order.len() > SEEN_IDS_CAP {
+            if let Some(old) = self.order.pop_front() {
+                self.set.remove(&old);
+            }
+        }
+        true
+    }
+}
+
 pub struct Router {
-    routes: BTreeMap<String, Arc<Inbox>>,
+    routes: Arc<BTreeMap<String, RouteState>>,
     qos: QosPolicy,
     sched: Arc<DrrScheduler>,
     metrics: Arc<ServerMetrics>,
@@ -46,6 +115,10 @@ pub struct Router {
     stop: Arc<AtomicBool>,
     /// batcher thread handles (cold path only: drained by shutdown).
     joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// recently seen request ids (duplicate detection; cold-ish path:
+    /// only requests that opted into idempotency tokens touch it).
+    // lock-order: 12
+    seen_ids: Mutex<SeenIds>,
 }
 
 impl Router {
@@ -67,6 +140,20 @@ impl Router {
         qos: QosPolicy,
         pool: Arc<ThreadPool>,
     ) -> Router {
+        Router::start_with_chaos(hub, metrics, policy, qos, pool, None)
+    }
+
+    /// Full constructor: [`Router::start_with_qos`] plus an optional
+    /// fault plan handed to every batcher (its `batcher_panic` site is
+    /// how the watchdog is exercised; `None` is the production default).
+    pub fn start_with_chaos(
+        hub: Arc<EngineHub>,
+        metrics: Arc<ServerMetrics>,
+        policy: BatchPolicy,
+        qos: QosPolicy,
+        pool: Arc<ThreadPool>,
+        chaos: Option<Arc<FaultPlan>>,
+    ) -> Router {
         let quantum = if qos.quantum_rows > 0 { qos.quantum_rows } else { policy.max_batch };
         let sched = DrrScheduler::new(pool, qos.flush_slots, quantum);
         let stop = Arc::new(AtomicBool::new(false));
@@ -75,23 +162,79 @@ impl Router {
         for name in hub.dataset_names() {
             sched.register_route(&name, qos.weight_for(&name));
             let inbox = Arc::new(Inbox::new(qos.inbox_depth));
+            let live = Arc::new(RouteLiveness::new());
             let hub2 = hub.clone();
             let metrics2 = metrics.clone();
             let name2 = name.clone();
             let inbox2 = inbox.clone();
             let sched2 = sched.clone();
             let stop2 = stop.clone();
+            let chaos2 = chaos.clone();
+            let live2 = live.clone();
             let join = std::thread::Builder::new()
                 .name(format!("sdm-batcher-{name}"))
                 .spawn(move || {
-                    batcher_loop(name2, hub2, metrics2, inbox2, policy, sched2, stop2)
+                    // catch_unwind so a batcher crash becomes a liveness
+                    // transition the watchdog can act on, not a silent
+                    // dead route. The loop's state is thread-local, so
+                    // unwind safety holds trivially.
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        batcher_loop(
+                            name2, hub2, metrics2, inbox2, policy, sched2, stop2, chaos2,
+                        )
+                    }));
+                    if run.is_err() {
+                        live2.panicked.store(true, Ordering::SeqCst);
+                    }
+                    live2.alive.store(false, Ordering::SeqCst);
                 })
                 // lint: allow(panic): thread-spawn failure at startup is unrecoverable (OS limits), before any request is accepted
                 .expect("spawning batcher");
-            routes.insert(name, inbox);
+            routes.insert(name, RouteState { inbox, live });
             joins.push(join);
         }
-        Router { routes, qos, sched, metrics, stop, joins: Mutex::new(joins) }
+        let routes = Arc::new(routes);
+        let wd_routes = routes.clone();
+        let wd_metrics = metrics.clone();
+        let wd_stop = stop.clone();
+        let watchdog = std::thread::Builder::new()
+            .name("sdm-watchdog".into())
+            .spawn(move || watchdog_loop(wd_routes, wd_metrics, wd_stop))
+            // lint: allow(panic): thread-spawn failure at startup is unrecoverable (OS limits), before any request is accepted
+            .expect("spawning watchdog");
+        joins.push(watchdog);
+        Router {
+            routes,
+            qos,
+            sched,
+            metrics,
+            stop,
+            joins: Mutex::new(joins),
+            seen_ids: Mutex::new(SeenIds::default()),
+        }
+    }
+
+    /// Is this coordinator fit for *new* traffic? True iff it is not
+    /// draining and every route's batcher thread is alive (artifacts are
+    /// loaded by construction — the hub resolved them before any route
+    /// existed). The server's `ready` probe reads this.
+    pub fn is_ready(&self) -> bool {
+        !self.is_draining() && self.routes_live() == self.routes_total()
+    }
+
+    /// Has shutdown begun?
+    pub fn is_draining(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Routes whose batcher thread is alive.
+    pub fn routes_live(&self) -> usize {
+        self.routes.values().filter(|s| s.live.alive.load(Ordering::SeqCst)).count()
+    }
+
+    /// Total routes the hub loaded.
+    pub fn routes_total(&self) -> usize {
+        self.routes.len()
     }
 
     /// Worker threads available for integration.
@@ -120,8 +263,22 @@ impl Router {
                 self.routes.keys().collect::<Vec<_>>()
             )
         })?;
+        if let Some(id) = &req.request_id {
+            // short lock, released before any other lock is taken
+            let fresh = lock_unpoisoned(&self.seen_ids).insert_bounded(id);
+            if !fresh {
+                self.metrics.record_duplicate(&req.dataset);
+            }
+        }
         let (rtx, rrx) = mpsc::channel();
-        match route.try_push(Pending::new(req, rtx)) {
+        if route.live.panicked.load(Ordering::SeqCst) {
+            // fail a dead route closed without touching its inbox: the
+            // watchdog may still be draining it
+            self.metrics.record_shed(&req.dataset, ShedCause::RouteDown);
+            let _ = rtx.send(Response::RouteDown { route: req.dataset.clone() });
+            return Ok(rrx);
+        }
+        match route.inbox.try_push(Pending::new(req, rtx)) {
             Ok(()) => {}
             Err(PushRejected::Full { pending, outstanding, .. }) => {
                 self.metrics.record_shed(&pending.req.dataset, ShedCause::QueueFull);
@@ -132,12 +289,20 @@ impl Router {
                 });
             }
             Err(PushRejected::Closed { pending }) => {
-                // raced a shutdown between the stop-flag check and the
-                // push: still answer, never strand the client
-                self.metrics.record_shed(&pending.req.dataset, ShedCause::Shutdown);
-                let _ = pending.reply.send(Response::ShuttingDown {
-                    route: pending.req.dataset.clone(),
-                });
+                // the inbox closed under us: either a shutdown race or
+                // the watchdog failing this route closed — answer with
+                // the cause, never strand the client
+                if route.live.panicked.load(Ordering::SeqCst) {
+                    self.metrics.record_shed(&pending.req.dataset, ShedCause::RouteDown);
+                    let _ = pending.reply.send(Response::RouteDown {
+                        route: pending.req.dataset.clone(),
+                    });
+                } else {
+                    self.metrics.record_shed(&pending.req.dataset, ShedCause::Shutdown);
+                    let _ = pending.reply.send(Response::ShuttingDown {
+                        route: pending.req.dataset.clone(),
+                    });
+                }
             }
         }
         Ok(rrx)
@@ -154,13 +319,18 @@ impl Router {
     pub fn qos_stats(&self) -> Json {
         let served = self.sched.served_rows();
         let mut out = BTreeMap::new();
-        for (name, inbox) in &self.routes {
+        for (name, st) in self.routes.iter() {
+            let inbox = &st.inbox;
             let mut m = BTreeMap::new();
             m.insert("inbox_depth".into(), Json::Num(inbox.depth() as f64));
             m.insert("outstanding".into(), Json::Num(inbox.outstanding() as f64));
             m.insert(
                 "outstanding_hwm".into(),
                 Json::Num(inbox.outstanding_hwm() as f64),
+            );
+            m.insert(
+                "batcher_alive".into(),
+                Json::Bool(st.live.alive.load(Ordering::SeqCst)),
             );
             m.insert(
                 "drr_served_rows".into(),
@@ -178,8 +348,8 @@ impl Router {
     pub fn shutdown(&self) {
         // close first: a submit racing this call is refused with a
         // ShuttingDown reply instead of landing in a dead queue
-        for inbox in self.routes.values() {
-            inbox.close();
+        for st in self.routes.values() {
+            st.inbox.close();
         }
         self.stop.store(true, Ordering::SeqCst);
         let joins: Vec<_> = {
@@ -192,8 +362,8 @@ impl Router {
         // backstop: anything that slipped in after the batcher's final
         // drain still gets an explicit reply (idempotent: the queue is
         // empty on the second pass)
-        for (name, inbox) in &self.routes {
-            for p in inbox.drain_remaining() {
+        for (name, st) in self.routes.iter() {
+            for p in st.inbox.drain_remaining() {
                 self.metrics.record_shed(name, ShedCause::Shutdown);
                 let _ = p.reply.send(Response::ShuttingDown { route: name.clone() });
             }
@@ -205,6 +375,32 @@ impl Drop for Router {
     fn drop(&mut self) {
         // backstop for routers never explicitly shut down (tests, panics)
         self.shutdown();
+    }
+}
+
+/// Watchdog: scan batcher liveness every [`WATCHDOG_PERIOD`] and fail
+/// panicked routes closed — close the inbox so new submits answer
+/// `RouteDown`, then drain anything already queued with the same reply.
+/// Close and drain are both idempotent, so re-scanning a dead route is
+/// free. Exits when the router's stop flag rises (shutdown owns the
+/// remaining drain, with `ShuttingDown` semantics).
+fn watchdog_loop(
+    routes: Arc<BTreeMap<String, RouteState>>,
+    metrics: Arc<ServerMetrics>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        for (name, st) in routes.iter() {
+            if !st.live.panicked.load(Ordering::SeqCst) {
+                continue;
+            }
+            st.inbox.close();
+            for p in st.inbox.drain_remaining() {
+                metrics.record_shed(name, ShedCause::RouteDown);
+                let _ = p.reply.send(Response::RouteDown { route: name.clone() });
+            }
+        }
+        std::thread::sleep(WATCHDOG_PERIOD);
     }
 }
 
@@ -324,5 +520,98 @@ mod tests {
         // idempotent: a second shutdown (and the Drop backstop) must not
         // hang or double-join
         r2.shutdown();
+    }
+
+    #[test]
+    fn watchdog_fails_a_panicked_route_closed() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        // batcher_panic@1/1: the batcher dies on its first loop iteration
+        let plan = Arc::new(FaultPlan::parse("batcher_panic@1/1", 7).unwrap());
+        let router = Router::start_with_chaos(
+            hub,
+            metrics.clone(),
+            BatchPolicy::default(),
+            QosPolicy::default(),
+            test_pool(),
+            Some(plan),
+        );
+        // the route must transition to down and *answer* — not hang
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let mut saw_route_down = false;
+        while Instant::now() < deadline {
+            match router.submit(mk(2, "toy")) {
+                Ok(rx) => match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+                    Ok(Response::RouteDown { route }) => {
+                        assert_eq!(route, "toy");
+                        saw_route_down = true;
+                        break;
+                    }
+                    Ok(_) | Err(_) => {}
+                },
+                Err(_) => break,
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(saw_route_down, "a dead route must answer RouteDown");
+        assert!(!router.is_ready(), "a dead route must fail readiness");
+        assert_eq!(router.routes_live(), 0);
+        assert_eq!(router.routes_total(), 1);
+        let snap = metrics.snapshot();
+        let t = snap.get("toy").unwrap();
+        assert!(t.get("sheds_route_down").unwrap().as_f64().unwrap() >= 1.0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn ready_flips_false_during_drain() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let router = Router::start(hub, metrics, BatchPolicy::default(), test_pool());
+        assert!(router.is_ready(), "healthy router must report ready");
+        assert!(!router.is_draining());
+        router.shutdown();
+        assert!(router.is_draining());
+        assert!(!router.is_ready(), "draining router must report not-ready");
+    }
+
+    #[test]
+    fn duplicate_request_ids_are_counted_and_still_served() {
+        let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+        let metrics = Arc::new(ServerMetrics::new());
+        let router =
+            Router::start(hub, metrics.clone(), BatchPolicy::default(), test_pool());
+        let mut req = mk(2, "toy");
+        req.request_id = Some("dup-1".into());
+        match router.call(req.clone()).unwrap() {
+            Response::SampleOk { n, request_id, .. } => {
+                assert_eq!(n, 2);
+                assert_eq!(request_id.as_deref(), Some("dup-1"));
+            }
+            other => panic!("{other:?}"),
+        }
+        // the resend is served again (sampling is read-only) but counted
+        match router.call(req).unwrap() {
+            Response::SampleOk { n, .. } => assert_eq!(n, 2),
+            other => panic!("{other:?}"),
+        }
+        let snap = metrics.snapshot();
+        let t = snap.get("toy").unwrap();
+        assert_eq!(t.get("dup_request_ids").unwrap().as_f64().unwrap(), 1.0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn seen_ids_set_is_bounded() {
+        let mut s = SeenIds::default();
+        for i in 0..(SEEN_IDS_CAP + 10) {
+            assert!(s.insert_bounded(&format!("id-{i}")));
+        }
+        assert_eq!(s.set.len(), SEEN_IDS_CAP);
+        assert_eq!(s.order.len(), SEEN_IDS_CAP);
+        // the oldest ids were evicted, so they read as fresh again
+        assert!(s.insert_bounded("id-0"));
+        // a recent id is still known
+        assert!(!s.insert_bounded(&format!("id-{}", SEEN_IDS_CAP + 9)));
     }
 }

@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use anyhow::Context;
 
+use crate::chaos::{FaultPlan, FaultSite};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
@@ -34,6 +35,12 @@ pub struct ServerConfig {
     /// integration worker threads shared by every dataset route
     /// (0 = derive from available parallelism).
     pub pool_threads: usize,
+    /// fault-injection plan (`--chaos`, DESIGN.md §12). `None` — the
+    /// production default — makes every chaos hook a zero-cost branch.
+    /// The plan's sites hit here (conn_drop on reply writes) and in the
+    /// batchers (batcher_panic); eval faults are wired at the hub
+    /// ([`EngineHub::apply_chaos`]).
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -43,6 +50,7 @@ impl Default for ServerConfig {
             policy: BatchPolicy::default(),
             qos: QosPolicy::default(),
             pool_threads: 0,
+            chaos: None,
         }
     }
 }
@@ -95,14 +103,16 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(ServerMetrics::new());
-        let router = Arc::new(Router::start_with_qos(
+        let router = Arc::new(Router::start_with_chaos(
             hub.clone(),
             metrics.clone(),
             cfg.policy,
             cfg.qos.clone(),
             pool,
+            cfg.chaos.clone(),
         ));
         let stop = Arc::new(AtomicBool::new(false));
+        let chaos = cfg.chaos.clone();
 
         let stop2 = stop.clone();
         let router2 = router.clone();
@@ -124,11 +134,13 @@ impl Server {
                             let metrics = metrics.clone();
                             let hub = hub.clone();
                             let stop3 = stop2.clone();
+                            let chaos = chaos.clone();
                             let _ = std::thread::Builder::new()
                                 .name("sdm-conn".into())
                                 .spawn(move || {
                                     let _ = handle_conn(
                                         stream, &router, &hub, &metrics, &stop3, local_addr,
+                                        chaos.as_ref(),
                                     );
                                 });
                         }
@@ -167,6 +179,7 @@ fn handle_conn(
     metrics: &ServerMetrics,
     stop: &AtomicBool,
     local_addr: std::net::SocketAddr,
+    chaos: Option<&Arc<FaultPlan>>,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -182,6 +195,14 @@ fn handle_conn(
         let response = match Request::parse(&line) {
             Err(e) => Response::Err(format!("bad request: {e:#}")),
             Ok(Request::Ping) => Response::Pong,
+            // health = liveness: reaching this line at all is the answer
+            Ok(Request::Health) => Response::Health,
+            Ok(Request::Ready) => Response::Ready {
+                ready: router.is_ready() && !stop.load(Ordering::SeqCst),
+                draining: router.is_draining() || stop.load(Ordering::SeqCst),
+                routes_live: router.routes_live(),
+                routes_total: router.routes_total(),
+            },
             Ok(Request::Stats) => Response::Stats(metrics.snapshot_with(vec![
                 ("schedule_cache".into(), hub.cache_stats()),
                 ("qos".into(), router.qos_stats()),
@@ -202,6 +223,19 @@ fn handle_conn(
                 Err(e) => Response::Err(format!("{e:#}")),
             },
         };
+        // conn_drop fault (DESIGN.md §12): kill the connection mid-frame —
+        // write a truncated prefix with no newline, then close. The client
+        // sees a reset/EOF *after* its request may have been served, the
+        // exact ambiguous-failure shape retries must classify.
+        if let Some(c) = chaos {
+            if c.fire(FaultSite::ConnDrop) {
+                let full = response.to_line();
+                let cut = full.len() / 2;
+                let _ = writer.write_all(&full.as_bytes()[..cut]);
+                let _ = writer.flush();
+                break;
+            }
+        }
         if writeln!(writer, "{}", response.to_line()).is_err() {
             break;
         }
@@ -327,6 +361,38 @@ mod tests {
         let toy_m = stats.get("stats").unwrap().get("toy").unwrap();
         assert_eq!(toy_m.get("sheds_queue_full").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(toy_m.get("sheds_deadline").unwrap().as_f64().unwrap(), 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn health_and_ready_probes_answer() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let h = client.send(r#"{"op":"health"}"#).unwrap();
+        assert_eq!(h.get("ok").unwrap(), &crate::util::Json::Bool(true));
+        assert_eq!(h.get("op").unwrap().as_str().unwrap(), "health");
+        let r = client.send(r#"{"op":"ready"}"#).unwrap();
+        assert_eq!(r.get("ready").unwrap(), &crate::util::Json::Bool(true));
+        assert_eq!(r.get("draining").unwrap(), &crate::util::Json::Bool(false));
+        assert_eq!(r.get("routes_live").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(r.get("routes_total").unwrap().as_usize().unwrap(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn ready_reports_false_once_draining() {
+        let (server, addr) = start_server();
+        let addr_s = addr.to_string();
+        // open the probe connection first: it stays usable after the
+        // shutdown op stops the accept loop
+        let mut probe = Client::connect(&addr_s).unwrap();
+        let r = probe.send(r#"{"op":"ready"}"#).unwrap();
+        assert_eq!(r.get("ready").unwrap(), &crate::util::Json::Bool(true));
+        let mut client = Client::connect(&addr_s).unwrap();
+        client.shutdown_server().unwrap();
+        let r = probe.send(r#"{"op":"ready"}"#).unwrap();
+        assert_eq!(r.get("ready").unwrap(), &crate::util::Json::Bool(false));
+        assert_eq!(r.get("draining").unwrap(), &crate::util::Json::Bool(true));
         server.shutdown();
     }
 

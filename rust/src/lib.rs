@@ -23,6 +23,7 @@ pub mod linalg;
 pub mod testutil;
 pub mod diffusion;
 pub mod model;
+pub mod chaos;
 pub mod runtime;
 pub mod solvers;
 pub mod schedule;

@@ -253,15 +253,30 @@ fn serve(args: &Args) -> Result<()> {
     // native-oracle kernel evals row-shard across the worker pool from
     // this batch size up (0 disables sharding entirely)
     let shard_min_rows = args.get_usize("shard-min-rows", 512)?;
-    let cache = cache_config(args, &dir, backend, true)?;
+    // deterministic fault injection (DESIGN.md §12): a seeded plan like
+    // "eval_err@1/200,eval_delay@p50=5ms,conn_drop@1/50" — OFF by
+    // default; with no plan every chaos hook is a zero-cost no-op
+    let chaos_spec = args.opt("chaos");
+    let chaos_seed = args.get_u64("chaos-seed", 42)?;
+    let mut cache = cache_config(args, &dir, backend, true)?;
     let qos = qos_policy(args)?;
     args.finish()?;
+    let chaos = match &chaos_spec {
+        Some(spec) => Some(Arc::new(sdm::chaos::FaultPlan::parse(spec, chaos_seed)?)),
+        None => None,
+    };
+    cache.chaos = chaos.clone();
     let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, qos, ..Default::default() };
     cfg.policy.max_inflight = max_inflight;
+    cfg.chaos = chaos.clone();
     let pool = Arc::new(sdm::util::ThreadPool::new(cfg.resolved_pool_threads()));
     let mut hub = EngineHub::load_with(&dir, backend, cache)?;
     if shard_min_rows > 0 {
         hub.attach_shard_pool(Arc::clone(&pool), shard_min_rows);
+    }
+    if let Some(plan) = &chaos {
+        hub.apply_chaos(Arc::clone(plan));
+        println!("sdm serving WITH FAULT INJECTION: {} (seed {})", plan.spec(), plan.seed());
     }
     let hub = Arc::new(hub);
     let server = Server::start_with_pool(hub, cfg, pool)?;
@@ -417,9 +432,10 @@ fn schedule(args: &Args) -> Result<()> {
 /// local experiments); otherwise `--addr` names a running server.
 fn loadgen(args: &Args) -> Result<()> {
     use sdm::coordinator::loadgen::{
-        append_qos_record, closed_loop, find_max_rps, open_loop, RequestTemplate, SloSearch,
-        TraceProfile,
+        append_qos_record, closed_loop_with, find_max_rps, open_loop, LoadOptions,
+        RequestTemplate, SloSearch, TraceProfile,
     };
+    use sdm::util::{BreakerConfig, RetryPolicy};
 
     let in_process = args.has("in-process");
     let addr_flag = args.get("addr", "127.0.0.1:7433");
@@ -446,6 +462,21 @@ fn loadgen(args: &Args) -> Result<()> {
     let priority = args.opt("priority");
     let deadline_ms = args.opt("deadline-ms").map(|v| v.parse::<f64>()).transpose()?;
     let kernel_precision = args.opt("kernel-precision");
+    // client resilience (closed-loop only): --retry turns on
+    // retry/backoff + per-route circuit breaking AND tags every request
+    // with an idempotency request_id so ambiguous post-write failures
+    // are safe to resend (DESIGN.md §12)
+    let retry = args.has("retry");
+    let retry_max = args.get_usize("retry-max", 4)?;
+    let retry_base_ms = args.get_f64("retry-base-ms", 5.0)?;
+    let retry_cap_ms = args.get_f64("retry-cap-ms", 250.0)?;
+    let retry_budget_ms = args.get_f64("retry-budget-ms", 1000.0)?;
+    let breaker_threshold = args.get_usize("breaker-threshold", 5)?;
+    let breaker_cooldown_ms = args.get_f64("breaker-cooldown-ms", 250.0)?;
+    // fault plan: injected server-side when --in-process; its conn_drop
+    // clause also drives client-side connection drops under --retry
+    let chaos_spec = args.opt("chaos");
+    let chaos_seed = args.get_u64("chaos-seed", seed)?;
     args.finish()?;
 
     let think = std::time::Duration::from_secs_f64(think_ms.max(0.0) / 1e3);
@@ -460,21 +491,29 @@ fn loadgen(args: &Args) -> Result<()> {
         priority: priority.clone(),
         deadline_ms,
         kernel_precision: kernel_precision.clone(),
+        request_id: retry.then(|| "lg".to_string()),
     };
-    let profile = match (&dataset, in_process) {
+    let mut profile = match (&dataset, in_process) {
         (Some(ds), _) => TraceProfile::single(template(ds.clone())),
         (None, true) => TraceProfile::single(template("toy".to_string())),
         (None, false) => TraceProfile::standard(),
     };
+    profile.chaos = chaos_spec.clone();
 
     // in-process server over the native toy workloads (synth16x64 is the
     // SIMD-eligible one, for --kernel-precision smoke runs)
     let server = if in_process {
-        let hub = Arc::new(EngineHub::from_infos(vec![
+        let mut hub = EngineHub::from_infos(vec![
             sdm::model::gmm::testmodel::toy().info,
             sdm::model::gmm::testmodel::synthetic(16, 64).info,
-        ]));
-        Some(Server::start(hub, ServerConfig::default())?)
+        ]);
+        let mut cfg = ServerConfig::default();
+        if let Some(spec) = &chaos_spec {
+            let chaos = Arc::new(sdm::chaos::FaultPlan::parse(spec, chaos_seed)?);
+            hub.apply_chaos(Arc::clone(&chaos));
+            cfg.chaos = Some(chaos);
+        }
+        Some(Server::start(Arc::new(hub), cfg)?)
     } else {
         None
     };
@@ -512,7 +551,23 @@ fn loadgen(args: &Args) -> Result<()> {
             append_qos_record(&out_path, &label, slo, &report)?;
             println!("loadgen: appended run {label:?} to {}", out_path.display());
         } else if closed {
-            let report = closed_loop(&addr, &profile, workers, per_worker, think, seed)?;
+            let opts = LoadOptions {
+                retry: retry.then_some(RetryPolicy {
+                    max_attempts: retry_max,
+                    base_ms: retry_base_ms,
+                    cap_ms: retry_cap_ms,
+                    budget_ms: retry_budget_ms,
+                }),
+                breaker: retry.then_some(BreakerConfig {
+                    threshold: breaker_threshold,
+                    cooldown: std::time::Duration::from_secs_f64(
+                        breaker_cooldown_ms.max(0.0) / 1e3,
+                    ),
+                }),
+                chaos: None,
+            };
+            let report =
+                closed_loop_with(&addr, &profile, workers, per_worker, think, seed, &opts)?;
             println!(
                 "closed-loop: {} workers x {} reqs (think {:.1} ms) -> {:.1} req/s goodput, \
                  {} errors, {} sheds, {} expiries  [trace {:016x}]",
@@ -520,6 +575,14 @@ fn loadgen(args: &Args) -> Result<()> {
                 report.errors, report.sheds, report.expiries, report.trace_hash
             );
             println!("  latency: {}", report.latency.summary("us"));
+            if retry {
+                println!(
+                    "  resilience: {} retries, {} reconnects, {} breaker opens, \
+                     {} fast-fails, {} double-submits avoided",
+                    report.retries, report.reconnects, report.breaker_opens,
+                    report.breaker_fast_fails, report.double_submit_avoided
+                );
+            }
         } else {
             let report = open_loop(&addr, &profile, open_rps, requests, workers, seed)?;
             println!(
@@ -632,6 +695,13 @@ fn print_help() {
          \x20               carry \"priority\":interactive|batch|background and\n\
          \x20               \"deadline_ms\" (late requests shed, never served\n\
          \x20               stale)\n\
+         \x20               chaos: --chaos \"eval_err@1/200,eval_delay@p50=5ms,\n\
+         \x20               conn_drop@1/50,cache_corrupt@1/20,batcher_panic@1/500\"\n\
+         \x20               --chaos-seed S  seeded deterministic fault injection\n\
+         \x20               [DESIGN.md S12]; off by default (all hooks are\n\
+         \x20               zero-cost no-ops); probes: {{\"op\":\"health\"}}\n\
+         \x20               liveness, {{\"op\":\"ready\"}} readiness (false while\n\
+         \x20               draining or any batcher thread is down)\n\
          \x20 sample        one evaluation run (--dataset --solver --schedule --steps ...;\n\
          \x20               --plan \"euler@max..2,dpm2m@2..0\" runs a segmented\n\
          \x20               SamplingPlan [DESIGN.md S9] and wins over --solver;\n\
@@ -669,6 +739,15 @@ fn print_help() {
          \x20               --plan \"euler@max..1,heun@1..0\" (wins over --solver)\n\
          \x20               --schedule C --steps K --priority CLS --deadline-ms MS\n\
          \x20               --kernel-precision exact|fast-f64|fast-f32\n\
+         \x20               resilience (closed-loop): --retry [--retry-max N\n\
+         \x20               --retry-base-ms B --retry-cap-ms C --retry-budget-ms T\n\
+         \x20               --breaker-threshold K --breaker-cooldown-ms MS] —\n\
+         \x20               decorrelated-jitter backoff honoring the server's\n\
+         \x20               retry_after_ms hint, per-route circuit breaker, and\n\
+         \x20               idempotency request_ids so retries never double-\n\
+         \x20               submit; --chaos PLAN --chaos-seed S injects faults\n\
+         \x20               into the --in-process server (conn_drop also drops\n\
+         \x20               client connections under --retry)\n\
          \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
          \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\
          \x20 analyze       in-repo static analysis over rust/src (lock-order,\n\

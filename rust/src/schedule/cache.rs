@@ -31,9 +31,10 @@ use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::chaos::FaultPlan;
 use crate::diffusion::SigmaGrid;
 use crate::schedule::BuiltSchedule;
-use crate::util::json::{append_jsonl, num_arr, read_jsonl_lenient};
+use crate::util::json::{num_arr, read_jsonl_counted};
 use crate::util::Json;
 use crate::Result;
 
@@ -85,11 +86,22 @@ pub struct CacheConfig {
     pub persist_path: Option<PathBuf>,
     /// Seed SDM pilots from the nearest cached neighbor's σ knots.
     pub warm_start: bool,
+    /// Fault-injection plan (DESIGN.md §12): its `cache_corrupt` site
+    /// garbles persisted lines at append time, exercising exactly the
+    /// torn-write/bit-rot damage the counted lenient restore tolerates.
+    /// `None` (the default) leaves the persistence path untouched.
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 impl Default for CacheConfig {
     fn default() -> Self {
-        CacheConfig { capacity: 512, ttl: None, persist_path: None, warm_start: true }
+        CacheConfig {
+            capacity: 512,
+            ttl: None,
+            persist_path: None,
+            warm_start: true,
+            chaos: None,
+        }
     }
 }
 
@@ -113,6 +125,10 @@ struct StatCounters {
     expirations: u64,
     persisted_loads: u64,
     warm_starts: u64,
+    /// persisted lines dropped on restore because they were torn,
+    /// garbled, or schema-invalid — crash damage is surfaced, not
+    /// silently absorbed.
+    corrupt_lines_skipped: u64,
     /// pilot NFE actually spent building entries this process.
     pilot_nfe_built: u64,
     /// pilot NFE hits and averted stampedes did not have to spend.
@@ -364,14 +380,20 @@ impl ScheduleCache {
         F: Fn(&CacheKey, &BuiltSchedule) -> bool,
     {
         let Some(path) = self.cfg.persist_path.clone() else { return Ok(0) };
-        let lines = read_jsonl_lenient(&path)?;
+        let (lines, torn) = read_jsonl_counted(&path)?;
         let now = now_unix();
         let restored;
         {
             let mut guard = self.state.lock().expect("schedule cache poisoned");
             let st = &mut *guard;
+            st.stats.corrupt_lines_skipped += torn as u64;
             for v in &lines {
-                let Ok((key, built, built_at)) = entry_from_json(v) else { continue };
+                let Ok((key, built, built_at)) = entry_from_json(v) else {
+                    // parsed as JSON but not as a cache entry: same
+                    // corruption bucket as a torn line
+                    st.stats.corrupt_lines_skipped += 1;
+                    continue;
+                };
                 if built.pilot_nfe == 0 {
                     continue; // model-free: rebuilding is cheaper than trusting disk
                 }
@@ -407,12 +429,29 @@ impl ScheduleCache {
     }
 
     /// Append one completed build to the persistence file (best-effort:
-    /// persistence failures must not fail serving).
+    /// persistence failures must not fail serving). Under a chaos plan
+    /// the line may be deliberately garbled before it hits disk — the
+    /// counted lenient restore must shrug that off.
     fn persist_append(&self, key: &CacheKey, built: &BuiltSchedule) {
         let Some(path) = &self.cfg.persist_path else { return };
-        let line = entry_to_json(key, built, now_unix());
+        let mut text = entry_to_json(key, built, now_unix()).to_string();
+        if let Some(plan) = &self.cfg.chaos {
+            if let Some(garbled) = plan.corrupt_line(&text) {
+                text = garbled;
+            }
+        }
         let _io = self.persist.lock().expect("persist lock poisoned");
-        if let Err(e) = append_jsonl(path, &line) {
+        let append = (|| -> std::io::Result<()> {
+            use std::io::Write as _;
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            writeln!(f, "{text}")
+        })();
+        if let Err(e) = append {
             eprintln!("schedule cache: persist append to {} failed: {e:#}", path.display());
         }
     }
@@ -460,6 +499,10 @@ impl ScheduleCache {
         m.insert("expirations".into(), Json::Num(s.expirations as f64));
         m.insert("persisted_loads".into(), Json::Num(s.persisted_loads as f64));
         m.insert("warm_starts".into(), Json::Num(s.warm_starts as f64));
+        m.insert(
+            "corrupt_lines_skipped".into(),
+            Json::Num(s.corrupt_lines_skipped as f64),
+        );
         m.insert("pilot_nfe_built".into(), Json::Num(s.pilot_nfe_built as f64));
         m.insert("pilot_nfe_saved".into(), Json::Num(s.pilot_nfe_saved as f64));
         Json::Obj(m)
@@ -829,9 +872,75 @@ mod tests {
             let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
             writeln!(f, "{{\"dataset\":\"x\",\"param\":").unwrap(); // torn
             writeln!(f, "{{\"dataset\":\"x\"}}").unwrap(); // missing fields
+            writeln!(f, "!chaos-garbled!{{}}").unwrap(); // bit rot
         }
         let c2 = ScheduleCache::new(cfg);
         assert_eq!(c2.load_persisted().unwrap(), 1);
+        // every flavor of damage is counted, not silently absorbed:
+        // 2 unparseable lines + 1 schema-invalid object
+        let s = c2.stats_json();
+        assert_eq!(s.get("corrupt_lines_skipped").unwrap().as_f64().unwrap(), 3.0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chaos_garbled_appends_restore_with_counted_skips() {
+        let path = tmp_path("chaos_garble");
+        let _ = std::fs::remove_file(&path);
+        // corrupt every single append: alternates torn-tail truncation
+        // and a garbage prefix (see FaultPlan::corrupt_line)
+        let plan = Arc::new(FaultPlan::parse("cache_corrupt@1/1", 5).unwrap());
+        let cfg = CacheConfig {
+            persist_path: Some(path.clone()),
+            chaos: Some(plan),
+            ..CacheConfig::default()
+        };
+        let c1 = ScheduleCache::new(cfg.clone());
+        c1.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        c1.get_or_build(&key("toy", 18), |_| Ok(grid(70.0))).unwrap();
+        drop(c1);
+
+        // restore on a clean (chaos-free) cache: nothing usable survives,
+        // but the load neither errors nor hangs, and both casualties are
+        // counted
+        let clean = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+        let c2 = ScheduleCache::new(clean);
+        assert_eq!(c2.load_persisted().unwrap(), 0);
+        let s = c2.stats_json();
+        assert_eq!(s.get("corrupt_lines_skipped").unwrap().as_f64().unwrap(), 2.0);
+        // the key is still buildable afterwards
+        c2.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chaos_off_appends_are_byte_identical_to_plain() {
+        // a parsed-but-all-zero plan is a no-op: the persisted file must
+        // be exactly what a chaos-free cache writes
+        let plan = Arc::new(FaultPlan::parse("cache_corrupt@0/1", 5).unwrap());
+        assert!(plan.is_noop());
+        let (pa, pb) = (tmp_path("noop_a"), tmp_path("noop_b"));
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+        let ca = ScheduleCache::new(CacheConfig {
+            persist_path: Some(pa.clone()),
+            chaos: Some(plan),
+            ..CacheConfig::default()
+        });
+        let cb = ScheduleCache::new(CacheConfig {
+            persist_path: Some(pb.clone()),
+            ..CacheConfig::default()
+        });
+        ca.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        cb.get_or_build(&key("toy", 12), |_| Ok(grid(80.0))).unwrap();
+        let (ta, tb) =
+            (std::fs::read_to_string(&pa).unwrap(), std::fs::read_to_string(&pb).unwrap());
+        // strip the only nondeterministic field (the build timestamp)
+        let strip = |t: &str| {
+            t.replace(|c: char| c.is_ascii_digit() || c == '.', "#")
+        };
+        assert_eq!(strip(&ta), strip(&tb));
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
     }
 }

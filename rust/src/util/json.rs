@@ -208,16 +208,28 @@ pub fn append_jsonl(path: &std::path::Path, v: &Json) -> Result<()> {
 /// torn tail from a crash mid-append) are skipped, and a missing file is
 /// an empty result. Only real I/O failures are errors.
 pub fn read_jsonl_lenient(path: &std::path::Path) -> Result<Vec<Json>> {
+    Ok(read_jsonl_counted(path)?.0)
+}
+
+/// [`read_jsonl_lenient`] that also counts the skipped corrupt lines, so
+/// callers (the schedule cache's crash-safe restore) can surface partial
+/// recovery in their stats instead of silently absorbing it. Blank lines
+/// are not corruption and are not counted.
+pub fn read_jsonl_counted(path: &std::path::Path) -> Result<(Vec<Json>, usize)> {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
         Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
     };
-    Ok(text
-        .lines()
-        .filter(|l| !l.trim().is_empty())
-        .filter_map(|l| Json::parse(l).ok())
-        .collect())
+    let mut out = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        match Json::parse(line) {
+            Ok(v) => out.push(v),
+            Err(_) => skipped += 1,
+        }
+    }
+    Ok((out, skipped))
 }
 
 struct Parser<'a> {
@@ -445,6 +457,27 @@ mod tests {
         assert_eq!(lines.len(), 2, "torn tail must be skipped: {lines:?}");
         assert_eq!(lines[0].get("a").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(lines[1].as_vec_f64().unwrap(), vec![1.0, 2.5]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn jsonl_counted_reports_each_corrupt_line() {
+        let path = std::env::temp_dir().join(format!(
+            "sdm_jsonl_counted_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let (v, skipped) = read_jsonl_counted(&path).unwrap();
+        assert!(v.is_empty() && skipped == 0, "missing file is empty, not corrupt");
+        std::fs::write(
+            &path,
+            "{\"a\":1}\nnot json at all\n\n{\"b\":2}\n{\"torn\":",
+        )
+        .unwrap();
+        let (v, skipped) = read_jsonl_counted(&path).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(skipped, 2, "garbage + torn tail counted; blank line not");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod histogram;
 pub mod json;
+pub mod retry;
 pub mod rng;
 pub mod sync;
 pub mod threadpool;
@@ -17,6 +18,7 @@ pub use bench::{bench, bench_throughput, BenchResult};
 pub use cli::Args;
 pub use histogram::Histogram;
 pub use json::Json;
+pub use retry::{Backoff, BreakerConfig, CircuitBreaker, RetryPolicy};
 pub use rng::Rng;
 pub use sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 pub use threadpool::ThreadPool;

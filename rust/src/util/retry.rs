@@ -1,0 +1,303 @@
+//! Client-side resilience primitives: budget-capped retry backoff with
+//! decorrelated jitter, and a per-route circuit breaker (DESIGN.md §12).
+//!
+//! [`Backoff`] implements the decorrelated-jitter schedule
+//! (`sleep = min(cap, uniform(base, prev * 3))`, floored by the server's
+//! `retry_after_ms` hint when one was returned) under two hard limits: a
+//! maximum attempt count and a total sleep budget. Jitter draws come from
+//! the caller's seeded [`Rng`], so a fixed-seed load run retries at
+//! reproducible instants.
+//!
+//! [`CircuitBreaker`] is the classic three-state machine: `Closed` counts
+//! consecutive failures and trips to `Open` at the configured threshold;
+//! `Open` fast-fails every acquire until the cooldown elapses, then lets
+//! exactly one probe through as `HalfOpen`; the probe's outcome either
+//! re-closes the breaker or re-opens it for another cooldown. A downed
+//! route therefore sheds load locally instead of burning backoff budget
+//! against a dead socket.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::{lock_unpoisoned, Rng};
+
+/// Retry policy knobs (`--retry-*` CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// total attempts including the first (1 = never retry).
+    pub max_attempts: usize,
+    /// first backoff draw's lower bound, ms.
+    pub base_ms: f64,
+    /// upper bound of any single backoff sleep, ms.
+    pub cap_ms: f64,
+    /// total sleep budget across all retries of one request, ms.
+    pub budget_ms: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 4, base_ms: 5.0, cap_ms: 250.0, budget_ms: 1_000.0 }
+    }
+}
+
+/// One request's retry state: attempt counter, jitter stream, and spent
+/// sleep budget. Create a fresh one per logical request.
+pub struct Backoff {
+    policy: RetryPolicy,
+    rng: Rng,
+    prev_ms: f64,
+    slept_ms: f64,
+    attempts: usize,
+}
+
+impl Backoff {
+    pub fn new(policy: RetryPolicy, rng: Rng) -> Backoff {
+        Backoff { policy, rng, prev_ms: policy.base_ms, slept_ms: 0.0, attempts: 1 }
+    }
+
+    /// The delay to sleep before the next retry, or `None` when the
+    /// attempt count or sleep budget is exhausted (the caller should
+    /// surface the last outcome as terminal). `hint_ms` — the server's
+    /// `retry_after_ms` backpressure hint — floors the jittered draw, so
+    /// a client never retries earlier than the server asked.
+    pub fn next_delay(&mut self, hint_ms: Option<f64>) -> Option<Duration> {
+        if self.attempts >= self.policy.max_attempts {
+            return None;
+        }
+        let hi = (self.prev_ms * 3.0).max(self.policy.base_ms * (1.0 + 1e-9));
+        let mut ms = self.rng.uniform_range(self.policy.base_ms, hi).min(self.policy.cap_ms);
+        if let Some(h) = hint_ms {
+            ms = ms.max(h.max(0.0));
+        }
+        if self.slept_ms + ms > self.policy.budget_ms {
+            return None;
+        }
+        self.attempts += 1;
+        self.prev_ms = ms;
+        self.slept_ms += ms;
+        Some(Duration::from_secs_f64(ms / 1e3))
+    }
+
+    /// Attempts begun so far (1 before any retry).
+    pub fn attempts(&self) -> usize {
+        self.attempts
+    }
+
+    /// Total backoff sleep scheduled so far, ms.
+    pub fn slept_ms(&self) -> f64 {
+        self.slept_ms
+    }
+}
+
+/// Circuit breaker policy knobs (`--breaker-*` CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// consecutive failures that trip `Closed` → `Open`.
+    pub threshold: usize,
+    /// how long `Open` fast-fails before allowing a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { threshold: 5, cooldown: Duration::from_millis(250) }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum BreakerState {
+    Closed { fails: usize },
+    Open { until: Instant },
+    HalfOpen,
+}
+
+/// Per-route circuit breaker. All transitions are made under one short
+/// lock; the breaker never sleeps or does I/O, so it is safe on the
+/// request hot path.
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    // lock-order: 15
+    state: Mutex<BreakerState>,
+    opened: AtomicU64,
+    reclosed: AtomicU64,
+    fast_fails: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: Mutex::new(BreakerState::Closed { fails: 0 }),
+            opened: AtomicU64::new(0),
+            reclosed: AtomicU64::new(0),
+            fast_fails: AtomicU64::new(0),
+        }
+    }
+
+    /// May a request be sent now? `false` = fast-fail locally without
+    /// touching the network. An elapsed cooldown converts `Open` into a
+    /// single `HalfOpen` probe admission; while that probe is in flight,
+    /// further acquires keep fast-failing.
+    pub fn try_acquire(&self) -> bool {
+        let mut st = lock_unpoisoned(&self.state);
+        match *st {
+            BreakerState::Closed { .. } => true,
+            BreakerState::HalfOpen => {
+                self.fast_fails.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+            BreakerState::Open { until } => {
+                if Instant::now() >= until {
+                    *st = BreakerState::HalfOpen;
+                    true
+                } else {
+                    self.fast_fails.fetch_add(1, Ordering::Relaxed);
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful attempt: resets the failure streak, and closes
+    /// the breaker if this was the half-open probe.
+    pub fn on_success(&self) {
+        let mut st = lock_unpoisoned(&self.state);
+        if matches!(*st, BreakerState::HalfOpen | BreakerState::Open { .. }) {
+            self.reclosed.fetch_add(1, Ordering::Relaxed);
+        }
+        *st = BreakerState::Closed { fails: 0 };
+    }
+
+    /// Record a failed attempt: extends the streak, trips the breaker at
+    /// the threshold, and re-opens it after a failed half-open probe.
+    pub fn on_failure(&self) {
+        let mut st = lock_unpoisoned(&self.state);
+        match *st {
+            BreakerState::Closed { fails } => {
+                let fails = fails + 1;
+                if fails >= self.cfg.threshold.max(1) {
+                    *st = BreakerState::Open { until: Instant::now() + self.cfg.cooldown };
+                    self.opened.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    *st = BreakerState::Closed { fails };
+                }
+            }
+            BreakerState::HalfOpen => {
+                *st = BreakerState::Open { until: Instant::now() + self.cfg.cooldown };
+                self.opened.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Current state as a metrics label.
+    pub fn state_name(&self) -> &'static str {
+        match *lock_unpoisoned(&self.state) {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+
+    /// Times the breaker tripped to `Open`.
+    pub fn opened(&self) -> u64 {
+        self.opened.load(Ordering::Relaxed)
+    }
+
+    /// Times a half-open probe succeeded and re-closed the breaker.
+    pub fn reclosed(&self) -> u64 {
+        self.reclosed.load(Ordering::Relaxed)
+    }
+
+    /// Requests fast-failed locally while open/half-open.
+    pub fn fast_fails(&self) -> u64 {
+        self.fast_fails.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_and_deterministic() {
+        let policy = RetryPolicy { max_attempts: 8, base_ms: 2.0, cap_ms: 20.0, budget_ms: 1e6 };
+        let mut a = Backoff::new(policy, Rng::new(5));
+        let mut b = Backoff::new(policy, Rng::new(5));
+        let da: Vec<Duration> = std::iter::from_fn(|| a.next_delay(None)).collect();
+        let db: Vec<Duration> = std::iter::from_fn(|| b.next_delay(None)).collect();
+        assert_eq!(da, db, "same seed must schedule identical retries");
+        assert_eq!(da.len(), 7, "max_attempts 8 = 7 retries");
+        for d in &da {
+            assert!(*d >= Duration::from_secs_f64(2.0 / 1e3));
+            assert!(*d <= Duration::from_secs_f64(20.0 / 1e3));
+        }
+    }
+
+    #[test]
+    fn backoff_honors_server_hint_as_floor() {
+        let policy = RetryPolicy { max_attempts: 4, base_ms: 1.0, cap_ms: 10.0, budget_ms: 1e6 };
+        let mut b = Backoff::new(policy, Rng::new(1));
+        let d = b.next_delay(Some(50.0)).unwrap();
+        assert!(d >= Duration::from_millis(50), "hint must floor the draw, got {d:?}");
+    }
+
+    #[test]
+    fn backoff_budget_exhausts() {
+        let policy =
+            RetryPolicy { max_attempts: 100, base_ms: 4.0, cap_ms: 10.0, budget_ms: 12.0 };
+        let mut b = Backoff::new(policy, Rng::new(2));
+        let n = std::iter::from_fn(|| b.next_delay(None)).count();
+        assert!(n <= 3, "12ms budget cannot fund {n} sleeps of >= 4ms");
+        assert!(b.slept_ms() <= 12.0);
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let cfg = BreakerConfig { threshold: 3, cooldown: Duration::from_millis(20) };
+        let br = CircuitBreaker::new(cfg);
+        assert_eq!(br.state_name(), "closed");
+        for _ in 0..2 {
+            assert!(br.try_acquire());
+            br.on_failure();
+        }
+        assert_eq!(br.state_name(), "closed", "below threshold stays closed");
+        assert!(br.try_acquire());
+        br.on_failure();
+        assert_eq!(br.state_name(), "open");
+        assert_eq!(br.opened(), 1);
+        assert!(!br.try_acquire(), "open must fast-fail");
+        assert!(br.fast_fails() >= 1);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(br.try_acquire(), "cooldown elapsed: one probe admitted");
+        assert_eq!(br.state_name(), "half_open");
+        assert!(!br.try_acquire(), "only one half-open probe at a time");
+        br.on_success();
+        assert_eq!(br.state_name(), "closed");
+        assert_eq!(br.reclosed(), 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let cfg = BreakerConfig { threshold: 1, cooldown: Duration::from_millis(10) };
+        let br = CircuitBreaker::new(cfg);
+        br.on_failure();
+        assert_eq!(br.state_name(), "open");
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(br.try_acquire());
+        br.on_failure();
+        assert_eq!(br.state_name(), "open", "failed probe must re-open");
+        assert_eq!(br.opened(), 2);
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let cfg = BreakerConfig { threshold: 2, cooldown: Duration::from_millis(10) };
+        let br = CircuitBreaker::new(cfg);
+        br.on_failure();
+        br.on_success();
+        br.on_failure();
+        assert_eq!(br.state_name(), "closed", "streak must reset on success");
+    }
+}

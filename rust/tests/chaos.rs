@@ -1,0 +1,290 @@
+//! Chaos integration (DESIGN.md §12): the seeded fault-injection soak.
+//!
+//! Everything here drives the real serving stack — TCP server, router,
+//! batchers, schedule cache — under a [`FaultPlan`], and asserts the
+//! resilience invariants the chaos work exists to guarantee:
+//!
+//! - **No lost replies**: every request lands in exactly one accounting
+//!   bucket (`sent == served + errors + sheds + expiries`), faults or not.
+//! - **Determinism**: a fixed (plan seed, load seed) reproduces the same
+//!   trace, the same injected-fault counts, and the same outcome counts.
+//! - **Fail closed, not silent**: a dead batcher route answers
+//!   `route_down`, flips the `ready` probe false (while `health` stays
+//!   true), and trips the client-side circuit breaker.
+//! - **Idempotency honored**: ambiguous post-write failures are resent
+//!   only when the request carries a `request_id`; without one they are
+//!   surfaced as errors, never double-submitted.
+//! - **Crash-safe cache**: garbled persisted lines are skipped *and
+//!   counted* on restore, and the damaged key stays buildable.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sdm::chaos::{FaultPlan, FaultSite};
+use sdm::coordinator::hub::EngineHub;
+use sdm::coordinator::loadgen::{
+    closed_loop, closed_loop_with, LoadOptions, LoadReport, RequestTemplate, TraceProfile,
+};
+use sdm::coordinator::{Client, ResilientClient, Server, ServerConfig};
+use sdm::diffusion::Param;
+use sdm::model::gmm::testmodel::toy;
+use sdm::model::Denoiser;
+use sdm::schedule::{CacheConfig, ScheduleSpec};
+use sdm::util::{BreakerConfig, Json, RetryPolicy};
+
+fn tpl(steps: usize, request_id: Option<&str>) -> RequestTemplate {
+    RequestTemplate {
+        dataset: "toy".into(),
+        n: 2,
+        param: "edm".into(),
+        solver: "euler".into(),
+        plan: None,
+        schedule: "edm".into(),
+        steps,
+        priority: None,
+        deadline_ms: None,
+        kernel_precision: None,
+        request_id: request_id.map(str::to_string),
+    }
+}
+
+/// A breaker that effectively never opens — for scenarios where the
+/// breaker would only obscure the counter under test.
+fn patient_breaker() -> BreakerConfig {
+    BreakerConfig { threshold: 10_000, cooldown: Duration::from_millis(250) }
+}
+
+/// Start a server whose denoiser evals, batchers, and reply writes all
+/// run under `plan`.
+fn chaotic_server(plan: &Arc<FaultPlan>) -> Server {
+    let mut hub = EngineHub::from_infos(vec![toy().info]);
+    hub.apply_chaos(Arc::clone(plan));
+    let cfg = ServerConfig { chaos: Some(Arc::clone(plan)), ..ServerConfig::default() };
+    Server::start(Arc::new(hub), cfg).unwrap()
+}
+
+/// One full soak run against a fresh server + fresh plan parsed from the
+/// same (spec, seed) — so two invocations see identical fault sequences.
+fn soak_run(spec: &str, plan_seed: u64, load_seed: u64) -> (LoadReport, u64, u64) {
+    let plan = Arc::new(FaultPlan::parse(spec, plan_seed).unwrap());
+    let server = chaotic_server(&plan);
+    let addr = server.local_addr.to_string();
+    let profile = TraceProfile {
+        templates: vec![(0.6, tpl(4, Some("soak"))), (0.4, tpl(6, Some("soak")))],
+        chaos: None,
+    };
+    let opts = LoadOptions {
+        retry: Some(RetryPolicy::default()),
+        breaker: Some(patient_breaker()),
+        chaos: None,
+    };
+    let report =
+        closed_loop_with(&addr, &profile, 1, 48, Duration::ZERO, load_seed, &opts).unwrap();
+    let (eval_errs, conn_drops) =
+        (plan.fired(FaultSite::EvalErr), plan.fired(FaultSite::ConnDrop));
+    assert!(
+        plan.calls(FaultSite::EvalErr) > 0,
+        "the soak must actually reach the injected denoiser"
+    );
+    server.shutdown();
+    (report, eval_errs, conn_drops)
+}
+
+/// Tentpole acceptance: a seeded soak over a faulty server — injected
+/// eval failures, latency spikes, and mid-frame connection drops — with
+/// retrying, idempotent clients. Nothing hangs (the test returning *is*
+/// the assertion), no reply is lost, and for a fixed seed the entire
+/// outcome — trace, injected-fault counts, per-bucket totals, resend
+/// counts — reproduces exactly.
+#[test]
+fn seeded_soak_loses_no_replies_and_reproduces_exactly() {
+    let spec = "eval_err@1/8,eval_delay@p50=1ms,conn_drop@1/8";
+    let (a, a_evals, a_drops) = soak_run(spec, 1234, 77);
+    let (b, b_evals, b_drops) = soak_run(spec, 1234, 77);
+
+    assert_eq!(a.sent, 48);
+    assert_eq!(
+        a.sent,
+        a.latency.count() + a.errors + a.sheds + a.expiries,
+        "every request must land in exactly one bucket (served {}, errors {}, \
+         sheds {}, expiries {})",
+        a.latency.count(),
+        a.errors,
+        a.sheds,
+        a.expiries
+    );
+    // requests carry a request_id, so ambiguous failures are always
+    // safely resent — never abandoned
+    assert_eq!(a.double_submit_avoided, 0);
+
+    // determinism: same plan seed + same load seed == same everything
+    assert_eq!(a.trace_hash, b.trace_hash, "same seed must draw the same trace");
+    assert_eq!((a_evals, a_drops), (b_evals, b_drops), "injected counts must reproduce");
+    assert_eq!(a.latency.count(), b.latency.count());
+    assert_eq!(
+        (a.errors, a.sheds, a.expiries, a.retries, a.reconnects, a.double_submit_avoided),
+        (b.errors, b.sheds, b.expiries, b.retries, b.reconnects, b.double_submit_avoided),
+    );
+}
+
+/// Watchdog acceptance: a batcher killed by `batcher_panic` flips the
+/// `ready` probe false (`health` stays true — the process is alive),
+/// answers subsequent submits with structured `route_down`, and two such
+/// terminal failures open the client-side breaker, which then fast-fails
+/// locally without touching the wire.
+#[test]
+fn dead_route_flips_ready_false_and_opens_the_breaker() {
+    let plan = Arc::new(FaultPlan::parse("batcher_panic@1/1", 1).unwrap());
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let cfg = ServerConfig { chaos: Some(Arc::clone(&plan)), ..ServerConfig::default() };
+    let server = Server::start(hub, cfg).unwrap();
+    let addr = server.local_addr.to_string();
+
+    // the batcher panics on its first loop iteration; wait for the
+    // liveness record to observe the dead thread
+    let mut probe = Client::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while probe.ready().unwrap() {
+        assert!(Instant::now() < deadline, "ready never flipped false on a dead route");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(probe.health().unwrap(), "liveness is about the process, not the routes");
+    let r = probe.send(r#"{"op":"ready"}"#).unwrap();
+    assert_eq!(r.get("routes_live").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(r.get("routes_total").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(r.get("draining").unwrap(), &Json::Bool(false));
+
+    // a plain client gets the structured reply, not a hang or a reset
+    let line = tpl(4, None).line(9);
+    let v = probe.send(&line).unwrap();
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "route_down");
+    assert_eq!(v.get("route").unwrap().as_str().unwrap(), "toy");
+
+    // a resilient client treats route_down as terminal: two failures
+    // reach the breaker threshold, the third request never hits the wire
+    let policy = RetryPolicy { max_attempts: 1, ..RetryPolicy::default() };
+    let breaker = BreakerConfig { threshold: 2, cooldown: Duration::from_secs(60) };
+    let mut rc = ResilientClient::new(&addr, policy, breaker, 3);
+    for seed in 0..2u64 {
+        let v = rc.send_with_retry("toy", &tpl(4, None).line(seed), false).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "route_down");
+    }
+    assert_eq!(rc.breaker_state("toy"), Some("open"));
+    assert_eq!(rc.breaker_opens(), 1);
+    let err = rc
+        .send_with_retry("toy", &tpl(4, None).line(2), false)
+        .expect_err("an open breaker must fast-fail");
+    assert!(format!("{err:#}").contains("circuit open"), "{err:#}");
+    assert_eq!(rc.stats().breaker_fast_fails, 1);
+
+    // every rejected submit was counted against the route
+    let stats = probe.send(r#"{"op":"stats"}"#).unwrap();
+    let toy_m = stats.get("stats").unwrap().get("toy").unwrap();
+    assert_eq!(toy_m.get("sheds_route_down").unwrap().as_f64().unwrap(), 3.0);
+    server.shutdown();
+}
+
+/// Zero-overhead acceptance: with no plan and default options, the
+/// resilient driver is byte-for-byte the plain closed loop — same trace,
+/// same outcomes, no resilience machinery engaged.
+#[test]
+fn chaos_off_default_options_match_the_plain_closed_loop() {
+    let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
+    let server = Server::start(hub, ServerConfig::default()).unwrap();
+    let addr = server.local_addr.to_string();
+    let profile =
+        TraceProfile { templates: vec![(0.5, tpl(4, None)), (0.5, tpl(7, None))], chaos: None };
+    let a = closed_loop(&addr, &profile, 2, 8, Duration::ZERO, 5).unwrap();
+    let b = closed_loop_with(&addr, &profile, 2, 8, Duration::ZERO, 5, &LoadOptions::default())
+        .unwrap();
+    assert_eq!(a.trace_hash, b.trace_hash);
+    assert_eq!((a.sent, b.sent), (16, 16));
+    assert_eq!(a.latency.count(), 16);
+    assert_eq!(b.latency.count(), 16);
+    assert_eq!(a.errors + a.sheds + a.expiries + b.errors + b.sheds + b.expiries, 0);
+    for r in [&a, &b] {
+        assert_eq!(
+            (r.retries, r.reconnects, r.breaker_opens, r.breaker_fast_fails),
+            (0, 0, 0, 0),
+            "no resilience machinery may engage on a healthy run"
+        );
+    }
+    server.shutdown();
+}
+
+/// Idempotency acceptance: when requests carry no `request_id`, an
+/// ambiguous post-write failure (reply dropped mid-frame) is NOT resent —
+/// each one is counted (`double_submit_avoided`) and surfaced as an
+/// error, exactly one per injected drop.
+#[test]
+fn ambiguous_failures_without_request_id_are_never_resent() {
+    let plan = Arc::new(FaultPlan::parse("conn_drop@1/2", 9).unwrap());
+    let server = chaotic_server(&plan);
+    let addr = server.local_addr.to_string();
+    let profile = TraceProfile { templates: vec![(1.0, tpl(4, None))], chaos: None };
+    let opts = LoadOptions {
+        retry: Some(RetryPolicy::default()),
+        breaker: Some(patient_breaker()),
+        chaos: None,
+    };
+    let report = closed_loop_with(&addr, &profile, 1, 24, Duration::ZERO, 11, &opts).unwrap();
+    let drops = plan.fired(FaultSite::ConnDrop);
+    assert!(drops > 0, "a 1/2 drop rate over 24 replies must fire");
+    assert_eq!(report.double_submit_avoided, drops, "one refusal per injected drop");
+    assert_eq!(report.errors, report.double_submit_avoided);
+    assert_eq!(report.retries, 0, "ambiguous failures must not be resent without an id");
+    assert_eq!(report.latency.count(), report.sent - report.errors);
+    assert_eq!(
+        report.sent,
+        report.latency.count() + report.errors + report.sheds + report.expiries
+    );
+    server.shutdown();
+}
+
+fn sdm_spec() -> ScheduleSpec {
+    ScheduleSpec::Sdm { eta_min: 0.02, eta_max: 0.2, p: 1.0, q: 0.25, pilot_rows: 8 }
+}
+
+fn tmp_cache_path(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("sdm_chaos_it_{name}_{}.jsonl", std::process::id()))
+}
+
+fn hub_with_cache(cache: CacheConfig) -> EngineHub {
+    let model: Arc<dyn Denoiser> = Arc::new(toy());
+    EngineHub::from_models_with_cache(vec![(toy().info, model)], cache)
+}
+
+/// Crash-safety acceptance: every persisted line garbled by the
+/// `cache_corrupt` site (torn writes and bit rot alternate) is skipped
+/// *and counted* by a restarted hub, which stays fully serviceable —
+/// the damaged keys simply rebuild.
+#[test]
+fn garbled_cache_appends_are_skipped_and_counted_on_restore() {
+    let path = tmp_cache_path("garbled");
+    let _ = std::fs::remove_file(&path);
+    let plan = Arc::new(FaultPlan::parse("cache_corrupt@1/1", 21).unwrap());
+    let chaotic = CacheConfig {
+        persist_path: Some(path.clone()),
+        chaos: Some(Arc::clone(&plan)),
+        ..CacheConfig::default()
+    };
+    let hub1 = hub_with_cache(chaotic);
+    let g1 = hub1.schedule("toy", Param::Edm, &sdm_spec(), 10).unwrap();
+    hub1.schedule("toy", Param::Edm, &sdm_spec(), 14).unwrap();
+    assert_eq!(plan.fired(FaultSite::CacheCorrupt), 2, "both appends must be garbled");
+    drop(hub1);
+
+    // a clean restart over the damaged file: nothing restored, damage
+    // counted, key still buildable
+    let clean = CacheConfig { persist_path: Some(path.clone()), ..CacheConfig::default() };
+    let hub2 = hub_with_cache(clean);
+    assert_eq!(hub2.cached_schedules(), 0, "garbled lines must not restore");
+    let stats = hub2.cache_stats();
+    assert_eq!(stats.get("corrupt_lines_skipped").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(stats.get("persisted_loads").unwrap().as_f64().unwrap(), 0.0);
+    let g2 = hub2.schedule("toy", Param::Edm, &sdm_spec(), 10).unwrap();
+    assert_eq!(g1, g2, "a rebuilt schedule must match the one whose line was lost");
+    let _ = std::fs::remove_file(&path);
+}

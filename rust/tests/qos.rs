@@ -557,9 +557,10 @@ fn closed_loop_loadgen_is_deterministic_given_a_seed() {
         priority: None,
         deadline_ms: None,
         kernel_precision: None,
+        request_id: None,
     };
     // two templates so the drawn sequence actually varies with the seed
-    let profile = TraceProfile { templates: vec![(0.5, tpl(5)), (0.5, tpl(9))] };
+    let profile = TraceProfile { templates: vec![(0.5, tpl(5)), (0.5, tpl(9))], chaos: None };
     let run = |seed: u64| {
         closed_loop(&addr, &profile, 2, 16, Duration::ZERO, seed).unwrap()
     };
