@@ -35,7 +35,8 @@ use crate::coordinator::protocol::{PlanRequest, Response, SampleRequest};
 use crate::coordinator::qos::{AdmitGuard, DrrScheduler, Inbox, QosClass, RecvError, ShedCause};
 use crate::metrics::sample_mean_cov;
 use crate::sampler::{
-    generate_plan_prec, generate_pooled_plan_prec, run_plan_prec, RunConfig, SamplingPlan,
+    generate_plan_ctl, generate_pooled_plan_ctl, mask_row_for, run_plan_masked_ctl, RunConfig,
+    RunCtl, SamplingPlan,
 };
 use crate::util::{lock_unpoisoned, wait_unpoisoned, ThreadPool, Timer};
 use crate::Result;
@@ -52,17 +53,49 @@ pub struct Pending {
     /// (installed by [`Inbox::try_push`]; `None` for direct test harness
     /// submissions).
     pub admit: Option<AdmitGuard>,
+    /// streaming run control (gateway path): cancel token + progress hook
+    /// threaded into the engine. `None` for every socket request — that
+    /// path stays byte-identical to the pre-gateway batcher.
+    pub ctl: Option<RunCtl>,
+    /// admission-order stamp; isolates streaming requests into their own
+    /// batch groups (a progress hook reports one trajectory, and a cancel
+    /// must never abort co-batched bystanders).
+    serial: u64,
 }
 
 impl Pending {
     /// Stamp a request at admission time: arrival clock, latency timer,
     /// and the absolute deadline its `deadline_ms` budget implies.
     pub fn new(req: SampleRequest, reply: mpsc::Sender<Response>) -> Pending {
+        static NEXT_SERIAL: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
         let enqueued = Instant::now();
         let deadline = req
             .deadline_ms
             .map(|ms| enqueued + Duration::from_secs_f64(ms / 1e3));
-        Pending { req, reply, enqueued, timer: Timer::start(), deadline, admit: None }
+        Pending {
+            req,
+            reply,
+            enqueued,
+            timer: Timer::start(),
+            deadline,
+            admit: None,
+            ctl: None,
+            serial: NEXT_SERIAL.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+
+    /// Attach a streaming [`RunCtl`] (gateway requests only).
+    pub fn with_ctl(mut self, ctl: RunCtl) -> Pending {
+        self.ctl = Some(ctl);
+        self
+    }
+
+    /// True when this request's cancel token has tripped.
+    fn is_cancelled(&self) -> bool {
+        self.ctl
+            .as_ref()
+            .and_then(|c| c.cancel.as_ref())
+            .map_or(false, |t| t.is_cancelled())
     }
 }
 
@@ -109,6 +142,17 @@ fn group_key(r: &SampleRequest) -> String {
         r.qos.name(),
         r.precision.name()
     )
+}
+
+/// [`group_key`] for an admitted request. Streaming requests (those
+/// carrying a [`RunCtl`]) get a group of their own, discriminated by the
+/// admission serial: their progress hook narrates a single trajectory
+/// and their cancel token must never abort co-batched bystanders.
+fn pending_key(p: &Pending) -> String {
+    match &p.ctl {
+        None => group_key(&p.req),
+        Some(_) => format!("{}|stream:{}", group_key(&p.req), p.serial),
+    }
 }
 
 /// A chunk ready to flush, ordered for the backlog heap: higher QoS class
@@ -237,7 +281,7 @@ pub fn batcher_loop(
         let mut closing = false;
         match inbox.recv_timeout(policy.max_wait) {
             Ok(p) => {
-                groups.entry(group_key(&p.req)).or_default().push(p);
+                groups.entry(pending_key(&p)).or_default().push(p);
             }
             Err(RecvError::Timeout) => {}
             Err(RecvError::Closed) => closing = true,
@@ -249,7 +293,7 @@ pub fn batcher_loop(
             // the in-flight bound is fine. wait_zero() then makes
             // joining the batcher thread imply every reply was sent
             while let Some(p) = inbox.try_recv() {
-                groups.entry(group_key(&p.req)).or_default().push(p);
+                groups.entry(pending_key(&p)).or_default().push(p);
             }
             for (_, g) in std::mem::take(&mut groups) {
                 enqueue_chunks(&dataset, &metrics, g, &policy, shapes.as_deref(), &mut backlog, &mut seq);
@@ -327,13 +371,28 @@ fn enqueue_chunks(
     }
 }
 
-/// Shed every expired request from a chunk with a structured
-/// [`Response::DeadlineExceeded`], returning the survivors. Counted per
-/// route; never silent.
+/// Shed every expired or pre-flush-cancelled request from a chunk with a
+/// structured reply ([`Response::DeadlineExceeded`] /
+/// [`Response::Cancelled`]), returning the survivors. Counted per route;
+/// never silent. A cancellation observed here spent zero evals, so the
+/// refund is the request's `steps` — a lower bound (0 when the route
+/// default was still unresolved; the mid-run path refunds exactly).
 fn shed_expired(dataset: &str, metrics: &ServerMetrics, chunk: Vec<Pending>) -> Vec<Pending> {
     let now = Instant::now();
     let mut keep = Vec::with_capacity(chunk.len());
     for p in chunk {
+        if p.is_cancelled() {
+            let refund = p.req.steps as f64;
+            metrics.record_cancelled(dataset, refund);
+            let _ = p.reply.send(Response::Cancelled {
+                route: dataset.to_string(),
+                request_id: p.req.request_id.clone(),
+                nfe_spent: 0.0,
+                nfe_refunded: refund,
+            });
+            // p drops here: its AdmitGuard frees the admission slot
+            continue;
+        }
         match p.deadline {
             Some(d) if now > d => {
                 metrics.record_shed(dataset, ShedCause::Deadline);
@@ -343,7 +402,6 @@ fn shed_expired(dataset: &str, metrics: &ServerMetrics, chunk: Vec<Pending>) -> 
                     deadline_ms: p.req.deadline_ms.unwrap_or(0.0),
                     waited_ms,
                 });
-                // p drops here: its AdmitGuard frees the admission slot
             }
             _ => keep.push(p),
         }
@@ -472,7 +530,21 @@ fn flush(
     }
     let batched_with = group.len();
     match run_group(dataset, hub, &group, policy, pool) {
-        Ok((samples, nfe, dim)) => {
+        Ok(out) if out.cancelled => {
+            // streaming groups are singletons (see `pending_key`), so the
+            // whole-run refund belongs to the one request in the group
+            for p in &group {
+                metrics.record_cancelled(dataset, out.nfe_refunded);
+                let _ = p.reply.send(Response::Cancelled {
+                    route: dataset.to_string(),
+                    request_id: p.req.request_id.clone(),
+                    nfe_spent: out.nfe,
+                    nfe_refunded: out.nfe_refunded,
+                });
+            }
+        }
+        Ok(out) => {
+            let (samples, nfe, dim) = (out.samples, out.nfe, out.dim);
             let mut offset = 0usize;
             for p in &group {
                 let rows = p.req.n;
@@ -508,15 +580,31 @@ fn flush(
     }
 }
 
+/// What one chunk integration produced, including partial (cancelled)
+/// outcomes.
+struct GroupOutput {
+    samples: Vec<f32>,
+    nfe: f64,
+    dim: usize,
+    /// the head request's cancel token tripped mid-run
+    cancelled: bool,
+    /// engine estimate of the evals the abort avoided (0 when complete)
+    nfe_refunded: f64,
+}
+
 /// Integrate the union of a chunk's rows in one run (row-sharded over the
-/// pool when a single oversized request exceeds `max_batch`).
+/// pool when a single oversized request exceeds `max_batch`). Streaming
+/// chunks carry the head request's [`RunCtl`]; every other chunk runs
+/// under the default control, which is the pre-gateway byte-identical
+/// path.
 fn run_group(
     dataset: &str,
     hub: &EngineHub,
     group: &[Pending],
     policy: &BatchPolicy,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<(Vec<f32>, f64, usize)> {
+) -> Result<GroupOutput> {
+    let ctl = group[0].ctl.clone().unwrap_or_default();
     let head = &group[0].req;
     let total: usize = group.iter().map(|p| p.req.n).sum();
     let info = hub.info(dataset)?;
@@ -540,8 +628,8 @@ fn run_group(
     if total > max_batch {
         // only reachable for a chunk holding one oversized request
         let cfg = RunConfig { rows: max_batch, seed, class: head.class, trace: false };
-        let (samples, nfe, _, _) = match pool {
-            Some(p) => generate_pooled_plan_prec(
+        let (samples, nfe, _, _, refunded) = match pool {
+            Some(p) => generate_pooled_plan_ctl(
                 &model,
                 head.param,
                 &grid,
@@ -551,8 +639,9 @@ fn run_group(
                 total,
                 p,
                 head.precision,
+                &ctl,
             )?,
-            None => generate_plan_prec(
+            None => generate_plan_ctl(
                 model.as_ref(),
                 head.param,
                 &grid,
@@ -561,14 +650,36 @@ fn run_group(
                 &cfg,
                 total,
                 head.precision,
+                &ctl,
             )?,
         };
-        Ok((samples, nfe, info.dim))
+        Ok(GroupOutput {
+            samples,
+            nfe,
+            dim: info.dim,
+            cancelled: refunded.is_some(),
+            nfe_refunded: refunded.unwrap_or(0.0),
+        })
     } else {
         let cfg = RunConfig { rows: total, seed, class: head.class, trace: false };
-        let out =
-            run_plan_prec(model.as_ref(), head.param, &grid, &plan, info, &cfg, head.precision)?;
-        Ok((out.samples, out.nfe as f64, info.dim))
+        let mask_row = mask_row_for(cfg.class, info, model.k())?;
+        let out = run_plan_masked_ctl(
+            model.as_ref(),
+            head.param,
+            &grid,
+            &plan,
+            &cfg,
+            &mask_row,
+            head.precision,
+            &ctl,
+        )?;
+        Ok(GroupOutput {
+            samples: out.samples,
+            nfe: out.nfe as f64,
+            dim: info.dim,
+            cancelled: out.cancelled,
+            nfe_refunded: out.nfe_refunded,
+        })
     }
 }
 
@@ -911,6 +1022,93 @@ mod tests {
                 (QosClass::Background, 1),
             ]
         );
+    }
+
+    #[test]
+    fn streaming_requests_get_their_own_group() {
+        use crate::sampler::CancelToken;
+        let plain = mk_pending(mk_request(4, "euler")).0;
+        let s1 = mk_pending(mk_request(4, "euler"))
+            .0
+            .with_ctl(RunCtl { cancel: Some(CancelToken::new()), ..RunCtl::default() });
+        let s2 = mk_pending(mk_request(4, "euler"))
+            .0
+            .with_ctl(RunCtl { cancel: Some(CancelToken::new()), ..RunCtl::default() });
+        // same request shape, but neither with the plain group nor with
+        // each other
+        assert_eq!(pending_key(&plain), group_key(&plain.req));
+        assert_ne!(pending_key(&s1), pending_key(&plain));
+        assert_ne!(pending_key(&s1), pending_key(&s2));
+    }
+
+    #[test]
+    fn pre_tripped_cancel_is_shed_before_flush_with_refund() {
+        use crate::sampler::CancelToken;
+        let (tx, metrics) = spawn_batcher();
+        let token = CancelToken::new();
+        token.cancel();
+        let mut req = mk_request(8, "euler");
+        req.request_id = Some("req-cancel".into());
+        let (p, rrx) = mk_pending(req);
+        let p = p.with_ctl(RunCtl { cancel: Some(token), ..RunCtl::default() });
+        tx.try_push(p).map_err(|_| "push rejected").unwrap();
+        match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Response::Cancelled { nfe_spent, nfe_refunded, request_id, .. } => {
+                assert_eq!(nfe_spent, 0.0);
+                assert_eq!(nfe_refunded, 8.0); // steps lower bound
+                assert_eq!(request_id.as_deref(), Some("req-cancel"));
+            }
+            other => panic!("{other:?}"),
+        }
+        let snap = metrics.snapshot();
+        let toy = snap.get("toy").unwrap();
+        assert_eq!(toy.get("cancelled").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(toy.get("nfe_refunded").unwrap().as_f64().unwrap(), 8.0);
+    }
+
+    #[test]
+    fn mid_run_cancel_returns_partial_nfe_and_refund() {
+        use crate::sampler::{CancelToken, ProgressHook, StepProgress};
+        let (tx, metrics) = spawn_batcher();
+        // baseline: the same request uncancelled costs the full budget
+        let rx = submit(&tx, mk_request(8, "heun"));
+        let full_nfe = match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Response::SampleOk { nfe, .. } => nfe,
+            other => panic!("{other:?}"),
+        };
+        // now stream the same shape and cancel from the progress hook
+        // after the second step — the loop must exit at the next boundary
+        let token = CancelToken::new();
+        let t2 = token.clone();
+        let hook: ProgressHook = Arc::new(move |p: StepProgress| {
+            if p.step >= 2 {
+                t2.cancel();
+            }
+        });
+        let (p, rrx) = mk_pending(mk_request(8, "heun"));
+        let p = p.with_ctl(RunCtl {
+            cancel: Some(token),
+            progress: Some(hook),
+            preview_dims: 0,
+        });
+        tx.try_push(p).map_err(|_| "push rejected").unwrap();
+        match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Response::Cancelled { nfe_spent, nfe_refunded, .. } => {
+                assert!(nfe_spent > 0.0, "cancel fired after two completed steps");
+                assert!(
+                    nfe_spent < full_nfe,
+                    "partial {nfe_spent} must cost less than full {full_nfe}"
+                );
+                assert!(nfe_refunded > 0.0);
+                // spent + refund reconstructs the full deterministic budget
+                assert_eq!(nfe_spent + nfe_refunded, full_nfe);
+            }
+            other => panic!("{other:?}"),
+        }
+        let snap = metrics.snapshot();
+        let toy = snap.get("toy").unwrap();
+        assert_eq!(toy.get("cancelled").unwrap().as_f64().unwrap(), 1.0);
+        assert!(toy.get("nfe_refunded").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -34,6 +34,9 @@ pub enum Rejection {
     ShuttingDown { route: String },
     /// the route's batcher thread died; the watchdog failed it closed
     RouteDown { route: String },
+    /// the request's cancel token tripped mid-sample; `nfe_spent` evals
+    /// were spent before the abort and `nfe_refunded` were given back
+    Cancelled { route: String, nfe_spent: f64, nfe_refunded: f64 },
 }
 
 impl std::fmt::Display for Rejection {
@@ -52,6 +55,11 @@ impl std::fmt::Display for Rejection {
             Rejection::RouteDown { route } => {
                 write!(f, "route {route:?} is down (batcher thread dead)")
             }
+            Rejection::Cancelled { route, nfe_spent, nfe_refunded } => write!(
+                f,
+                "request on route {route:?} cancelled after {nfe_spent:.0} evals \
+                 ({nfe_refunded:.0} refunded)"
+            ),
         }
     }
 }
@@ -80,6 +88,11 @@ impl Rejection {
             }),
             "shutting_down" => Some(Rejection::ShuttingDown { route }),
             "route_down" => Some(Rejection::RouteDown { route }),
+            "cancelled" => Some(Rejection::Cancelled {
+                route,
+                nfe_spent: v.get("nfe_spent").ok()?.as_f64().ok()?,
+                nfe_refunded: v.get("nfe_refunded").ok()?.as_f64().ok()?,
+            }),
             _ => None,
         }
     }
@@ -351,9 +364,11 @@ impl ResilientClient {
                             None => return Ok(v),
                         }
                     }
-                    Some(Rejection::DeadlineExceeded { .. }) => {
-                        // the route functioned — it processed and timed
-                        // out the request; not a breaker-worthy fault
+                    Some(Rejection::DeadlineExceeded { .. })
+                    | Some(Rejection::Cancelled { .. }) => {
+                        // the route functioned — it timed out or cancelled
+                        // the request on purpose; terminal, and not a
+                        // breaker-worthy fault
                         self.breaker(route).on_success();
                         return Ok(v);
                     }
@@ -445,6 +460,21 @@ mod tests {
         let rd = Response::RouteDown { route: "d".into() };
         let v = Json::parse(&rd.to_line()).unwrap();
         assert_eq!(Rejection::from_response(&v), Some(Rejection::RouteDown { route: "d".into() }));
+        let ca = Response::Cancelled {
+            route: "e".into(),
+            request_id: Some("req-1".into()),
+            nfe_spent: 6.0,
+            nfe_refunded: 41.0,
+        };
+        let v = Json::parse(&ca.to_line()).unwrap();
+        assert_eq!(
+            Rejection::from_response(&v),
+            Some(Rejection::Cancelled {
+                route: "e".into(),
+                nfe_spent: 6.0,
+                nfe_refunded: 41.0
+            })
+        );
         // ordinary errors and successes are not rejections
         let v = Json::parse(&Response::Err("boom".into()).to_line()).unwrap();
         assert_eq!(Rejection::from_response(&v), None);

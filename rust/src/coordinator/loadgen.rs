@@ -25,6 +25,11 @@
 //! breaking) and can drive a client-side [`FaultPlan`] whose `conn_drop`
 //! clause deliberately drops worker connections between requests — the
 //! chaos soak uses this to prove zero lost replies under injected faults.
+//!
+//! Streaming (DESIGN.md §13): [`sse_closed_loop`] drives the HTTP/SSE
+//! gateway instead of the socket front-end, consuming per-step progress
+//! events and exercising mid-sample cancellation under a seeded
+//! early-stop policy (explicit `POST /cancel` or a hard disconnect).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -32,6 +37,7 @@ use std::time::Duration;
 
 use crate::chaos::{FaultPlan, FaultSite};
 use crate::coordinator::client::{Client, Rejection, ResilientClient, RetryStats};
+use crate::gateway::sse_client::{stream_sample, EarlyStop};
 use crate::util::{BreakerConfig, Histogram, Json, RetryPolicy, Rng, Timer};
 use crate::Result;
 
@@ -64,6 +70,38 @@ pub struct RequestTemplate {
 }
 
 impl RequestTemplate {
+    /// Serialize as a `GET /stream` query string for the SSE gateway
+    /// (same fields the socket line carries, URL-encoded; the gateway
+    /// reuses the protocol parser so the two encodings cannot drift).
+    pub fn query(&self, seed: u64) -> String {
+        let mut q = format!(
+            "dataset={}&n={}&param={}&solver={}&schedule={}&steps={}&seed={}",
+            pct(&self.dataset),
+            self.n,
+            pct(&self.param),
+            pct(&self.solver),
+            pct(&self.schedule),
+            self.steps,
+            seed
+        );
+        if let Some(p) = &self.plan {
+            q.push_str(&format!("&plan={}", pct(p)));
+        }
+        if let Some(p) = &self.priority {
+            q.push_str(&format!("&priority={}", pct(p)));
+        }
+        if let Some(d) = self.deadline_ms {
+            q.push_str(&format!("&deadline_ms={d}"));
+        }
+        if let Some(p) = &self.kernel_precision {
+            q.push_str(&format!("&kernel_precision={}", pct(p)));
+        }
+        if let Some(p) = &self.request_id {
+            q.push_str(&format!("&request_id={}-{seed:016x}", pct(p)));
+        }
+        q
+    }
+
     /// Serialize as one request line with the given seed.
     pub fn line(&self, seed: u64) -> String {
         let mut extra = String::new();
@@ -89,6 +127,46 @@ impl RequestTemplate {
     }
 }
 
+/// Minimal percent-encoding for query-string values (RFC 3986
+/// unreserved characters pass through; everything else is `%XX`).
+fn pct(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for b in v.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// On/off burst envelope for [`open_loop`]: inter-arrival gaps are drawn
+/// as a Poisson process over *active* time, then mapped onto the on
+/// windows of a square wave — `on` of traffic at the configured rate,
+/// `off` of silence, repeating. Models diurnal/batchy arrivals that
+/// alternately slam and starve the admission queue, which steady Poisson
+/// load never does.
+#[derive(Clone, Copy, Debug)]
+pub struct Burst {
+    pub on: Duration,
+    pub off: Duration,
+}
+
+impl Burst {
+    /// Map a cumulative active-time offset to a wall-clock offset.
+    fn wall_us(&self, active_us: f64) -> f64 {
+        let on = self.on.as_secs_f64() * 1e6;
+        if on <= 0.0 {
+            return active_us;
+        }
+        let period = on + self.off.as_secs_f64() * 1e6;
+        let k = (active_us / on).floor();
+        k * period + (active_us - k * on)
+    }
+}
+
 /// Mixture of request templates with weights (a "trace profile").
 #[derive(Clone, Debug)]
 pub struct TraceProfile {
@@ -98,6 +176,10 @@ pub struct TraceProfile {
     /// takes effect only under [`closed_loop_with`] with retry enabled —
     /// a plain client has no reconnect path to exercise.
     pub chaos: Option<String>,
+    /// optional on/off burst envelope; only [`open_loop`] consults it
+    /// (closed-loop load self-regulates, so a burst envelope there would
+    /// just be think-time by another name).
+    pub burst: Option<Burst>,
 }
 
 impl TraceProfile {
@@ -125,12 +207,48 @@ impl TraceProfile {
                 (0.25, t("afhqg", 16, "sdm", 40)),
             ],
             chaos: None,
+            burst: None,
         }
     }
 
     /// Single-template profile (the `sdm loadgen --dataset ...` shape).
     pub fn single(tpl: RequestTemplate) -> TraceProfile {
-        TraceProfile { templates: vec![(1.0, tpl)], chaos: None }
+        TraceProfile { templates: vec![(1.0, tpl)], chaos: None, burst: None }
+    }
+
+    /// Per-priority mix on one dataset: a deadline-carrying interactive
+    /// head, a batch body, and a background tail — the shape the DRR
+    /// scheduler and deadline ladder exist for. Weights follow the usual
+    /// serving split (30/50/20).
+    pub fn priority_mix(dataset: &str, n: usize, steps: usize) -> TraceProfile {
+        let t = |priority: Option<&str>, deadline_ms: Option<f64>, steps: usize| RequestTemplate {
+            dataset: dataset.into(),
+            n,
+            param: "edm".into(),
+            solver: "heun".into(),
+            schedule: "edm".into(),
+            steps,
+            plan: None,
+            priority: priority.map(|p| p.into()),
+            deadline_ms,
+            kernel_precision: None,
+            request_id: None,
+        };
+        TraceProfile {
+            templates: vec![
+                (0.3, t(Some("interactive"), Some(500.0), steps)),
+                (0.5, t(Some("batch"), None, steps)),
+                (0.2, t(Some("background"), None, steps * 2)),
+            ],
+            chaos: None,
+            burst: None,
+        }
+    }
+
+    /// Builder: attach an on/off burst envelope (see [`Burst`]).
+    pub fn bursty(mut self, on: Duration, off: Duration) -> TraceProfile {
+        self.burst = Some(Burst { on, off });
+        self
     }
 
     /// Four mutually incompatible request groups (distinct solver /
@@ -161,6 +279,7 @@ impl TraceProfile {
                 (0.25, t("sdm", "edm", 18)),
             ],
             chaos: None,
+            burst: None,
         }
     }
 
@@ -186,6 +305,9 @@ pub struct LoadReport {
     pub sheds: u64,
     /// deadline expiries (`deadline_exceeded`)
     pub expiries: u64,
+    /// mid-sample cancellations (`cancelled` replies — client disconnect,
+    /// explicit cancel, or supersession)
+    pub cancelled: u64,
     pub wall_s: f64,
     /// order-insensitive fingerprint of the drawn request sequence:
     /// per-worker FNV folds XOR-combined, so the same seed reproduces the
@@ -237,6 +359,7 @@ fn classify(
     errors: &AtomicU64,
     sheds: &AtomicU64,
     expiries: &AtomicU64,
+    cancelled: &AtomicU64,
 ) {
     match result {
         Ok(v) if v.get("ok").map(|b| b == &Json::Bool(true)).unwrap_or(false) => {
@@ -248,6 +371,9 @@ fn classify(
             }
             Some(Rejection::DeadlineExceeded { .. }) => {
                 expiries.fetch_add(1, Ordering::SeqCst);
+            }
+            Some(Rejection::Cancelled { .. }) => {
+                cancelled.fetch_add(1, Ordering::SeqCst);
             }
             _ => {
                 errors.fetch_add(1, Ordering::SeqCst);
@@ -279,6 +405,7 @@ pub fn open_loop(
     let errors = Arc::new(AtomicU64::new(0));
     let sheds = Arc::new(AtomicU64::new(0));
     let expiries = Arc::new(AtomicU64::new(0));
+    let cancelled = Arc::new(AtomicU64::new(0));
     let timer = Timer::start();
     let per_worker = total / workers as u64;
     let mut handles = Vec::new();
@@ -288,6 +415,7 @@ pub fn open_loop(
         let errors = Arc::clone(&errors);
         let sheds = Arc::clone(&sheds);
         let expiries = Arc::clone(&expiries);
+        let cancelled = Arc::clone(&cancelled);
         let worker_rate = rps / workers as f64;
         handles.push(std::thread::spawn(move || -> Result<(Histogram, u64)> {
             let mut rng = Rng::new(seed ^ (w as u64 * 0x9E37));
@@ -297,12 +425,17 @@ pub fn open_loop(
             let start = Timer::start();
             let mut next_fire_us = 0.0f64;
             for i in 0..per_worker {
-                // exponential inter-arrival (Poisson process)
+                // exponential inter-arrival (Poisson process), optionally
+                // folded into a burst envelope's on-windows
                 next_fire_us += -(1.0 - rng.uniform()).ln() / worker_rate * 1e6;
+                let fire_at = match &profile.burst {
+                    Some(b) => b.wall_us(next_fire_us),
+                    None => next_fire_us,
+                };
                 let now = start.elapsed_us();
-                if next_fire_us > now {
+                if fire_at > now {
                     std::thread::sleep(std::time::Duration::from_micros(
-                        (next_fire_us - now) as u64,
+                        (fire_at - now) as u64,
                     ));
                 }
                 let idx = profile.draw_index(&mut rng);
@@ -310,7 +443,9 @@ pub fn open_loop(
                 let line = profile.templates[idx].1.line(seed ^ i);
                 let t = Timer::start();
                 let resp = client.send(&line);
-                classify(&resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries);
+                classify(
+                    &resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries, &cancelled,
+                );
             }
             Ok((hist, trace))
         }));
@@ -330,6 +465,7 @@ pub fn open_loop(
         errors: errors.load(Ordering::SeqCst),
         sheds: sheds.load(Ordering::SeqCst),
         expiries: expiries.load(Ordering::SeqCst),
+        cancelled: cancelled.load(Ordering::SeqCst),
         wall_s: timer.elapsed_us() / 1e6,
         trace_hash,
         retries: 0,
@@ -363,8 +499,10 @@ pub fn closed_loop(
 ///
 /// Accounting invariant (the chaos soak asserts it): every request lands
 /// in exactly one bucket, so
-/// `sent == latency.count() + errors + sheds + expiries` always holds —
-/// retries are *resends of one request*, not new requests.
+/// `sent == latency.count() + errors + sheds + expiries + cancelled`
+/// always holds — retries are *resends of one request*, not new
+/// requests, and a cancelled stream is one request that landed in the
+/// `cancelled` bucket.
 pub fn closed_loop_with(
     addr: &str,
     profile: &TraceProfile,
@@ -383,6 +521,7 @@ pub fn closed_loop_with(
     let errors = Arc::new(AtomicU64::new(0));
     let sheds = Arc::new(AtomicU64::new(0));
     let expiries = Arc::new(AtomicU64::new(0));
+    let cancelled = Arc::new(AtomicU64::new(0));
     let timer = Timer::start();
     let mut handles = Vec::new();
     for w in 0..workers {
@@ -391,6 +530,7 @@ pub fn closed_loop_with(
         let errors = Arc::clone(&errors);
         let sheds = Arc::clone(&sheds);
         let expiries = Arc::clone(&expiries);
+        let cancelled = Arc::clone(&cancelled);
         let retry = opts.retry;
         let breaker = opts.breaker.unwrap_or_default();
         let chaos = chaos.clone();
@@ -426,7 +566,9 @@ pub fn closed_loop_with(
                     (None, Some(c)) => c.send(&line),
                     (None, None) => Err(anyhow::anyhow!("worker has no client")),
                 };
-                classify(&resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries);
+                classify(
+                    &resp, &mut hist, t.elapsed_us(), &errors, &sheds, &expiries, &cancelled,
+                );
                 if !think.is_zero() {
                     std::thread::sleep(think);
                 }
@@ -461,6 +603,7 @@ pub fn closed_loop_with(
         errors: errors.load(Ordering::SeqCst),
         sheds: sheds.load(Ordering::SeqCst),
         expiries: expiries.load(Ordering::SeqCst),
+        cancelled: cancelled.load(Ordering::SeqCst),
         wall_s: timer.elapsed_us() / 1e6,
         trace_hash,
         retries: totals.retries,
@@ -468,6 +611,128 @@ pub fn closed_loop_with(
         breaker_opens,
         breaker_fast_fails: totals.breaker_fast_fails,
         double_submit_avoided: totals.double_submit_avoided,
+    })
+}
+
+/// Outcome of one [`sse_closed_loop`] run over the HTTP/SSE gateway.
+#[derive(Debug)]
+pub struct SseLoadReport {
+    /// end-to-end latency of streams that reached `done`
+    pub latency: Histogram,
+    pub sent: u64,
+    /// streams that reached the `done` terminal
+    pub served: u64,
+    /// streams ending in the `cancelled` terminal (explicit POST /cancel)
+    pub cancelled: u64,
+    /// streams the policy hard-disconnected (no terminal observed — the
+    /// server cancels on its own once the write fails)
+    pub disconnected: u64,
+    pub errors: u64,
+    /// total `progress` events observed across all streams
+    pub progress_events: u64,
+    /// `nfe_refunded` summed over observed `cancelled` terminals
+    pub nfe_refunded: f64,
+    pub wall_s: f64,
+}
+
+/// Closed-loop load over the SSE gateway: `workers` connections each
+/// stream one sample at a time from `GET /stream`, consuming per-step
+/// progress events. A seeded early-stop policy cancels a fraction of
+/// streams mid-sample — `cancel_rate` via `POST /cancel/{request_id}`
+/// after `stop_after` progress events, `disconnect_rate` by dropping the
+/// socket outright. Deterministic per seed, like the socket drivers.
+pub fn sse_closed_loop(
+    http_addr: &str,
+    tpl: &RequestTemplate,
+    workers: usize,
+    per_worker: u64,
+    cancel_rate: f64,
+    disconnect_rate: f64,
+    stop_after: usize,
+    seed: u64,
+) -> Result<SseLoadReport> {
+    anyhow::ensure!(workers > 0 && per_worker > 0, "bad load parameters");
+    anyhow::ensure!(
+        cancel_rate <= 0.0 || tpl.request_id.is_some(),
+        "cancel_rate needs a request_id prefix on the template (POST /cancel targets it)"
+    );
+    let timer = Timer::start();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let addr = http_addr.to_string();
+        let tpl = tpl.clone();
+        handles.push(std::thread::spawn(
+            move || -> Result<(Histogram, u64, u64, u64, u64, u64, f64)> {
+                let mut rng = Rng::new(seed ^ (w as u64 * 0x9E37));
+                let mut hist = Histogram::new();
+                let (mut served, mut cancelled, mut disconnected, mut errors) =
+                    (0u64, 0u64, 0u64, 0u64);
+                let mut progress = 0u64;
+                let mut refunded = 0.0f64;
+                for i in 0..per_worker {
+                    let u = rng.uniform();
+                    let early = if u < cancel_rate {
+                        EarlyStop::CancelAfter(stop_after)
+                    } else if u < cancel_rate + disconnect_rate {
+                        EarlyStop::DisconnectAfter(stop_after)
+                    } else {
+                        EarlyStop::Never
+                    };
+                    let query = tpl.query(seed ^ ((w as u64) << 32) ^ i);
+                    let t = Timer::start();
+                    match stream_sample(&addr, &query, early) {
+                        Ok(out) => {
+                            progress += out.progress_events as u64;
+                            match out.terminal_event.as_str() {
+                                "done" => {
+                                    served += 1;
+                                    hist.record(t.elapsed_us());
+                                }
+                                "cancelled" => {
+                                    cancelled += 1;
+                                    if let Ok(r) =
+                                        out.terminal.get("nfe_refunded").and_then(|v| v.as_f64())
+                                    {
+                                        refunded += r;
+                                    }
+                                }
+                                "disconnected" => disconnected += 1,
+                                _ => errors += 1,
+                            }
+                        }
+                        Err(_) => errors += 1,
+                    }
+                }
+                Ok((hist, served, cancelled, disconnected, errors, progress, refunded))
+            },
+        ));
+    }
+    let mut latency = Histogram::new();
+    let (mut served, mut cancelled, mut disconnected, mut errors) = (0u64, 0u64, 0u64, 0u64);
+    let mut progress_events = 0u64;
+    let mut nfe_refunded = 0.0f64;
+    for h in handles {
+        let (hist, s, c, d, e, p, r) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("sse load-generator worker panicked"))??;
+        latency.merge(&hist);
+        served += s;
+        cancelled += c;
+        disconnected += d;
+        errors += e;
+        progress_events += p;
+        nfe_refunded += r;
+    }
+    Ok(SseLoadReport {
+        latency,
+        sent: per_worker * workers as u64,
+        served,
+        cancelled,
+        disconnected,
+        errors,
+        progress_events,
+        nfe_refunded,
+        wall_s: timer.elapsed_us() / 1e6,
     })
 }
 
@@ -645,11 +910,67 @@ mod tests {
                 (0.0, TraceProfile::standard().templates[2].1.clone()),
             ],
             chaos: None,
+            burst: None,
         };
         let mut rng = Rng::new(1);
         for _ in 0..100 {
             assert_eq!(profile.draw(&mut rng).dataset, "cifar10g");
         }
+    }
+
+    #[test]
+    fn burst_envelope_maps_active_time_onto_on_windows() {
+        let b = Burst { on: Duration::from_millis(10), off: Duration::from_millis(90) };
+        // inside the first on-window: unchanged
+        assert_eq!(b.wall_us(5_000.0), 5_000.0);
+        // 15ms of active time = 10ms (window 0) + 5ms into window 1,
+        // which starts at 100ms wall
+        assert_eq!(b.wall_us(15_000.0), 105_000.0);
+        assert_eq!(b.wall_us(25_000.0), 205_000.0);
+        // degenerate zero on-window degrades to steady pacing
+        let z = Burst { on: Duration::ZERO, off: Duration::from_millis(90) };
+        assert_eq!(z.wall_us(7.0), 7.0);
+    }
+
+    #[test]
+    fn priority_mix_profile_parses_and_spans_all_classes() {
+        let profile = TraceProfile::priority_mix("toy", 4, 8);
+        assert_eq!(profile.templates.len(), 3);
+        let mut classes = Vec::new();
+        for (w, tpl) in &profile.templates {
+            assert!(*w > 0.0);
+            let parsed =
+                crate::coordinator::protocol::Request::parse(&tpl.line(1)).unwrap();
+            match parsed {
+                crate::coordinator::protocol::Request::Sample(s) => classes.push(s.qos),
+                _ => panic!(),
+            }
+        }
+        use crate::coordinator::qos::QosClass;
+        assert!(classes.contains(&QosClass::Interactive));
+        assert!(classes.contains(&QosClass::Batch));
+        assert!(classes.contains(&QosClass::Background));
+        // the interactive head carries its deadline
+        assert_eq!(profile.templates[0].1.deadline_ms, Some(500.0));
+    }
+
+    #[test]
+    fn template_query_matches_line_fields_and_percent_encodes() {
+        let mut t = toy_template(4, 6);
+        t.plan = Some("euler@max..1,heun@1..0".into());
+        t.priority = Some("interactive".into());
+        t.request_id = Some("lg".into());
+        let q = t.query(0xAB);
+        assert!(q.contains("dataset=toy&n=4"), "{q}");
+        assert!(q.contains("&steps=6&seed=171"), "{q}");
+        // reserved characters in the plan string are escaped
+        assert!(q.contains("plan=euler%40max..1%2Cheun%401..0"), "{q}");
+        assert!(q.contains("&request_id=lg-00000000000000ab"), "{q}");
+        // and the gateway's decoder inverts the encoding exactly
+        assert_eq!(
+            crate::gateway::http::percent_decode("euler%40max..1%2Cheun%401..0"),
+            "euler@max..1,heun@1..0"
+        );
     }
 
     #[test]

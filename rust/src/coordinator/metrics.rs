@@ -40,6 +40,13 @@ struct RouteMetrics {
     /// sample requests resending a `request_id` already seen on this
     /// route — the duplicate-detection signal a retrying client produces
     dup_request_ids: u64,
+    /// requests aborted by a tripped cancel token (client disconnect,
+    /// explicit cancel, or supersession) — counted beside the shed
+    /// taxonomy, never inside it
+    cancelled: u64,
+    /// estimated model evals *not* spent thanks to cancellations — the
+    /// budget refunded to the pool (DESIGN.md §13)
+    nfe_refunded: f64,
 }
 
 /// Thread-safe metrics sink shared across batchers and connections.
@@ -114,7 +121,19 @@ impl ServerMetrics {
             ShedCause::Deadline => r.sheds_deadline += 1,
             ShedCause::Shutdown => r.sheds_shutdown += 1,
             ShedCause::RouteDown => r.sheds_route_down += 1,
+            ShedCause::Cancelled => r.cancelled += 1,
         }
+    }
+
+    /// A request was aborted mid-sample (or pre-flush) by its cancel token.
+    /// `nfe_refunded` is the engine's estimate of the model evals the abort
+    /// avoided; the counter increment and the refund accumulate atomically
+    /// under the routes lock so `stats` never shows one without the other.
+    pub fn record_cancelled(&self, dataset: &str, nfe_refunded: f64) {
+        let mut routes = lock_unpoisoned(&self.routes);
+        let r = routes.entry(dataset.to_string()).or_default();
+        r.cancelled += 1;
+        r.nfe_refunded += nfe_refunded;
     }
 
     /// A sample request arrived carrying a `request_id` the route has
@@ -166,6 +185,8 @@ impl ServerMetrics {
             m.insert("sheds_shutdown".into(), Json::Num(r.sheds_shutdown as f64));
             m.insert("sheds_route_down".into(), Json::Num(r.sheds_route_down as f64));
             m.insert("dup_request_ids".into(), Json::Num(r.dup_request_ids as f64));
+            m.insert("cancelled".into(), Json::Num(r.cancelled as f64));
+            m.insert("nfe_refunded".into(), Json::Num(r.nfe_refunded));
             let avg_nfe = if r.samples > 0 { r.nfe_total / r.samples as f64 } else { 0.0 };
             m.insert("avg_nfe".into(), Json::Num(avg_nfe));
             m.insert("latency_p50_us".into(), Json::Num(r.latency_us.quantile(0.5)));
@@ -231,6 +252,8 @@ mod tests {
         m.record_shed("a", ShedCause::RouteDown);
         m.record_duplicate("a");
         m.record_duplicate("a");
+        m.record_shed("a", ShedCause::Cancelled);
+        m.record_cancelled("a", 17.5);
         let snap = m.snapshot();
         let a = snap.get("a").unwrap();
         assert_eq!(a.get("queue_depth").unwrap().as_f64().unwrap(), 1.0);
@@ -240,6 +263,8 @@ mod tests {
         assert_eq!(a.get("sheds_shutdown").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(a.get("sheds_route_down").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(a.get("dup_request_ids").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(a.get("cancelled").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(a.get("nfe_refunded").unwrap().as_f64().unwrap(), 17.5);
     }
 
     #[test]

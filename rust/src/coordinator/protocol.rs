@@ -318,6 +318,18 @@ pub enum Response {
     RouteDown {
         route: String,
     },
+    /// the request's cancel token tripped (client disconnect, explicit
+    /// `POST /cancel/{request_id}`, or supersession) and the solver loop
+    /// stopped at the next step boundary (code `cancelled`). `nfe_spent`
+    /// is what the partial run actually cost; `nfe_refunded` is the
+    /// engine's estimate of the evals the abort avoided — together they
+    /// reconstruct the full-run budget (DESIGN.md §13).
+    Cancelled {
+        route: String,
+        request_id: Option<String>,
+        nfe_spent: f64,
+        nfe_refunded: f64,
+    },
     /// liveness probe reply: the process is up.
     Health,
     /// readiness probe reply (DESIGN.md §12): `ready` = artifacts loaded
@@ -405,6 +417,23 @@ impl Response {
                 );
                 m.insert("route".into(), Json::Str(route.clone()));
             }
+            Response::Cancelled { route, request_id, nfe_spent, nfe_refunded } => {
+                m.insert("ok".into(), Json::Bool(false));
+                m.insert("code".into(), Json::Str("cancelled".into()));
+                m.insert(
+                    "error".into(),
+                    Json::Str(format!(
+                        "request on route {route:?} cancelled after {nfe_spent:.0} evals \
+                         ({nfe_refunded:.0} refunded)"
+                    )),
+                );
+                m.insert("route".into(), Json::Str(route.clone()));
+                if let Some(id) = request_id {
+                    m.insert("request_id".into(), Json::Str(id.clone()));
+                }
+                m.insert("nfe_spent".into(), Json::Num(*nfe_spent));
+                m.insert("nfe_refunded".into(), Json::Num(*nfe_refunded));
+            }
             Response::Health => {
                 m.insert("ok".into(), Json::Bool(true));
                 m.insert("op".into(), Json::Str("health".into()));
@@ -460,6 +489,26 @@ impl Response {
     pub fn parse(line: &str) -> Result<Json> {
         Json::parse(line)
     }
+}
+
+/// Data payload of one SSE `progress` event on the gateway streaming
+/// path (DESIGN.md §13). Lives here — beside the reply serializers —
+/// so every wire key the gateway emits originates in the protocol
+/// module. Terminal SSE events (`done`/`error`/`cancelled`) reuse
+/// [`Response::to_line`] verbatim as their payload.
+pub fn sse_progress_line(p: &crate::sampler::StepProgress) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("step".into(), Json::Num(p.step as f64));
+    m.insert("segment".into(), Json::Num(p.segment as f64));
+    m.insert("sigma_remaining".into(), Json::Num(p.sigma_remaining));
+    m.insert("nfe_spent".into(), Json::Num(p.nfe_spent as f64));
+    if !p.preview.is_empty() {
+        m.insert(
+            "preview".into(),
+            Json::Arr(p.preview.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+    }
+    Json::Obj(m).to_string()
 }
 
 #[cfg(test)]
@@ -764,6 +813,52 @@ mod tests {
         let v = Response::parse(&sd.to_line()).unwrap();
         assert_eq!(v.get("code").unwrap().as_str().unwrap(), "shutting_down");
         assert_eq!(v.get("route").unwrap().as_str().unwrap(), "toy");
+    }
+
+    #[test]
+    fn cancelled_serializes_with_code_and_refund() {
+        let c = Response::Cancelled {
+            route: "toy".into(),
+            request_id: Some("req-7".into()),
+            nfe_spent: 6.0,
+            nfe_refunded: 41.0,
+        };
+        let v = Response::parse(&c.to_line()).unwrap();
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "cancelled");
+        assert_eq!(v.get("route").unwrap().as_str().unwrap(), "toy");
+        assert_eq!(v.get("request_id").unwrap().as_str().unwrap(), "req-7");
+        assert_eq!(v.get("nfe_spent").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(v.get("nfe_refunded").unwrap().as_f64().unwrap(), 41.0);
+        // anonymous cancellations omit the id, like SampleOk does
+        let c = Response::Cancelled {
+            route: "toy".into(),
+            request_id: None,
+            nfe_spent: 0.0,
+            nfe_refunded: 47.0,
+        };
+        let v = Response::parse(&c.to_line()).unwrap();
+        assert!(v.get("request_id").is_err());
+    }
+
+    #[test]
+    fn sse_progress_line_roundtrips() {
+        let p = crate::sampler::StepProgress {
+            step: 3,
+            segment: 1,
+            sigma_remaining: 0.5,
+            nfe_spent: 6,
+            preview: vec![0.25, -0.5],
+        };
+        let v = Json::parse(&sse_progress_line(&p)).unwrap();
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.get("segment").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("sigma_remaining").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(v.get("nfe_spent").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(v.get("preview").unwrap().as_vec_f64().unwrap(), vec![0.25, -0.5]);
+        // previewless progress omits the key entirely
+        let p = crate::sampler::StepProgress { preview: vec![], ..p };
+        assert!(Json::parse(&sse_progress_line(&p)).unwrap().get("preview").is_err());
     }
 
     #[test]

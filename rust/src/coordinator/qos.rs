@@ -93,6 +93,11 @@ pub enum ShedCause {
     Shutdown,
     /// the route's batcher thread died; the watchdog failed it closed
     RouteDown,
+    /// the request's cancel token tripped (client disconnect, explicit
+    /// `POST /cancel/{request_id}`, or a superseding request) before or
+    /// during integration — a first-class outcome in the accounting
+    /// invariant: `sent == served + errors + sheds + expiries + cancelled`
+    Cancelled,
 }
 
 /// QoS policy knobs, one per mechanism (see the module docs).

@@ -52,6 +52,7 @@ use crate::coordinator::hub::EngineHub;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Response, SampleRequest};
 use crate::coordinator::qos::{DrrScheduler, Inbox, PushRejected, QosPolicy, ShedCause};
+use crate::sampler::RunCtl;
 use crate::util::{lock_unpoisoned, Json, ThreadPool};
 use crate::Result;
 
@@ -255,6 +256,26 @@ impl Router {
     /// exactly one response", not "the request was accepted"); an unknown
     /// dataset or a stopped router are hard `Err`s.
     pub fn submit(&self, req: SampleRequest) -> Result<mpsc::Receiver<Response>> {
+        self.submit_inner(req, None)
+    }
+
+    /// [`Router::submit`] with a streaming [`RunCtl`] attached (gateway
+    /// path): the cancel token and progress hook ride the [`Pending`]
+    /// into the batcher, which isolates the request in its own batch
+    /// group and threads the control into the engine.
+    pub fn submit_with_ctl(
+        &self,
+        req: SampleRequest,
+        ctl: RunCtl,
+    ) -> Result<mpsc::Receiver<Response>> {
+        self.submit_inner(req, Some(ctl))
+    }
+
+    fn submit_inner(
+        &self,
+        req: SampleRequest,
+        ctl: Option<RunCtl>,
+    ) -> Result<mpsc::Receiver<Response>> {
         anyhow::ensure!(!self.stop.load(Ordering::SeqCst), "router stopped");
         let route = self.routes.get(&req.dataset).ok_or_else(|| {
             anyhow::anyhow!(
@@ -278,7 +299,11 @@ impl Router {
             let _ = rtx.send(Response::RouteDown { route: req.dataset.clone() });
             return Ok(rrx);
         }
-        match route.inbox.try_push(Pending::new(req, rtx)) {
+        let mut pending = Pending::new(req, rtx);
+        if let Some(ctl) = ctl {
+            pending = pending.with_ctl(ctl);
+        }
+        match route.inbox.try_push(pending) {
             Ok(()) => {}
             Err(PushRejected::Full { pending, outstanding, .. }) => {
                 self.metrics.record_shed(&pending.req.dataset, ShedCause::QueueFull);

@@ -41,6 +41,10 @@ pub struct ServerConfig {
     /// batchers (batcher_panic); eval faults are wired at the hub
     /// ([`EngineHub::apply_chaos`]).
     pub chaos: Option<Arc<FaultPlan>>,
+    /// optional HTTP/SSE gateway bind address (`--http-addr`, DESIGN.md
+    /// §13). `None` — the default — starts no listener and leaves the
+    /// socket serving path byte-identical to the pre-gateway server.
+    pub http_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -51,6 +55,7 @@ impl Default for ServerConfig {
             qos: QosPolicy::default(),
             pool_threads: 0,
             chaos: None,
+            http_addr: None,
         }
     }
 }
@@ -81,6 +86,8 @@ pub struct Server {
     accept_join: Option<std::thread::JoinHandle<()>>,
     /// kept so shutdown can stop/join the batcher threads and worker pool
     router: Arc<Router>,
+    /// the HTTP/SSE front-end, when `cfg.http_addr` asked for one.
+    gateway: Option<crate::gateway::Gateway>,
 }
 
 impl Server {
@@ -116,6 +123,8 @@ impl Server {
 
         let stop2 = stop.clone();
         let router2 = router.clone();
+        let metrics2 = metrics.clone();
+        let hub2 = hub.clone();
         let accept_join = std::thread::Builder::new()
             .name("sdm-accept".into())
             .spawn(move || {
@@ -149,7 +158,24 @@ impl Server {
                 }
             })?;
 
-        Ok(Server { local_addr, stop, accept_join: Some(accept_join), router })
+        let gateway = match &cfg.http_addr {
+            Some(http_addr) => Some(crate::gateway::Gateway::start(
+                http_addr,
+                router.clone(),
+                metrics2,
+                hub2,
+                stop.clone(),
+                local_addr,
+            )?),
+            None => None,
+        };
+
+        Ok(Server { local_addr, stop, accept_join: Some(accept_join), router, gateway })
+    }
+
+    /// Bound address of the HTTP/SSE gateway, when one was configured.
+    pub fn http_addr(&self) -> Option<std::net::SocketAddr> {
+        self.gateway.as_ref().map(|g| g.local_addr)
     }
 
     /// Request shutdown, join the accept loop, then stop the router: the
@@ -159,6 +185,11 @@ impl Server {
     /// `Router::shutdown`).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // the gateway goes first: its streaming loops hold router reply
+        // channels, and stopping it cancels any in-flight streams
+        if let Some(g) = self.gateway.take() {
+            g.shutdown();
+        }
         // unblock the accept loop
         let _ = TcpStream::connect(self.local_addr);
         if let Some(j) = self.accept_join.take() {

@@ -1,0 +1,340 @@
+//! Minimal HTTP/1.1 request parsing for the gateway (DESIGN.md §13).
+//!
+//! Supported subset, deliberately small: `GET`/`POST`, a request-target
+//! of path + optional query string, headers up to fixed bounds, and an
+//! optional body that is read and *discarded* (no route consumes one).
+//! Everything else — other methods, oversized lines, absurd header
+//! counts, torn requests — is a structured [`HttpError`] the caller
+//! turns into a 4xx/5xx response instead of a hang or a panic.
+
+use std::io::BufRead;
+
+/// Longest accepted request line or header line, bytes.
+pub const MAX_LINE: usize = 8 * 1024;
+/// Most headers accepted on one request.
+pub const MAX_HEADERS: usize = 64;
+/// Largest request body read (and discarded), bytes.
+pub const MAX_BODY: usize = 64 * 1024;
+
+/// A parsed request head.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    /// `GET` or `POST` (anything else fails parse with `MethodNotAllowed`).
+    pub method: String,
+    /// decoded path, query string stripped (e.g. `/cancel/req-1`).
+    pub path: String,
+    /// decoded `key=value` pairs from the query string, in order.
+    pub query: Vec<(String, String)>,
+}
+
+impl HttpRequest {
+    /// First query value for `key`, if present.
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request failed to parse, mapped to a status by the caller.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// the peer closed before a full request arrived (torn request).
+    Closed,
+    /// transport error while reading.
+    Io(String),
+    /// request line or header line over [`MAX_LINE`] — 431.
+    LineTooLong,
+    /// more than [`MAX_HEADERS`] header lines — 431.
+    TooManyHeaders,
+    /// body over [`MAX_BODY`] — 413.
+    BodyTooLarge,
+    /// malformed request line / header — 400.
+    Malformed(String),
+    /// a method other than GET/POST — 405.
+    MethodNotAllowed(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed mid-request"),
+            HttpError::Io(e) => write!(f, "transport error: {e}"),
+            HttpError::LineTooLong => write!(f, "request or header line over {MAX_LINE} bytes"),
+            HttpError::TooManyHeaders => write!(f, "more than {MAX_HEADERS} headers"),
+            HttpError::BodyTooLarge => write!(f, "request body over {MAX_BODY} bytes"),
+            HttpError::Malformed(why) => write!(f, "malformed request: {why}"),
+            HttpError::MethodNotAllowed(m) => write!(f, "method {m:?} not allowed"),
+        }
+    }
+}
+
+impl HttpError {
+    /// The HTTP status this error answers with.
+    pub fn status(&self) -> (u16, &'static str) {
+        match self {
+            HttpError::Closed | HttpError::Io(_) => (400, "Bad Request"),
+            HttpError::LineTooLong | HttpError::TooManyHeaders => {
+                (431, "Request Header Fields Too Large")
+            }
+            HttpError::BodyTooLarge => (413, "Content Too Large"),
+            HttpError::Malformed(_) => (400, "Bad Request"),
+            HttpError::MethodNotAllowed(_) => (405, "Method Not Allowed"),
+        }
+    }
+}
+
+/// Read one CRLF- (or LF-) terminated line with a hard length bound.
+fn read_line_bounded(reader: &mut dyn BufRead) -> Result<String, HttpError> {
+    let mut buf = Vec::with_capacity(128);
+    loop {
+        let mut byte = [0u8; 1];
+        match std::io::Read::read(reader, &mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Err(HttpError::Closed);
+                }
+                break;
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+                if buf.len() > MAX_LINE {
+                    return Err(HttpError::LineTooLong);
+                }
+            }
+            Err(e) => return Err(HttpError::Io(e.to_string())),
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| HttpError::Malformed("non-UTF-8 bytes".into()))
+}
+
+/// Percent-decode one query component (`+` also decodes to space).
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3);
+                match hex.and_then(|h| std::str::from_utf8(h).ok()).and_then(|h| {
+                    u8::from_str_radix(h, 16).ok()
+                }) {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Split a request-target into (path, decoded query pairs).
+fn split_target(target: &str) -> (String, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (percent_decode(target), Vec::new()),
+        Some((path, qs)) => {
+            let query = qs
+                .split('&')
+                .filter(|p| !p.is_empty())
+                .map(|pair| match pair.split_once('=') {
+                    Some((k, v)) => (percent_decode(k), percent_decode(v)),
+                    None => (percent_decode(pair), String::new()),
+                })
+                .collect();
+            (percent_decode(path), query)
+        }
+    }
+}
+
+/// Read and parse one request head off `reader`, consuming (and
+/// discarding) any `Content-Length` body so the connection could in
+/// principle be reused. Every bound violation is a typed error.
+pub fn read_request(reader: &mut dyn BufRead) -> Result<HttpRequest, HttpError> {
+    let request_line = read_line_bounded(reader)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("request line missing target".into()))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("request line missing version".into()))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+    }
+    if method != "GET" && method != "POST" {
+        return Err(HttpError::MethodNotAllowed(method));
+    }
+    let mut content_length = 0usize;
+    let mut n_headers = 0usize;
+    loop {
+        let line = match read_line_bounded(reader) {
+            Ok(l) => l,
+            // EOF after the request line: headers were torn off
+            Err(HttpError::Closed) => return Err(HttpError::Malformed("torn headers".into())),
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(HttpError::TooManyHeaders);
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("header without colon: {line:?}")))?;
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| HttpError::Malformed("bad content-length".into()))?;
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(HttpError::BodyTooLarge);
+    }
+    // drain the body; no gateway route reads one
+    let mut remaining = content_length;
+    let mut sink = [0u8; 512];
+    while remaining > 0 {
+        let take = remaining.min(sink.len());
+        match std::io::Read::read(reader, &mut sink[..take]) {
+            Ok(0) => return Err(HttpError::Malformed("body shorter than content-length".into())),
+            Ok(n) => remaining -= n,
+            Err(e) => return Err(HttpError::Io(e.to_string())),
+        }
+    }
+    let (path, query) = split_target(target);
+    Ok(HttpRequest { method, path, query })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<HttpRequest, HttpError> {
+        let mut r = BufReader::new(raw.as_bytes());
+        read_request(&mut r)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /stream?dataset=toy&n=4&plan=euler%40max..0 HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/stream");
+        assert_eq!(r.query_get("dataset"), Some("toy"));
+        assert_eq!(r.query_get("n"), Some("4"));
+        // percent-decoding restores the plan grammar's `@`
+        assert_eq!(r.query_get("plan"), Some("euler@max..0"));
+        assert_eq!(r.query_get("missing"), None);
+    }
+
+    #[test]
+    fn parses_post_and_drains_body() {
+        let raw = "POST /cancel/req-1 HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        let mut r = BufReader::new(raw.as_bytes());
+        let req = read_request(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/cancel/req-1");
+        // the body was consumed: the reader is at EOF
+        let mut rest = String::new();
+        std::io::Read::read_to_string(&mut r, &mut rest).unwrap();
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn lf_only_lines_parse_like_crlf() {
+        let r = parse("GET /healthz HTTP/1.1\nHost: x\n\n").unwrap();
+        assert_eq!(r.path, "/healthz");
+    }
+
+    #[test]
+    fn torn_requests_are_typed_errors_not_hangs() {
+        // empty stream: closed before anything arrived
+        assert_eq!(parse(""), Err(HttpError::Closed));
+        // request line but headers torn off mid-stream
+        assert!(matches!(
+            parse("GET /healthz HTTP/1.1\r\nHost: x"),
+            Err(HttpError::Malformed(_))
+        ));
+        // body shorter than its declared length
+        assert!(matches!(
+            parse("POST /cancel/x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn bad_methods_and_versions_are_rejected() {
+        assert_eq!(
+            parse("DELETE /stream HTTP/1.1\r\n\r\n"),
+            Err(HttpError::MethodNotAllowed("DELETE".into()))
+        );
+        assert!(matches!(
+            parse("GET /stream SPDY/3\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(parse("\r\n\r\n"), Err(HttpError::Malformed(_))));
+        let (code, _) = HttpError::MethodNotAllowed("DELETE".into()).status();
+        assert_eq!(code, 405);
+    }
+
+    #[test]
+    fn oversized_lines_headers_and_bodies_are_bounded() {
+        let long_target = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE + 10));
+        assert_eq!(parse(&long_target), Err(HttpError::LineTooLong));
+
+        let mut many = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            many.push_str(&format!("X-H-{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        assert_eq!(parse(&many), Err(HttpError::TooManyHeaders));
+
+        let big_body = format!(
+            "POST /cancel/x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        assert_eq!(parse(&big_body), Err(HttpError::BodyTooLarge));
+        let (code, _) = HttpError::BodyTooLarge.status();
+        assert_eq!(code, 413);
+    }
+
+    #[test]
+    fn query_decoding_handles_plus_junk_and_empty_pairs() {
+        let r = parse("GET /stream?a=1+2&b=%zz&&c&d=%2C HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(r.query_get("a"), Some("1 2"));
+        // malformed escapes pass through literally instead of erroring
+        assert_eq!(r.query_get("b"), Some("%zz"));
+        assert_eq!(r.query_get("c"), Some(""));
+        assert_eq!(r.query_get("d"), Some(","));
+    }
+}

@@ -1,0 +1,516 @@
+//! Streaming HTTP/SSE gateway (DESIGN.md §13): a hand-rolled HTTP/1.1
+//! front-end over the coordinator, streaming per-step sampling progress
+//! as Server-Sent Events with mid-sample cancellation.
+//!
+//! Routes:
+//! - `GET  /stream?dataset=..&n=..&...` — run one sample request and
+//!   stream `progress` events (one per solver step), terminated by
+//!   exactly one `done` / `error` / `cancelled` event. Query keys mirror
+//!   the socket protocol's sample fields; `preview=K` additionally asks
+//!   for K downsampled first-row entries of x_t per event.
+//! - `POST /cancel/{request_id}` — trip the cancel token of the named
+//!   in-flight stream; the solver exits at its next step boundary.
+//! - `GET  /healthz`, `GET /stats` — probe and metrics snapshot.
+//! - `POST /shutdown` — stop the whole server (gateway + socket front).
+//! - `GET  /` — a self-contained browser demo page.
+//!
+//! Cancellation has three triggers, all tripping the same shared-atomic
+//! [`CancelToken`]: an explicit `POST /cancel`, a superseding `/stream`
+//! reusing the same `request_id`, and a dead client socket (detected on
+//! the next progress write). The engine checks the token once per solver
+//! step — a single relaxed atomic load — aborts with exact per-segment
+//! NFE attribution, and the batcher replies `cancelled` with the refund
+//! estimate, counted per route as `cancelled`/`nfe_refunded` in `stats`.
+
+pub mod http;
+pub mod sse;
+pub mod sse_client;
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::coordinator::hub::EngineHub;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::protocol::{sse_progress_line, Request, Response, SampleRequest};
+use crate::coordinator::router::Router;
+use crate::sampler::{CancelToken, ProgressHook, RunCtl, StepProgress};
+use crate::util::{lock_unpoisoned, Json};
+use crate::Result;
+
+use self::http::{read_request, HttpError, HttpRequest};
+
+/// How often the streaming loop wakes to poll the reply channel while
+/// waiting for the next progress event.
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// In-flight cancel tokens keyed by `request_id`, so `POST /cancel/{id}`
+/// and supersession can reach a stream started on another connection.
+/// Entries carry a registration serial: deregistration is a compare-and-
+/// remove, so a stream tearing down can never evict the token of a newer
+/// stream that superseded it.
+pub struct CancelRegistry {
+    // lock-order: 13
+    entries: Mutex<BTreeMap<String, (u64, CancelToken)>>,
+    next_serial: AtomicU64,
+}
+
+impl Default for CancelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CancelRegistry {
+    pub fn new() -> CancelRegistry {
+        CancelRegistry {
+            entries: Mutex::new(BTreeMap::new()),
+            next_serial: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a stream's token under its `request_id`, returning the
+    /// registration serial. A previous holder of the id is cancelled —
+    /// a superseding request aborts the older stream mid-sample.
+    pub fn register(&self, id: &str, token: CancelToken) -> u64 {
+        let serial = self.next_serial.fetch_add(1, Ordering::Relaxed);
+        let old = lock_unpoisoned(&self.entries).insert(id.to_string(), (serial, token));
+        if let Some((_, old_token)) = old {
+            old_token.cancel();
+        }
+        serial
+    }
+
+    /// Trip the token registered under `id`. Returns whether one existed.
+    pub fn cancel(&self, id: &str) -> bool {
+        match lock_unpoisoned(&self.entries).get(id) {
+            Some((_, token)) => {
+                token.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove the entry for `id` iff it still belongs to registration
+    /// `serial` (a superseding stream's newer entry is left alone).
+    pub fn deregister(&self, id: &str, serial: u64) {
+        let mut entries = lock_unpoisoned(&self.entries);
+        if entries.get(id).map(|(s, _)| *s) == Some(serial) {
+            entries.remove(id);
+        }
+    }
+
+    /// Registered streams (tests, stats).
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Shared state every gateway connection thread sees.
+struct GatewayCtx {
+    router: Arc<Router>,
+    metrics: Arc<ServerMetrics>,
+    hub: Arc<EngineHub>,
+    registry: Arc<CancelRegistry>,
+    /// the *server's* stop flag: `POST /shutdown` raises it.
+    server_stop: Arc<AtomicBool>,
+    /// gateway accept-loop stop.
+    gw_stop: Arc<AtomicBool>,
+    /// the socket front-end's address, to wake its accept loop on shutdown.
+    tcp_addr: SocketAddr,
+    /// this gateway's own address, to wake our accept loop on shutdown.
+    http_addr: SocketAddr,
+}
+
+/// The HTTP/SSE front-end. Owned by [`crate::coordinator::Server`];
+/// stopped before the router so in-flight streams cancel cleanly.
+pub struct Gateway {
+    pub local_addr: SocketAddr,
+    gw_stop: Arc<AtomicBool>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+    registry: Arc<CancelRegistry>,
+}
+
+impl Gateway {
+    /// Bind `addr` and serve in background threads (thread per
+    /// connection, mirroring the socket front-end's design).
+    pub fn start(
+        addr: &str,
+        router: Arc<Router>,
+        metrics: Arc<ServerMetrics>,
+        hub: Arc<EngineHub>,
+        server_stop: Arc<AtomicBool>,
+        tcp_addr: SocketAddr,
+    ) -> Result<Gateway> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let gw_stop = Arc::new(AtomicBool::new(false));
+        let registry = Arc::new(CancelRegistry::new());
+        let ctx = Arc::new(GatewayCtx {
+            router,
+            metrics,
+            hub,
+            registry: registry.clone(),
+            server_stop: server_stop.clone(),
+            gw_stop: gw_stop.clone(),
+            tcp_addr,
+            http_addr: local_addr,
+        });
+        let accept_join = std::thread::Builder::new()
+            .name("sdm-http-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if ctx.gw_stop.load(Ordering::SeqCst)
+                        || ctx.server_stop.load(Ordering::SeqCst)
+                    {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            stream.set_nodelay(true).ok();
+                            let ctx = ctx.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("sdm-http".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, &ctx);
+                                });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Gateway {
+            local_addr,
+            gw_stop,
+            accept_join: Some(accept_join),
+            registry,
+        })
+    }
+
+    /// In-flight streams registered for cancellation (tests).
+    pub fn registered_streams(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Stop accepting and join the accept loop. Connection threads wind
+    /// down on their own: streams end when the router answers them.
+    pub fn shutdown(mut self) {
+        self.gw_stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Serve one connection: parse a request, route it, answer, close.
+fn handle_conn(stream: TcpStream, ctx: &GatewayCtx) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let req = match read_request(&mut reader) {
+        Ok(r) => r,
+        Err(HttpError::Closed) => return Ok(()), // probe/dead connection
+        Err(e) => {
+            let (status, reason) = e.status();
+            let body = error_body(&format!("{e}"));
+            let _ = writer.write_all(sse::json_response(status, reason, &body).as_bytes());
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/stream") => handle_stream(&mut writer, &req, ctx),
+        ("GET", "/healthz") => {
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("ready".to_string(), Json::Bool(ctx.router.is_ready()));
+            let body = Json::Obj(m).to_string();
+            let _ = writer.write_all(sse::json_response(200, "OK", &body).as_bytes());
+            Ok(())
+        }
+        ("GET", "/stats") => {
+            let snap = ctx.metrics.snapshot_with(vec![
+                ("schedule_cache".into(), ctx.hub.cache_stats()),
+                ("qos".into(), ctx.router.qos_stats()),
+            ]);
+            let body = Response::Stats(snap).to_line();
+            let _ = writer.write_all(sse::json_response(200, "OK", &body).as_bytes());
+            Ok(())
+        }
+        ("POST", "/shutdown") => {
+            // stop the whole server: raise the shared flag, then wake
+            // both accept loops so they observe it now
+            ctx.server_stop.store(true, Ordering::SeqCst);
+            ctx.gw_stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(ctx.tcp_addr);
+            let _ = TcpStream::connect(ctx.http_addr);
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            let body = Json::Obj(m).to_string();
+            let _ = writer.write_all(sse::json_response(200, "OK", &body).as_bytes());
+            Ok(())
+        }
+        ("POST", path) if path.starts_with("/cancel/") => {
+            let id = &path["/cancel/".len()..];
+            let found = !id.is_empty() && ctx.registry.cancel(id);
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("found".to_string(), Json::Bool(found));
+            let body = Json::Obj(m).to_string();
+            let (status, reason) = if found { (200, "OK") } else { (404, "Not Found") };
+            let _ = writer.write_all(sse::json_response(status, reason, &body).as_bytes());
+            Ok(())
+        }
+        ("GET", "/") => {
+            let page = include_str!("../../../examples/sse_browser_demo.html");
+            let _ = writer
+                .write_all(sse::response(200, "OK", "text/html; charset=utf-8", page).as_bytes());
+            Ok(())
+        }
+        _ => {
+            let body = error_body(&format!("no route {} {}", req.method, req.path));
+            let _ = writer.write_all(sse::json_response(404, "Not Found", &body).as_bytes());
+            Ok(())
+        }
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    // reuse the protocol's error shape so HTTP and socket clients see
+    // the same `{"ok":false,"error":...}` contract
+    Response::Err(msg.to_string()).to_line()
+}
+
+/// Query keys that carry numbers on the socket protocol.
+const NUM_KEYS: &[&str] = &[
+    "n", "steps", "seed", "class", "deadline_ms", "tau_k", "eta_min", "eta_max", "p", "q",
+    "rho", "s_churn", "s_min", "s_max", "s_noise", "pilot_mult", "pilot_rows",
+];
+
+/// Translate `/stream` query parameters into a socket-protocol sample
+/// request plus the gateway-only `preview` knob. Reuses
+/// [`Request::parse`] so the two front-ends can never drift.
+fn build_sample_request(req: &HttpRequest) -> Result<(SampleRequest, usize)> {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str("sample".into()));
+    let mut preview = 0usize;
+    for (k, v) in &req.query {
+        if k == "preview" {
+            preview = v.parse::<usize>().unwrap_or(0).min(64);
+            continue;
+        }
+        let value = if NUM_KEYS.contains(&k.as_str()) {
+            let num: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("query param {k}={v:?} is not a number"))?;
+            Json::Num(num)
+        } else if v == "true" || v == "false" {
+            Json::Bool(v == "true")
+        } else {
+            Json::Str(v.clone())
+        };
+        m.insert(k.clone(), value);
+    }
+    let line = Json::Obj(m).to_string();
+    match Request::parse(&line)? {
+        Request::Sample(s) => Ok((s, preview)),
+        // unreachable: op is pinned to "sample" above
+        _ => anyhow::bail!("query did not describe a sample request"),
+    }
+}
+
+/// Serve `GET /stream`: submit the request with a streaming [`RunCtl`]
+/// and relay per-step progress until the terminal reply.
+fn handle_stream(writer: &mut TcpStream, req: &HttpRequest, ctx: &GatewayCtx) -> Result<()> {
+    let (sample, preview_dims) = match build_sample_request(req) {
+        Ok(x) => x,
+        Err(e) => {
+            let body = error_body(&format!("bad stream request: {e:#}"));
+            let _ = writer.write_all(sse::json_response(400, "Bad Request", &body).as_bytes());
+            return Ok(());
+        }
+    };
+    let token = CancelToken::new();
+    let registration = sample
+        .request_id
+        .clone()
+        .map(|id| (id.clone(), ctx.registry.register(&id, token.clone())));
+    let (ptx, prx) = mpsc::channel::<StepProgress>();
+    let hook: ProgressHook = Arc::new(move |p: StepProgress| {
+        // the gateway thread may already be gone (dead client); dropping
+        // the event is correct — the engine exits on the token instead
+        let _ = ptx.send(p);
+    });
+    let ctl = RunCtl {
+        cancel: Some(token.clone()),
+        progress: Some(hook),
+        preview_dims,
+    };
+    let reply_rx = match ctx.router.submit_with_ctl(sample, ctl) {
+        Ok(rx) => rx,
+        Err(e) => {
+            if let Some((id, serial)) = &registration {
+                ctx.registry.deregister(id, *serial);
+            }
+            let body = error_body(&format!("{e:#}"));
+            let _ = writer
+                .write_all(sse::json_response(500, "Internal Server Error", &body).as_bytes());
+            return Ok(());
+        }
+    };
+    let mut client_gone = writer.write_all(sse::stream_head().as_bytes()).is_err();
+    if client_gone {
+        token.cancel();
+    }
+    loop {
+        // relay progress while the engine runs
+        match prx.recv_timeout(POLL_TICK) {
+            Ok(p) => {
+                if !client_gone
+                    && sse::write_event(writer, "progress", &sse_progress_line(&p)).is_err()
+                {
+                    // dead socket: cancel and keep draining until the
+                    // reply lands, so the refund is recorded server-side
+                    client_gone = true;
+                    token.cancel();
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            // the engine dropped its hook: the reply is imminent
+            Err(mpsc::RecvTimeoutError::Disconnected) => {}
+        }
+        match reply_rx.try_recv() {
+            Ok(resp) => {
+                // flush any progress the engine emitted before replying
+                while let Ok(p) = prx.try_recv() {
+                    if !client_gone
+                        && sse::write_event(writer, "progress", &sse_progress_line(&p)).is_err()
+                    {
+                        client_gone = true;
+                    }
+                }
+                if !client_gone {
+                    let event = match &resp {
+                        Response::SampleOk { .. } => "done",
+                        Response::Cancelled { .. } => "cancelled",
+                        _ => "error",
+                    };
+                    let _ = sse::write_event(writer, event, &resp.to_line());
+                }
+                break;
+            }
+            Err(mpsc::TryRecvError::Empty) => {}
+            Err(mpsc::TryRecvError::Disconnected) => {
+                if !client_gone {
+                    let _ = sse::write_event(
+                        writer,
+                        "error",
+                        &error_body("router dropped the request"),
+                    );
+                }
+                break;
+            }
+        }
+    }
+    if let Some((id, serial)) = &registration {
+        ctx.registry.deregister(id, *serial);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_registers_cancels_and_deregisters() {
+        let reg = CancelRegistry::new();
+        let t1 = CancelToken::new();
+        let s1 = reg.register("a", t1.clone());
+        assert_eq!(reg.len(), 1);
+        assert!(!t1.is_cancelled());
+        assert!(reg.cancel("a"));
+        assert!(t1.is_cancelled());
+        assert!(!reg.cancel("missing"));
+        reg.deregister("a", s1);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn superseding_registration_cancels_the_older_stream() {
+        let reg = CancelRegistry::new();
+        let t1 = CancelToken::new();
+        let s1 = reg.register("a", t1.clone());
+        let t2 = CancelToken::new();
+        let s2 = reg.register("a", t2.clone());
+        // the older stream was cancelled by the newer one
+        assert!(t1.is_cancelled());
+        assert!(!t2.is_cancelled());
+        // the older stream's teardown must not evict the newer token
+        reg.deregister("a", s1);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.cancel("a"));
+        assert!(t2.is_cancelled());
+        reg.deregister("a", s2);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn query_translation_matches_the_socket_protocol() {
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/stream".into(),
+            query: vec![
+                ("dataset".into(), "toy".into()),
+                ("n".into(), "4".into()),
+                ("solver".into(), "heun".into()),
+                ("steps".into(), "8".into()),
+                ("seed".into(), "7".into()),
+                ("priority".into(), "interactive".into()),
+                ("request_id".into(), "req-9".into()),
+                ("preview".into(), "8".into()),
+                ("return_samples".into(), "true".into()),
+            ],
+        };
+        let (s, preview) = build_sample_request(&req).unwrap();
+        assert_eq!(s.dataset, "toy");
+        assert_eq!(s.n, 4);
+        assert_eq!(s.steps, 8);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.request_id.as_deref(), Some("req-9"));
+        assert!(s.return_samples);
+        assert_eq!(preview, 8);
+
+        // numeric-looking request ids survive as strings
+        let req2 = HttpRequest {
+            method: "GET".into(),
+            path: "/stream".into(),
+            query: vec![
+                ("dataset".into(), "toy".into()),
+                ("n".into(), "1".into()),
+                ("request_id".into(), "123".into()),
+            ],
+        };
+        let (s2, _) = build_sample_request(&req2).unwrap();
+        assert_eq!(s2.request_id.as_deref(), Some("123"));
+
+        // bad numbers fail fast with the offending key named
+        let req3 = HttpRequest {
+            method: "GET".into(),
+            path: "/stream".into(),
+            query: vec![("dataset".into(), "toy".into()), ("n".into(), "lots".into())],
+        };
+        let err = format!("{:#}", build_sample_request(&req3).unwrap_err());
+        assert!(err.contains("n="), "{err}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Server-Sent-Events framing and plain HTTP responses for the gateway.
+//!
+//! SSE is the simplest standard streaming shape a browser `EventSource`
+//! speaks: a `text/event-stream` body of `event:`/`data:` line pairs,
+//! each record terminated by a blank line. The gateway streams one
+//! `progress` record per solver step and terminates with exactly one of
+//! `done` / `error` / `cancelled` (DESIGN.md §13). Payload JSON is built
+//! by the protocol module ([`crate::coordinator::protocol`]) so wire keys
+//! have a single origin.
+
+use std::io::Write;
+
+/// Response head opening an SSE stream. `Connection: close` — the
+/// gateway is one-request-per-connection by design.
+pub fn stream_head() -> &'static str {
+    "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\nconnection: close\r\n\r\n"
+}
+
+/// Write one SSE record. `data` must be a single line (the gateway's
+/// payloads are JSON lines, which never embed raw newlines).
+pub fn write_event(w: &mut dyn Write, event: &str, data: &str) -> std::io::Result<()> {
+    // one write call per record so a disconnect tears between records,
+    // not inside one
+    let frame = format!("event: {event}\ndata: {data}\n\n");
+    w.write_all(frame.as_bytes())?;
+    w.flush()
+}
+
+/// A complete non-streaming HTTP response.
+pub fn response(status: u16, reason: &str, content_type: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// A JSON-bodied response, the gateway's default shape.
+pub fn json_response(status: u16, reason: &str, body: &str) -> String {
+    response(status, reason, "application/json", body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_frames_terminate_with_blank_line() {
+        let mut buf = Vec::new();
+        write_event(&mut buf, "progress", r#"{"step":1}"#).unwrap();
+        assert_eq!(
+            String::from_utf8(buf).unwrap(),
+            "event: progress\ndata: {\"step\":1}\n\n"
+        );
+    }
+
+    #[test]
+    fn responses_carry_length_and_close() {
+        let r = json_response(200, "OK", r#"{"ok":true}"#);
+        assert!(r.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(r.contains("content-length: 11\r\n"));
+        assert!(r.contains("connection: close\r\n"));
+        assert!(r.ends_with(r#"{"ok":true}"#));
+    }
+
+    #[test]
+    fn stream_head_declares_event_stream() {
+        assert!(stream_head().contains("text/event-stream"));
+        assert!(stream_head().ends_with("\r\n\r\n"));
+    }
+}

@@ -1,0 +1,223 @@
+//! Blocking SSE client for the gateway: the load generator's streaming
+//! mode, the e2e tests, and the CI smoke all drive the gateway through
+//! this module. Also carries the tiny plain-HTTP helpers (`GET`/`POST`
+//! one-shots) those callers need for `/healthz`, `/stats`, `/cancel`,
+//! and `/shutdown`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::util::Json;
+use crate::Result;
+
+/// How long a stream may sit with no event before the client gives up.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Client-side early-stop policy for one streamed sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EarlyStop {
+    /// read the stream to its terminal event.
+    Never,
+    /// after this many progress events, `POST /cancel/{request_id}` on a
+    /// side connection and keep reading until the `cancelled` terminal.
+    CancelAfter(usize),
+    /// after this many progress events, drop the connection — the server
+    /// must notice the dead socket and cancel on its own.
+    DisconnectAfter(usize),
+}
+
+/// What one streamed sample produced.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// `progress` events observed.
+    pub progress_events: usize,
+    /// `nfe_spent` from the last progress event seen (0 if none).
+    pub last_nfe_spent: f64,
+    /// terminal event name: `done` / `error` / `cancelled`, or
+    /// `disconnected` when the policy dropped the connection.
+    pub terminal_event: String,
+    /// terminal event payload (`Json::Null` after a disconnect).
+    pub terminal: Json,
+}
+
+/// One parsed SSE record.
+struct SseRecord {
+    event: String,
+    data: String,
+}
+
+/// Read one SSE record (event/data lines up to a blank line). `Ok(None)`
+/// means the stream closed cleanly between records.
+fn read_record(reader: &mut BufReader<TcpStream>) -> Result<Option<SseRecord>> {
+    let mut event = String::new();
+    let mut data = String::new();
+    let mut saw_any = false;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("reading SSE stream")?;
+        if n == 0 {
+            anyhow::ensure!(!saw_any, "stream closed inside an SSE record");
+            return Ok(None);
+        }
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.is_empty() {
+            if saw_any {
+                return Ok(Some(SseRecord { event, data }));
+            }
+            continue;
+        }
+        saw_any = true;
+        if let Some(v) = line.strip_prefix("event:") {
+            event = v.trim().to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            data = v.trim().to_string();
+        }
+        // comment lines (":", per the SSE spec) and unknown fields are
+        // ignored, as a browser EventSource would
+    }
+}
+
+/// Open `GET /stream?{query}` against `addr` and consume the stream
+/// under `early` (see [`EarlyStop`]). When the policy cancels via POST,
+/// the `request_id` is taken from the query string — include one.
+pub fn stream_sample(addr: &str, query: &str, early: EarlyStop) -> Result<StreamOutcome> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    let mut writer = stream.try_clone()?;
+    write!(
+        writer,
+        "GET /stream?{query} HTTP/1.1\r\nhost: {addr}\r\naccept: text/event-stream\r\n\r\n"
+    )?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+
+    // status line + response headers
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("reading status line")?;
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "stream closed inside response headers");
+        if line.trim_end_matches(['\r', '\n']).is_empty() {
+            break;
+        }
+    }
+    anyhow::ensure!(code == 200, "stream refused: {}", status_line.trim());
+
+    let mut progress_events = 0usize;
+    let mut last_nfe_spent = 0.0f64;
+    let mut cancel_sent = false;
+    while let Some(rec) = read_record(&mut reader)? {
+        match rec.event.as_str() {
+            "progress" => {
+                progress_events += 1;
+                if let Ok(v) = Json::parse(&rec.data) {
+                    if let Ok(n) = v.get("nfe_spent").and_then(|x| x.as_f64()) {
+                        last_nfe_spent = n;
+                    }
+                }
+                match early {
+                    EarlyStop::DisconnectAfter(k) if progress_events >= k => {
+                        // drop both halves: the server must detect the
+                        // dead socket and cancel within a step
+                        return Ok(StreamOutcome {
+                            progress_events,
+                            last_nfe_spent,
+                            terminal_event: "disconnected".into(),
+                            terminal: Json::Null,
+                        });
+                    }
+                    EarlyStop::CancelAfter(k) if progress_events >= k && !cancel_sent => {
+                        cancel_sent = true;
+                        let id = query_value(query, "request_id").ok_or_else(|| {
+                            anyhow::anyhow!("CancelAfter requires request_id in the query")
+                        })?;
+                        let _ = http_post(addr, &format!("/cancel/{id}"))?;
+                    }
+                    _ => {}
+                }
+            }
+            // terminal events close the stream
+            "done" | "error" | "cancelled" => {
+                return Ok(StreamOutcome {
+                    progress_events,
+                    last_nfe_spent,
+                    terminal_event: rec.event,
+                    terminal: Json::parse(&rec.data)?,
+                });
+            }
+            _ => {}
+        }
+    }
+    anyhow::bail!("stream ended without a terminal event")
+}
+
+/// Extract one raw value from an already-encoded query string.
+fn query_value(query: &str, key: &str) -> Option<String> {
+    query
+        .split('&')
+        .find_map(|pair| pair.strip_prefix(&format!("{key}=")))
+        .map(|v| v.to_string())
+}
+
+/// One-shot HTTP request returning (status, body).
+fn http_roundtrip(addr: &str, method: &str, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    write!(stream, "{method} {path} HTTP/1.1\r\nhost: {addr}\r\n\r\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "closed inside response headers");
+        if line.trim_end_matches(['\r', '\n']).is_empty() {
+            break;
+        }
+    }
+    let mut body = String::new();
+    std::io::Read::read_to_string(&mut reader, &mut body)?;
+    Ok((code, body))
+}
+
+/// `GET path` → (status, body).
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    http_roundtrip(addr, "GET", path)
+}
+
+/// `POST path` → (status, body).
+pub fn http_post(addr: &str, path: &str) -> Result<(u16, String)> {
+    http_roundtrip(addr, "POST", path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_value_extracts_raw_pairs() {
+        let q = "dataset=toy&n=4&request_id=req-7&steps=8";
+        assert_eq!(query_value(q, "request_id").as_deref(), Some("req-7"));
+        assert_eq!(query_value(q, "dataset").as_deref(), Some("toy"));
+        assert_eq!(query_value(q, "seed"), None);
+    }
+}

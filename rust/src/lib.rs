@@ -30,6 +30,7 @@ pub mod schedule;
 pub mod metrics;
 pub mod sampler;
 pub mod coordinator;
+pub mod gateway;
 pub mod experiments;
 pub mod perf;
 pub mod analyze;

@@ -248,6 +248,12 @@ fn serve(args: &Args) -> Result<()> {
     let dir = artifact_dir(args.opt("artifacts"));
     let backend = ModelBackend::from_name(&args.get("backend", "pjrt"))?;
     let addr = args.get("addr", "127.0.0.1:7433");
+    // --http-addr starts the HTTP/SSE gateway (DESIGN.md §13) beside the
+    // socket front-end; omit it and no listener (or per-step hook) exists
+    let http_addr = args.opt("http-addr");
+    // --toy: artifact-free hub over the built-in toy + synth16x64
+    // workloads (CI smoke, local gateway demos)
+    let toy_hub = args.has("toy");
     let pool_threads = args.get_usize("pool-threads", 0)?;
     let max_inflight = args.get_usize("max-inflight", 4)?;
     // native-oracle kernel evals row-shard across the worker pool from
@@ -269,8 +275,16 @@ fn serve(args: &Args) -> Result<()> {
     let mut cfg = ServerConfig { addr: addr.clone(), pool_threads, qos, ..Default::default() };
     cfg.policy.max_inflight = max_inflight;
     cfg.chaos = chaos.clone();
+    cfg.http_addr = http_addr.clone();
     let pool = Arc::new(sdm::util::ThreadPool::new(cfg.resolved_pool_threads()));
-    let mut hub = EngineHub::load_with(&dir, backend, cache)?;
+    let mut hub = if toy_hub {
+        EngineHub::from_infos(vec![
+            sdm::model::gmm::testmodel::toy().info,
+            sdm::model::gmm::testmodel::synthetic(16, 64).info,
+        ])
+    } else {
+        EngineHub::load_with(&dir, backend, cache)?
+    };
     if shard_min_rows > 0 {
         hub.attach_shard_pool(Arc::clone(&pool), shard_min_rows);
     }
@@ -284,6 +298,12 @@ fn serve(args: &Args) -> Result<()> {
         "sdm serving on {} (send {{\"op\":\"shutdown\"}} to stop)",
         server.local_addr
     );
+    if let Some(a) = server.http_addr() {
+        println!(
+            "sdm http/sse gateway on http://{a}/ \
+             (GET /stream, POST /cancel/{{request_id}}, POST /shutdown)"
+        );
+    }
     while !server.is_stopping() {
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
@@ -432,13 +452,25 @@ fn schedule(args: &Args) -> Result<()> {
 /// local experiments); otherwise `--addr` names a running server.
 fn loadgen(args: &Args) -> Result<()> {
     use sdm::coordinator::loadgen::{
-        append_qos_record, closed_loop_with, find_max_rps, open_loop, LoadOptions,
-        RequestTemplate, SloSearch, TraceProfile,
+        append_qos_record, closed_loop_with, find_max_rps, open_loop, sse_closed_loop,
+        LoadOptions, RequestTemplate, SloSearch, TraceProfile,
     };
     use sdm::util::{BreakerConfig, RetryPolicy};
 
     let in_process = args.has("in-process");
     let addr_flag = args.get("addr", "127.0.0.1:7433");
+    // SSE mode (DESIGN.md §13): stream samples from the HTTP gateway
+    // instead of the socket front-end, with a seeded early-stop policy
+    let sse = args.has("sse");
+    let http_addr_flag = args.opt("http-addr");
+    let cancel_rate = args.get_f64("cancel-rate", 0.0)?;
+    let disconnect_rate = args.get_f64("disconnect-rate", 0.0)?;
+    let stop_after = args.get_usize("stop-after", 2)?;
+    // trace-profile shaping (open/closed loop): per-priority mix and
+    // on/off burstiness
+    let priority_mix = args.has("priority-mix");
+    let burst_on_ms = args.get_f64("burst-on-ms", 0.0)?;
+    let burst_off_ms = args.get_f64("burst-off-ms", 0.0)?;
     let closed = args.has("closed-loop");
     let workers = args.get_usize("workers", 4)?;
     let per_worker = args.get_u64("requests-per-worker", 32)?;
@@ -493,11 +525,22 @@ fn loadgen(args: &Args) -> Result<()> {
         kernel_precision: kernel_precision.clone(),
         request_id: retry.then(|| "lg".to_string()),
     };
-    let mut profile = match (&dataset, in_process) {
-        (Some(ds), _) => TraceProfile::single(template(ds.clone())),
-        (None, true) => TraceProfile::single(template("toy".to_string())),
-        (None, false) => TraceProfile::standard(),
+    let default_ds = if in_process { "toy".to_string() } else { "cifar10g".to_string() };
+    let mut profile = if priority_mix {
+        TraceProfile::priority_mix(dataset.as_deref().unwrap_or(&default_ds), n, steps)
+    } else {
+        match (&dataset, in_process) {
+            (Some(ds), _) => TraceProfile::single(template(ds.clone())),
+            (None, true) => TraceProfile::single(template("toy".to_string())),
+            (None, false) => TraceProfile::standard(),
+        }
     };
+    if burst_on_ms > 0.0 && burst_off_ms > 0.0 {
+        profile = profile.bursty(
+            std::time::Duration::from_secs_f64(burst_on_ms / 1e3),
+            std::time::Duration::from_secs_f64(burst_off_ms / 1e3),
+        );
+    }
     profile.chaos = chaos_spec.clone();
 
     // in-process server over the native toy workloads (synth16x64 is the
@@ -508,6 +551,11 @@ fn loadgen(args: &Args) -> Result<()> {
             sdm::model::gmm::testmodel::synthetic(16, 64).info,
         ]);
         let mut cfg = ServerConfig::default();
+        if sse {
+            // SSE mode drives the gateway, so the in-process server
+            // needs one (ephemeral port)
+            cfg.http_addr = Some("127.0.0.1:0".to_string());
+        }
         if let Some(spec) = &chaos_spec {
             let chaos = Arc::new(sdm::chaos::FaultPlan::parse(spec, chaos_seed)?);
             hub.apply_chaos(Arc::clone(&chaos));
@@ -523,6 +571,36 @@ fn loadgen(args: &Args) -> Result<()> {
         .unwrap_or(addr_flag);
 
     let result = (|| -> Result<()> {
+        if sse {
+            let http_addr = match (&server, &http_addr_flag) {
+                (Some(s), _) => s
+                    .http_addr()
+                    .map(|a| a.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("in-process server started no gateway"))?,
+                (None, Some(a)) => a.clone(),
+                (None, None) => {
+                    anyhow::bail!("--sse needs --http-addr (or --in-process)")
+                }
+            };
+            let mut tpl = template(dataset.clone().unwrap_or(default_ds));
+            if cancel_rate > 0.0 && tpl.request_id.is_none() {
+                // POST /cancel/{id} needs an id to target
+                tpl.request_id = Some("lg".to_string());
+            }
+            let report = sse_closed_loop(
+                &http_addr, &tpl, workers, per_worker, cancel_rate, disconnect_rate,
+                stop_after, seed,
+            )?;
+            println!(
+                "sse closed-loop: {} workers x {} streams -> {} served, {} cancelled \
+                 ({:.1} NFE refunded), {} disconnected, {} errors, {} progress events \
+                 in {:.1}s",
+                workers, per_worker, report.served, report.cancelled, report.nfe_refunded,
+                report.disconnected, report.errors, report.progress_events, report.wall_s
+            );
+            println!("  latency (done streams): {}", report.latency.summary("us"));
+            return Ok(());
+        }
         if let Some(slo) = slo_p99_ms {
             let cfg = SloSearch {
                 slo_p99_ms: slo,
@@ -570,9 +648,10 @@ fn loadgen(args: &Args) -> Result<()> {
                 closed_loop_with(&addr, &profile, workers, per_worker, think, seed, &opts)?;
             println!(
                 "closed-loop: {} workers x {} reqs (think {:.1} ms) -> {:.1} req/s goodput, \
-                 {} errors, {} sheds, {} expiries  [trace {:016x}]",
+                 {} errors, {} sheds, {} expiries, {} cancelled  [trace {:016x}]",
                 workers, per_worker, think_ms, report.goodput_rps(),
-                report.errors, report.sheds, report.expiries, report.trace_hash
+                report.errors, report.sheds, report.expiries, report.cancelled,
+                report.trace_hash
             );
             println!("  latency: {}", report.latency.summary("us"));
             if retry {
@@ -678,7 +757,20 @@ fn print_help() {
          subcommands:\n\
          \x20 serve         start the TCP coordinator (--addr, --backend,\n\
          \x20               --pool-threads N, --max-inflight N, --shard-min-rows N\n\
-         \x20               [0 disables row-sharded native kernel evals])\n\
+         \x20               [0 disables row-sharded native kernel evals];\n\
+         \x20               --toy serves the built-in toy+synth16x64 hub, no\n\
+         \x20               artifacts needed)\n\
+         \x20               http/sse gateway [DESIGN.md S13]: --http-addr H:P\n\
+         \x20               adds a streaming HTTP front-end — GET /stream\n\
+         \x20               emits one progress event per solver step plus a\n\
+         \x20               done|error|cancelled terminal; POST\n\
+         \x20               /cancel/REQUEST_ID (or a dropped client socket, or\n\
+         \x20               a superseding request_id) aborts mid-sample at the\n\
+         \x20               next step boundary and refunds the remaining NFE\n\
+         \x20               budget (stats: cancelled, nfe_refunded); GET /\n\
+         \x20               serves a browser demo, GET /healthz + /stats probe,\n\
+         \x20               POST /shutdown stops the server; omitted => no\n\
+         \x20               listener, socket path byte-identical\n\
          \x20               schedule cache: --cache-capacity N (0=unbounded),\n\
          \x20               --cache-ttl-s SECS (0=never expire),\n\
          \x20               --no-cache-persist, --no-warm-start (serve defaults\n\
@@ -748,6 +840,17 @@ fn print_help() {
          \x20               submit; --chaos PLAN --chaos-seed S injects faults\n\
          \x20               into the --in-process server (conn_drop also drops\n\
          \x20               client connections under --retry)\n\
+         \x20               profiles: --priority-mix (interactive/batch/\n\
+         \x20               background 30/50/20 on one dataset),\n\
+         \x20               --burst-on-ms A --burst-off-ms B (open-loop on/off\n\
+         \x20               burst envelope)\n\
+         \x20               sse mode [DESIGN.md S13]: --sse streams samples\n\
+         \x20               from the http gateway (--http-addr H:P, or the\n\
+         \x20               --in-process server's own gateway); per-stream\n\
+         \x20               early-stop policy: --cancel-rate F (POST /cancel\n\
+         \x20               after --stop-after K progress events),\n\
+         \x20               --disconnect-rate F (drop the socket instead);\n\
+         \x20               reports served/cancelled/NFE-refunded/disconnected\n\
          \x20 bench-sampler denoiser-kernel + run_sampler perf harness; appends a\n\
          \x20               labeled run to BENCH_sampler.json (--smoke --label L --out F)\n\
          \x20 analyze       in-repo static analysis over rust/src (lock-order,\n\

@@ -19,7 +19,7 @@
 //! boundaries (they describe the trajectory, not the solver), and are
 //! reset around a PID segment, which leaves the knot grid entirely.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::diffusion::{kappa_hat_rel, Param, SigmaGrid};
@@ -49,6 +49,95 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig { rows: 64, seed: 0, class: None, trace: false }
+    }
+}
+
+/// Cooperative mid-sample cancellation (DESIGN.md §13): a shared flag the
+/// engine polls **once per solver step** (a single atomic load; with no
+/// token installed the check is a branch on a `None`). Tripping it makes
+/// the run return a partial [`RunResult`] with `cancelled: true` at the
+/// next step boundary — per-segment NFE attribution stays exact, and the
+/// evals *not* spent are estimated into `nfe_refunded`.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Trip the token. Idempotent; every clone observes it.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// The per-step check: one relaxed atomic load.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One per-step progress report delivered to an installed [`RunCtl`]
+/// hook: enough for a streaming front-end to render a live trajectory
+/// (step counter, σ left to integrate, NFE spent so far, and an optional
+/// downsampled first-row preview of the current state x_t).
+#[derive(Clone, Debug)]
+pub struct StepProgress {
+    /// 1-based count of completed solver steps across all segments.
+    pub step: usize,
+    /// index of the plan segment that produced this step.
+    pub segment: usize,
+    /// σ level reached after this step (0 when the trajectory is closed).
+    pub sigma_remaining: f64,
+    /// model evals spent so far (== per-sample NFE so far).
+    pub nfe_spent: usize,
+    /// evenly-strided entries of the batch's first row of x_t (empty when
+    /// previews are disabled via `preview_dims == 0`).
+    pub preview: Vec<f32>,
+}
+
+/// Per-step observer installed by a streaming caller. Invoked on the
+/// solver thread after each completed step — keep it cheap (the gateway
+/// hands the report to an unbounded channel and returns).
+pub type ProgressHook = Arc<dyn Fn(StepProgress) + Send + Sync>;
+
+/// Optional run control: cancellation + per-step progress. The default
+/// (`RunCtl::default()`) installs neither, and the engine's hot loop then
+/// pays only an `Option` branch per step — the no-hook path stays
+/// bit-identical to the pre-gateway engine (same pattern as chaos).
+#[derive(Clone, Default)]
+pub struct RunCtl {
+    pub cancel: Option<CancelToken>,
+    pub progress: Option<ProgressHook>,
+    /// preview entries per progress event, strided across the first row
+    /// (0 disables previews; capped at the model dim).
+    pub preview_dims: usize,
+}
+
+impl RunCtl {
+    /// Once-per-step cancellation check: `None` → constant false branch,
+    /// `Some` → a single atomic load.
+    #[inline]
+    fn cancelled(&self) -> bool {
+        match &self.cancel {
+            Some(t) => t.is_cancelled(),
+            None => false,
+        }
+    }
+
+    /// Deliver one progress report (no-op without a hook).
+    fn emit(&self, step: usize, segment: usize, sigma_remaining: f64, nfe: usize, x: &[f32], dim: usize) {
+        if let Some(hook) = &self.progress {
+            let preview = if self.preview_dims == 0 || x.is_empty() {
+                Vec::new()
+            } else {
+                let want = self.preview_dims.min(dim);
+                let stride = (dim / want).max(1);
+                x[..dim].iter().step_by(stride).take(want).copied().collect()
+            };
+            hook(StepProgress { step, segment, sigma_remaining, nfe_spent: nfe, preview });
+        }
     }
 }
 
@@ -82,6 +171,16 @@ pub struct RunResult {
     pub seg_nfe: Vec<usize>,
     /// per-interval trace (empty unless `cfg.trace`).
     pub steps: Vec<StepRecord>,
+    /// true when a [`CancelToken`] tripped mid-run: `samples` then holds
+    /// the partial state x_t at the abort boundary, `nfe`/`seg_nfe` count
+    /// only the evals actually spent, and `nfe_refunded` estimates the
+    /// evals the remaining trajectory would have cost.
+    pub cancelled: bool,
+    /// estimated evals not spent due to cancellation (0 when not
+    /// cancelled). Deterministic solvers are counted exactly from the
+    /// remaining plan intervals; PID remainders are a 2-evals-per-knot
+    /// estimate scaled by the un-traversed λ fraction.
+    pub nfe_refunded: f64,
 }
 
 /// Build the shared mask row for a run: one `k`-wide logit row that every
@@ -187,6 +286,25 @@ pub fn run_plan_masked_prec(
     mask_row: &[f32],
     precision: KernelPrecision,
 ) -> Result<RunResult> {
+    run_plan_masked_ctl(model, param, grid, plan, cfg, mask_row, precision, &RunCtl::default())
+}
+
+/// [`run_plan_masked_prec`] under a [`RunCtl`]: the streaming entry point.
+/// With the default control this is the exact same run — the per-step
+/// cancellation check is a branch on `None` and no progress is emitted —
+/// so every non-streaming caller delegates here without perturbing the
+/// bit-identity contracts (kernel_parity.rs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_masked_ctl(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    cfg: &RunConfig,
+    mask_row: &[f32],
+    precision: KernelPrecision,
+    ctl: &RunCtl,
+) -> Result<RunResult> {
     let dim = model.dim();
     let rows = cfg.rows;
     anyhow::ensure!(rows > 0, "rows must be positive");
@@ -237,6 +355,8 @@ pub fn run_plan_masked_prec(
     // measured against is the interval-start eval already double-buffered
     // in `scr.prev` by the time it resolves — no clone needed.
     let mut pending_eta: Option<(usize, f64)> = None;
+    // completed solver steps across all segments (progress-event unit)
+    let mut step_no = 0usize;
 
     for (seg_idx, (seg, &(lo_i, hi_i))) in plan.segments.iter().zip(&ranges).enumerate() {
         if lo_i == hi_i {
@@ -248,14 +368,25 @@ pub fn run_plan_masked_prec(
             // the PID arm free-steps in λ = ln σ off the knot grid, so the
             // knot-indexed κ̂/η̂ diagnostics are reset around it
             pending_eta = None;
-            run_pid_segment(
+            let pid_refund = run_pid_segment(
                 model, param, pid, &times, sigmas, lo_i, hi_i, mask, rows, cfg.trace, seg_idx,
-                &mut x, &mut scr, &mut nfe, &mut steps,
+                &mut x, &mut scr, &mut nfe, &mut steps, ctl, &mut step_no,
             )?;
             have_prev = false;
             prev_t = times[hi_i];
             prev_sigma = sigmas[hi_i];
             seg_nfe[seg_idx] = nfe - nfe_before;
+            if let Some(within) = pid_refund {
+                let refunded = within + remaining_nfe_estimate(plan, &ranges, sigmas, seg_idx + 1, 0);
+                return Ok(RunResult {
+                    samples: x,
+                    nfe,
+                    seg_nfe,
+                    steps,
+                    cancelled: true,
+                    nfe_refunded: refunded,
+                });
+            }
             continue;
         }
 
@@ -265,6 +396,21 @@ pub fn run_plan_masked_prec(
         let mut dpm_state = Dpm2mState::new();
 
         for i in lo_i..hi_i {
+            // once-per-step cancellation gate: a single atomic load when a
+            // token is installed, a `None` branch otherwise. Aborting here
+            // keeps `seg_nfe` attribution exact for the work already done.
+            if ctl.cancelled() {
+                seg_nfe[seg_idx] = nfe - nfe_before;
+                let refunded = remaining_nfe_estimate(plan, &ranges, sigmas, seg_idx, i);
+                return Ok(RunResult {
+                    samples: x,
+                    nfe,
+                    seg_nfe,
+                    steps,
+                    cancelled: true,
+                    nfe_refunded: refunded,
+                });
+            }
             let (mut t_i, t_next) = (times[i], times[i + 1]);
             let (mut sigma_i, sigma_next) = (sigmas[i], sigmas[i + 1]);
 
@@ -415,12 +561,64 @@ pub fn run_plan_masked_prec(
             have_prev = true;
             prev_t = t_i;
             prev_sigma = sigma_i;
+            step_no += 1;
+            ctl.emit(step_no, seg_idx, sigma_next, nfe, &x, dim);
         }
 
         seg_nfe[seg_idx] = nfe - nfe_before;
     }
 
-    Ok(RunResult { samples: x, nfe, seg_nfe, steps })
+    Ok(RunResult { samples: x, nfe, seg_nfe, steps, cancelled: false, nfe_refunded: 0.0 })
+}
+
+/// Estimated eval cost of one grid interval under a solver: the exact
+/// deterministic cost for the fixed-order solvers (second-order families
+/// spend 1 on the final σ→0 interval, 2 elsewhere), and a per-knot
+/// estimate of 2 for the PID arm, whose true cost depends on its
+/// accept/reject trajectory.
+fn interval_cost(solver: &SolverSpec, is_final: bool) -> f64 {
+    match solver {
+        SolverSpec::Euler | SolverSpec::Dpm2m => 1.0,
+        SolverSpec::Heun | SolverSpec::StochasticHeun(_) | SolverSpec::Adaptive { .. } => {
+            if is_final {
+                1.0
+            } else {
+                2.0
+            }
+        }
+        SolverSpec::Pid(_) => 2.0,
+    }
+}
+
+/// Estimated evals left in a plan from interval `i_from` of segment
+/// `seg_from` to σ = 0 — the NFE a cancellation refunds. Adaptive
+/// segments are costed at their 2-eval ceiling (the refund is an upper
+/// estimate of saved work, used for accounting, never for scheduling).
+fn remaining_nfe_estimate(
+    plan: &SamplingPlan,
+    ranges: &[(usize, usize)],
+    sigmas: &[f64],
+    seg_from: usize,
+    i_from: usize,
+) -> f64 {
+    let mut est = 0.0;
+    for (seg_idx, (seg, &(lo_i, hi_i))) in plan.segments.iter().zip(ranges).enumerate() {
+        if seg_idx < seg_from {
+            continue;
+        }
+        let start = if seg_idx == seg_from { i_from.max(lo_i) } else { lo_i };
+        for i in start..hi_i {
+            est += interval_cost(&seg.solver, sigmas[i + 1] <= 0.0);
+        }
+    }
+    est
+}
+
+/// Estimated full-run NFE of a plan over a σ grid — the refund a request
+/// cancelled *before* its first solver step is credited with.
+pub fn plan_nfe_estimate(plan: &SamplingPlan, sigmas: &[f64]) -> f64 {
+    let ranges = plan.segment_ranges(sigmas);
+    remaining_nfe_estimate(plan, &ranges, sigmas, 0, 0)
 }
 
 /// One PID-controlled segment: an embedded Euler/Heun pair stepped freely
@@ -446,19 +644,34 @@ fn run_pid_segment(
     scr: &mut EvalScratch,
     nfe: &mut usize,
     steps: &mut Vec<StepRecord>,
-) -> Result<()> {
+    ctl: &RunCtl,
+    step_no: &mut usize,
+) -> Result<Option<f64>> {
     let ends_at_zero = sigmas[hi_i] <= 0.0;
     let floor_idx = if ends_at_zero { hi_i - 1 } else { hi_i };
 
     if floor_idx > lo_i {
+        let lam_start = sigmas[lo_i].ln();
         let lam_end = sigmas[floor_idx].ln();
-        let mut lam = sigmas[lo_i].ln();
+        let mut lam = lam_start;
         let mut ctrl = PidStepController::new(pid, 2);
         // previous accepted low-order solution — the error reference
         let mut x_prev = x.clone();
         let mut rejects = 0usize;
         let mut trials = 0usize;
         while lam > lam_end + 1e-9 {
+            // once-per-trial cancellation gate (the PID arm's "step" is a
+            // trial). The refund scales the segment's 2-evals-per-knot
+            // estimate by the λ span not yet traversed.
+            if ctl.cancelled() {
+                let span = (lam_start - lam_end).max(1e-30);
+                let frac = ((lam - lam_end) / span).clamp(0.0, 1.0);
+                let mut within = 2.0 * (hi_i - lo_i) as f64 * frac;
+                if ends_at_zero {
+                    within += 1.0; // the closing Euler step is also skipped
+                }
+                return Ok(Some(within));
+            }
             trials += 1;
             anyhow::ensure!(
                 trials <= 100_000,
@@ -497,6 +710,8 @@ fn run_pid_segment(
                 x.copy_from_slice(&scr.blend_x);
                 lam -= h;
                 rejects = 0;
+                *step_no += 1;
+                ctl.emit(*step_no, seg_idx, lam.exp(), *nfe, x, x.len() / rows.max(1));
                 if trace {
                     steps.push(StepRecord {
                         sigma: sigma_cur,
@@ -515,10 +730,15 @@ fn run_pid_segment(
     }
 
     if ends_at_zero {
+        if ctl.cancelled() {
+            return Ok(Some(1.0)); // only the closing Euler eval remains
+        }
         let (t_floor, t_zero) = (times[hi_i - 1], times[hi_i]);
         eval_at_into(model, param, x, t_floor, mask, rows, &mut scr.xhat, &mut scr.kernel, &mut scr.cur)?;
         *nfe += 1;
         euler::euler_step(x, &scr.cur.v, t_zero - t_floor);
+        *step_no += 1;
+        ctl.emit(*step_no, seg_idx, 0.0, *nfe, x, x.len() / rows.max(1));
         if trace {
             steps.push(StepRecord {
                 sigma: sigmas[hi_i - 1],
@@ -531,7 +751,7 @@ fn run_pid_segment(
             });
         }
     }
-    Ok(())
+    Ok(None)
 }
 
 /// Normalized embedded-pair error (k-diffusion semantics): RMS over all
@@ -611,6 +831,29 @@ pub fn generate_plan_prec(
     total: usize,
     precision: KernelPrecision,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
+    let (samples, nfe, trace, seg, _) =
+        generate_plan_ctl(model, param, grid, plan, ds, cfg, total, precision, &RunCtl::default())?;
+    Ok((samples, nfe, trace, seg))
+}
+
+/// [`generate_plan_prec`] under a [`RunCtl`]. The extra return is the
+/// cancellation outcome: `None` when the request ran to completion,
+/// `Some(nfe_refunded)` when the token tripped — the samples generated so
+/// far are returned (whole completed batches plus the partial state of
+/// the batch that aborted), and batches never started are refunded at the
+/// plan's full estimated cost.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_plan_ctl(
+    model: &dyn Denoiser,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+    precision: KernelPrecision,
+    ctl: &RunCtl,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>, Option<f64>)> {
     let dim = model.dim();
     // one shared mask row for every batch of the request
     let mask_row = mask_row_for(cfg.class, ds, model.k())?;
@@ -620,6 +863,7 @@ pub fn generate_plan_prec(
     let mut first_trace = Vec::new();
     let mut remaining = total;
     let mut batch_idx = 0u64;
+    let mut refunded: Option<f64> = None;
     while remaining > 0 {
         let rows = remaining.min(cfg.rows);
         let bcfg = RunConfig {
@@ -628,7 +872,7 @@ pub fn generate_plan_prec(
             class: cfg.class,
             trace: cfg.trace && batch_idx == 0,
         };
-        let out = run_plan_masked_prec(model, param, grid, plan, &bcfg, &mask_row, precision)?;
+        let out = run_plan_masked_ctl(model, param, grid, plan, &bcfg, &mask_row, precision, ctl)?;
         samples.extend_from_slice(&out.samples);
         nfes.push(out.nfe as f64);
         for (a, s) in seg_acc.iter_mut().zip(&out.seg_nfe) {
@@ -639,12 +883,19 @@ pub fn generate_plan_prec(
         }
         remaining -= rows;
         batch_idx += 1;
+        if out.cancelled {
+            // batches never started refund at the plan's full estimate
+            let per_batch = plan_nfe_estimate(plan, &grid.sigmas);
+            let skipped = (remaining + cfg.rows - 1) / cfg.rows.max(1);
+            refunded = Some(out.nfe_refunded + skipped as f64 * per_batch);
+            break;
+        }
     }
     let n_batches = nfes.len().max(1) as f64;
     for a in &mut seg_acc {
         *a /= n_batches;
     }
-    Ok((samples, crate::util::mean(&nfes), first_trace, seg_acc))
+    Ok((samples, crate::util::mean(&nfes), first_trace, seg_acc, refunded))
 }
 
 /// Per-shard state of a pooled [`generate_pooled_plan`] run.
@@ -719,9 +970,41 @@ pub fn generate_pooled_plan_prec(
     pool: &ThreadPool,
     precision: KernelPrecision,
 ) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>)> {
+    let (samples, nfe, trace, seg, _) = generate_pooled_plan_ctl(
+        model,
+        param,
+        grid,
+        plan,
+        ds,
+        cfg,
+        total,
+        pool,
+        precision,
+        &RunCtl::default(),
+    )?;
+    Ok((samples, nfe, trace, seg))
+}
+
+/// [`generate_pooled_plan_prec`] under a [`RunCtl`]: every shard polls the
+/// same token (a shard that starts after the trip aborts at its first
+/// step and refunds its whole estimate), and the per-shard refunds sum
+/// into the returned `Some(nfe_refunded)`.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_pooled_plan_ctl(
+    model: &Arc<dyn Denoiser>,
+    param: Param,
+    grid: &SigmaGrid,
+    plan: &SamplingPlan,
+    ds: &DatasetInfo,
+    cfg: &RunConfig,
+    total: usize,
+    pool: &ThreadPool,
+    precision: KernelPrecision,
+    ctl: &RunCtl,
+) -> Result<(Vec<f32>, f64, Vec<StepRecord>, Vec<f64>, Option<f64>)> {
     anyhow::ensure!(cfg.rows > 0, "rows must be positive");
     if total == 0 {
-        return Ok((Vec::new(), 0.0, Vec::new(), vec![0.0; plan.segments.len()]));
+        return Ok((Vec::new(), 0.0, Vec::new(), vec![0.0; plan.segments.len()], None));
     }
     let batch_rows = cfg.rows;
     let n_batches = (total + batch_rows - 1) / batch_rows;
@@ -746,6 +1029,7 @@ pub fn generate_pooled_plan_prec(
         let mask_row = Arc::clone(&mask_row);
         let shared = Arc::clone(&shared);
         let next = Arc::clone(&next);
+        let ctl = ctl.clone();
         Arc::new(move || loop {
             let i = next.fetch_add(1, Ordering::SeqCst);
             if i >= n_batches {
@@ -759,7 +1043,7 @@ pub fn generate_pooled_plan_prec(
                 trace: cfg.trace && i == 0,
             };
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_plan_masked_prec(
+                run_plan_masked_ctl(
                     model.as_ref(),
                     param,
                     &grid,
@@ -767,6 +1051,7 @@ pub fn generate_pooled_plan_prec(
                     &bcfg,
                     &mask_row,
                     precision,
+                    &ctl,
                 )
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("generation batch {i} panicked")));
@@ -801,6 +1086,8 @@ pub fn generate_pooled_plan_prec(
     let mut nfes = Vec::with_capacity(n_batches);
     let mut seg_acc = vec![0.0f64; plan.segments.len()];
     let mut first_trace = Vec::new();
+    let mut refund_sum = 0.0f64;
+    let mut any_cancelled = false;
     for (i, slot) in slots.into_iter().enumerate() {
         let out = slot.expect("all shards accounted for")?;
         samples.extend_from_slice(&out.samples);
@@ -811,11 +1098,16 @@ pub fn generate_pooled_plan_prec(
         if i == 0 {
             first_trace = out.steps;
         }
+        if out.cancelled {
+            any_cancelled = true;
+            refund_sum += out.nfe_refunded;
+        }
     }
     for a in &mut seg_acc {
         *a /= n_batches as f64;
     }
-    Ok((samples, crate::util::mean(&nfes), first_trace, seg_acc))
+    let refunded = if any_cancelled { Some(refund_sum) } else { None };
+    Ok((samples, crate::util::mean(&nfes), first_trace, seg_acc, refunded))
 }
 
 #[cfg(test)]
@@ -1173,6 +1465,148 @@ mod tests {
         assert!(out.seg_nfe[1] >= 1, "pid tail must at least close σ→0");
         let fd = fd_of(&out.samples, &ds);
         assert!(fd < 5.0, "composed plan fd={fd}");
+    }
+
+    #[test]
+    fn cancel_token_aborts_mid_run_with_exact_accounting() {
+        let (m, ds, grid) = setup();
+        let token = CancelToken::new();
+        let t2 = token.clone();
+        // deterministic trip: the hook cancels after the third step, so
+        // the engine must abort at the very next once-per-step check
+        let hook: ProgressHook = Arc::new(move |p: StepProgress| {
+            if p.step >= 3 {
+                t2.cancel();
+            }
+        });
+        let ctl = RunCtl { cancel: Some(token), progress: Some(hook), preview_dims: 2 };
+        let cfg = RunConfig { rows: 8, seed: 21, ..Default::default() };
+        let mask = mask_row_for(None, &ds, m.k()).unwrap();
+        let plan = SamplingPlan::single(SolverSpec::Heun);
+        let out = run_plan_masked_ctl(
+            &m,
+            Param::Edm,
+            &grid,
+            &plan,
+            &cfg,
+            &mask,
+            KernelPrecision::Exact,
+            &ctl,
+        )
+        .unwrap();
+        let full = run_sampler(&m, Param::Edm, &grid, &SolverSpec::Heun, &ds, &cfg).unwrap();
+        assert!(out.cancelled, "token tripped mid-run must mark the result cancelled");
+        assert!(!full.cancelled && full.nfe_refunded == 0.0);
+        assert_eq!(out.nfe, 6, "3 heun steps spend exactly 6 evals before the trip");
+        assert!(out.nfe < full.nfe);
+        assert_eq!(out.seg_nfe.iter().sum::<usize>(), out.nfe, "attribution stays exact");
+        // spent + refund == the plan's full deterministic cost
+        assert_eq!(
+            out.nfe as f64 + out.nfe_refunded,
+            plan_nfe_estimate(&plan, &grid.sigmas)
+        );
+        assert_eq!(plan_nfe_estimate(&plan, &grid.sigmas), full.nfe as f64);
+        // partial state is still a full [rows, dim] buffer
+        assert_eq!(out.samples.len(), 8 * ds.dim);
+    }
+
+    #[test]
+    fn cancel_token_pre_tripped_refunds_the_whole_run() {
+        let (m, ds, grid) = setup();
+        let token = CancelToken::new();
+        token.cancel();
+        let ctl = RunCtl { cancel: Some(token), progress: None, preview_dims: 0 };
+        let cfg = RunConfig { rows: 4, seed: 22, ..Default::default() };
+        let mask = mask_row_for(None, &ds, m.k()).unwrap();
+        let plan = SamplingPlan::single(SolverSpec::Euler);
+        let out = run_plan_masked_ctl(
+            &m,
+            Param::Edm,
+            &grid,
+            &plan,
+            &cfg,
+            &mask,
+            KernelPrecision::Exact,
+            &ctl,
+        )
+        .unwrap();
+        assert!(out.cancelled);
+        assert_eq!(out.nfe, 0);
+        assert_eq!(out.nfe_refunded, grid.intervals() as f64);
+    }
+
+    #[test]
+    fn progress_hook_reports_monotone_trajectory() {
+        let (m, ds, grid) = setup();
+        let seen: Arc<Mutex<Vec<StepProgress>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        let hook: ProgressHook = Arc::new(move |p: StepProgress| {
+            sink.lock().expect("test sink poisoned").push(p);
+        });
+        let ctl = RunCtl { cancel: None, progress: Some(hook), preview_dims: 2 };
+        let cfg = RunConfig { rows: 4, seed: 23, ..Default::default() };
+        let mask = mask_row_for(None, &ds, m.k()).unwrap();
+        let plan = SamplingPlan::single(SolverSpec::Euler);
+        let out = run_plan_masked_ctl(
+            &m,
+            Param::Edm,
+            &grid,
+            &plan,
+            &cfg,
+            &mask,
+            KernelPrecision::Exact,
+            &ctl,
+        )
+        .unwrap();
+        assert!(!out.cancelled);
+        let events = seen.lock().expect("test sink poisoned");
+        assert_eq!(events.len(), grid.intervals(), "one event per completed step");
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.step, i + 1);
+            assert_eq!(e.segment, 0);
+            assert_eq!(e.preview.len(), 2);
+            if i > 0 {
+                assert!(e.sigma_remaining <= events[i - 1].sigma_remaining);
+                assert!(e.nfe_spent >= events[i - 1].nfe_spent);
+            }
+        }
+        assert_eq!(events.last().unwrap().sigma_remaining, 0.0, "trajectory must close");
+        assert_eq!(events.last().unwrap().nfe_spent, out.nfe);
+    }
+
+    #[test]
+    fn generate_ctl_propagates_cancellation_across_batches() {
+        let (m, ds, grid) = setup();
+        let token = CancelToken::new();
+        let t2 = token.clone();
+        // trip during the second batch: first batch completes untouched
+        let n_int = grid.intervals();
+        let hook: ProgressHook = Arc::new(move |p: StepProgress| {
+            if p.step >= n_int {
+                t2.cancel();
+            }
+        });
+        let ctl = RunCtl { cancel: Some(token), progress: Some(hook), preview_dims: 0 };
+        let cfg = RunConfig { rows: 4, seed: 24, ..Default::default() };
+        let plan = SamplingPlan::single(SolverSpec::Euler);
+        let (samples, _, _, _, refunded) = generate_plan_ctl(
+            &m,
+            Param::Edm,
+            &grid,
+            &plan,
+            &ds,
+            &cfg,
+            12,
+            KernelPrecision::Exact,
+            &ctl,
+        )
+        .unwrap();
+        let refunded = refunded.expect("run must report cancellation");
+        // batch 1 finished (4 rows); batch 2 aborted at its first check but
+        // still returns its prior-state rows; batch 3 never started
+        assert!(samples.len() >= 4 * ds.dim && samples.len() <= 8 * ds.dim);
+        // refund covers the aborted batch plus the never-started batch
+        assert_eq!(refunded, 2.0 * grid.intervals() as f64);
     }
 
     #[test]

@@ -7,8 +7,10 @@ pub mod plan;
 
 pub use config::SamplerConfig;
 pub use engine::{
-    generate, generate_plan, generate_plan_prec, generate_pooled, generate_pooled_plan,
-    generate_pooled_plan_prec, mask_row_for, run_plan, run_plan_masked, run_plan_masked_prec,
-    run_plan_prec, run_sampler, run_sampler_masked, RunConfig, RunResult, StepRecord,
+    generate, generate_plan, generate_plan_ctl, generate_plan_prec, generate_pooled,
+    generate_pooled_plan, generate_pooled_plan_ctl, generate_pooled_plan_prec, mask_row_for,
+    plan_nfe_estimate, run_plan, run_plan_masked, run_plan_masked_ctl, run_plan_masked_prec,
+    run_plan_prec, run_sampler, run_sampler_masked, CancelToken, ProgressHook, RunConfig, RunCtl,
+    RunResult, StepProgress, StepRecord,
 };
 pub use plan::{candidate_plans, PlanSegment, SamplingPlan};

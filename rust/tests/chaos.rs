@@ -5,7 +5,8 @@
 //! resilience invariants the chaos work exists to guarantee:
 //!
 //! - **No lost replies**: every request lands in exactly one accounting
-//!   bucket (`sent == served + errors + sheds + expiries`), faults or not.
+//!   bucket (`sent == served + errors + sheds + expiries + cancelled`),
+//!   faults or not.
 //! - **Determinism**: a fixed (plan seed, load seed) reproduces the same
 //!   trace, the same injected-fault counts, and the same outcome counts.
 //! - **Fail closed, not silent**: a dead batcher route answers
@@ -73,6 +74,7 @@ fn soak_run(spec: &str, plan_seed: u64, load_seed: u64) -> (LoadReport, u64, u64
     let profile = TraceProfile {
         templates: vec![(0.6, tpl(4, Some("soak"))), (0.4, tpl(6, Some("soak")))],
         chaos: None,
+        burst: None,
     };
     let opts = LoadOptions {
         retry: Some(RetryPolicy::default()),
@@ -106,13 +108,14 @@ fn seeded_soak_loses_no_replies_and_reproduces_exactly() {
     assert_eq!(a.sent, 48);
     assert_eq!(
         a.sent,
-        a.latency.count() + a.errors + a.sheds + a.expiries,
+        a.latency.count() + a.errors + a.sheds + a.expiries + a.cancelled,
         "every request must land in exactly one bucket (served {}, errors {}, \
-         sheds {}, expiries {})",
+         sheds {}, expiries {}, cancelled {})",
         a.latency.count(),
         a.errors,
         a.sheds,
-        a.expiries
+        a.expiries,
+        a.cancelled
     );
     // requests carry a request_id, so ambiguous failures are always
     // safely resent — never abandoned
@@ -123,9 +126,10 @@ fn seeded_soak_loses_no_replies_and_reproduces_exactly() {
     assert_eq!((a_evals, a_drops), (b_evals, b_drops), "injected counts must reproduce");
     assert_eq!(a.latency.count(), b.latency.count());
     assert_eq!(
-        (a.errors, a.sheds, a.expiries, a.retries, a.reconnects, a.double_submit_avoided),
-        (b.errors, b.sheds, b.expiries, b.retries, b.reconnects, b.double_submit_avoided),
+        (a.errors, a.sheds, a.expiries, a.cancelled, a.retries, a.reconnects),
+        (b.errors, b.sheds, b.expiries, b.cancelled, b.retries, b.reconnects),
     );
+    assert_eq!(a.double_submit_avoided, b.double_submit_avoided);
 }
 
 /// Watchdog acceptance: a batcher killed by `batcher_panic` flips the
@@ -193,8 +197,11 @@ fn chaos_off_default_options_match_the_plain_closed_loop() {
     let hub = Arc::new(EngineHub::from_infos(vec![toy().info]));
     let server = Server::start(hub, ServerConfig::default()).unwrap();
     let addr = server.local_addr.to_string();
-    let profile =
-        TraceProfile { templates: vec![(0.5, tpl(4, None)), (0.5, tpl(7, None))], chaos: None };
+    let profile = TraceProfile {
+        templates: vec![(0.5, tpl(4, None)), (0.5, tpl(7, None))],
+        chaos: None,
+        burst: None,
+    };
     let a = closed_loop(&addr, &profile, 2, 8, Duration::ZERO, 5).unwrap();
     let b = closed_loop_with(&addr, &profile, 2, 8, Duration::ZERO, 5, &LoadOptions::default())
         .unwrap();
@@ -222,7 +229,8 @@ fn ambiguous_failures_without_request_id_are_never_resent() {
     let plan = Arc::new(FaultPlan::parse("conn_drop@1/2", 9).unwrap());
     let server = chaotic_server(&plan);
     let addr = server.local_addr.to_string();
-    let profile = TraceProfile { templates: vec![(1.0, tpl(4, None))], chaos: None };
+    let profile =
+        TraceProfile { templates: vec![(1.0, tpl(4, None))], chaos: None, burst: None };
     let opts = LoadOptions {
         retry: Some(RetryPolicy::default()),
         breaker: Some(patient_breaker()),
@@ -238,6 +246,7 @@ fn ambiguous_failures_without_request_id_are_never_resent() {
     assert_eq!(
         report.sent,
         report.latency.count() + report.errors + report.sheds + report.expiries
+            + report.cancelled
     );
     server.shutdown();
 }

@@ -1,0 +1,217 @@
+//! Gateway integration (DESIGN.md §13): the HTTP/SSE front-end over a
+//! real server — streamed per-step progress, mid-sample cancellation
+//! with NFE refunds, dead-socket detection, and the plain HTTP surface.
+//!
+//! The cancellation tests run the server under an `eval_delay` fault
+//! plan so the solve takes hundreds of milliseconds: a client-side
+//! cancel issued after two progress events then lands mid-run with a
+//! wide margin, instead of racing a microsecond toy solve.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sdm::coordinator::hub::EngineHub;
+use sdm::coordinator::loadgen::{sse_closed_loop, RequestTemplate};
+use sdm::coordinator::{Server, ServerConfig};
+use sdm::gateway::sse_client::{http_get, http_post, stream_sample, EarlyStop};
+use sdm::model::gmm::testmodel::toy;
+use sdm::util::Json;
+
+fn gateway_server(chaos: Option<&str>) -> Server {
+    let mut hub = EngineHub::from_infos(vec![toy().info]);
+    let mut cfg =
+        ServerConfig { http_addr: Some("127.0.0.1:0".to_string()), ..ServerConfig::default() };
+    if let Some(spec) = chaos {
+        let plan = Arc::new(sdm::chaos::FaultPlan::parse(spec, 7).unwrap());
+        hub.apply_chaos(Arc::clone(&plan));
+        cfg.chaos = Some(plan);
+    }
+    Server::start(Arc::new(hub), cfg).unwrap()
+}
+
+fn http_addr(server: &Server) -> String {
+    server.http_addr().expect("server was started with a gateway").to_string()
+}
+
+fn tpl(steps: usize, request_id: Option<&str>) -> RequestTemplate {
+    RequestTemplate {
+        dataset: "toy".into(),
+        n: 2,
+        param: "edm".into(),
+        solver: "heun".into(),
+        plan: None,
+        schedule: "edm".into(),
+        steps,
+        priority: None,
+        deadline_ms: None,
+        kernel_precision: None,
+        request_id: request_id.map(str::to_string),
+    }
+}
+
+/// Route-level counters from `GET /stats`.
+fn toy_stats(addr: &str) -> Json {
+    let (code, body) = http_get(addr, "/stats").unwrap();
+    assert_eq!(code, 200, "{body}");
+    Json::parse(&body).unwrap().get("stats").unwrap().get("toy").unwrap().clone()
+}
+
+/// Streaming acceptance: a full run emits one progress event per solver
+/// step (strictly increasing nfe_spent) and terminates with exactly one
+/// `done` carrying the sample reply.
+#[test]
+fn streamed_sample_emits_per_step_progress_then_done() {
+    let server = gateway_server(None);
+    let addr = http_addr(&server);
+    // preview=4 additionally exercises the downsampled x_t path
+    let query = format!("{}&preview=4", tpl(8, None).query(5));
+    let out = stream_sample(&addr, &query, EarlyStop::Never).unwrap();
+    assert_eq!(out.terminal_event, "done", "{:?}", out.terminal);
+    assert!(out.progress_events >= 2, "got {} progress events", out.progress_events);
+    assert!(out.last_nfe_spent > 0.0);
+    assert_eq!(out.terminal.get("ok").unwrap(), &Json::Bool(true));
+    let nfe = out.terminal.get("nfe").unwrap().as_f64().unwrap();
+    // heun spends at least one model eval per grid interval
+    assert!(nfe >= 8.0, "implausibly cheap heun run: {nfe}");
+    assert!(out.last_nfe_spent <= nfe);
+    server.shutdown();
+}
+
+/// Cancellation acceptance: `POST /cancel/{request_id}` mid-stream stops
+/// the solver at the next step boundary, the terminal is `cancelled`
+/// with partial nfe_spent strictly below the full cost, the refund is
+/// exact (`nfe_spent + nfe_refunded == full`), and the route's stats
+/// count both the cancel and the refunded budget.
+#[test]
+fn cancel_mid_stream_returns_partial_nfe_and_refunds_the_rest() {
+    let server = gateway_server(Some("eval_delay@p50=5ms"));
+    let addr = http_addr(&server);
+    let steps = 64usize;
+    // baseline: the same request streamed to completion costs the full
+    // deterministic budget (self-calibrating, like the batcher test)
+    let baseline =
+        stream_sample(&addr, &tpl(steps, None).query(9), EarlyStop::Never).unwrap();
+    assert_eq!(baseline.terminal_event, "done", "{:?}", baseline.terminal);
+    let full_nfe = baseline.terminal.get("nfe").unwrap().as_f64().unwrap();
+    let query = tpl(steps, Some("it")).query(9);
+    let out = stream_sample(&addr, &query, EarlyStop::CancelAfter(2)).unwrap();
+    assert_eq!(out.terminal_event, "cancelled", "{:?}", out.terminal);
+    assert!(out.progress_events >= 2);
+    let spent = out.terminal.get("nfe_spent").unwrap().as_f64().unwrap();
+    let refunded = out.terminal.get("nfe_refunded").unwrap().as_f64().unwrap();
+    assert!(spent > 0.0, "cancel cannot precede the first observed step");
+    assert!(spent < full_nfe, "cancel must beat the full solve ({spent} vs {full_nfe})");
+    assert!(refunded > 0.0);
+    assert_eq!(
+        spent + refunded,
+        full_nfe,
+        "deterministic solver: spent + refund must equal the plan estimate"
+    );
+    let stats = toy_stats(&addr);
+    assert_eq!(stats.get("cancelled").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(stats.get("nfe_refunded").unwrap().as_f64().unwrap(), refunded);
+    server.shutdown();
+}
+
+/// Dead-socket acceptance: a client that vanishes mid-stream is detected
+/// on the next progress write; the server cancels on its own, refunds
+/// the remainder, and counts the cancellation — no thread is left
+/// solving for nobody.
+#[test]
+fn disconnect_mid_stream_cancels_server_side_and_refunds() {
+    let server = gateway_server(Some("eval_delay@p50=5ms"));
+    let addr = http_addr(&server);
+    let out = stream_sample(&addr, &tpl(64, None).query(3), EarlyStop::DisconnectAfter(1))
+        .unwrap();
+    assert_eq!(out.terminal_event, "disconnected");
+    // the cancel is asynchronous (the server notices on its next write):
+    // poll stats until the counters land
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = toy_stats(&addr);
+        if stats.get("cancelled").unwrap().as_f64().unwrap() >= 1.0 {
+            assert!(stats.get("nfe_refunded").unwrap().as_f64().unwrap() > 0.0);
+            break;
+        }
+        assert!(Instant::now() < deadline, "server never cancelled the orphaned stream");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+}
+
+/// Soak acceptance: a seeded SSE load mix with cancels and disconnects
+/// loses nothing — every stream lands in exactly one accounting bucket
+/// and observed refunds follow observed cancels.
+#[test]
+fn sse_soak_with_early_stops_loses_no_streams() {
+    let server = gateway_server(Some("eval_delay@p50=2ms"));
+    let addr = http_addr(&server);
+    let report =
+        sse_closed_loop(&addr, &tpl(40, Some("soak")), 3, 4, 0.3, 0.2, 1, 77).unwrap();
+    assert_eq!(report.sent, 12);
+    assert_eq!(
+        report.sent,
+        report.served + report.cancelled + report.disconnected + report.errors,
+        "every stream must land in exactly one bucket: {report:?}"
+    );
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert!(report.progress_events > 0);
+    assert_eq!(report.served as u64, report.latency.count());
+    if report.cancelled > 0 {
+        assert!(report.nfe_refunded > 0.0, "cancels must carry refunds: {report:?}");
+    }
+    server.shutdown();
+}
+
+/// Plain HTTP surface: probes, stats, the demo page, structured errors
+/// for unknown routes / unknown cancel ids / malformed stream queries.
+#[test]
+fn http_surface_probes_demo_page_and_structured_errors() {
+    let server = gateway_server(None);
+    let addr = http_addr(&server);
+
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+    assert_eq!(v.get("ready").unwrap(), &Json::Bool(true));
+
+    let (code, body) = http_get(&addr, "/stats").unwrap();
+    assert_eq!(code, 200);
+    assert!(Json::parse(&body).unwrap().get("stats").is_ok());
+
+    let (code, body) = http_get(&addr, "/").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("EventSource"), "the demo page must drive /stream");
+
+    let (code, _) = http_get(&addr, "/no/such/route").unwrap();
+    assert_eq!(code, 404);
+
+    let (code, body) = http_post(&addr, "/cancel/never-registered").unwrap();
+    assert_eq!(code, 404);
+    assert_eq!(Json::parse(&body).unwrap().get("found").unwrap(), &Json::Bool(false));
+
+    // a malformed stream query is a structured 400, not a hung stream
+    let (code, body) = http_get(&addr, "/stream?dataset=toy&n=lots").unwrap();
+    assert_eq!(code, 400);
+    assert_eq!(Json::parse(&body).unwrap().get("ok").unwrap(), &Json::Bool(false));
+    server.shutdown();
+}
+
+/// Shutdown acceptance: `POST /shutdown` stops the whole server — the
+/// socket accept loop, the gateway, and the serve loop watching
+/// `is_stopping` — and the final join is clean.
+#[test]
+fn post_shutdown_stops_the_whole_server_cleanly() {
+    let server = gateway_server(None);
+    let addr = http_addr(&server);
+    let (code, body) = http_post(&addr, "/shutdown").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(Json::parse(&body).unwrap().get("ok").unwrap(), &Json::Bool(true));
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !server.is_stopping() {
+        assert!(Instant::now() < deadline, "shutdown flag never observed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.shutdown();
+}

@@ -560,7 +560,8 @@ fn closed_loop_loadgen_is_deterministic_given_a_seed() {
         request_id: None,
     };
     // two templates so the drawn sequence actually varies with the seed
-    let profile = TraceProfile { templates: vec![(0.5, tpl(5)), (0.5, tpl(9))], chaos: None };
+    let profile =
+        TraceProfile { templates: vec![(0.5, tpl(5)), (0.5, tpl(9))], chaos: None, burst: None };
     let run = |seed: u64| {
         closed_loop(&addr, &profile, 2, 16, Duration::ZERO, seed).unwrap()
     };
